@@ -1,0 +1,54 @@
+//! Cost-planner walkthrough (paper §IV-E, Experiment 5): evaluate the
+//! per-worker cost landscape U(k_A, k_B) for the first two AlexNet
+//! ConvLs at Q = 32 (the paper's Fig. 7 setting) and print the optimal
+//! configuration per layer and per Q for all three CNNs (Table IV).
+//!
+//! ```bash
+//! cargo run --release --example cost_planner
+//! ```
+
+use anyhow::Result;
+use fcdcc::coordinator::print_optimizer_table;
+use fcdcc::fcdcc::cost::{self, CostModel};
+use fcdcc::metrics::Table;
+use fcdcc::model::zoo;
+
+fn main() -> Result<()> {
+    let cm = CostModel::paper_exp5();
+    let q = 32;
+
+    // Fig. 7: the discrete feasible landscape for AlexNet conv1 & conv2.
+    for layer in &zoo::alexnet()[..2] {
+        let choice = cost::optimize(layer, &cm, q).expect("feasible");
+        let mut t = Table::new(
+            &format!(
+                "U(k_A,k_B) landscape for {} at Q={q} (real-valued k_A* = {:.1})",
+                layer.name, choice.k_a_star_real
+            ),
+            &["k_A", "k_B", "comm_up", "comm_down", "store", "U total", "optimal"],
+        );
+        for c in &choice.candidates {
+            t.row(&[
+                c.k_a.to_string(),
+                c.k_b.to_string(),
+                format!("{:.0}", c.comm_up),
+                format!("{:.0}", c.comm_down),
+                format!("{:.0}", c.store),
+                format!("{:.0}", c.total()),
+                if (c.k_a, c.k_b) == (choice.best.k_a, choice.best.k_b) {
+                    "  <== (k_A*, k_B*)"
+                } else {
+                    ""
+                }
+                .to_string(),
+            ]);
+        }
+        t.print();
+    }
+
+    // Table IV: optimal configurations for every architecture and Q.
+    for arch in ["lenet", "alexnet", "vgg"] {
+        print_optimizer_table(arch, &[16, 32, 64])?;
+    }
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Quickstart: one convolutional layer through the full FCDCC stack.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the complete paper workflow on a small layer:
+//! APCP + KCCP partitioning, CRME encoding, a 4-worker simulated cluster
+//! (one straggler injected), first-δ decoding, and the MSE vs the
+//! single-node reference. Uses the AOT-compiled JAX/Pallas artifact via
+//! PJRT when `artifacts/` exists, falling back to the native engine.
+
+use anyhow::Result;
+use fcdcc::cluster::{Cluster, StragglerModel};
+use fcdcc::engine::{Im2colEngine, TaskEngine};
+use fcdcc::fcdcc::FcdccPlan;
+use fcdcc::metrics::{fmt_secs, fmt_sci};
+use fcdcc::model::ConvLayer;
+use fcdcc::runtime::PjrtService;
+use fcdcc::tensor::{conv2d, Tensor3, Tensor4};
+use fcdcc::util::{mse, rng::Rng};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> Result<()> {
+    // The layer every artifact set ships: C=2, 12×10 input, 8 filters 3×3.
+    let layer = ConvLayer::new("quickstart", 2, 12, 10, 8, 3, 3, 1, 0);
+    let (k_a, k_b, n) = (4, 2, 4); // δ = k_A·k_B/4 = 2, tolerates γ = 2 stragglers
+
+    // Engine: AOT JAX/Pallas artifact via PJRT if available, else native.
+    let engine: Arc<dyn TaskEngine> = match PjrtService::spawn("artifacts") {
+        Ok(host) => {
+            println!("engine: PJRT (AOT JAX/Pallas artifacts)");
+            let h = host.handle.clone();
+            std::mem::forget(host);
+            Arc::new(h)
+        }
+        Err(e) => {
+            println!("engine: native im2col (PJRT unavailable: {e})");
+            Arc::new(Im2colEngine)
+        }
+    };
+
+    let mut rng = Rng::new(7);
+    let x = Tensor3::random(layer.c, layer.h, layer.w, &mut rng);
+    let k = Tensor4::random(layer.n, layer.c, layer.kh, layer.kw, &mut rng);
+
+    // 1. Plan: geometry + CRME code.
+    let plan = FcdccPlan::new_crme(&layer, k_a, k_b, n)?;
+    println!(
+        "plan: k_A={k_a}, k_B={k_b}, n={n}, δ={}, γ={}",
+        plan.delta(),
+        n - plan.delta()
+    );
+
+    // 2. Encode filters once (model initialization).
+    let coded_filters = plan.encode_filters(&k);
+
+    // 3. Run on the simulated cluster with one slow worker.
+    let mut cluster = Cluster::new(n, engine);
+    let straggler = StragglerModel::FixedCount {
+        count: 1,
+        delay: Duration::from_millis(200),
+    };
+    let (y, report) = cluster.run_job(&plan, &x, &coded_filters, &straggler, &mut rng)?;
+    cluster.shutdown();
+
+    // 4. Verify against the single-node reference.
+    let want = conv2d(&x, &k, layer.params());
+    let err = mse(&y.data, &want.data);
+    println!(
+        "collected from workers {:?} in {} (decode {})",
+        report.used_workers,
+        fmt_secs(report.collect_secs),
+        fmt_secs(report.decode_secs)
+    );
+    println!("output {:?}, MSE vs reference = {}", y.shape(), fmt_sci(err));
+    assert!(err < 1e-20, "decode error too large");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,147 @@
+# Emit HLO text (NOT .serialize()) — jax >= 0.5 protos carry 64-bit ids
+# that xla_extension 0.5.1 rejects; the HLO *text* parser reassigns ids
+# and round-trips cleanly (see /opt/xla-example/README.md).
+"""AOT pipeline: lower the L2 worker task to HLO-text artifacts.
+
+`python -m compile.aot --out-dir ../artifacts` produces one
+`wt_*.hlo.txt` per worker-task shape variant plus `manifest.json`
+describing every artifact (shapes, stride, file). The Rust runtime
+(`rust/src/runtime/`) reads the manifest, compiles each artifact once on
+the PJRT CPU client, and executes them from the request path. Python is
+never needed again after this step.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile.model import lower_worker_task  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# Geometry helpers (mirrors rust/src/partition/apcp.rs — keep in sync).
+# ---------------------------------------------------------------------------
+
+
+def apcp_slab_height(h_padded, kh, stride, k_a):
+    """Adaptive slab height Ĥ (paper eq. (24)) for a pre-padded input."""
+    h_out = (h_padded - kh) // stride + 1
+    assert h_out >= k_a, f"cannot split H'={h_out} into k_a={k_a}"
+    h_out_pad = -(-h_out // k_a) * k_a
+    rows = h_out_pad // k_a
+    return (rows - 1) * stride + kh, rows
+
+
+def worker_shapes(layer, k_a, k_b):
+    """Per-worker coded slab shapes for a ConvLayer dict + (k_A, k_B)."""
+    c, h, w = layer["c"], layer["h"], layer["w"]
+    n, kh, kw = layer["n"], layer["kh"], layer["kw"]
+    stride, pad = layer["stride"], layer["pad"]
+    hp, wp = h + 2 * pad, w + 2 * pad
+    h_hat, rows = apcp_slab_height(hp, kh, stride, k_a)
+    assert n % k_b == 0, f"k_b={k_b} must divide N={n}"
+    ell_a = 1 if k_a == 1 else 2
+    ell_b = 1 if k_b == 1 else 2
+    w_out = (wp - kw) // stride + 1
+    return {
+        "ell_a": ell_a,
+        "ell_b": ell_b,
+        "x_shape": [ell_a, c, h_hat, wp],
+        "k_shape": [ell_b, n // k_b, c, kh, kw],
+        "out_shape": [ell_a * ell_b, n // k_b, rows, w_out],
+        "stride": stride,
+    }
+
+
+def artifact_name(s):
+    """Canonical artifact key — mirrored by rust/src/runtime/manifest.rs."""
+    ea, eb = s["ell_a"], s["ell_b"]
+    _, c, h, w = s["x_shape"]
+    _, n, _, kh, kw = s["k_shape"]
+    return f"wt_ea{ea}_eb{eb}_c{c}_h{h}_w{w}_n{n}_k{kh}x{kw}_s{s['stride']}"
+
+
+# ---------------------------------------------------------------------------
+# The artifact set: every worker-task variant the Rust side executes.
+# ---------------------------------------------------------------------------
+
+LAYERS = {
+    # Small layer used by rust integration tests and examples/quickstart.
+    "testlayer": dict(c=2, h=12, w=10, n=8, kh=3, kw=3, stride=1, pad=0),
+    # LeNet-5 ConvLs (e2e example serves these distributed).
+    "lenet.conv1": dict(c=1, h=32, w=32, n=6, kh=5, kw=5, stride=1, pad=0),
+    "lenet.conv2": dict(c=6, h=14, w=14, n=16, kh=5, kw=5, stride=1, pad=0),
+    # AlexNet conv5 at reduced channel width: exercises a deep-layer shape
+    # through the PJRT path (full-width variants run via the native engine;
+    # see DESIGN.md §Hardware adaptation).
+    "alexnet.conv5.s4": dict(c=96, h=13, w=13, n=64, kh=3, kw=3, stride=1, pad=1),
+}
+
+# (layer, k_a, k_b) variants to AOT-compile.
+VARIANTS = [
+    ("testlayer", 4, 2),
+    ("testlayer", 2, 4),
+    ("lenet.conv1", 4, 2),
+    ("lenet.conv2", 2, 2),
+    ("alexnet.conv5.s4", 2, 4),
+]
+
+
+def to_hlo_text(lowered):
+    """stablehlo -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    seen = set()
+    for layer_name, k_a, k_b in VARIANTS:
+        layer = LAYERS[layer_name]
+        s = worker_shapes(layer, k_a, k_b)
+        name = artifact_name(s)
+        if name in seen:
+            continue
+        seen.add(name)
+        ea, c, h, w = s["x_shape"][0], *s["x_shape"][1:]
+        eb, n, _, kh, kw = s["k_shape"][0], *s["k_shape"][1:]
+        lowered = lower_worker_task(ea, eb, c, h, w, n, kh, kw, s["stride"])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "layer": layer_name,
+                "k_a": k_a,
+                "k_b": k_b,
+                **s,
+            }
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+    manifest = {"dtype": "f64", "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json with {len(entries)} artifacts")
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    args = p.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+"""Build-time only; never imported at runtime."""
+
+from compile.kernels.conv2d import conv2d_pallas  # noqa: F401
+from compile.kernels.ref import conv2d_ref  # noqa: F401

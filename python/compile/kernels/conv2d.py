@@ -1,0 +1,92 @@
+"""L1: the tensor-convolution hot-spot as a Pallas kernel.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the convolution is
+expressed as an implicit GEMM. The grid tiles the *output* over
+(output-channel tiles × output-row tiles); each grid step keeps
+
+  * one filter slab  (TN, C, KH, KW)              in VMEM,
+  * the input rows feeding its TH output rows      in VMEM,
+  * an accumulator   (TN, TH·OW)                   in registers/VMEM,
+
+and performs KH·KW MXU-shaped contractions
+  acc += K[:, :, i, j] (TN×C)  @  patch_{i,j} (C×(TH·OW)).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO ops (the same schedule,
+executed by the interpreter). Real-TPU efficiency is *estimated* from the
+tile shapes in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax.experimental import pallas as pl  # noqa: E402
+
+
+def _pick_tile(total, preferred):
+    """Largest divisor of `total` that is <= preferred (>=1)."""
+    t = min(preferred, total)
+    while total % t != 0:
+        t -= 1
+    return t
+
+
+def _conv_kernel(x_ref, k_ref, o_ref, *, stride, kh, kw, th, ow, c, tn):
+    """One grid step: output tile (tn, th, ow) for output-row block
+    pl.program_id(1) and output-channel block pl.program_id(0)."""
+    row0 = pl.program_id(1) * th * stride
+    x = x_ref[...]  # (C, H, W) — full input slab resident in VMEM
+    k = k_ref[...]  # (tn, C, kh, kw) — this channel tile's filters
+    acc = jnp.zeros((tn, th * ow), x.dtype)
+    span_h = (th - 1) * stride + 1
+    span_w = (ow - 1) * stride + 1
+    for i in range(kh):
+        for j in range(kw):
+            zero = jnp.zeros((), row0.dtype)
+            patch = jax.lax.dynamic_slice(
+                x, (zero, row0 + i, zero + j), (c, span_h, span_w)
+            )
+            patch = patch[:, ::stride, ::stride].reshape(c, th * ow)
+            # MXU-shaped contraction: (tn, c) @ (c, th*ow)
+            acc = acc + jnp.dot(k[:, :, i, j], patch)
+    o_ref[...] = acc.reshape(tn, th, ow)
+
+
+def conv2d_pallas(x, k, stride=1, tile_n=16, tile_h=8):
+    """Pallas convolution of x (C,H,W) with k (N,C,KH,KW) -> (N,H',W').
+
+    No padding (FCDCC materializes padding in APCP before encoding).
+    `tile_n`/`tile_h` are *preferred* tile sizes; actual tiles are the
+    largest divisors of N and H' not exceeding them, so any shape works.
+    """
+    x = jnp.asarray(x)
+    k = jnp.asarray(k)
+    c, h, w = x.shape
+    n, c2, kh, kw = k.shape
+    assert c == c2, f"channel mismatch: x {x.shape} vs k {k.shape}"
+    assert h >= kh and w >= kw, "kernel larger than input"
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    tn = _pick_tile(n, tile_n)
+    th = _pick_tile(oh, tile_h)
+    grid = (n // tn, oh // th)
+    kernel = functools.partial(
+        _conv_kernel, stride=stride, kh=kh, kw=kw, th=th, ow=ow, c=c, tn=tn
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Input slab: streamed whole (rows reused by adjacent tiles).
+            pl.BlockSpec((c, h, w), lambda pn, ph: (0, 0, 0)),
+            # Filter bank: one output-channel tile per grid step.
+            pl.BlockSpec((tn, c, kh, kw), lambda pn, ph: (pn, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, th, ow), lambda pn, ph: (pn, ph, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, k)

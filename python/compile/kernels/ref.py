@@ -1,0 +1,47 @@
+# Pure-jnp correctness oracle for the kernel.
+"""Reference tensor convolution (paper eq. (1)) in plain JAX.
+
+This is the oracle the Pallas kernel (and, transitively, the whole
+Rust-side distributed pipeline) is validated against. It follows the
+paper's conventions exactly: cross-correlation (no kernel flip), NCHW
+feature maps, OIHW filter banks, `float64` arithmetic (the paper's
+10^-27 MSE claims are double-precision claims).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+
+def conv2d_ref(x, k, stride=1, pad=0):
+    """Convolve x (C,H,W) with filter bank k (N,C,KH,KW) -> (N,H',W').
+
+    Stride and zero-padding follow the paper:
+    H' = floor((H + 2p - KH)/s) + 1.
+    """
+    x = jnp.asarray(x)
+    k = jnp.asarray(k)
+    assert x.ndim == 3 and k.ndim == 4, (x.shape, k.shape)
+    assert x.shape[0] == k.shape[1], f"channel mismatch {x.shape} vs {k.shape}"
+    y = jax.lax.conv_general_dilated(
+        x[None],  # NCHW with batch 1
+        k,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y[0]
+
+
+def worker_task_ref(xs, ks, stride=1):
+    """Reference for the L2 worker task: all pairwise convolutions of the
+    coded input slabs `xs` (ell_a, C, H, W) with the coded filter slabs
+    `ks` (ell_b, N, C, KH, KW), slabA-major (matching the Rust worker
+    loop). Returns (ell_a * ell_b, N, H', W')."""
+    outs = []
+    for a in range(xs.shape[0]):
+        for b in range(ks.shape[0]):
+            outs.append(conv2d_ref(xs[a], ks[b], stride=stride))
+    return jnp.stack(outs)

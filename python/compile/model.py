@@ -1,0 +1,52 @@
+# L2: the paper's worker-side compute graph, calling the L1 kernel.
+"""The FCDCC worker task as a JAX function (paper eqs. (39)-(40)).
+
+A worker holds ell_a coded input slabs and ell_b coded filter slabs and
+computes every pairwise tensor convolution, concatenating the coded
+output blocks along a leading block axis (slabA-major — the same order
+as the Rust worker loop and the recovery-matrix column order).
+
+This module is build-time only: `aot.py` lowers `worker_task` once per
+(layer-shape, k_A, k_B) variant to an HLO-text artifact which the Rust
+runtime executes via PJRT. Python never runs on the request path.
+"""
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from compile.kernels.conv2d import conv2d_pallas  # noqa: E402
+
+
+def worker_task(xs, ks, *, stride=1):
+    """All pairwise coded convolutions for one worker.
+
+    Args:
+      xs: (ell_a, C, H, W)   coded input slabs.
+      ks: (ell_b, N, C, KH, KW) coded filter slabs.
+      stride: convolution stride (padding was materialized by APCP).
+
+    Returns:
+      (ell_a * ell_b, N, H', W') coded output blocks, slabA-major:
+      block a*ell_b + b = conv(xs[a], ks[b]).
+    """
+    ell_a = xs.shape[0]
+    ell_b = ks.shape[0]
+    blocks = []
+    for a in range(ell_a):
+        for b in range(ell_b):
+            blocks.append(conv2d_pallas(xs[a], ks[b], stride=stride))
+    return (jnp.stack(blocks),)
+
+
+def lower_worker_task(ell_a, ell_b, c, h, w, n, kh, kw, stride):
+    """jit-lower `worker_task` for concrete slab shapes; returns the
+    jax Lowered object (HLO extraction happens in aot.py)."""
+    xs = jax.ShapeDtypeStruct((ell_a, c, h, w), jnp.float64)
+    ks = jax.ShapeDtypeStruct((ell_b, n, c, kh, kw), jnp.float64)
+    fn = functools.partial(worker_task, stride=stride)
+    return jax.jit(fn).lower(xs, ks)

@@ -1,0 +1,88 @@
+# pytest: kernel vs ref allclose — the CORE correctness signal.
+"""L1 Pallas conv kernel vs the pure-jnp oracle, including a hypothesis
+sweep over shapes, strides and dtypes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conv2d import conv2d_pallas, _pick_tile
+from compile.kernels.ref import conv2d_ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand(shape):
+    return RNG.standard_normal(shape)
+
+
+CASES = [
+    # (c, h, w, n, kh, kw, stride)
+    (1, 5, 5, 1, 3, 3, 1),
+    (2, 12, 10, 8, 3, 3, 1),
+    (1, 28, 28, 6, 5, 5, 1),
+    (3, 23, 17, 4, 5, 5, 4),
+    (2, 9, 9, 4, 3, 3, 2),
+    (3, 13, 13, 16, 3, 3, 1),
+    (4, 8, 8, 12, 1, 1, 1),
+    (2, 7, 31, 3, 3, 5, 2),
+]
+
+
+@pytest.mark.parametrize("case", CASES, ids=str)
+def test_kernel_matches_ref(case):
+    c, h, w, n, kh, kw, s = case
+    x = _rand((c, h, w))
+    k = _rand((n, c, kh, kw))
+    got = np.asarray(conv2d_pallas(x, k, stride=s))
+    want = np.asarray(conv2d_ref(x, k, stride=s))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_pick_tile_divides():
+    for total in range(1, 40):
+        for pref in range(1, 40):
+            t = _pick_tile(total, pref)
+            assert total % t == 0
+            assert 1 <= t <= min(pref, total)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    c=st.integers(1, 4),
+    n=st.integers(1, 8),
+    kh=st.integers(1, 5),
+    kw=st.integers(1, 5),
+    extra_h=st.integers(0, 12),
+    extra_w=st.integers(0, 12),
+    stride=st.integers(1, 3),
+)
+def test_kernel_matches_ref_hypothesis(c, n, kh, kw, extra_h, extra_w, stride):
+    h, w = kh + extra_h, kw + extra_w
+    x = _rand((c, h, w))
+    k = _rand((n, c, kh, kw))
+    got = np.asarray(conv2d_pallas(x, k, stride=stride))
+    want = np.asarray(conv2d_ref(x, k, stride=stride))
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_kernel_dtypes(dtype):
+    x = _rand((2, 10, 10)).astype(dtype)
+    k = _rand((4, 2, 3, 3)).astype(dtype)
+    got = np.asarray(conv2d_pallas(x, k))
+    assert got.dtype == dtype
+    want = np.asarray(conv2d_ref(x, k))
+    tol = 1e-4 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_kernel_linearity():
+    # conv is bilinear — the property FCDCC's coding relies on.
+    x1, x2 = _rand((2, 8, 8)), _rand((2, 8, 8))
+    k = _rand((4, 2, 3, 3))
+    a, b = 2.5, -1.25
+    lhs = np.asarray(conv2d_pallas(a * x1 + b * x2, k))
+    rhs = a * np.asarray(conv2d_pallas(x1, k)) + b * np.asarray(conv2d_pallas(x2, k))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-11, atol=1e-11)

@@ -1,0 +1,65 @@
+"""L2 worker task vs reference, plus AOT geometry helpers."""
+
+import numpy as np
+import pytest
+
+from compile.aot import apcp_slab_height, artifact_name, worker_shapes
+from compile.kernels.ref import worker_task_ref
+from compile.model import worker_task
+
+RNG = np.random.default_rng(99)
+
+
+@pytest.mark.parametrize("ell_a,ell_b", [(2, 2), (1, 2), (2, 1), (1, 1)])
+def test_worker_task_matches_ref(ell_a, ell_b):
+    xs = RNG.standard_normal((ell_a, 3, 9, 8))
+    ks = RNG.standard_normal((ell_b, 4, 3, 3, 3))
+    (got,) = worker_task(np.asarray(xs), np.asarray(ks))
+    want = worker_task_ref(np.asarray(xs), np.asarray(ks))
+    assert got.shape == (ell_a * ell_b, 4, 7, 6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+def test_worker_task_block_order_is_slab_a_major():
+    xs = RNG.standard_normal((2, 1, 5, 5))
+    ks = RNG.standard_normal((2, 1, 1, 3, 3))
+    (got,) = worker_task(np.asarray(xs), np.asarray(ks))
+    from compile.kernels.ref import conv2d_ref
+
+    for a in range(2):
+        for b in range(2):
+            want = conv2d_ref(xs[a], ks[b])
+            np.testing.assert_allclose(
+                np.asarray(got[a * 2 + b]), np.asarray(want), rtol=1e-12, atol=1e-12
+            )
+
+
+def test_worker_task_stride():
+    xs = RNG.standard_normal((2, 2, 11, 11))
+    ks = RNG.standard_normal((2, 3, 2, 3, 3))
+    (got,) = worker_task(np.asarray(xs), np.asarray(ks), stride=2)
+    want = worker_task_ref(np.asarray(xs), np.asarray(ks), stride=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+def test_apcp_slab_height_matches_paper_fig2():
+    # Fig. 2: H(padded)=10, K_H=3, s=1, k_A=4 -> H'=8, Ĥ=4, rows=2.
+    h_hat, rows = apcp_slab_height(10, 3, 1, 4)
+    assert (h_hat, rows) == (4, 2)
+
+
+def test_worker_shapes_testlayer():
+    layer = dict(c=2, h=12, w=10, n=8, kh=3, kw=3, stride=1, pad=0)
+    s = worker_shapes(layer, 4, 2)
+    assert s["x_shape"] == [2, 2, 5, 10]
+    assert s["k_shape"] == [2, 4, 2, 3, 3]
+    assert s["out_shape"] == [4, 4, 3, 8]
+    assert artifact_name(s) == "wt_ea2_eb2_c2_h5_w10_n4_k3x3_s1"
+
+
+def test_worker_shapes_degenerate_k():
+    layer = dict(c=2, h=12, w=10, n=8, kh=3, kw=3, stride=1, pad=0)
+    s = worker_shapes(layer, 1, 2)
+    assert s["ell_a"] == 1 and s["ell_b"] == 2
+    assert s["x_shape"][0] == 1
+    assert s["out_shape"][0] == 2

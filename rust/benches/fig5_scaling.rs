@@ -1,0 +1,76 @@
+//! Fig. 5 reproduction: average computation time vs (n, δ) at fixed
+//! straggler capacity γ = 4, over the AlexNet ConvLs (channel-scaled for
+//! the 1-vCPU testbed). Expectation: time decreases as n (and δ = n−γ)
+//! grows — more workers, smaller per-worker subtasks.
+
+use fcdcc::bench_harness::fast_mode;
+use fcdcc::cluster::sim::simulate_job;
+use fcdcc::cluster::straggler::WorkerFate;
+use fcdcc::coordinator::stability::factor_pair;
+use fcdcc::engine::Im2colEngine;
+use fcdcc::fcdcc::FcdccPlan;
+use fcdcc::metrics::Table;
+use fcdcc::model::zoo;
+use fcdcc::tensor::{Tensor3, Tensor4};
+use fcdcc::util::rng::Rng;
+
+fn main() {
+    let gamma = 4usize;
+    let ns: Vec<usize> = if fast_mode() {
+        vec![8, 16]
+    } else {
+        vec![8, 12, 16, 20, 24, 28, 32, 36]
+    };
+    let trials = if fast_mode() { 1 } else { 2 };
+    let layers: Vec<_> = zoo::alexnet()
+        .iter()
+        .map(|l| l.scaled_channels(2))
+        .collect();
+    let engine = Im2colEngine;
+    let mut rng = Rng::new(55);
+
+    let mut t = Table::new(
+        "Fig. 5: average virtual computation time vs (n, delta), gamma = 4 — AlexNet ConvLs",
+        &["n", "delta", "avg time (ms)", "avg makespan (ms)", "avg encode (ms)", "avg decode (ms)"],
+    );
+
+    for &n in &ns {
+        let delta = n - gamma;
+        let mut totals = Vec::new();
+        let mut makespans = Vec::new();
+        let mut encodes = Vec::new();
+        let mut decodes = Vec::new();
+        for layer in &layers {
+            let Ok((ka, kb)) = factor_pair(4 * delta, layer.n, layer.h_out(), true) else {
+                eprintln!("skip {} at delta={delta}", layer.name);
+                continue;
+            };
+            let Ok(plan) = FcdccPlan::new_crme(layer, ka, kb, n) else {
+                continue;
+            };
+            let x = Tensor3::random(layer.c, layer.h, layer.w, &mut rng);
+            let k = Tensor4::random(layer.n, layer.c, layer.kh, layer.kw, &mut rng);
+            let cf = plan.encode_filters(&k);
+            let fates = vec![WorkerFate::Prompt; n];
+            for _ in 0..trials {
+                let job = simulate_job(&plan, &x, &cf, &engine, &fates).expect("sim");
+                totals.push(job.total_secs());
+                makespans.push(job.makespan_secs);
+                encodes.push(job.encode_secs);
+                decodes.push(job.decode_secs);
+            }
+        }
+        let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64 * 1e3;
+        t.row(&[
+            n.to_string(),
+            delta.to_string(),
+            format!("{:.2}", avg(&totals)),
+            format!("{:.2}", avg(&makespans)),
+            format!("{:.3}", avg(&encodes)),
+            format!("{:.3}", avg(&decodes)),
+        ]);
+    }
+    t.print();
+    println!("\nExpected shape (paper): monotone decrease with n (per-worker");
+    println!("workload shrinks as delta = n - 4 grows).");
+}

@@ -1,0 +1,77 @@
+//! Fig. 6 reproduction: robustness under diverse straggler conditions —
+//! average virtual computation time with n = 32, δ = 24, γ = 8, varying
+//! the straggler count 0..12 at two delay levels (the paper's 1s/2s
+//! sleeps, scaled to 100ms/200ms for the testbed). Expectation: flat up
+//! to γ = 8 stragglers, then a jump by the injected delay.
+
+use fcdcc::bench_harness::fast_mode;
+use fcdcc::cluster::sim::simulate_job;
+use fcdcc::cluster::StragglerModel;
+use fcdcc::coordinator::stability::factor_pair;
+use fcdcc::engine::Im2colEngine;
+use fcdcc::fcdcc::FcdccPlan;
+use fcdcc::metrics::Table;
+use fcdcc::model::zoo;
+use fcdcc::tensor::{Tensor3, Tensor4};
+use fcdcc::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let (n, delta) = (32usize, 24usize);
+    let delays_ms: [u64; 2] = [100, 200];
+    let straggler_counts: Vec<usize> = if fast_mode() {
+        vec![0, 4, 8, 10]
+    } else {
+        (0..=12).collect()
+    };
+    let trials = if fast_mode() { 1 } else { 3 };
+
+    // AlexNet conv3 geometry, channel-scaled.
+    let layer = zoo::alexnet()[2].scaled_channels(4);
+    let (ka, kb) = factor_pair(4 * delta, layer.n, layer.h_out(), true).expect("factor");
+    let plan = FcdccPlan::new_crme(&layer, ka, kb, n).expect("plan");
+    let mut rng = Rng::new(66);
+    let x = Tensor3::random(layer.c, layer.h, layer.w, &mut rng);
+    let k = Tensor4::random(layer.n, layer.c, layer.kh, layer.kw, &mut rng);
+    let cf = plan.encode_filters(&k);
+    let engine = Im2colEngine;
+
+    let mut t = Table::new(
+        &format!(
+            "Fig. 6: avg virtual time vs straggler count — {} (n={n}, delta={delta}, gamma={}, kA={ka}, kB={kb})",
+            layer.name,
+            n - delta
+        ),
+        &["stragglers", "avg time @100ms (ms)", "avg time @200ms (ms)", "within gamma?"],
+    );
+
+    for &s in &straggler_counts {
+        let mut cols = Vec::new();
+        for &d in &delays_ms {
+            let model = if s == 0 {
+                StragglerModel::None
+            } else {
+                StragglerModel::FixedCount {
+                    count: s,
+                    delay: Duration::from_millis(d),
+                }
+            };
+            let mut acc = 0.0;
+            for _ in 0..trials {
+                let fates = model.draw(n, &mut rng);
+                let job = simulate_job(&plan, &x, &cf, &engine, &fates).expect("sim");
+                acc += job.total_secs();
+            }
+            cols.push(format!("{:.1}", acc / trials as f64 * 1e3));
+        }
+        t.row(&[
+            s.to_string(),
+            cols[0].clone(),
+            cols[1].clone(),
+            if s <= n - delta { "yes" } else { "no" }.to_string(),
+        ]);
+    }
+    t.print();
+    println!("\nExpected shape (paper): flat until gamma = {} stragglers, then a", n - delta);
+    println!("jump by the injected delay (and proportional to it beyond).");
+}

@@ -1,0 +1,64 @@
+//! Micro-benchmarks of the substrates on the hot path — the profiling
+//! entry point for the performance pass (EXPERIMENTS.md §Perf): conv
+//! engines, coded combination (encode), recovery inversion, decode
+//! combination, and the tensor primitives.
+
+use fcdcc::bench_harness::{bench, fast_mode, report, BenchConfig};
+use fcdcc::coding::{self, CrmeCode, Code};
+use fcdcc::fcdcc::FcdccPlan;
+use fcdcc::linalg::{cond_2, lu, Mat};
+use fcdcc::model::ConvLayer;
+use fcdcc::tensor::{conv2d, im2col::conv2d_im2col, ConvParams, Tensor3, Tensor4};
+use fcdcc::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        sample_iters: if fast_mode() { 3 } else { 7 },
+    };
+    let mut rng = Rng::new(99);
+
+    println!("### conv engines (C=64, 28x28, N=64, 3x3, s=1)\n");
+    let x = Tensor3::random(64, 28, 28, &mut rng);
+    let k = Tensor4::random(64, 64, 3, 3, &mut rng);
+    let p = ConvParams::new(1, 1);
+    report("conv2d direct", &bench(cfg, || conv2d(&x, &k, p)));
+    report("conv2d im2col", &bench(cfg, || conv2d_im2col(&x, &k, p)));
+
+    println!("\n### coded combination (encode) — k_A=8, n=20, slab 16x14x14\n");
+    let code = CrmeCode::new(8, 8, 20).unwrap();
+    let parts: Vec<Tensor3> = (0..8).map(|_| Tensor3::random(16, 14, 14, &mut rng)).collect();
+    report(
+        "encode_inputs (8 -> 40 slabs)",
+        &bench(cfg, || coding::encode_inputs(&code, &parts)),
+    );
+
+    println!("\n### recovery inversion + condition number (kA*kB = 64)\n");
+    let subset: Vec<usize> = (0..16).collect();
+    let e = code.recovery(&subset);
+    report("recovery build (64x64)", &bench(cfg, || code.recovery(&subset)));
+    report("LU inverse (64x64)", &bench(cfg, || lu::invert(&e).unwrap()));
+    report("cond_2 via Jacobi SVD (64x64)", &bench(cfg, || cond_2(&e)));
+
+    println!("\n### full pipeline stages — alexnet.conv3 geometry /4\n");
+    let layer = ConvLayer::new("conv3/c4", 64, 13, 13, 96, 3, 3, 1, 1);
+    let plan = FcdccPlan::new_crme(&layer, 4, 8, 10).unwrap(); // delta=8
+    let x = Tensor3::random(layer.c, layer.h, layer.w, &mut rng);
+    let kk = Tensor4::random(layer.n, layer.c, layer.kh, layer.kw, &mut rng);
+    report("encode_filters", &bench(cfg, || plan.encode_filters(&kk)));
+    report("encode_input", &bench(cfg, || plan.encode_input(&x)));
+    let cf = plan.encode_filters(&kk);
+    let payloads = plan.make_payloads(plan.encode_input(&x), &cf);
+    report("worker subtask (im2col)", &bench(cfg, || payloads[0].run_with(|a, b, c| conv2d_im2col(a, b, c))));
+    let results: Vec<_> = payloads[..plan.delta()]
+        .iter()
+        .map(|p| p.run_with(|a, b, c| conv2d_im2col(a, b, c)))
+        .collect();
+    report("decode + merge", &bench(cfg, || plan.decode(&results).unwrap()));
+
+    println!("\n### linalg (256x256 matmul / LU)\n");
+    let a = Mat::random(256, 256, &mut rng);
+    let b = Mat::random(256, 256, &mut rng);
+    report("matmul 256", &bench(cfg, || a.matmul(&b)));
+    report("LU factor 256", &bench(cfg, || lu::Lu::factor(&a).unwrap()));
+}

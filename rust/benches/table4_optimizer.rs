@@ -1,0 +1,72 @@
+//! Table IV + Fig. 7 reproduction: optimal (k_A, k_B) configurations per
+//! CNN layer for Q ∈ {16, 32, 64} under the paper's AWS-derived cost
+//! coefficients (λ_comm = 0.09, λ_store = 0.023, λ_comp = 0), plus the
+//! Fig. 7 cost landscape for the first two AlexNet ConvLs at Q = 32.
+//! Fully analytic — runs on the paper's full-size layer geometries.
+
+use fcdcc::fcdcc::cost::{self, CostModel};
+use fcdcc::metrics::Table;
+use fcdcc::model::zoo;
+
+fn main() {
+    let cm = CostModel::paper_exp5();
+    let qs = [16usize, 32, 64];
+
+    // Table IV: one table per architecture (VGG uses the paper's
+    // five-block representative view).
+    let archs: Vec<(&str, Vec<fcdcc::model::ConvLayer>)> = vec![
+        ("LeNet-5", zoo::lenet5()),
+        ("AlexNet", zoo::alexnet()),
+        ("VGGNet (blocks)", zoo::vgg_blocks()),
+    ];
+    for (name, layers) in &archs {
+        let mut header = vec!["Q".to_string()];
+        header.extend(layers.iter().map(|l| l.name.clone()));
+        let mut t = Table::new(
+            &format!("Table IV: optimized (k_A, k_B) for {name}"),
+            &header.iter().map(String::as_str).collect::<Vec<_>>(),
+        );
+        for &q in &qs {
+            let mut row = vec![q.to_string()];
+            for layer in layers {
+                match cost::optimize(layer, &cm, q) {
+                    Some(c) => row.push(format!("({}, {})", c.best.k_a, c.best.k_b)),
+                    None => row.push("—".to_string()),
+                }
+            }
+            t.row(&row);
+        }
+        t.print();
+    }
+
+    // Fig. 7: the U(k_A, k_B) landscape for AlexNet conv1 & conv2, Q=32.
+    for layer in &zoo::alexnet()[..2] {
+        let choice = cost::optimize(layer, &cm, 32).expect("feasible");
+        let mut t = Table::new(
+            &format!(
+                "Fig. 7: U(k_A, k_B) for {} at Q=32 (real k_A* = {:.2})",
+                layer.name, choice.k_a_star_real
+            ),
+            &["k_A", "k_B", "C_comm_up", "C_comm_down", "C_store", "U total"],
+        );
+        for c in &choice.candidates {
+            let mark = if (c.k_a, c.k_b) == (choice.best.k_a, choice.best.k_b) {
+                " *"
+            } else {
+                ""
+            };
+            t.row(&[
+                format!("{}{mark}", c.k_a),
+                c.k_b.to_string(),
+                format!("{:.0}", c.comm_up),
+                format!("{:.0}", c.comm_down),
+                format!("{:.0}", c.store),
+                format!("{:.0}", c.total()),
+            ]);
+        }
+        t.print();
+    }
+    println!("\nExpected shape (paper Table IV): early layers (large H×W, small N)");
+    println!("choose large k_A; deep layers (large N, small H×W) choose large k_B;");
+    println!("optimal factors grow with Q.");
+}

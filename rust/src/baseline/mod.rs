@@ -1,0 +1,258 @@
+//! Uncoded baselines (paper Table II): the naive single-node scheme and
+//! the three mainstream model-parallel partitionings — spatial [42],
+//! output-channel [43], and input-channel [44]. These carry **no coded
+//! redundancy**: every worker must respond, so a single straggler stalls
+//! the job (the contrast FCDCC's Figs. 5–6 quantify).
+
+use crate::model::ConvLayer;
+use crate::partition::{ApcpPlan, KccpPlan};
+use crate::tensor::{conv2d, ConvParams, Tensor3, Tensor4};
+use anyhow::{ensure, Result};
+
+/// Uncoded model-parallel partitioning strategies (Table II rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UncodedScheme {
+    /// Everything on one node.
+    Naive,
+    /// Split the input along H into `k` slabs (adaptive padding, same
+    /// geometry as APCP but uncoded); every worker holds the full filter.
+    Spatial { k: usize },
+    /// Split the filter bank along N into `k` groups; every worker holds
+    /// the full input.
+    OutChannel { k: usize },
+    /// Split both tensors along C into `k` groups; outputs are **summed**
+    /// (the merge cost Table II calls out).
+    InChannel { k: usize },
+}
+
+/// One uncoded subtask: worker `i` convolves `x` with `k`.
+pub struct UncodedSubtask {
+    pub worker_id: usize,
+    pub x: Tensor3,
+    pub k: Tensor4,
+    pub conv: ConvParams,
+}
+
+impl UncodedSubtask {
+    pub fn upload_entries(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn store_entries(&self) -> usize {
+        self.k.len()
+    }
+
+    pub fn run(&self) -> Tensor3 {
+        conv2d(&self.x, &self.k, self.conv)
+    }
+}
+
+/// A planned uncoded execution.
+pub struct UncodedPlan {
+    pub scheme: UncodedScheme,
+    pub layer: ConvLayer,
+    apcp: Option<ApcpPlan>,
+}
+
+impl UncodedPlan {
+    pub fn new(layer: &ConvLayer, scheme: UncodedScheme) -> Result<Self> {
+        let apcp = match scheme {
+            UncodedScheme::Spatial { k } => Some(ApcpPlan::new(
+                layer.h + 2 * layer.pad,
+                layer.kh,
+                layer.stride,
+                k,
+            )?),
+            UncodedScheme::OutChannel { k } => {
+                KccpPlan::new(layer.n, k)?; // validates divisibility
+                None
+            }
+            UncodedScheme::InChannel { k } => {
+                ensure!(layer.c % k == 0, "k={k} must divide C={}", layer.c);
+                None
+            }
+            UncodedScheme::Naive => None,
+        };
+        Ok(Self {
+            scheme,
+            layer: layer.clone(),
+            apcp,
+        })
+    }
+
+    /// Number of workers the scheme occupies.
+    pub fn workers(&self) -> usize {
+        match self.scheme {
+            UncodedScheme::Naive => 1,
+            UncodedScheme::Spatial { k }
+            | UncodedScheme::OutChannel { k }
+            | UncodedScheme::InChannel { k } => k,
+        }
+    }
+
+    /// Build every worker's subtask. `x` is the unpadded input.
+    pub fn subtasks(&self, x: &Tensor3, k: &Tensor4) -> Vec<UncodedSubtask> {
+        let layer = &self.layer;
+        match self.scheme {
+            UncodedScheme::Naive => vec![UncodedSubtask {
+                worker_id: 0,
+                x: x.clone(),
+                k: k.clone(),
+                conv: layer.params(),
+            }],
+            UncodedScheme::Spatial { .. } => {
+                let xp = x.pad_spatial(layer.pad);
+                let parts = self.apcp.as_ref().unwrap().partition(&xp);
+                parts
+                    .into_iter()
+                    .enumerate()
+                    .map(|(worker_id, slab)| UncodedSubtask {
+                        worker_id,
+                        x: slab,
+                        k: k.clone(),
+                        conv: ConvParams::new(layer.stride, 0),
+                    })
+                    .collect()
+            }
+            UncodedScheme::OutChannel { k: kb } => {
+                let per = layer.n / kb;
+                (0..kb)
+                    .map(|i| UncodedSubtask {
+                        worker_id: i,
+                        x: x.clone(),
+                        k: k.slice_n(i * per, (i + 1) * per),
+                        conv: layer.params(),
+                    })
+                    .collect()
+            }
+            UncodedScheme::InChannel { k: kc } => {
+                let per = layer.c / kc;
+                (0..kc)
+                    .map(|i| {
+                        let xs = x.slice_c(i * per, (i + 1) * per);
+                        // filter slice along input-channel axis
+                        let mut kk = Tensor4::zeros(layer.n, per, layer.kh, layer.kw);
+                        for n in 0..layer.n {
+                            for c in 0..per {
+                                for a in 0..layer.kh {
+                                    for b in 0..layer.kw {
+                                        kk.set(n, c, a, b, k.get(n, i * per + c, a, b));
+                                    }
+                                }
+                            }
+                        }
+                        UncodedSubtask {
+                            worker_id: i,
+                            x: xs,
+                            k: kk,
+                            conv: layer.params(),
+                        }
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Merge all worker outputs (requires every worker's result — no
+    /// straggler tolerance by construction).
+    pub fn merge(&self, outputs: &[Tensor3]) -> Tensor3 {
+        assert_eq!(outputs.len(), self.workers(), "uncoded merge needs all workers");
+        match self.scheme {
+            UncodedScheme::Naive => outputs[0].clone(),
+            UncodedScheme::Spatial { .. } => {
+                let merged = Tensor3::concat_h(&outputs.iter().collect::<Vec<_>>());
+                // trim the APCP bottom padding rows if H' was rounded up
+                let h_true = self.layer.h_out();
+                if merged.h == h_true {
+                    merged
+                } else {
+                    merged.slice_h(0, h_true)
+                }
+            }
+            UncodedScheme::OutChannel { .. } => {
+                Tensor3::concat_c(&outputs.iter().collect::<Vec<_>>())
+            }
+            UncodedScheme::InChannel { .. } => {
+                let mut acc = outputs[0].clone();
+                for o in &outputs[1..] {
+                    acc.axpy(1.0, o);
+                }
+                acc
+            }
+        }
+    }
+
+    /// Run the whole scheme inline.
+    pub fn run_inline(&self, x: &Tensor3, k: &Tensor4) -> Tensor3 {
+        let outs: Vec<Tensor3> = self.subtasks(x, k).iter().map(|s| s.run()).collect();
+        self.merge(&outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{max_abs_diff, rng::Rng};
+
+    fn setup() -> (ConvLayer, Tensor3, Tensor4) {
+        let layer = ConvLayer::new("t", 4, 13, 11, 8, 3, 3, 1, 1);
+        let mut rng = Rng::new(91);
+        let x = Tensor3::random(4, 13, 11, &mut rng);
+        let k = Tensor4::random(8, 4, 3, 3, &mut rng);
+        (layer, x, k)
+    }
+
+    #[test]
+    fn all_schemes_match_direct() {
+        let (layer, x, k) = setup();
+        let want = conv2d(&x, &k, layer.params());
+        for scheme in [
+            UncodedScheme::Naive,
+            UncodedScheme::Spatial { k: 4 },
+            UncodedScheme::OutChannel { k: 4 },
+            UncodedScheme::InChannel { k: 2 },
+        ] {
+            let plan = UncodedPlan::new(&layer, scheme).unwrap();
+            let got = plan.run_inline(&x, &k);
+            assert_eq!(got.shape(), want.shape(), "{scheme:?}");
+            assert!(
+                max_abs_diff(&got.data, &want.data) < 1e-12,
+                "{scheme:?} mismatch"
+            );
+        }
+    }
+
+    #[test]
+    fn table2_accounting() {
+        // Table II communication entries per scheme (p=0 case).
+        let layer = ConvLayer::new("t", 4, 12, 10, 8, 3, 3, 1, 0);
+        let mut rng = Rng::new(92);
+        let x = Tensor3::random(4, 12, 10, &mut rng);
+        let k = Tensor4::random(8, 4, 3, 3, &mut rng);
+
+        // Spatial k=2: upload C·Ĥ·W per worker, full filter stored.
+        let sp = UncodedPlan::new(&layer, UncodedScheme::Spatial { k: 2 }).unwrap();
+        let st = sp.subtasks(&x, &k);
+        assert_eq!(st[0].store_entries(), 8 * 4 * 9);
+        assert!(st[0].upload_entries() < x.len());
+
+        // OutChannel k=4: full input uploaded, N/k filters stored.
+        let oc = UncodedPlan::new(&layer, UncodedScheme::OutChannel { k: 4 }).unwrap();
+        let st = oc.subtasks(&x, &k);
+        assert_eq!(st[0].upload_entries(), x.len());
+        assert_eq!(st[0].store_entries(), (8 / 4) * 4 * 9);
+
+        // InChannel k=2: C/k of both tensors.
+        let ic = UncodedPlan::new(&layer, UncodedScheme::InChannel { k: 2 }).unwrap();
+        let st = ic.subtasks(&x, &k);
+        assert_eq!(st[0].upload_entries(), x.len() / 2);
+        assert_eq!(st[0].store_entries(), k.len() / 2);
+    }
+
+    #[test]
+    fn rejects_bad_divisors() {
+        let (layer, _, _) = setup();
+        assert!(UncodedPlan::new(&layer, UncodedScheme::OutChannel { k: 3 }).is_err());
+        assert!(UncodedPlan::new(&layer, UncodedScheme::InChannel { k: 3 }).is_err());
+    }
+}

@@ -1,0 +1,96 @@
+//! A minimal criterion-style bench harness (criterion is unavailable in
+//! the offline environment): warmup, fixed sample count, summary stats.
+//! Used by every target in `rust/benches/` (declared with
+//! `harness = false`).
+
+use crate::metrics::{fmt_secs, Stats};
+use std::time::Instant;
+
+/// Configuration for one measured benchmark.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 1,
+            sample_iters: 5,
+        }
+    }
+}
+
+impl BenchConfig {
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 0,
+            sample_iters: 3,
+        }
+    }
+}
+
+/// Time a closure `cfg.sample_iters` times (after warmup) and return the
+/// per-iteration stats in seconds.
+pub fn bench<R>(cfg: BenchConfig, mut f: impl FnMut() -> R) -> Stats {
+    for _ in 0..cfg.warmup_iters {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(cfg.sample_iters);
+    for _ in 0..cfg.sample_iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from(&samples)
+}
+
+/// Print a one-line bench result (criterion-ish).
+pub fn report(name: &str, s: &Stats) {
+    println!(
+        "{name:<44} mean {:>10}  p50 {:>10}  min {:>10}  max {:>10}  (n={})",
+        fmt_secs(s.mean),
+        fmt_secs(s.p50),
+        fmt_secs(s.min),
+        fmt_secs(s.max),
+        s.n
+    );
+}
+
+/// Read an env-var knob for bench scaling (e.g. FCDCC_BENCH_SAMPLES).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// `FCDCC_BENCH_FAST=1` shrinks every bench to smoke-test size.
+pub fn fast_mode() -> bool {
+    std::env::var("FCDCC_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench(BenchConfig::quick(), || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(s.n, 3);
+        assert!(s.mean > 0.0);
+        assert!(s.min <= s.mean && s.mean <= s.max);
+    }
+
+    #[test]
+    fn env_knobs() {
+        assert_eq!(env_usize("FCDCC_NONEXISTENT_KNOB", 7), 7);
+    }
+}

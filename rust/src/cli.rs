@@ -1,0 +1,115 @@
+//! Minimal declarative CLI argument parser (clap is unavailable in the
+//! offline environment): `--key value` / `--flag` pairs plus a leading
+//! subcommand word.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.command = Some(it.next().unwrap());
+            }
+        }
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument {a:?}");
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    out.opts.insert(key.to_string(), v);
+                }
+                _ => out.flags.push(key.to_string()),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn parse() -> Result<Args> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("run --arch alexnet --n 18 --verbose");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get("arch"), Some("alexnet"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 18);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("optimize");
+        assert_eq!(a.get_usize("q", 32).unwrap(), 32);
+        assert_eq!(a.get_str("arch", "lenet"), "lenet");
+        assert_eq!(a.get_f64("delay", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse("x --bias -3");
+        // "-3" doesn't start with "--", so it's a value.
+        assert_eq!(a.get_f64("bias", 0.0).unwrap(), -3.0);
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse_from(vec!["run".into(), "oops".into()]).is_err());
+        let bad = Args::parse_from(vec!["run".into(), "--n".into(), "x".into()]).unwrap();
+        assert!(bad.get_usize("n", 1).is_err());
+    }
+}

@@ -1,0 +1,319 @@
+//! The master node: owns the worker pool, runs coded jobs end to end
+//! (encode → dispatch → first-δ collection → decode → merge), and
+//! accounts every phase (paper §II-C phases and §VI metrics).
+
+use crate::cluster::straggler::StragglerModel;
+use crate::cluster::worker::{worker_loop, WorkerMsg, WorkerReply};
+use crate::engine::TaskEngine;
+use crate::fcdcc::FcdccPlan;
+use crate::tensor::{Tensor3, Tensor4};
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Per-job metrics (the rows of Table III and the points of Figs. 5–6).
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub job_id: u64,
+    pub n: usize,
+    pub delta: usize,
+    /// Worker ids whose results were used for decoding, in arrival order.
+    pub used_workers: Vec<usize>,
+    /// Master-side input encoding time (APCP partition + CRME combine).
+    pub encode_secs: f64,
+    /// Wall-clock from dispatch to δ-th arrival (measured; serialized on
+    /// a 1-vCPU testbed, see `sim_makespan_secs` for the parallel view).
+    pub collect_secs: f64,
+    /// Master-side decode time: recovery inversion + blockwise combine +
+    /// merge (the paper's "Decode (ms)" column).
+    pub decode_secs: f64,
+    /// Simulated parallel makespan: the δ-th smallest per-worker
+    /// (injected delay + compute) — what an actually-parallel cluster
+    /// would observe; the quantity plotted in Figs. 5–6.
+    pub sim_makespan_secs: f64,
+    /// Mean pure compute time over used workers.
+    pub mean_compute_secs: f64,
+    /// Tensor entries uploaded to all n workers (coded input slabs).
+    pub upload_entries: usize,
+    /// Tensor entries downloaded from the δ used workers.
+    pub download_entries: usize,
+}
+
+/// A pool of worker threads plus the result channel.
+pub struct Cluster {
+    n: usize,
+    senders: Vec<Sender<WorkerMsg>>,
+    results: Receiver<WorkerReply>,
+    handles: Vec<JoinHandle<()>>,
+    next_job: u64,
+    /// Per-job collection timeout (guards against >γ failures).
+    pub collect_timeout: Duration,
+}
+
+impl Cluster {
+    /// Spawn `n` workers all running the same conv engine.
+    pub fn new(n: usize, engine: Arc<dyn TaskEngine>) -> Self {
+        let (reply_tx, results) = channel::<WorkerReply>();
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for worker_id in 0..n {
+            let (tx, rx) = channel::<WorkerMsg>();
+            let engine = Arc::clone(&engine);
+            let reply_tx = reply_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("fcdcc-worker-{worker_id}"))
+                    .spawn(move || worker_loop(worker_id, engine, rx, reply_tx))
+                    .expect("spawn worker"),
+            );
+            senders.push(tx);
+        }
+        Self {
+            n,
+            senders,
+            results,
+            handles,
+            next_job: 1,
+            collect_timeout: Duration::from_secs(60),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Run one coded convolution job end to end. `coded_filters` are the
+    /// per-worker resident filter slabs from `plan.encode_filters`
+    /// (encoded once at model load, per the paper's steady-state model).
+    pub fn run_job(
+        &mut self,
+        plan: &FcdccPlan,
+        x: &Tensor3,
+        coded_filters: &[Vec<Tensor4>],
+        straggler: &StragglerModel,
+        rng: &mut Rng,
+    ) -> Result<(Tensor3, JobReport)> {
+        assert_eq!(coded_filters.len(), self.n, "filters for every worker");
+        assert_eq!(plan.spec().n, self.n, "plan/cluster n mismatch");
+        let job_id = self.next_job;
+        self.next_job += 1;
+        let delta = plan.delta();
+
+        // --- Encode phase (master).
+        let t0 = Instant::now();
+        let coded_inputs = plan.encode_input(x);
+        let payloads = plan.make_payloads(coded_inputs, coded_filters);
+        let encode_secs = t0.elapsed().as_secs_f64();
+        let upload_entries: usize = payloads.iter().map(|p| p.upload_entries()).sum();
+
+        // --- Dispatch with straggler fates.
+        let fates = straggler.draw(self.n, rng);
+        let t1 = Instant::now();
+        for (payload, fate) in payloads.into_iter().zip(fates.iter()) {
+            let wid = payload.worker_id;
+            self.senders[wid]
+                .send(WorkerMsg::Task {
+                    job_id,
+                    payload: Box::new(payload),
+                    fate: *fate,
+                })
+                .with_context(|| format!("worker {wid} channel closed"))?;
+        }
+
+        // --- Collect the first δ results for THIS job.
+        let mut replies: Vec<WorkerReply> = Vec::with_capacity(delta);
+        let deadline = Instant::now() + self.collect_timeout;
+        while replies.len() < delta {
+            let now = Instant::now();
+            if now >= deadline {
+                bail!(
+                    "job {job_id}: timed out with {}/{delta} results (>{} workers failed?)",
+                    replies.len(),
+                    self.n - delta
+                );
+            }
+            match self.results.recv_timeout(deadline - now) {
+                Ok(r) if r.job_id == job_id => replies.push(r),
+                Ok(_) => {} // stale result from a previous job: drop
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => bail!("all workers gone"),
+            }
+        }
+        let collect_secs = t1.elapsed().as_secs_f64();
+
+        // Cancel the stragglers' superseded subtasks so their injected
+        // delays don't cascade into the next job.
+        for tx in &self.senders {
+            let _ = tx.send(WorkerMsg::Cancel(job_id));
+        }
+
+        // --- Decode phase (master).
+        let t2 = Instant::now();
+        let results: Vec<&crate::fcdcc::WorkerResult> =
+            replies.iter().map(|r| &r.result).collect();
+        let out = plan.decode_refs(&results)?;
+        let decode_secs = t2.elapsed().as_secs_f64();
+
+        let download_entries = results.iter().map(|r| r.download_entries()).sum();
+        let used_workers: Vec<usize> = replies.iter().map(|r| r.worker_id).collect();
+        let sim_makespan_secs = replies
+            .iter()
+            .map(|r| r.delay_secs + r.compute_secs)
+            .fold(0.0, f64::max);
+        let mean_compute_secs =
+            replies.iter().map(|r| r.compute_secs).sum::<f64>() / replies.len() as f64;
+
+        Ok((
+            out,
+            JobReport {
+                job_id,
+                n: self.n,
+                delta,
+                used_workers,
+                encode_secs,
+                collect_secs,
+                decode_secs,
+                sim_makespan_secs,
+                mean_compute_secs,
+                upload_entries,
+                download_entries,
+            },
+        ))
+    }
+
+    /// Graceful shutdown: tell every worker to exit and join the threads.
+    pub fn shutdown(self) {
+        for tx in &self.senders {
+            let _ = tx.send(WorkerMsg::Shutdown);
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::DirectEngine;
+    use crate::model::ConvLayer;
+    use crate::tensor::conv2d;
+    use crate::util::mse;
+
+    fn small_setup() -> (ConvLayer, Tensor3, Tensor4) {
+        let layer = ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0);
+        let mut rng = Rng::new(71);
+        let x = Tensor3::random(2, 12, 10, &mut rng);
+        let k = Tensor4::random(8, 2, 3, 3, &mut rng);
+        (layer, x, k)
+    }
+
+    #[test]
+    fn cluster_job_matches_reference() {
+        let (layer, x, k) = small_setup();
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap(); // delta=2
+        let coded_filters = plan.encode_filters(&k);
+        let mut cluster = Cluster::new(4, Arc::new(DirectEngine));
+        let mut rng = Rng::new(1);
+        let (y, report) = cluster
+            .run_job(&plan, &x, &coded_filters, &StragglerModel::None, &mut rng)
+            .unwrap();
+        cluster.shutdown();
+        let want = conv2d(&x, &k, layer.params());
+        assert!(mse(&y.data, &want.data) < 1e-20);
+        assert_eq!(report.delta, 2);
+        assert_eq!(report.used_workers.len(), 2);
+        assert!(report.upload_entries > 0);
+        assert!(report.download_entries > 0);
+    }
+
+    #[test]
+    fn tolerates_up_to_gamma_failures() {
+        let (layer, x, k) = small_setup();
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 5).unwrap(); // delta=2, gamma=3
+        let coded_filters = plan.encode_filters(&k);
+        let mut cluster = Cluster::new(5, Arc::new(DirectEngine));
+        let mut rng = Rng::new(2);
+        let (y, _) = cluster
+            .run_job(
+                &plan,
+                &x,
+                &coded_filters,
+                &StragglerModel::Failures { count: 3 },
+                &mut rng,
+            )
+            .unwrap();
+        cluster.shutdown();
+        let want = conv2d(&x, &k, layer.params());
+        assert!(mse(&y.data, &want.data) < 1e-18);
+    }
+
+    #[test]
+    fn too_many_failures_times_out() {
+        let (layer, x, k) = small_setup();
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap(); // delta=2, gamma=2
+        let coded_filters = plan.encode_filters(&k);
+        let mut cluster = Cluster::new(4, Arc::new(DirectEngine));
+        cluster.collect_timeout = Duration::from_millis(200);
+        let mut rng = Rng::new(3);
+        let r = cluster.run_job(
+            &plan,
+            &x,
+            &coded_filters,
+            &StragglerModel::Failures { count: 3 },
+            &mut rng,
+        );
+        cluster.shutdown();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn stragglers_do_not_block_completion() {
+        let (layer, x, k) = small_setup();
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap(); // delta=2, gamma=2
+        let coded_filters = plan.encode_filters(&k);
+        let mut cluster = Cluster::new(4, Arc::new(DirectEngine));
+        let mut rng = Rng::new(4);
+        let t0 = Instant::now();
+        let (_, report) = cluster
+            .run_job(
+                &plan,
+                &x,
+                &coded_filters,
+                &StragglerModel::FixedCount {
+                    count: 2,
+                    delay: Duration::from_millis(300),
+                },
+                &mut rng,
+            )
+            .unwrap();
+        let wall = t0.elapsed();
+        cluster.shutdown();
+        // The two prompt workers suffice; we must not have waited ~300ms.
+        assert!(
+            wall < Duration::from_millis(250),
+            "took {wall:?}, straggler delay leaked into the critical path"
+        );
+        assert_eq!(report.used_workers.len(), 2);
+    }
+
+    #[test]
+    fn back_to_back_jobs_ignore_stale_results() {
+        let (layer, x, k) = small_setup();
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap();
+        let coded_filters = plan.encode_filters(&k);
+        let mut cluster = Cluster::new(4, Arc::new(DirectEngine));
+        let mut rng = Rng::new(5);
+        let want = conv2d(&x, &k, layer.params());
+        for _ in 0..3 {
+            let (y, _) = cluster
+                .run_job(&plan, &x, &coded_filters, &StragglerModel::None, &mut rng)
+                .unwrap();
+            assert!(mse(&y.data, &want.data) < 1e-18);
+        }
+        cluster.shutdown();
+    }
+}

@@ -1,0 +1,20 @@
+//! The simulated heterogeneous cluster (DESIGN.md §Hardware adaptation):
+//! one OS thread per worker, mpsc channels as the network, straggler
+//! injection in the worker loop, and a master that decodes as soon as any
+//! δ results arrive — the same semantics as the paper's EC2/mpi4py
+//! testbed with the wire replaced by channels.
+//!
+//! Because the testbed has a single vCPU, wall-clock parallel speedup is
+//! not observable; the cluster therefore *also* computes the simulated
+//! makespan (per-worker completion = straggler delay + measured compute
+//! time; job completion = δ-th order statistic), which is the quantity
+//! the paper's Figs. 5–6 plot.
+
+pub mod master;
+pub mod sim;
+pub mod straggler;
+pub mod worker;
+
+pub use master::{Cluster, JobReport};
+pub use sim::{simulate_job, SimJob};
+pub use straggler::StragglerModel;

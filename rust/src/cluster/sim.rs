@@ -1,0 +1,169 @@
+//! Virtual-time cluster simulation — the measurement backbone of the
+//! benches (Figs. 5–6, Table III).
+//!
+//! On this 1-vCPU testbed, truly-parallel wall-clock makespan is not
+//! observable: n worker threads would serialize. The simulator instead
+//! executes each worker's subtask *serially*, timing it in isolation,
+//! adds the injected straggler delay, and reconstructs the parallel
+//! timeline analytically: worker i finishes at `delay_i + compute_i`,
+//! the master decodes after the δ-th earliest finisher (exactly the
+//! paper's first-δ semantics), and the job makespan is that order
+//! statistic. Failed workers never finish.
+
+use crate::cluster::straggler::WorkerFate;
+use crate::engine::TaskEngine;
+use crate::fcdcc::FcdccPlan;
+use crate::tensor::{Tensor3, Tensor4};
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+/// Virtual-time result of one coded job.
+#[derive(Clone, Debug)]
+pub struct SimJob {
+    /// Master-side encode time (measured).
+    pub encode_secs: f64,
+    /// Per-worker (injected delay, measured compute) for non-failed
+    /// workers; `None` for failed ones.
+    pub per_worker: Vec<Option<(f64, f64)>>,
+    /// Worker ids used for decoding (the δ earliest finishers).
+    pub survivors: Vec<usize>,
+    /// Virtual parallel makespan: finish time of the δ-th survivor.
+    pub makespan_secs: f64,
+    /// Master-side decode time (measured).
+    pub decode_secs: f64,
+    /// The decoded output tensor.
+    pub output: Tensor3,
+}
+
+impl SimJob {
+    /// Mean pure compute time across survivors.
+    pub fn mean_compute_secs(&self) -> f64 {
+        let vals: Vec<f64> = self
+            .survivors
+            .iter()
+            .map(|&i| self.per_worker[i].unwrap().1)
+            .collect();
+        vals.iter().sum::<f64>() / vals.len() as f64
+    }
+
+    /// End-to-end virtual job time: encode + makespan + decode.
+    pub fn total_secs(&self) -> f64 {
+        self.encode_secs + self.makespan_secs + self.decode_secs
+    }
+}
+
+/// Run one coded job in virtual time (see module docs).
+pub fn simulate_job(
+    plan: &FcdccPlan,
+    x: &Tensor3,
+    coded_filters: &[Vec<Tensor4>],
+    engine: &dyn TaskEngine,
+    fates: &[WorkerFate],
+) -> Result<SimJob> {
+    let n = plan.spec().n;
+    assert_eq!(fates.len(), n, "one fate per worker");
+    assert_eq!(coded_filters.len(), n);
+
+    let t0 = Instant::now();
+    let coded_inputs = plan.encode_input(x);
+    let payloads = plan.make_payloads(coded_inputs, coded_filters);
+    let encode_secs = t0.elapsed().as_secs_f64();
+
+    // Execute every live worker serially, in isolation.
+    let mut per_worker: Vec<Option<(f64, f64)>> = Vec::with_capacity(n);
+    let mut results = Vec::with_capacity(n);
+    for (payload, fate) in payloads.iter().zip(fates) {
+        match fate.delay() {
+            None => {
+                per_worker.push(None);
+                results.push(None);
+            }
+            Some(d) => {
+                let t = Instant::now();
+                let r = engine.run(payload)?;
+                per_worker.push(Some((d.as_secs_f64(), t.elapsed().as_secs_f64())));
+                results.push(Some(r));
+            }
+        }
+    }
+
+    // The δ earliest finishers in virtual time are the survivors.
+    let delta = plan.delta();
+    let mut finishers: Vec<(f64, usize)> = per_worker
+        .iter()
+        .enumerate()
+        .filter_map(|(i, pw)| pw.map(|(d, c)| (d + c, i)))
+        .collect();
+    if finishers.len() < delta {
+        bail!(
+            "only {} workers finished, need delta={delta}",
+            finishers.len()
+        );
+    }
+    finishers.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let survivors: Vec<usize> = finishers[..delta].iter().map(|&(_, i)| i).collect();
+    let makespan_secs = finishers[delta - 1].0;
+
+    let t2 = Instant::now();
+    let chosen: Vec<&crate::fcdcc::WorkerResult> = survivors
+        .iter()
+        .map(|&i| results[i].as_ref().unwrap())
+        .collect();
+    let output = plan.decode_refs(&chosen)?;
+    let decode_secs = t2.elapsed().as_secs_f64();
+
+    Ok(SimJob {
+        encode_secs,
+        per_worker,
+        survivors,
+        makespan_secs,
+        decode_secs,
+        output,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::straggler::StragglerModel;
+    use crate::engine::Im2colEngine;
+    use crate::model::ConvLayer;
+    use crate::tensor::conv2d;
+    use crate::util::{mse, rng::Rng};
+    use std::time::Duration;
+
+    #[test]
+    fn virtual_makespan_respects_gamma() {
+        let layer = ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0);
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 5).unwrap(); // delta=2, gamma=3
+        let mut rng = Rng::new(7);
+        let x = Tensor3::random(2, 12, 10, &mut rng);
+        let k = Tensor4::random(8, 2, 3, 3, &mut rng);
+        let cf = plan.encode_filters(&k);
+        let want = conv2d(&x, &k, layer.params());
+        let delay = Duration::from_millis(500);
+
+        // 3 stragglers (= gamma): makespan must NOT include the delay.
+        let fates = StragglerModel::FixedCount { count: 3, delay }.draw(5, &mut rng);
+        let job = simulate_job(&plan, &x, &cf, &Im2colEngine, &fates).unwrap();
+        assert!(job.makespan_secs < 0.4, "makespan {}", job.makespan_secs);
+        assert!(mse(&job.output.data, &want.data) < 1e-18);
+
+        // 4 stragglers (> gamma): the delay is unavoidable.
+        let fates = StragglerModel::FixedCount { count: 4, delay }.draw(5, &mut rng);
+        let job = simulate_job(&plan, &x, &cf, &Im2colEngine, &fates).unwrap();
+        assert!(job.makespan_secs >= 0.5, "makespan {}", job.makespan_secs);
+    }
+
+    #[test]
+    fn too_many_failures_is_error() {
+        let layer = ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0);
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap(); // delta=2
+        let mut rng = Rng::new(8);
+        let x = Tensor3::random(2, 12, 10, &mut rng);
+        let k = Tensor4::random(8, 2, 3, 3, &mut rng);
+        let cf = plan.encode_filters(&k);
+        let fates = StragglerModel::Failures { count: 3 }.draw(4, &mut rng);
+        assert!(simulate_job(&plan, &x, &cf, &Im2colEngine, &fates).is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Straggler injection — the paper simulates stragglers with `sleep()`
+//! and randomized worker availability (§VI-A); this module reproduces
+//! that, plus exponential-latency and hard-failure models from the CDC
+//! literature.
+
+use crate::util::rng::Rng;
+use std::time::Duration;
+
+/// What happens to a worker on a given job.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WorkerFate {
+    /// Responds after `delay` of artificial extra latency.
+    Delayed(Duration),
+    /// Responds immediately (no injected latency).
+    Prompt,
+    /// Never responds (crash / upload failure / download failure).
+    Failed,
+}
+
+/// Straggler model applied per (job, worker) pair.
+#[derive(Clone, Debug)]
+pub enum StragglerModel {
+    /// No stragglers at all.
+    None,
+    /// A fixed set of workers is delayed by a fixed amount (the paper's
+    /// Experiment 4: `count` stragglers with 1s/2s sleeps).
+    FixedCount { count: usize, delay: Duration },
+    /// Each worker independently straggles with probability `p`
+    /// (the paper's `random.random()` availability), delayed by `delay`.
+    Bernoulli { p: f64, delay: Duration },
+    /// Exponentially-distributed extra latency with the given mean —
+    /// the classical CDC latency model.
+    Exponential { mean: Duration },
+    /// A fixed set of workers fails outright.
+    Failures { count: usize },
+}
+
+impl StragglerModel {
+    /// Draw the fate of every worker for one job. Which workers straggle
+    /// is itself random (drawn from `rng`), matching the paper's setup.
+    pub fn draw(&self, n: usize, rng: &mut Rng) -> Vec<WorkerFate> {
+        match self {
+            StragglerModel::None => vec![WorkerFate::Prompt; n],
+            StragglerModel::FixedCount { count, delay } => {
+                let mut fates = vec![WorkerFate::Prompt; n];
+                for &i in rng.choose_indices(n, (*count).min(n)).iter() {
+                    fates[i] = WorkerFate::Delayed(*delay);
+                }
+                fates
+            }
+            StragglerModel::Bernoulli { p, delay } => (0..n)
+                .map(|_| {
+                    if rng.chance(*p) {
+                        WorkerFate::Delayed(*delay)
+                    } else {
+                        WorkerFate::Prompt
+                    }
+                })
+                .collect(),
+            StragglerModel::Exponential { mean } => (0..n)
+                .map(|_| {
+                    let d = rng.exponential(1.0 / mean.as_secs_f64());
+                    WorkerFate::Delayed(Duration::from_secs_f64(d))
+                })
+                .collect(),
+            StragglerModel::Failures { count } => {
+                let mut fates = vec![WorkerFate::Prompt; n];
+                for &i in rng.choose_indices(n, (*count).min(n)).iter() {
+                    fates[i] = WorkerFate::Failed;
+                }
+                fates
+            }
+        }
+    }
+}
+
+impl WorkerFate {
+    pub fn delay(&self) -> Option<Duration> {
+        match self {
+            WorkerFate::Prompt => Some(Duration::ZERO),
+            WorkerFate::Delayed(d) => Some(*d),
+            WorkerFate::Failed => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_all_prompt() {
+        let mut rng = Rng::new(1);
+        let fates = StragglerModel::None.draw(5, &mut rng);
+        assert!(fates.iter().all(|f| *f == WorkerFate::Prompt));
+    }
+
+    #[test]
+    fn fixed_count_delays_exactly_k() {
+        let mut rng = Rng::new(2);
+        let m = StragglerModel::FixedCount {
+            count: 3,
+            delay: Duration::from_millis(10),
+        };
+        let fates = m.draw(8, &mut rng);
+        let delayed = fates
+            .iter()
+            .filter(|f| matches!(f, WorkerFate::Delayed(_)))
+            .count();
+        assert_eq!(delayed, 3);
+    }
+
+    #[test]
+    fn failures_never_respond() {
+        let mut rng = Rng::new(3);
+        let m = StragglerModel::Failures { count: 2 };
+        let fates = m.draw(6, &mut rng);
+        assert_eq!(fates.iter().filter(|f| **f == WorkerFate::Failed).count(), 2);
+        assert!(fates.iter().any(|f| f.delay().is_none()));
+    }
+
+    #[test]
+    fn bernoulli_rate_roughly_holds() {
+        let mut rng = Rng::new(4);
+        let m = StragglerModel::Bernoulli {
+            p: 0.3,
+            delay: Duration::from_millis(1),
+        };
+        let mut total = 0usize;
+        for _ in 0..200 {
+            total += m
+                .draw(10, &mut rng)
+                .iter()
+                .filter(|f| matches!(f, WorkerFate::Delayed(_)))
+                .count();
+        }
+        let rate = total as f64 / 2000.0;
+        assert!((rate - 0.3).abs() < 0.05, "rate={rate}");
+    }
+}

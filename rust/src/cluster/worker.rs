@@ -1,0 +1,115 @@
+//! Worker node: a thread that receives coded subtasks, applies its
+//! injected straggler fate, computes the pairwise coded convolutions with
+//! its [`TaskEngine`], and sends the coded result back.
+//!
+//! The master broadcasts `Cancel(job_id)` once it has decoded a job;
+//! a worker that wakes from a straggler sleep checks for cancellation
+//! before computing, so superseded subtasks are dropped instead of
+//! cascading delay into subsequent jobs (the paper's per-job straggler
+//! independence).
+
+use crate::cluster::straggler::WorkerFate;
+use crate::engine::TaskEngine;
+use crate::fcdcc::{WorkerPayload, WorkerResult};
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Master → worker messages.
+pub enum WorkerMsg {
+    Task {
+        job_id: u64,
+        payload: Box<WorkerPayload>,
+        fate: WorkerFate,
+    },
+    /// All jobs with id <= the given one are complete; drop their tasks.
+    Cancel(u64),
+    Shutdown,
+}
+
+/// Worker → master replies.
+pub struct WorkerReply {
+    pub job_id: u64,
+    pub worker_id: usize,
+    pub result: WorkerResult,
+    /// Pure compute time (excludes the injected straggler delay).
+    pub compute_secs: f64,
+    /// The injected delay actually slept.
+    pub delay_secs: f64,
+}
+
+/// The worker event loop. Runs until `Shutdown` or the channel closes.
+pub fn worker_loop(
+    worker_id: usize,
+    engine: Arc<dyn TaskEngine>,
+    rx: Receiver<WorkerMsg>,
+    tx: Sender<WorkerReply>,
+) {
+    let mut canceled_up_to = 0u64;
+    let mut pending: VecDeque<WorkerMsg> = VecDeque::new();
+    'outer: loop {
+        let msg = match pending.pop_front() {
+            Some(m) => m,
+            None => match rx.recv() {
+                Ok(m) => m,
+                Err(_) => break,
+            },
+        };
+        match msg {
+            WorkerMsg::Shutdown => break,
+            WorkerMsg::Cancel(id) => canceled_up_to = canceled_up_to.max(id),
+            WorkerMsg::Task {
+                job_id,
+                payload,
+                fate,
+            } => {
+                if job_id <= canceled_up_to {
+                    continue; // superseded before we even started
+                }
+                let delay = match fate.delay() {
+                    Some(d) => d,
+                    None => continue, // failed worker: silently drop the task
+                };
+                if !delay.is_zero() {
+                    std::thread::sleep(delay);
+                    // Drain whatever arrived while we slept; cancellations
+                    // take effect immediately, tasks queue up in order.
+                    loop {
+                        match rx.try_recv() {
+                            Ok(WorkerMsg::Cancel(id)) => {
+                                canceled_up_to = canceled_up_to.max(id)
+                            }
+                            Ok(m) => pending.push_back(m),
+                            Err(TryRecvError::Empty) => break,
+                            Err(TryRecvError::Disconnected) => break 'outer,
+                        }
+                    }
+                    if job_id <= canceled_up_to {
+                        continue; // the sleep outlived the job
+                    }
+                }
+                let t0 = Instant::now();
+                let result = match engine.run(&payload) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        // An engine error behaves like a worker failure:
+                        // the coded redundancy absorbs it.
+                        eprintln!("worker {worker_id}: task failed: {e:#}");
+                        continue;
+                    }
+                };
+                let compute_secs = t0.elapsed().as_secs_f64();
+                // The master may have moved on (enough results already);
+                // a send error is normal shutdown noise.
+                let _ = tx.send(WorkerReply {
+                    job_id,
+                    worker_id,
+                    result,
+                    compute_secs,
+                    delay_secs: delay.as_secs_f64(),
+                });
+            }
+        }
+    }
+}

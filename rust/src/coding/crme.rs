@@ -1,0 +1,226 @@
+//! CRME: Circulant and Rotation Matrix Embedding code — the paper's
+//! numerically-stable scheme (§III, eqs. (15)–(17), (29), (34)).
+//!
+//! Worker *j* corresponds to the evaluation angle `j·θ` with `θ = 2π/q`,
+//! `q = Nextodd(n)`. All arithmetic stays in ℝ: the complex Vandermonde
+//! structure (points on the unit circle — the source of the good
+//! conditioning) is embedded via 2×2 rotation blocks
+//! `R_θ^m = [[cos mθ, −sin mθ], [sin mθ, cos mθ]]`.
+//!
+//! * `A` (k_A × 2n): block (α, j) = `R_θ^{j·α}`, α ∈ Z_{k_A/2}, j ∈ Z_n.
+//! * `B` (k_B × 2n): block (β, j) = `R_θ^{j·(k_A/2)·β}` — the exponent
+//!   stride k_A/2 makes the joint exponents `α + (k_A/2)·β` enumerate
+//!   `0..k_A·k_B/4`, the product-code requirement.
+//!
+//! Degenerate partition counts are permitted per the paper's feasible set
+//! `S = {x ≥ 1 | x ≡ 0 (mod 2) or x = 1}`: a side with k = 1 is not
+//! partitioned, its "encoding matrix" is a row of ones (every worker holds
+//! that tensor uncoded, ℓ = 1 on that side), and the scheme degenerates to
+//! CRME on the other side only.
+
+use crate::coding::{Code, CodeSpec};
+use crate::linalg::Mat;
+use crate::util::next_odd;
+use anyhow::{ensure, Result};
+
+/// The CRME code instance (precomputed encoding matrices).
+pub struct CrmeCode {
+    spec: CodeSpec,
+    /// Odd modulus q >= n defining the rotation angle θ = 2π/q.
+    pub q: usize,
+    a: Mat,
+    b: Mat,
+    name: String,
+}
+
+/// Is `k` in the paper's feasible partition set S (1 or even)?
+pub fn feasible_k(k: usize) -> bool {
+    k == 1 || (k >= 2 && k % 2 == 0)
+}
+
+/// Build the rotation-block Vandermonde matrix with `m` block rows and
+/// `n` block columns; block (α, j) = R_θ^{j·stride·α}.
+fn rotation_vandermonde(m: usize, n: usize, theta: f64, stride: usize) -> Mat {
+    let mut out = Mat::zeros(2 * m, 2 * n);
+    for alpha in 0..m {
+        for j in 0..n {
+            let ang = theta * (j * stride * alpha) as f64;
+            let (s, c) = ang.sin_cos();
+            // R = [[c, -s], [s, c]]
+            out.set(2 * alpha, 2 * j, c);
+            out.set(2 * alpha, 2 * j + 1, -s);
+            out.set(2 * alpha + 1, 2 * j, s);
+            out.set(2 * alpha + 1, 2 * j + 1, c);
+        }
+    }
+    out
+}
+
+impl CrmeCode {
+    /// Create a CRME code for `k_a` input partitions, `k_b` filter
+    /// partitions and `n` workers, with `q = Nextodd(n)`.
+    pub fn new(k_a: usize, k_b: usize, n: usize) -> Result<Self> {
+        Self::with_q(k_a, k_b, n, next_odd(n))
+    }
+
+    /// Same, with an explicit odd modulus `q >= n` (exposed for the
+    /// numerical-stability ablations).
+    pub fn with_q(k_a: usize, k_b: usize, n: usize, q: usize) -> Result<Self> {
+        ensure!(feasible_k(k_a), "k_a={k_a} not in S (must be 1 or even)");
+        ensure!(feasible_k(k_b), "k_b={k_b} not in S (must be 1 or even)");
+        ensure!(n >= 1, "need at least one worker");
+        ensure!(q >= n && q % 2 == 1, "q={q} must be odd and >= n={n}");
+        let ell_a = if k_a == 1 { 1 } else { 2 };
+        let ell_b = if k_b == 1 { 1 } else { 2 };
+        let spec = CodeSpec {
+            k_a,
+            k_b,
+            n,
+            ell_a,
+            ell_b,
+        };
+        ensure!(
+            spec.delta() <= n,
+            "recovery threshold delta={} exceeds n={n} (k_a·k_b too large)",
+            spec.delta()
+        );
+        let theta = 2.0 * std::f64::consts::PI / q as f64;
+        let m_a = k_a / ell_a; // block rows of A (1 when k_a == 1)
+        let m_b = k_b / ell_b;
+        let a = if k_a == 1 {
+            Mat::from_vec(1, n, vec![1.0; n])
+        } else {
+            rotation_vandermonde(m_a, n, theta, 1)
+        };
+        // The B-side exponent stride is m_a (= k_A/2, or 1 when k_a == 1),
+        // so joint exponents α + m_a·β enumerate 0..m_a·m_b.
+        let b = if k_b == 1 {
+            Mat::from_vec(1, n, vec![1.0; n])
+        } else {
+            rotation_vandermonde(m_b, n, theta, m_a)
+        };
+        Ok(Self {
+            spec,
+            q,
+            a,
+            b,
+            name: format!("CRME(k_A={k_a},k_B={k_b},n={n},q={q})"),
+        })
+    }
+}
+
+impl Code for CrmeCode {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> CodeSpec {
+        self.spec
+    }
+
+    fn mat_a(&self) -> &Mat {
+        &self.a
+    }
+
+    fn mat_b(&self) -> &Mat {
+        &self.b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::contiguous_subset;
+    use crate::linalg::{cond_2, lu};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn shapes_and_spec() {
+        let c = CrmeCode::new(4, 8, 10).unwrap();
+        assert_eq!(c.spec().delta(), 8);
+        assert_eq!(c.mat_a().rows, 4);
+        assert_eq!(c.mat_a().cols, 20);
+        assert_eq!(c.mat_b().rows, 8);
+        assert_eq!(c.mat_b().cols, 20);
+        assert_eq!(c.q, 11);
+    }
+
+    #[test]
+    fn first_block_row_is_identity_blocks() {
+        // α = 0 ⇒ R^0 = I for every worker (paper eq. (17) first row).
+        let c = CrmeCode::new(4, 4, 6).unwrap();
+        let a = c.mat_a();
+        for j in 0..6 {
+            assert_eq!(a.get(0, 2 * j), 1.0);
+            assert_eq!(a.get(0, 2 * j + 1), 0.0);
+            assert_eq!(a.get(1, 2 * j), 0.0);
+            assert_eq!(a.get(1, 2 * j + 1), 1.0);
+        }
+    }
+
+    #[test]
+    fn recovery_invertible_all_delta_subsets_small() {
+        // k_a=2, k_b=4 ⇒ delta=2; enumerate every 2-subset of 5 workers.
+        let c = CrmeCode::new(2, 4, 5).unwrap();
+        for i in 0..5 {
+            for j in (i + 1)..5 {
+                let e = c.recovery(&[i, j]);
+                assert!(e.is_square());
+                assert!(
+                    lu::Lu::factor(&e).is_ok(),
+                    "singular recovery for subset [{i},{j}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn recovery_invertible_random_subsets_larger() {
+        let c = CrmeCode::new(4, 8, 12).unwrap(); // delta = 8
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let subset = rng.choose_indices(12, 8);
+            let e = c.recovery(&subset);
+            let k = cond_2(&e);
+            assert!(k.is_finite(), "singular recovery for {subset:?}");
+        }
+    }
+
+    #[test]
+    fn degenerate_k_a_one() {
+        // k_a = 1: input replicated; scheme reduces to CRME on B.
+        let c = CrmeCode::new(1, 8, 6).unwrap(); // delta = 4
+        assert_eq!(c.spec().ell_a, 1);
+        assert_eq!(c.spec().delta(), 4);
+        let e = c.recovery(&[0, 2, 3, 5]);
+        assert_eq!(e.rows, 8);
+        assert_eq!(e.cols, 8);
+        assert!(lu::Lu::factor(&e).is_ok());
+    }
+
+    #[test]
+    fn degenerate_both_one() {
+        let c = CrmeCode::new(1, 1, 3).unwrap(); // pure replication
+        assert_eq!(c.spec().delta(), 1);
+        let e = c.recovery(&[2]);
+        assert_eq!(e.data, vec![1.0]);
+    }
+
+    #[test]
+    fn rejects_bad_parameters() {
+        assert!(CrmeCode::new(3, 4, 10).is_err()); // odd k_a > 1
+        assert!(CrmeCode::new(4, 4, 3).is_err()); // delta=4 > n=3
+        assert!(CrmeCode::with_q(2, 2, 4, 4).is_err()); // even q
+        assert!(CrmeCode::with_q(2, 2, 4, 3).is_err()); // q < n
+    }
+
+    #[test]
+    fn well_conditioned_at_scale() {
+        // The paper's headline: CRME stays usable beyond n >= 20 where real
+        // Vandermonde explodes. Full set of workers, delta = 16, n = 20.
+        let c = CrmeCode::new(8, 8, 20).unwrap();
+        let subset = contiguous_subset(20, 16, 0);
+        let k = cond_2(&c.recovery(&subset));
+        assert!(k < 1e8, "cond={k:e} too large for CRME at n=20");
+    }
+}

@@ -1,0 +1,228 @@
+//! Coding layer: the NSCTC tensor-block-list algebra (paper §III) and the
+//! family of linear codes it can be instantiated with — CRME (the paper's
+//! scheme), real Vandermonde polynomial codes, and Fahim–Cadambe
+//! Chebyshev-basis codes (the rivals of Fig. 3/4).
+//!
+//! ## The abstraction
+//!
+//! Every scheme is described by two encoding matrices over ℝ:
+//!
+//! * `A` of shape `k_a × (ell_a · n)` — column `i·ell_a + j` holds the
+//!   linear-combination coefficients producing worker *i*'s *j*-th coded
+//!   **input** slab from the `k_a` input partitions,
+//! * `B` of shape `k_b × (ell_b · n)` — likewise for the filter partitions.
+//!
+//! Worker *i* convolves each of its `ell_a` coded input slabs with each of
+//! its `ell_b` coded filter slabs, producing `ell_a·ell_b` coded output
+//! blocks. Because convolution is bilinear, the coded output blocks are
+//! the true output blocks `T_C[a·k_b + b] = X'_a * K'_b` multiplied by the
+//! column-blockwise Kronecker (Khatri–Rao) matrix `G` (paper eq. (41)).
+//! Any subset of `delta = k_a·k_b / (ell_a·ell_b)` workers yields a square
+//! recovery matrix `E` (eq. (42)); decoding is `Y = Ỹ · E⁻¹` (eq. (45)).
+
+pub mod crme;
+pub mod fahim_cadambe;
+pub mod vandermonde;
+
+use crate::linalg::{kron, lu, Mat};
+use crate::tensor::{Tensor3, Tensor4};
+use anyhow::{ensure, Context, Result};
+
+pub use crme::CrmeCode;
+pub use fahim_cadambe::FahimCadambeCode;
+pub use vandermonde::VandermondeCode;
+
+/// Static description of a coded-convolution scheme instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CodeSpec {
+    /// Number of input-tensor partitions (paper k_A).
+    pub k_a: usize,
+    /// Number of filter-tensor partitions (paper k_B).
+    pub k_b: usize,
+    /// Number of worker nodes (paper n).
+    pub n: usize,
+    /// Coded input slabs held per worker (paper ℓ for the input side).
+    pub ell_a: usize,
+    /// Coded filter slabs held per worker.
+    pub ell_b: usize,
+}
+
+impl CodeSpec {
+    /// Recovery threshold δ = k_A·k_B / (ℓ_A·ℓ_B) (paper §II-A).
+    pub fn delta(&self) -> usize {
+        self.k_a * self.k_b / (self.ell_a * self.ell_b)
+    }
+
+    /// Straggler resilience γ = n − δ.
+    pub fn gamma(&self) -> usize {
+        self.n - self.delta()
+    }
+
+    /// Coded output blocks produced per worker.
+    pub fn blocks_per_worker(&self) -> usize {
+        self.ell_a * self.ell_b
+    }
+}
+
+/// A linear coded-computing scheme for tensor convolution.
+pub trait Code: Send + Sync {
+    fn name(&self) -> &str;
+    fn spec(&self) -> CodeSpec;
+
+    /// Input-side encoding matrix, `k_a × (ell_a·n)`.
+    fn mat_a(&self) -> &Mat;
+
+    /// Filter-side encoding matrix, `k_b × (ell_b·n)`.
+    fn mat_b(&self) -> &Mat;
+
+    /// The recovery matrix `E` for the given ordered worker subset
+    /// (paper eq. (42)): `k_a·k_b` rows, `|workers|·ℓ_A·ℓ_B` columns.
+    /// Square exactly when `|workers| == delta()`.
+    fn recovery(&self, workers: &[usize]) -> Mat {
+        let s = self.spec();
+        let blocks: Vec<Mat> = workers
+            .iter()
+            .map(|&i| {
+                let a_i = self.mat_a().slice_cols(i * s.ell_a, (i + 1) * s.ell_a);
+                let b_i = self.mat_b().slice_cols(i * s.ell_b, (i + 1) * s.ell_b);
+                kron(&a_i, &b_i)
+            })
+            .collect();
+        Mat::hcat(&blocks.iter().collect::<Vec<_>>())
+    }
+}
+
+/// Encode the input-partition list: worker `i`'s slab `j` is
+/// `Σ_α A(α, i·ℓ_A + j) · X'_α` (paper eq. (2)/(32)). Returns
+/// `n` vectors of `ell_a` coded slabs.
+pub fn encode_inputs(code: &dyn Code, parts: &[Tensor3]) -> Vec<Vec<Tensor3>> {
+    let s = code.spec();
+    assert_eq!(parts.len(), s.k_a, "encode_inputs: expected k_a partitions");
+    let a = code.mat_a();
+    let (c, h, w) = parts[0].shape();
+    (0..s.n)
+        .map(|i| {
+            (0..s.ell_a)
+                .map(|j| {
+                    let col = i * s.ell_a + j;
+                    let mut acc = Tensor3::zeros(c, h, w);
+                    for (alpha, p) in parts.iter().enumerate() {
+                        let coef = a.get(alpha, col);
+                        if coef != 0.0 {
+                            acc.axpy(coef, p);
+                        }
+                    }
+                    acc
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Encode the filter-partition list (paper eq. (3)/(37)).
+pub fn encode_filters(code: &dyn Code, parts: &[Tensor4]) -> Vec<Vec<Tensor4>> {
+    let s = code.spec();
+    assert_eq!(parts.len(), s.k_b, "encode_filters: expected k_b partitions");
+    let b = code.mat_b();
+    let (n4, c, kh, kw) = parts[0].shape();
+    (0..s.n)
+        .map(|i| {
+            (0..s.ell_b)
+                .map(|j| {
+                    let col = i * s.ell_b + j;
+                    let mut acc = Tensor4::zeros(n4, c, kh, kw);
+                    for (beta, p) in parts.iter().enumerate() {
+                        let coef = b.get(beta, col);
+                        if coef != 0.0 {
+                            acc.axpy(coef, p);
+                        }
+                    }
+                    acc
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Decode: given the coded output blocks of exactly `delta` workers
+/// (worker `workers[w]` contributed `blocks[w]`, an `ℓ_A·ℓ_B`-long list in
+/// ℓ_A-major order, i.e. block `j_a·ℓ_B + j_b` is slabA `j_a` * slabB
+/// `j_b`), recover the `k_a·k_b` true output blocks in `a·k_b + b` order
+/// (paper Alg. 5 steps 1–5, done blockwise instead of via an explicit
+/// vectorize/reshape pair — same arithmetic, fewer copies).
+pub fn decode_outputs(
+    code: &dyn Code,
+    workers: &[usize],
+    blocks: &[&[Tensor3]],
+) -> Result<Vec<Tensor3>> {
+    let s = code.spec();
+    ensure!(
+        workers.len() == s.delta(),
+        "decode_outputs: need exactly delta={} workers, got {}",
+        s.delta(),
+        workers.len()
+    );
+    ensure!(workers.len() == blocks.len());
+    let bpw = s.blocks_per_worker();
+    for (w, bs) in blocks.iter().enumerate() {
+        ensure!(
+            bs.len() == bpw,
+            "worker {} returned {} blocks, expected {}",
+            workers[w],
+            bs.len(),
+            bpw
+        );
+    }
+    let e = code.recovery(workers);
+    ensure!(e.is_square(), "recovery matrix is not square");
+    let d = lu::invert(&e).context("recovery matrix inversion failed")?;
+    // Flatten coded blocks into a single list matching E's column order.
+    let coded: Vec<&Tensor3> = blocks.iter().flat_map(|b| b.iter()).collect();
+    let (c, h, w) = coded[0].shape();
+    // Y_i = Σ_j D(j, i) · Ỹ_j  (Y = Ỹ · D, done per output block).
+    let kab = s.k_a * s.k_b;
+    let mut out = Vec::with_capacity(kab);
+    for i in 0..kab {
+        let mut acc = Tensor3::zeros(c, h, w);
+        for (j, cb) in coded.iter().enumerate() {
+            let coef = d.get(j, i);
+            if coef != 0.0 {
+                acc.axpy(coef, cb);
+            }
+        }
+        out.push(acc);
+    }
+    Ok(out)
+}
+
+/// Worst-case condition number search over all δ-subsets is exponential;
+/// the benches use sampled subsets plus the adversarial "first δ of the
+/// last workers" pattern that maximizes point spread. This helper returns
+/// the recovery matrix for the contiguous subset starting at `start`.
+pub fn contiguous_subset(n: usize, delta: usize, start: usize) -> Vec<usize> {
+    (0..delta).map(|i| (start + i) % n).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_derived_quantities() {
+        let s = CodeSpec {
+            k_a: 4,
+            k_b: 8,
+            n: 10,
+            ell_a: 2,
+            ell_b: 2,
+        };
+        assert_eq!(s.delta(), 8);
+        assert_eq!(s.gamma(), 2);
+        assert_eq!(s.blocks_per_worker(), 4);
+    }
+
+    #[test]
+    fn contiguous_subset_wraps() {
+        assert_eq!(contiguous_subset(5, 3, 4), vec![4, 0, 1]);
+    }
+}

@@ -1,0 +1,174 @@
+//! Classical real polynomial codes (Yu et al. [13] style, ℓ = 1) — the
+//! numerically *unstable* rival of Fig. 3/4. Worker *i* evaluates the
+//! partition-generating polynomials at a real point x_i:
+//!
+//!   X̃_i = Σ_α x_i^α X'_α,      K̃_i = Σ_β x_i^{k_A·β} K'_β,
+//!
+//! so a worker's coded output is the degree-(k_A·k_B−1) product polynomial
+//! evaluated at x_i and the recovery matrix is the real Vandermonde matrix
+//! of any δ = k_A·k_B returned points — whose condition number grows
+//! exponentially in δ (Gautschi's bound [25]), the instability the paper's
+//! CRME scheme eliminates.
+
+use crate::coding::{Code, CodeSpec};
+use crate::linalg::Mat;
+use anyhow::{ensure, Result};
+
+/// Evaluation-point families for polynomial codes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PointSet {
+    /// Equispaced in [−1, 1] — the textbook "real polynomial" choice.
+    Equispaced,
+    /// Chebyshev points cos((2i+1)π/2n) — better constants, still
+    /// exponential in the monomial basis.
+    Chebyshev,
+}
+
+pub fn evaluation_points(n: usize, ps: PointSet) -> Vec<f64> {
+    match ps {
+        PointSet::Equispaced => {
+            if n == 1 {
+                vec![0.0]
+            } else {
+                (0..n)
+                    .map(|i| -1.0 + 2.0 * i as f64 / (n - 1) as f64)
+                    .collect()
+            }
+        }
+        PointSet::Chebyshev => (0..n)
+            .map(|i| ((2 * i + 1) as f64 * std::f64::consts::PI / (2 * n) as f64).cos())
+            .collect(),
+    }
+}
+
+/// Real monomial-basis polynomial code.
+pub struct VandermondeCode {
+    spec: CodeSpec,
+    a: Mat,
+    b: Mat,
+    name: String,
+    pub points: Vec<f64>,
+}
+
+impl VandermondeCode {
+    pub fn new(k_a: usize, k_b: usize, n: usize, ps: PointSet) -> Result<Self> {
+        ensure!(k_a >= 1 && k_b >= 1 && n >= 1);
+        let spec = CodeSpec {
+            k_a,
+            k_b,
+            n,
+            ell_a: 1,
+            ell_b: 1,
+        };
+        ensure!(
+            spec.delta() <= n,
+            "polynomial code needs k_a*k_b={} <= n={n} workers",
+            k_a * k_b
+        );
+        let pts = evaluation_points(n, ps);
+        // A(α, i) = x_i^α ; B(β, i) = x_i^{k_A·β}.
+        let mut a = Mat::zeros(k_a, n);
+        let mut b = Mat::zeros(k_b, n);
+        for (i, &x) in pts.iter().enumerate() {
+            let mut p = 1.0;
+            for alpha in 0..k_a {
+                a.set(alpha, i, p);
+                p *= x;
+            }
+            let step = x.powi(k_a as i32);
+            let mut pb = 1.0;
+            for beta in 0..k_b {
+                b.set(beta, i, pb);
+                pb *= step;
+            }
+        }
+        let tag = match ps {
+            PointSet::Equispaced => "RealPoly",
+            PointSet::Chebyshev => "ChebPointsPoly",
+        };
+        Ok(Self {
+            spec,
+            a,
+            b,
+            name: format!("{tag}(k_A={k_a},k_B={k_b},n={n})"),
+            points: pts,
+        })
+    }
+}
+
+impl Code for VandermondeCode {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> CodeSpec {
+        self.spec
+    }
+
+    fn mat_a(&self) -> &Mat {
+        &self.a
+    }
+
+    fn mat_b(&self) -> &Mat {
+        &self.b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{cond_2, lu};
+
+    #[test]
+    fn joint_column_is_monomial_vandermonde() {
+        let c = VandermondeCode::new(2, 3, 6, PointSet::Equispaced).unwrap();
+        let e = c.recovery(&[0, 1, 2, 3, 4, 5]);
+        // Column i must be (x_i^(α·k_b… )) — precisely x_i^{α + 2β} in
+        // row order α·k_b + β? No: row (α·k_b + β) holds A(α,i)·B(β,i)
+        // = x_i^{α}·x_i^{2β} = x_i^{α+2β}.
+        for (i, &x) in c.points.iter().enumerate() {
+            for alpha in 0..2 {
+                for beta in 0..3 {
+                    let want = x.powi((alpha + 2 * beta) as i32);
+                    let got = e.get(alpha * 3 + beta, i);
+                    assert!((want - got).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn invertible_at_small_scale() {
+        let c = VandermondeCode::new(2, 2, 6, PointSet::Equispaced).unwrap();
+        let e = c.recovery(&[0, 2, 3, 5]);
+        assert!(lu::Lu::factor(&e).is_ok());
+    }
+
+    #[test]
+    fn condition_explodes_with_delta() {
+        // The defining pathology: equispaced real Vandermonde conditioning
+        // grows exponentially with the number of points.
+        let small = VandermondeCode::new(2, 2, 4, PointSet::Equispaced).unwrap();
+        let cs = cond_2(&small.recovery(&[0, 1, 2, 3]));
+        let big = VandermondeCode::new(4, 8, 32, PointSet::Equispaced).unwrap();
+        let subset: Vec<usize> = (0..32).collect();
+        let cb = cond_2(&big.recovery(&subset));
+        assert!(cb > 1e10, "expected ill-conditioning, got {cb:e}");
+        assert!(cb > cs * 1e6);
+    }
+
+    #[test]
+    fn chebyshev_points_better_than_equispaced() {
+        let subset: Vec<usize> = (0..24).collect();
+        let eq = VandermondeCode::new(4, 6, 24, PointSet::Equispaced).unwrap();
+        let ch = VandermondeCode::new(4, 6, 24, PointSet::Chebyshev).unwrap();
+        let ce = cond_2(&eq.recovery(&subset));
+        let cc = cond_2(&ch.recovery(&subset));
+        assert!(cc < ce, "chebyshev {cc:e} should beat equispaced {ce:e}");
+    }
+
+    #[test]
+    fn rejects_insufficient_workers() {
+        assert!(VandermondeCode::new(4, 4, 15, PointSet::Equispaced).is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! Minimal TOML-subset config parser + the FCDCC deployment config.
+//! Supports `[section]` headers, `key = value` with strings, integers,
+//! floats, booleans and flat arrays — enough for deployment files like:
+//!
+//! ```toml
+//! [cluster]
+//! workers = 18
+//! engine = "pjrt"
+//!
+//! [layer.conv1]
+//! k_a = 8
+//! k_b = 8
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar/array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Flat dotted-key config: `section.key -> value`.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    entries: BTreeMap<String, Value>,
+}
+
+fn parse_value(src: &str) -> Result<Value> {
+    let s = src.trim();
+    if let Some(stripped) = s.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string: {s}"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s
+            .strip_prefix('[')
+            .and_then(|x| x.strip_suffix(']'))
+            .ok_or_else(|| anyhow!("unterminated array: {s}"))?;
+        let items: Result<Vec<Value>> = inner
+            .split(',')
+            .map(str::trim)
+            .filter(|x| !x.is_empty())
+            .map(parse_value)
+            .collect();
+        return Ok(Value::Array(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+impl Config {
+    pub fn parse(src: &str) -> Result<Config> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: bad section header", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            entries.insert(full_key, parse_value(value)?);
+        }
+        Ok(Config { entries })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    /// All keys under a section prefix (e.g. every `layer.*`).
+    pub fn section_keys(&self, prefix: &str) -> Vec<&str> {
+        let full = format!("{prefix}.");
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(&full))
+            .map(String::as_str)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# deployment config
+[cluster]
+workers = 18
+engine = "pjrt"
+timeout_secs = 60.5
+fast = true
+
+[layer.conv1]
+k = [8, 8]   # (k_A, k_B)
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.usize_or("cluster.workers", 0), 18);
+        assert_eq!(c.str_or("cluster.engine", "x"), "pjrt");
+        assert_eq!(c.f64_or("cluster.timeout_secs", 0.0), 60.5);
+        assert_eq!(c.get("cluster.fast"), Some(&Value::Bool(true)));
+        assert_eq!(
+            c.get("layer.conv1.k"),
+            Some(&Value::Array(vec![Value::Int(8), Value::Int(8)]))
+        );
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("missing", 7), 7);
+        assert_eq!(c.str_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn section_key_listing() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.section_keys("layer"), vec!["layer.conv1.k"]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[open").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("k = \"open").is_err());
+        assert!(Config::parse("k = [1, 2").is_err());
+        assert!(Config::parse("k = what").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let c = Config::parse("# only a comment\n\nx = 1 # trailing\n").unwrap();
+        assert_eq!(c.usize_or("x", 0), 1);
+    }
+}

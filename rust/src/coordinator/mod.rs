@@ -1,0 +1,152 @@
+//! High-level coordinator commands — the application layer behind the
+//! `fcdcc` CLI and the examples: single-layer distributed runs, the
+//! cost planner, the numerical-stability report, and the distributed
+//! LeNet-5 serving loop.
+
+pub mod serve;
+pub mod stability;
+
+use crate::cluster::{Cluster, StragglerModel};
+use crate::engine::{DirectEngine, Im2colEngine, TaskEngine};
+use crate::fcdcc::{cost, FcdccPlan};
+use crate::metrics::{fmt_secs, fmt_sci, Table};
+use crate::model::{zoo, ConvLayer};
+use crate::tensor::{conv2d, Tensor3, Tensor4};
+use crate::util::{mse, rng::Rng};
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub use serve::{serve_lenet, ServeConfig, ServeStats};
+
+/// Resolve a `--engine` name to a TaskEngine (PJRT is resolved by the
+/// caller since it needs the artifacts directory).
+pub fn engine_by_name(name: &str) -> Result<Arc<dyn TaskEngine>> {
+    match name {
+        "direct" => Ok(Arc::new(DirectEngine)),
+        "im2col" => Ok(Arc::new(Im2colEngine)),
+        other => Err(anyhow!(
+            "unknown engine {other:?} (expected direct|im2col|pjrt)"
+        )),
+    }
+}
+
+/// Options for a single-layer distributed run.
+pub struct RunConfig {
+    pub layer: ConvLayer,
+    pub k_a: usize,
+    pub k_b: usize,
+    pub n: usize,
+    pub stragglers: usize,
+    pub delay: Duration,
+    pub engine: Arc<dyn TaskEngine>,
+    pub seed: u64,
+}
+
+/// Run one convolutional layer through the full FCDCC stack and print a
+/// report; returns the MSE vs the single-node reference.
+pub fn run_layer(cfg: RunConfig) -> Result<f64> {
+    let layer = &cfg.layer;
+    println!(
+        "layer {}: C={} H={} W={} N={} K={}x{} s={} p={}",
+        layer.name, layer.c, layer.h, layer.w, layer.n, layer.kh, layer.kw, layer.stride, layer.pad
+    );
+    let plan = FcdccPlan::new_crme(layer, cfg.k_a, cfg.k_b, cfg.n)?;
+    println!(
+        "plan: k_A={} k_B={} n={} delta={} gamma={}",
+        cfg.k_a,
+        cfg.k_b,
+        cfg.n,
+        plan.delta(),
+        cfg.n - plan.delta(),
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let x = Tensor3::random(layer.c, layer.h, layer.w, &mut rng);
+    let k = Tensor4::random(layer.n, layer.c, layer.kh, layer.kw, &mut rng);
+
+    let coded_filters = plan.encode_filters(&k);
+    let mut cluster = Cluster::new(cfg.n, cfg.engine);
+    let straggler = if cfg.stragglers == 0 {
+        StragglerModel::None
+    } else {
+        StragglerModel::FixedCount {
+            count: cfg.stragglers,
+            delay: cfg.delay,
+        }
+    };
+    let (y, report) = cluster.run_job(&plan, &x, &coded_filters, &straggler, &mut rng)?;
+    cluster.shutdown();
+
+    let want = conv2d(&x, &k, layer.params());
+    let err = mse(&y.data, &want.data);
+    println!(
+        "done: encode {} | collect {} | decode {} | sim-makespan {} | upload {} entries | download {} entries",
+        fmt_secs(report.encode_secs),
+        fmt_secs(report.collect_secs),
+        fmt_secs(report.decode_secs),
+        fmt_secs(report.sim_makespan_secs),
+        report.upload_entries,
+        report.download_entries,
+    );
+    println!("used workers: {:?}", report.used_workers);
+    println!("MSE vs single-node reference: {}", fmt_sci(err));
+    Ok(err)
+}
+
+/// The Table-IV cost planner: optimal (k_A, k_B) per layer per Q.
+pub fn print_optimizer_table(arch: &str, qs: &[usize]) -> Result<()> {
+    let layers = zoo::by_name(arch).ok_or_else(|| anyhow!("unknown architecture {arch:?}"))?;
+    let cm = cost::CostModel::paper_exp5();
+    let mut header = vec!["Q".to_string()];
+    header.extend(layers.iter().map(|l| l.name.clone()));
+    let mut t = Table::new(
+        &format!("Optimized (k_A, k_B) for {arch} (λ_comm=0.09, λ_store=0.023, λ_comp=0)"),
+        &header.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+    for &q in qs {
+        let mut row = vec![q.to_string()];
+        for layer in &layers {
+            match cost::optimize(layer, &cm, q) {
+                Some(c) => row.push(format!("({}, {})", c.best.k_a, c.best.k_b)),
+                None => row.push("—".to_string()),
+            }
+        }
+        t.row(&row);
+    }
+    t.print();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_lookup() {
+        assert!(engine_by_name("direct").is_ok());
+        assert!(engine_by_name("im2col").is_ok());
+        assert!(engine_by_name("cuda").is_err());
+    }
+
+    #[test]
+    fn run_layer_small_exact() {
+        let cfg = RunConfig {
+            layer: ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0),
+            k_a: 4,
+            k_b: 2,
+            n: 4,
+            stragglers: 1,
+            delay: Duration::from_millis(50),
+            engine: Arc::new(DirectEngine),
+            seed: 7,
+        };
+        let err = run_layer(cfg).unwrap();
+        assert!(err < 1e-20, "mse={err:e}");
+    }
+
+    #[test]
+    fn optimizer_table_prints() {
+        print_optimizer_table("lenet", &[16, 32]).unwrap();
+        assert!(print_optimizer_table("nope", &[16]).is_err());
+    }
+}

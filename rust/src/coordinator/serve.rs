@@ -1,0 +1,210 @@
+//! Distributed LeNet-5 serving: the end-to-end driver (DESIGN.md §E2E).
+//! Every convolutional layer of a LeNet-5 runs through the full FCDCC
+//! stack (APCP/KCCP → CRME encode → simulated cluster with stragglers →
+//! first-δ decode); pooling, ReLU and the FC head run on the master, as
+//! in the paper (CDC is applied to ConvLs only).
+
+use crate::cluster::{Cluster, StragglerModel};
+use crate::engine::TaskEngine;
+use crate::fcdcc::FcdccPlan;
+use crate::metrics::Stats;
+use crate::model::{network::softmax, Layer, Network};
+use crate::tensor::{Tensor3, Tensor4};
+use crate::util::{mse, rng::Rng};
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Serving-loop configuration.
+pub struct ServeConfig {
+    pub n_workers: usize,
+    pub requests: usize,
+    pub straggler: StragglerModel,
+    pub engine: Arc<dyn TaskEngine>,
+    /// (k_A, k_B) per conv layer (conv1, conv2).
+    pub partitions: [(usize, usize); 2],
+    pub seed: u64,
+}
+
+impl ServeConfig {
+    /// The default configuration matching the AOT artifact set:
+    /// conv1 (4,2), conv2 (2,2), n = 4 workers.
+    pub fn default_with_engine(engine: Arc<dyn TaskEngine>) -> Self {
+        Self {
+            n_workers: 4,
+            requests: 16,
+            straggler: StragglerModel::None,
+            engine,
+            partitions: [(4, 2), (2, 2)],
+            seed: 2024,
+        }
+    }
+}
+
+/// Serving-loop results.
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    pub latency: Stats,
+    pub throughput_rps: f64,
+    pub decode: Stats,
+    /// Logit MSE vs the single-node forward pass, averaged over requests.
+    pub mean_logit_mse: f64,
+    /// Requests whose argmax class differed from the reference.
+    pub class_mismatches: usize,
+    pub requests: usize,
+}
+
+struct ConvStage {
+    plan: FcdccPlan,
+    coded_filters: Vec<Vec<Tensor4>>,
+    bias: Vec<f64>,
+}
+
+/// Run the distributed LeNet-5 serving loop; returns latency/throughput
+/// plus fidelity vs the single-node reference.
+pub fn serve_lenet(cfg: ServeConfig) -> Result<ServeStats> {
+    let net = Network::lenet5_random(42);
+    // Pull the two conv layers' weights out of the network definition.
+    let mut stages: Vec<ConvStage> = Vec::new();
+    for layer in &net.layers {
+        if let Layer::Conv {
+            shape,
+            weights,
+            bias,
+        } = layer
+        {
+            let (k_a, k_b) = cfg.partitions[stages.len()];
+            let plan = FcdccPlan::new_crme(shape, k_a, k_b, cfg.n_workers)?;
+            let coded_filters = plan.encode_filters(weights);
+            stages.push(ConvStage {
+                plan,
+                coded_filters,
+                bias: bias.clone(),
+            });
+        }
+    }
+    if stages.len() != 2 {
+        return Err(anyhow!("expected 2 conv layers in LeNet-5"));
+    }
+
+    let mut cluster = Cluster::new(cfg.n_workers, Arc::clone(&cfg.engine));
+    let mut rng = Rng::new(cfg.seed);
+    let mut latencies = Vec::with_capacity(cfg.requests);
+    let mut decodes = Vec::new();
+    let mut mses = Vec::with_capacity(cfg.requests);
+    let mut mismatches = 0usize;
+    let t_all = Instant::now();
+
+    for _ in 0..cfg.requests {
+        let x = Tensor3::random(1, 32, 32, &mut rng);
+        let t0 = Instant::now();
+
+        // conv1 distributed + bias + relu + pool
+        let mut stage_idx = 0usize;
+        let mut t = x.clone();
+        let mut logits: Vec<f64> = Vec::new();
+        let mut flat: Option<Vec<f64>> = None;
+        for layer in &net.layers {
+            match layer {
+                Layer::Conv { .. } => {
+                    let stage = &stages[stage_idx];
+                    stage_idx += 1;
+                    let (mut y, report) = cluster.run_job(
+                        &stage.plan,
+                        &t,
+                        &stage.coded_filters,
+                        &cfg.straggler,
+                        &mut rng,
+                    )?;
+                    decodes.push(report.decode_secs);
+                    for n in 0..y.c {
+                        let base = y.idx(n, 0, 0);
+                        let plane = y.h * y.w;
+                        for v in &mut y.data[base..base + plane] {
+                            *v += stage.bias[n];
+                        }
+                    }
+                    t = y;
+                }
+                Layer::Relu => {
+                    if let Some(f) = &mut flat {
+                        for v in f.iter_mut() {
+                            if *v < 0.0 {
+                                *v = 0.0;
+                            }
+                        }
+                    } else {
+                        t.relu_inplace();
+                    }
+                }
+                Layer::MaxPool { size, stride } => {
+                    t = crate::model::network::pool(&t, *size, *stride, true);
+                }
+                Layer::AvgPool { size, stride } => {
+                    t = crate::model::network::pool(&t, *size, *stride, false);
+                }
+                Layer::Dense { w, b } => {
+                    let input = flat.take().unwrap_or_else(|| t.data.clone());
+                    let mut y = w.matvec(&input);
+                    for (yi, bi) in y.iter_mut().zip(b) {
+                        *yi += bi;
+                    }
+                    flat = Some(y);
+                }
+            }
+        }
+        if let Some(f) = flat {
+            logits = f;
+        }
+        latencies.push(t0.elapsed().as_secs_f64());
+
+        // Fidelity vs single-node reference.
+        let want = net.forward(&x);
+        mses.push(mse(&logits, &want));
+        let argmax = |v: &[f64]| {
+            v.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        };
+        let p_got = softmax(&logits);
+        let p_want = softmax(&want);
+        if argmax(&p_got) != argmax(&p_want) {
+            mismatches += 1;
+        }
+    }
+    let total = t_all.elapsed().as_secs_f64();
+    cluster.shutdown();
+
+    Ok(ServeStats {
+        latency: Stats::from(&latencies),
+        throughput_rps: cfg.requests as f64 / total,
+        decode: Stats::from(&decodes),
+        mean_logit_mse: mses.iter().sum::<f64>() / mses.len() as f64,
+        class_mismatches: mismatches,
+        requests: cfg.requests,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Im2colEngine;
+    use std::time::Duration;
+
+    #[test]
+    fn serve_matches_single_node() {
+        let mut cfg = ServeConfig::default_with_engine(Arc::new(Im2colEngine));
+        cfg.requests = 3;
+        cfg.straggler = StragglerModel::FixedCount {
+            count: 1,
+            delay: Duration::from_millis(30),
+        };
+        let stats = serve_lenet(cfg).unwrap();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.class_mismatches, 0);
+        assert!(stats.mean_logit_mse < 1e-16, "mse={:e}", stats.mean_logit_mse);
+        assert!(stats.throughput_rps > 0.0);
+    }
+}

@@ -1,0 +1,239 @@
+//! Numerical-stability comparison across CDC schemes (paper Experiment 2,
+//! Figs. 3–4): decode MSE and recovery-matrix condition number for
+//! CRME/FCDCC vs real-Vandermonde polynomial codes vs Fahim–Cadambe, over
+//! the paper's (n, δ, γ) grid.
+
+use crate::coding::{
+    fahim_cadambe::FahimCadambeCode,
+    vandermonde::{PointSet, VandermondeCode},
+    Code, CrmeCode,
+};
+use crate::fcdcc::FcdccPlan;
+use crate::linalg::cond_2;
+use crate::model::ConvLayer;
+use crate::tensor::{conv2d, Tensor3, Tensor4};
+use crate::util::{mse, rng::Rng};
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// One scheme × one (n, δ) configuration result.
+#[derive(Clone, Debug)]
+pub struct StabilityPoint {
+    pub scheme: &'static str,
+    pub n: usize,
+    pub delta: usize,
+    pub gamma: usize,
+    pub k_a: usize,
+    pub k_b: usize,
+    /// Condition numbers over the sampled δ-subsets.
+    pub cond_median: f64,
+    pub cond_worst: f64,
+    /// Decode MSE vs the single-node reference over the same subsets.
+    pub mse_mean: f64,
+    pub mse_worst: f64,
+}
+
+/// The scheme family of Fig. 3/4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchemeKind {
+    Crme,
+    RealVandermonde,
+    ChebPointsVandermonde,
+    FahimCadambe,
+}
+
+impl SchemeKind {
+    pub const ALL: [SchemeKind; 4] = [
+        SchemeKind::Crme,
+        SchemeKind::RealVandermonde,
+        SchemeKind::ChebPointsVandermonde,
+        SchemeKind::FahimCadambe,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchemeKind::Crme => "FCDCC (CRME)",
+            SchemeKind::RealVandermonde => "Real polynomial",
+            SchemeKind::ChebPointsVandermonde => "Chebyshev-pts poly",
+            SchemeKind::FahimCadambe => "Fahim-Cadambe",
+        }
+    }
+
+    /// Partition product k_A·k_B for a target recovery threshold δ:
+    /// 4δ for the ℓ=2 CRME embedding, δ for the ℓ=1 rivals.
+    pub fn partition_product(self, delta: usize) -> usize {
+        match self {
+            SchemeKind::Crme => 4 * delta,
+            _ => delta,
+        }
+    }
+}
+
+/// Pick a balanced feasible (k_A, k_B) with k_A·k_B = p, k_B | n_out,
+/// k_A ≤ h_out; for CRME both factors must additionally be 1 or even.
+pub fn factor_pair(p: usize, n_out: usize, h_out: usize, even: bool) -> Result<(usize, usize)> {
+    let feasible = |k: usize| !even || k == 1 || k % 2 == 0;
+    let mut best: Option<(usize, usize)> = None;
+    for k_a in 1..=p {
+        if p % k_a != 0 || k_a > h_out || !feasible(k_a) {
+            continue;
+        }
+        let k_b = p / k_a;
+        if n_out % k_b != 0 || !feasible(k_b) {
+            continue;
+        }
+        let balance = (k_a as f64).ln() - (k_b as f64).ln();
+        match best {
+            Some((ba, bb)) => {
+                let prev = (ba as f64).ln() - (bb as f64).ln();
+                if balance.abs() < prev.abs() {
+                    best = Some((k_a, k_b));
+                }
+            }
+            None => best = Some((k_a, k_b)),
+        }
+    }
+    best.ok_or_else(|| anyhow!("no feasible (k_A,k_B) for product {p} (N={n_out}, H'={h_out})"))
+}
+
+fn build_code(kind: SchemeKind, k_a: usize, k_b: usize, n: usize) -> Result<Arc<dyn Code>> {
+    Ok(match kind {
+        SchemeKind::Crme => Arc::new(CrmeCode::new(k_a, k_b, n)?),
+        SchemeKind::RealVandermonde => {
+            Arc::new(VandermondeCode::new(k_a, k_b, n, PointSet::Equispaced)?)
+        }
+        SchemeKind::ChebPointsVandermonde => {
+            Arc::new(VandermondeCode::new(k_a, k_b, n, PointSet::Chebyshev)?)
+        }
+        SchemeKind::FahimCadambe => Arc::new(FahimCadambeCode::new(k_a, k_b, n)?),
+    })
+}
+
+/// Evaluate one scheme on one (n, δ) configuration of a layer.
+/// `subset_samples` random δ-subsets are drawn (plus the adversarial
+/// "first δ workers" subset); condition numbers use the recovery matrix,
+/// MSE uses the full inline pipeline on random tensors.
+pub fn evaluate(
+    kind: SchemeKind,
+    layer: &ConvLayer,
+    n: usize,
+    delta: usize,
+    subset_samples: usize,
+    seed: u64,
+) -> Result<StabilityPoint> {
+    let p = kind.partition_product(delta);
+    let (k_a, k_b) = factor_pair(p, layer.n, layer.h_out(), kind == SchemeKind::Crme)?;
+    let code = build_code(kind, k_a, k_b, n)?;
+    let plan = FcdccPlan::with_code(layer, Arc::clone(&code))?;
+    assert_eq!(plan.delta(), delta, "{:?}: delta mismatch", kind);
+
+    let mut rng = Rng::new(seed);
+    let x = Tensor3::random(layer.c, layer.h, layer.w, &mut rng);
+    let k = Tensor4::random(layer.n, layer.c, layer.kh, layer.kw, &mut rng);
+    let want = conv2d(&x, &k, layer.params());
+
+    // Subsets: adversarial contiguous-from-0 plus random draws.
+    let mut subsets: Vec<Vec<usize>> = vec![(0..delta).collect()];
+    for _ in 0..subset_samples {
+        subsets.push(rng.choose_indices(n, delta));
+    }
+
+    let mut conds = Vec::with_capacity(subsets.len());
+    let mut mses = Vec::with_capacity(subsets.len());
+    for s in &subsets {
+        conds.push(cond_2(&code.recovery(s)));
+        let got = plan.run_inline(&x, &k, Some(s));
+        match got {
+            Ok(y) => mses.push(mse(&y.data, &want.data)),
+            Err(_) => mses.push(f64::INFINITY), // unrecoverable: singular E
+        }
+    }
+    conds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let cond_median = conds[conds.len() / 2];
+    let cond_worst = *conds.last().unwrap();
+    let mse_mean = if mses.iter().any(|m| m.is_infinite()) {
+        f64::INFINITY
+    } else {
+        mses.iter().sum::<f64>() / mses.len() as f64
+    };
+    let mse_worst = mses.iter().cloned().fold(0.0, f64::max);
+
+    Ok(StabilityPoint {
+        scheme: kind.name(),
+        n,
+        delta,
+        gamma: n - delta,
+        k_a,
+        k_b,
+        cond_median,
+        cond_worst,
+        mse_mean,
+        mse_worst,
+    })
+}
+
+/// Full sweep over the paper's (n, δ, γ) grid for all schemes.
+pub fn stability_sweep(
+    layer: &ConvLayer,
+    configs: &[(usize, usize)],
+    subset_samples: usize,
+    seed: u64,
+) -> Vec<StabilityPoint> {
+    let mut out = Vec::new();
+    for &(n, delta) in configs {
+        for kind in SchemeKind::ALL {
+            match evaluate(kind, layer, n, delta, subset_samples, seed) {
+                Ok(p) => out.push(p),
+                Err(e) => eprintln!("skip {} at (n={n}, delta={delta}): {e:#}", kind.name()),
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_layer() -> ConvLayer {
+        // VGG-conv4-like structure at toy scale: N divisible by many
+        // powers of two, H' comfortable.
+        ConvLayer::new("vgg4.toy", 8, 14, 14, 32, 3, 3, 1, 1)
+    }
+
+    #[test]
+    fn factor_pair_balanced_even() {
+        let (ka, kb) = factor_pair(64, 512, 28, true).unwrap();
+        assert_eq!(ka * kb, 64);
+        assert!(ka % 2 == 0 && kb % 2 == 0);
+        let (ka, kb) = factor_pair(16, 512, 28, false).unwrap();
+        assert_eq!(ka * kb, 16);
+    }
+
+    #[test]
+    fn crme_beats_real_vandermonde_at_scale() {
+        let layer = small_layer();
+        // (n, delta) = (20, 16): the regime where real Vandermonde degrades.
+        let crme = evaluate(SchemeKind::Crme, &layer, 20, 16, 4, 1).unwrap();
+        let real = evaluate(SchemeKind::RealVandermonde, &layer, 20, 16, 4, 1).unwrap();
+        assert!(
+            crme.cond_worst < real.cond_worst,
+            "CRME {:.3e} should beat real Vandermonde {:.3e}",
+            crme.cond_worst,
+            real.cond_worst
+        );
+        assert!(crme.mse_worst < real.mse_worst);
+        assert!(crme.mse_worst < 1e-18, "CRME mse {:e}", crme.mse_worst);
+    }
+
+    #[test]
+    fn sweep_produces_all_schemes() {
+        let layer = small_layer();
+        let pts = stability_sweep(&layer, &[(5, 4)], 2, 3);
+        assert_eq!(pts.len(), 4);
+        for p in &pts {
+            assert_eq!(p.gamma, 1);
+            assert!(p.cond_worst >= 1.0);
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Worker-side convolution engines. The paper's generality claim is that
+//! workers may run *any* black-box tensor-convolution algorithm; this
+//! trait is that claim made concrete. Three engines ship:
+//!
+//! * [`DirectEngine`] — the naive triple-loop oracle,
+//! * [`Im2colEngine`] — im2col + GEMM (the optimized CPU path),
+//! * `runtime::PjrtEngine` — the AOT-compiled JAX/Pallas artifact
+//!   executed via PJRT (the L1/L2 layers of the stack).
+
+use crate::fcdcc::{WorkerPayload, WorkerResult};
+use crate::tensor::{conv2d, im2col::conv2d_im2col, ConvParams, Tensor3, Tensor4};
+
+/// A black-box convolution implementation usable by workers.
+pub trait ConvEngine: Send + Sync {
+    fn name(&self) -> &str;
+    fn conv(&self, x: &Tensor3, k: &Tensor4, p: ConvParams) -> Tensor3;
+}
+
+/// A whole-subtask executor: runs one coded [`WorkerPayload`] (all
+/// pairwise convolutions). Every [`ConvEngine`] is trivially a
+/// `TaskEngine` (the blanket impl below); the PJRT runtime implements it
+/// directly with the fused AOT artifact.
+pub trait TaskEngine: Send + Sync {
+    fn name(&self) -> &str;
+    fn run(&self, payload: &WorkerPayload) -> anyhow::Result<WorkerResult>;
+}
+
+impl<E: ConvEngine> TaskEngine for E {
+    fn name(&self) -> &str {
+        ConvEngine::name(self)
+    }
+
+    fn run(&self, payload: &WorkerPayload) -> anyhow::Result<WorkerResult> {
+        Ok(payload.run_with(|x, k, p| self.conv(x, k, p)))
+    }
+}
+
+/// Naive direct convolution (paper's "basic, unoptimized" worker).
+pub struct DirectEngine;
+
+impl ConvEngine for DirectEngine {
+    fn name(&self) -> &str {
+        "direct"
+    }
+
+    fn conv(&self, x: &Tensor3, k: &Tensor4, p: ConvParams) -> Tensor3 {
+        conv2d(x, k, p)
+    }
+}
+
+/// im2col + GEMM convolution.
+pub struct Im2colEngine;
+
+impl ConvEngine for Im2colEngine {
+    fn name(&self) -> &str {
+        "im2col"
+    }
+
+    fn conv(&self, x: &Tensor3, k: &Tensor4, p: ConvParams) -> Tensor3 {
+        conv2d_im2col(x, k, p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{max_abs_diff, rng::Rng};
+
+    #[test]
+    fn engines_agree() {
+        let mut rng = Rng::new(61);
+        let x = Tensor3::random(3, 9, 9, &mut rng);
+        let k = Tensor4::random(4, 3, 3, 3, &mut rng);
+        let p = ConvParams::new(1, 1);
+        let a = DirectEngine.conv(&x, &k, p);
+        let b = Im2colEngine.conv(&x, &k, p);
+        assert!(max_abs_diff(&a.data, &b.data) < 1e-12);
+    }
+}

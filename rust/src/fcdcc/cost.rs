@@ -1,0 +1,222 @@
+//! The per-worker cost model and (k_A, k_B) optimizer — paper §IV-E,
+//! eqs. (50)–(61) and Theorem 1.
+//!
+//! Costs per worker node for an FCDCC instance with ℓ = 2:
+//!   C_comm_up   = λ_comm · 4·C·(H+2p)·(W+2p) / k_A          (eq. 50)
+//!   C_comm_down = λ_comm · 4·N·H'·W' / Q                    (eq. 51)
+//!   C_comp      = λ_comp · 4·C·N·H·W·K_H·K_W / (s²·Q)       (eq. 53)
+//!   C_store     = λ_store · 2·N·C·K_H·K_W / k_B             (eq. 54)
+//!
+//! U(k_A) = a₁·k_A + a₂/k_A + a₃ is strictly convex (Lemma 1); the real
+//! optimum is k*_A = √(a₂/a₁) (Theorem 1) and the integer optimum is found
+//! over the feasible divisor set S = {x | x = 1 or x even} with the
+//! structural constraints k_A ≤ H′ and k_B | N.
+
+use crate::coding::crme::feasible_k;
+use crate::model::ConvLayer;
+
+/// Unit costs (λ_comm, λ_comp, λ_store). The paper's Experiment 5 uses
+/// AWS S3-derived λ_store = 0.023, λ_comm = 0.09, λ_comp = 0.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    pub lambda_comm: f64,
+    pub lambda_comp: f64,
+    pub lambda_store: f64,
+}
+
+impl CostModel {
+    /// The paper's Experiment-5 cost coefficients (AWS S3 pricing ratio).
+    pub fn paper_exp5() -> Self {
+        Self {
+            lambda_comm: 0.09,
+            lambda_comp: 0.0,
+            lambda_store: 0.023,
+        }
+    }
+}
+
+/// Per-worker cost components for one (k_A, k_B) choice.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostBreakdown {
+    pub k_a: usize,
+    pub k_b: usize,
+    pub comm_up: f64,
+    pub comm_down: f64,
+    pub comp: f64,
+    pub store: f64,
+}
+
+impl CostBreakdown {
+    pub fn total(&self) -> f64 {
+        self.comm_up + self.comm_down + self.comp + self.store
+    }
+
+    pub fn comm(&self) -> f64 {
+        self.comm_up + self.comm_down
+    }
+}
+
+/// The optimizer's selected plan plus the real-valued optimum for
+/// reference (paper eq. (59)).
+#[derive(Clone, Debug)]
+pub struct PlanChoice {
+    pub best: CostBreakdown,
+    /// The unconstrained real optimum k*_A = sqrt(a2/a1).
+    pub k_a_star_real: f64,
+    /// All feasible candidates evaluated (for the Fig. 7 landscape).
+    pub candidates: Vec<CostBreakdown>,
+}
+
+/// Evaluate the paper's closed-form per-worker cost (eqs. 50–55) for a
+/// layer at (k_A, k_B).
+pub fn cost_for(layer: &ConvLayer, cm: &CostModel, k_a: usize, k_b: usize) -> CostBreakdown {
+    let q = (k_a * k_b) as f64;
+    let c = layer.c as f64;
+    let n = layer.n as f64;
+    let hp = (layer.h + 2 * layer.pad) as f64;
+    let wp = (layer.w + 2 * layer.pad) as f64;
+    let (h_out, w_out) = layer.out_shape();
+    let (h_out, w_out) = (h_out as f64, w_out as f64);
+    let khw = (layer.kh * layer.kw) as f64;
+    let s2 = (layer.stride * layer.stride) as f64;
+    CostBreakdown {
+        k_a,
+        k_b,
+        comm_up: cm.lambda_comm * 4.0 * c * hp * wp / k_a as f64,
+        comm_down: cm.lambda_comm * 4.0 * n * h_out * w_out / q,
+        comp: cm.lambda_comp * 4.0 * c * n * (layer.h as f64) * (layer.w as f64) * khw / (s2 * q),
+        store: cm.lambda_store * 2.0 * n * c * khw / k_b as f64,
+    }
+}
+
+/// The real-valued unconstrained optimum k*_A (paper eq. (59)).
+pub fn k_a_star_real(layer: &ConvLayer, cm: &CostModel, q: usize) -> f64 {
+    let c = layer.c as f64;
+    let n = layer.n as f64;
+    let hp = (layer.h + 2 * layer.pad) as f64;
+    let wp = (layer.w + 2 * layer.pad) as f64;
+    let khw = (layer.kh * layer.kw) as f64;
+    let a1 = cm.lambda_store * 2.0 * n * c * khw / q as f64;
+    let a2 = cm.lambda_comm * 4.0 * c * hp * wp;
+    (a2 / a1).sqrt()
+}
+
+/// Feasible (k_A, k_B) pairs for a fixed product Q: both in
+/// S = {1} ∪ 2ℤ⁺, k_A·k_B = Q, k_A ≤ H′ (spatial splits cannot exceed
+/// output rows) and k_B | N (KCCP needs equal channel groups).
+pub fn feasible_pairs(layer: &ConvLayer, q: usize) -> Vec<(usize, usize)> {
+    let h_out = layer.h_out();
+    (1..=q)
+        .filter(|k_a| q % k_a == 0)
+        .map(|k_a| (k_a, q / k_a))
+        .filter(|&(k_a, k_b)| feasible_k(k_a) && feasible_k(k_b))
+        .filter(|&(k_a, _)| k_a <= h_out)
+        .filter(|&(_, k_b)| layer.n % k_b == 0)
+        .collect()
+}
+
+/// Exact integer optimization of U(k_A, k_B) over the feasible set
+/// (paper Theorem 1 + rounding rule, done by exhaustive divisor search —
+/// Q ≤ a few thousand, so this is both exact and instant).
+pub fn optimize(layer: &ConvLayer, cm: &CostModel, q: usize) -> Option<PlanChoice> {
+    let cands: Vec<CostBreakdown> = feasible_pairs(layer, q)
+        .into_iter()
+        .map(|(ka, kb)| cost_for(layer, cm, ka, kb))
+        .collect();
+    let best = cands
+        .iter()
+        .min_by(|a, b| a.total().partial_cmp(&b.total()).unwrap())?
+        .clone();
+    Some(PlanChoice {
+        best,
+        k_a_star_real: k_a_star_real(layer, cm, q),
+        candidates: cands,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn convexity_in_k_a() {
+        // U(k_A) with k_B = Q/k_A is convex along the divisor chain.
+        let layer = &zoo::alexnet()[1];
+        let cm = CostModel::paper_exp5();
+        let us: Vec<f64> = [1usize, 2, 4, 8, 16, 32]
+            .iter()
+            .map(|&ka| cost_for(layer, &cm, ka, 32 / ka).total())
+            .collect();
+        // Strictly convex sequences have a single local minimum.
+        let mut dips = 0;
+        for i in 1..us.len() - 1 {
+            if us[i] < us[i - 1] && us[i] <= us[i + 1] {
+                dips += 1;
+            }
+        }
+        assert!(dips <= 1, "U along divisors: {us:?}");
+    }
+
+    #[test]
+    fn real_optimum_matches_formula() {
+        let layer = &zoo::alexnet()[0];
+        let cm = CostModel::paper_exp5();
+        let k = k_a_star_real(layer, &cm, 32);
+        // independent recomputation
+        let a1 = cm.lambda_store * 2.0 * 96.0 * 3.0 * 121.0 / 32.0;
+        let a2 = cm.lambda_comm * 4.0 * 3.0 * 227.0 * 227.0;
+        assert!((k - (a2 / a1).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn early_layers_favor_large_k_a() {
+        // Paper Table IV: AlexNet conv1 at Q=32 chooses (32, 1).
+        let cm = CostModel::paper_exp5();
+        let layer = &zoo::alexnet()[0];
+        let choice = optimize(layer, &cm, 32).unwrap();
+        assert!(
+            choice.best.k_a >= 16,
+            "conv1 should be spatial-dominated, got ({}, {})",
+            choice.best.k_a,
+            choice.best.k_b
+        );
+    }
+
+    #[test]
+    fn deep_layers_favor_large_k_b() {
+        // Paper Table IV: AlexNet conv3 at Q=32 chooses (2, 16).
+        let cm = CostModel::paper_exp5();
+        let layer = &zoo::alexnet()[2];
+        let choice = optimize(layer, &cm, 32).unwrap();
+        assert!(
+            choice.best.k_b >= 8,
+            "conv3 should be storage-dominated, got ({}, {})",
+            choice.best.k_a,
+            choice.best.k_b
+        );
+    }
+
+    #[test]
+    fn feasible_pairs_respect_constraints() {
+        let layer = &zoo::lenet5()[0]; // H'=28, N=6
+        for (ka, kb) in feasible_pairs(layer, 16) {
+            assert_eq!(ka * kb, 16);
+            assert!(ka == 1 || ka % 2 == 0);
+            assert!(kb == 1 || kb % 2 == 0);
+            assert!(ka <= 28);
+            assert_eq!(6 % kb, 0);
+        }
+    }
+
+    #[test]
+    fn optimizer_beats_every_candidate() {
+        let cm = CostModel::paper_exp5();
+        for layer in zoo::alexnet() {
+            let choice = optimize(&layer, &cm, 64).unwrap();
+            for c in &choice.candidates {
+                assert!(choice.best.total() <= c.total() + 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! The FCDCC framework proper (paper §IV): gluing APCP + KCCP partitioning
+//! to an NSCTC code, producing per-worker coded subtasks, and decoding the
+//! first-δ results back into the layer output — plus the (k_A,k_B) cost
+//! model and optimizer (§IV-E).
+
+pub mod cost;
+pub mod pipeline;
+pub mod pooling;
+
+pub use cost::{CostModel, CostBreakdown, PlanChoice};
+pub use pipeline::{FcdccPlan, WorkerPayload, WorkerResult};
+pub use pooling::CodedAvgPool;

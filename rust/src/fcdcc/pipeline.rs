@@ -1,0 +1,303 @@
+//! The end-to-end FCDCC pipeline for a single convolutional layer:
+//!
+//! 1. APCP-partition the (padded) input, KCCP-partition the filters;
+//! 2. CRME-encode both partition lists (paper Algs. 2 & 3);
+//! 3. hand each worker its ℓ_A coded input slabs + ℓ_B coded filter slabs
+//!    (a [`WorkerPayload`]);
+//! 4. each worker convolves every (slabA, slabB) pair — any black-box
+//!    conv implementation works — returning a [`WorkerResult`];
+//! 5. once any δ results arrived, invert the recovery matrix and merge
+//!    (paper Alg. 5).
+//!
+//! The pipeline is transport-agnostic: the `cluster` module runs payloads
+//! on simulated workers; tests run them inline.
+
+use crate::coding::{self, Code, CrmeCode};
+use crate::model::ConvLayer;
+use crate::partition::{merge_output_blocks, ApcpPlan, KccpPlan};
+use crate::tensor::{conv2d, ConvParams, Tensor3, Tensor4};
+use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
+
+/// Everything worker `worker_id` needs for one coded subtask.
+#[derive(Clone)]
+pub struct WorkerPayload {
+    pub worker_id: usize,
+    /// ℓ_A coded input slabs.
+    pub inputs: Vec<Tensor3>,
+    /// ℓ_B coded filter slabs (pre-distributed in steady state).
+    pub filters: Vec<Tensor4>,
+    /// Convolution parameters for the slab-level conv (stride s, pad 0 —
+    /// APCP already materialized the padding).
+    pub conv: ConvParams,
+}
+
+impl WorkerPayload {
+    /// Tensor entries uploaded to the worker per inference (coded input
+    /// slabs only; filters are resident) — the V_comm_up accounting.
+    pub fn upload_entries(&self) -> usize {
+        self.inputs.iter().map(|t| t.len()).sum()
+    }
+
+    /// Tensor entries resident on the worker (coded filter slabs) —
+    /// the V_store accounting.
+    pub fn store_entries(&self) -> usize {
+        self.filters.iter().map(|t| t.len()).sum()
+    }
+
+    /// Execute the subtask with the reference conv (paper eq. (39):
+    /// all ℓ_A·ℓ_B pairwise convolutions, slabA-major order).
+    pub fn run_local(&self) -> WorkerResult {
+        self.run_with(|x, k, p| conv2d(x, k, p))
+    }
+
+    /// Execute with a custom conv engine.
+    pub fn run_with(&self, conv: impl Fn(&Tensor3, &Tensor4, ConvParams) -> Tensor3) -> WorkerResult {
+        let mut blocks = Vec::with_capacity(self.inputs.len() * self.filters.len());
+        for xa in &self.inputs {
+            for kb in &self.filters {
+                blocks.push(conv(xa, kb, self.conv));
+            }
+        }
+        WorkerResult {
+            worker_id: self.worker_id,
+            blocks,
+        }
+    }
+}
+
+/// A worker's coded output blocks (ℓ_A·ℓ_B of them, slabA-major).
+#[derive(Clone)]
+pub struct WorkerResult {
+    pub worker_id: usize,
+    pub blocks: Vec<Tensor3>,
+}
+
+impl WorkerResult {
+    /// Tensor entries downloaded from the worker — V_comm_down accounting.
+    pub fn download_entries(&self) -> usize {
+        self.blocks.iter().map(|t| t.len()).sum()
+    }
+}
+
+/// A fully-planned FCDCC execution for one layer: geometry + code.
+pub struct FcdccPlan {
+    pub layer: ConvLayer,
+    pub apcp: ApcpPlan,
+    pub kccp: KccpPlan,
+    pub code: Arc<dyn Code>,
+}
+
+impl FcdccPlan {
+    /// Plan a layer with the paper's CRME code.
+    pub fn new_crme(layer: &ConvLayer, k_a: usize, k_b: usize, n: usize) -> Result<Self> {
+        let code: Arc<dyn Code> = Arc::new(
+            CrmeCode::new(k_a, k_b, n)
+                .with_context(|| format!("planning {} with CRME", layer.name))?,
+        );
+        Self::with_code(layer, code)
+    }
+
+    /// Plan a layer with an arbitrary scheme (rival codes in the benches).
+    pub fn with_code(layer: &ConvLayer, code: Arc<dyn Code>) -> Result<Self> {
+        let s = code.spec();
+        let h_padded = layer.h + 2 * layer.pad;
+        let apcp = ApcpPlan::new(h_padded, layer.kh, layer.stride, s.k_a)
+            .with_context(|| format!("APCP plan for {}", layer.name))?;
+        let kccp = KccpPlan::new(layer.n, s.k_b)
+            .with_context(|| format!("KCCP plan for {}", layer.name))?;
+        Ok(Self {
+            layer: layer.clone(),
+            apcp,
+            kccp,
+            code,
+        })
+    }
+
+    pub fn spec(&self) -> coding::CodeSpec {
+        self.code.spec()
+    }
+
+    /// Recovery threshold δ.
+    pub fn delta(&self) -> usize {
+        self.spec().delta()
+    }
+
+    /// Encode the filter bank once (model initialization): per-worker
+    /// resident coded filter slabs.
+    pub fn encode_filters(&self, k: &Tensor4) -> Vec<Vec<Tensor4>> {
+        let parts = self.kccp.partition(k);
+        coding::encode_filters(self.code.as_ref(), &parts)
+    }
+
+    /// Encode one input tensor (per inference): per-worker coded slabs.
+    /// `x` is the **unpadded** input; spatial padding is applied here.
+    pub fn encode_input(&self, x: &Tensor3) -> Vec<Vec<Tensor3>> {
+        let xp = x.pad_spatial(self.layer.pad);
+        let parts = self.apcp.partition(&xp);
+        coding::encode_inputs(self.code.as_ref(), &parts)
+    }
+
+    /// Bundle payloads for all n workers.
+    pub fn make_payloads(
+        &self,
+        coded_inputs: Vec<Vec<Tensor3>>,
+        coded_filters: &[Vec<Tensor4>],
+    ) -> Vec<WorkerPayload> {
+        let conv = ConvParams::new(self.layer.stride, 0);
+        coded_inputs
+            .into_iter()
+            .zip(coded_filters)
+            .enumerate()
+            .map(|(worker_id, (inputs, filters))| WorkerPayload {
+                worker_id,
+                inputs,
+                filters: filters.clone(),
+                conv,
+            })
+            .collect()
+    }
+
+    /// Decode any δ worker results and merge into the layer output
+    /// (N × H' × W').
+    pub fn decode(&self, results: &[WorkerResult]) -> Result<Tensor3> {
+        let refs: Vec<&WorkerResult> = results.iter().collect();
+        self.decode_refs(&refs)
+    }
+
+    /// Zero-copy variant of [`Self::decode`] (the cluster hot path).
+    pub fn decode_refs(&self, results: &[&WorkerResult]) -> Result<Tensor3> {
+        ensure!(
+            results.len() >= self.delta(),
+            "decode: need delta={} results, got {}",
+            self.delta(),
+            results.len()
+        );
+        let chosen = &results[..self.delta()];
+        let workers: Vec<usize> = chosen.iter().map(|r| r.worker_id).collect();
+        let blocks: Vec<&[Tensor3]> = chosen.iter().map(|r| r.blocks.as_slice()).collect();
+        let decoded = coding::decode_outputs(self.code.as_ref(), &workers, &blocks)?;
+        let s = self.spec();
+        Ok(merge_output_blocks(
+            &decoded,
+            s.k_a,
+            s.k_b,
+            self.layer.h_out(),
+        ))
+    }
+
+    /// Run the whole pipeline inline (no cluster): encode, compute every
+    /// worker locally, decode from the given worker subset (defaults to
+    /// the first δ). The correctness backbone for tests and MSE benches.
+    pub fn run_inline(
+        &self,
+        x: &Tensor3,
+        k: &Tensor4,
+        survivors: Option<&[usize]>,
+    ) -> Result<Tensor3> {
+        let coded_filters = self.encode_filters(k);
+        let coded_inputs = self.encode_input(x);
+        let payloads = self.make_payloads(coded_inputs, &coded_filters);
+        let ids: Vec<usize> = match survivors {
+            Some(s) => s.to_vec(),
+            None => (0..self.delta()).collect(),
+        };
+        let results: Vec<WorkerResult> = ids.iter().map(|&i| payloads[i].run_local()).collect();
+        self.decode(&results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::vandermonde::{PointSet, VandermondeCode};
+    use crate::util::{mse, rng::Rng};
+
+    fn reference(layer: &ConvLayer, x: &Tensor3, k: &Tensor4) -> Tensor3 {
+        conv2d(x, k, layer.params())
+    }
+
+    #[test]
+    fn crme_pipeline_exact_over_configs() {
+        let mut rng = Rng::new(51);
+        // (layer, k_a, k_b, n)
+        let cases = [
+            (ConvLayer::new("t1", 2, 12, 10, 8, 3, 3, 1, 0), 4, 2, 4),
+            (ConvLayer::new("t2", 3, 11, 9, 6, 3, 3, 1, 1), 2, 6, 5),
+            (ConvLayer::new("t3", 1, 28, 28, 6, 5, 5, 1, 2), 4, 2, 3),
+            (ConvLayer::new("t4", 2, 23, 17, 4, 5, 5, 4, 0), 2, 4, 4),
+            (ConvLayer::new("t5", 2, 9, 9, 4, 3, 3, 2, 1), 1, 4, 4),
+            (ConvLayer::new("t6", 2, 10, 8, 5, 3, 3, 1, 0), 4, 1, 3),
+        ];
+        for (layer, k_a, k_b, n) in cases {
+            let x = Tensor3::random(layer.c, layer.h, layer.w, &mut rng);
+            let k = Tensor4::random(layer.n, layer.c, layer.kh, layer.kw, &mut rng);
+            let plan = FcdccPlan::new_crme(&layer, k_a, k_b, n).unwrap();
+            let want = reference(&layer, &x, &k);
+            let got = plan.run_inline(&x, &k, None).unwrap();
+            assert_eq!(got.shape(), want.shape(), "{}", layer.name);
+            let e = mse(&got.data, &want.data);
+            assert!(e < 1e-20, "{}: mse={e:e}", layer.name);
+        }
+    }
+
+    #[test]
+    fn decoding_works_from_any_subset() {
+        let mut rng = Rng::new(52);
+        let layer = ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0);
+        let x = Tensor3::random(2, 12, 10, &mut rng);
+        let k = Tensor4::random(8, 2, 3, 3, &mut rng);
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 5).unwrap(); // delta=2, n=5
+        let want = reference(&layer, &x, &k);
+        for a in 0..5 {
+            for b in 0..5 {
+                if a == b {
+                    continue;
+                }
+                let got = plan.run_inline(&x, &k, Some(&[a, b])).unwrap();
+                let e = mse(&got.data, &want.data);
+                assert!(e < 1e-18, "subset [{a},{b}]: mse={e:e}");
+            }
+        }
+    }
+
+    #[test]
+    fn vandermonde_pipeline_also_exact_small() {
+        // The rival codes plug into the same pipeline (Fig. 3 machinery).
+        let mut rng = Rng::new(53);
+        let layer = ConvLayer::new("t", 2, 10, 10, 6, 3, 3, 1, 0);
+        let x = Tensor3::random(2, 10, 10, &mut rng);
+        let k = Tensor4::random(6, 2, 3, 3, &mut rng);
+        let code = Arc::new(VandermondeCode::new(2, 3, 8, PointSet::Equispaced).unwrap());
+        let plan = FcdccPlan::with_code(&layer, code).unwrap(); // delta=6
+        let want = reference(&layer, &x, &k);
+        let got = plan.run_inline(&x, &k, Some(&[0, 2, 3, 5, 6, 7])).unwrap();
+        let e = mse(&got.data, &want.data);
+        assert!(e < 1e-12, "mse={e:e}");
+    }
+
+    #[test]
+    fn insufficient_results_rejected() {
+        let layer = ConvLayer::new("t", 1, 8, 8, 4, 3, 3, 1, 0);
+        let plan = FcdccPlan::new_crme(&layer, 2, 2, 3).unwrap(); // delta=1
+        let r: Vec<WorkerResult> = vec![];
+        assert!(plan.decode(&r).is_err());
+    }
+
+    #[test]
+    fn accounting_matches_cost_model_building_blocks() {
+        let layer = ConvLayer::new("t", 3, 12, 12, 8, 3, 3, 1, 1);
+        let plan = FcdccPlan::new_crme(&layer, 2, 4, 4).unwrap();
+        let mut rng = Rng::new(54);
+        let x = Tensor3::random(3, 12, 12, &mut rng);
+        let k = Tensor4::random(8, 3, 3, 3, &mut rng);
+        let payloads =
+            plan.make_payloads(plan.encode_input(&x), &plan.encode_filters(&k));
+        // upload per worker = ell_a · C·Ĥ·(W+2p)
+        let want_up = 2 * plan.apcp.entries_per_slab(3, 12 + 2);
+        assert_eq!(payloads[0].upload_entries(), want_up);
+        // store per worker = ell_b · (N/k_B)·C·K_H·K_W
+        let want_store = 2 * plan.kccp.entries_per_partition(3, 3, 3);
+        assert_eq!(payloads[0].store_entries(), want_store);
+    }
+}

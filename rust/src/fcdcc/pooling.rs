@@ -1,0 +1,131 @@
+//! Coded distributed **average pooling** — the paper's future-work item
+//! ("extending the CDC scheme to support pooling layers", §VII),
+//! implemented here as an extension: average pooling is linear in the
+//! input, so the NSCTC machinery applies unchanged. The input is
+//! partitioned along H with the same adaptive geometry as APCP (pool
+//! windows play the role of kernels), encoded with a CRME code on the
+//! A side only (k_B = 1: there is no filter tensor), pooled by any δ of
+//! n workers, and decoded/merged exactly like a convolution.
+//!
+//! (Max pooling is *not* linear and cannot be coded this way — the same
+//! boundary the paper draws.)
+
+use crate::coding::{self, Code, CrmeCode};
+use crate::model::network::pool;
+use crate::partition::ApcpPlan;
+use crate::tensor::Tensor3;
+use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
+
+/// A planned coded average-pooling layer.
+pub struct CodedAvgPool {
+    pub size: usize,
+    pub stride: usize,
+    pub apcp: ApcpPlan,
+    pub code: Arc<dyn Code>,
+    h_in: usize,
+}
+
+impl CodedAvgPool {
+    /// Plan pooling of an H×W input with square window `size`, stride
+    /// `stride`, split into `k_a` coded partitions over `n` workers.
+    pub fn new(h_in: usize, size: usize, stride: usize, k_a: usize, n: usize) -> Result<Self> {
+        ensure!(size >= 1 && stride >= 1);
+        let apcp = ApcpPlan::new(h_in, size, stride, k_a)
+            .context("coded avg-pool partitioning")?;
+        // k_B = 1: single "filter side" partition, ℓ_B = 1.
+        let code: Arc<dyn Code> = Arc::new(CrmeCode::new(k_a, 1, n)?);
+        Ok(Self {
+            size,
+            stride,
+            apcp,
+            code,
+            h_in,
+        })
+    }
+
+    pub fn delta(&self) -> usize {
+        self.code.spec().delta()
+    }
+
+    /// Encode the input into per-worker coded slabs (ℓ_A each).
+    pub fn encode(&self, x: &Tensor3) -> Vec<Vec<Tensor3>> {
+        assert_eq!(x.h, self.h_in, "planned for H={}, got {}", self.h_in, x.h);
+        let parts = self.apcp.partition(x);
+        coding::encode_inputs(self.code.as_ref(), &parts)
+    }
+
+    /// The worker-side computation: average-pool each coded slab.
+    pub fn worker_compute(&self, slabs: &[Tensor3]) -> Vec<Tensor3> {
+        slabs
+            .iter()
+            .map(|s| pool(s, self.size, self.stride, false))
+            .collect()
+    }
+
+    /// Decode any δ workers' pooled coded slabs and merge along H.
+    pub fn decode(&self, workers: &[usize], blocks: &[&[Tensor3]]) -> Result<Tensor3> {
+        let decoded = coding::decode_outputs(self.code.as_ref(), workers, blocks)?;
+        let merged = Tensor3::concat_h(&decoded.iter().collect::<Vec<_>>());
+        let h_true = self.apcp.h_out;
+        Ok(if merged.h == h_true {
+            merged
+        } else {
+            merged.slice_h(0, h_true)
+        })
+    }
+
+    /// Inline end-to-end run from a chosen survivor set (tests/benches).
+    pub fn run_inline(&self, x: &Tensor3, survivors: &[usize]) -> Result<Tensor3> {
+        let coded = self.encode(x);
+        let results: Vec<Vec<Tensor3>> = survivors
+            .iter()
+            .map(|&i| self.worker_compute(&coded[i]))
+            .collect();
+        let blocks: Vec<&[Tensor3]> = results.iter().map(Vec::as_slice).collect();
+        self.decode(survivors, &blocks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{mse, rng::Rng};
+
+    #[test]
+    fn coded_avg_pool_matches_local() {
+        let mut rng = Rng::new(101);
+        for (h, w, size, stride, k_a, n) in [
+            (16usize, 10usize, 2usize, 2usize, 4usize, 6usize),
+            (18, 8, 3, 3, 2, 3),
+            (20, 12, 2, 2, 8, 4), // delta = 2
+        ] {
+            let x = Tensor3::random(3, h, w, &mut rng);
+            let plan = CodedAvgPool::new(h, size, stride, k_a, n).unwrap();
+            let want = pool(&x, size, stride, false);
+            let survivors = rng.choose_indices(n, plan.delta());
+            let got = plan.run_inline(&x, &survivors).unwrap();
+            assert_eq!(got.shape(), want.shape(), "case {:?}", (h, size, k_a));
+            let e = mse(&got.data, &want.data);
+            assert!(e < 1e-25, "case {:?}: mse={e:e}", (h, size, k_a, n));
+        }
+    }
+
+    #[test]
+    fn survives_stragglers() {
+        let mut rng = Rng::new(102);
+        let x = Tensor3::random(2, 16, 6, &mut rng);
+        let plan = CodedAvgPool::new(16, 2, 2, 4, 5).unwrap(); // delta=2, gamma=3
+        let want = pool(&x, 2, 2, false);
+        // Any 2 of the 5 workers suffice.
+        for pair in [[0usize, 4], [1, 3], [2, 4]] {
+            let got = plan.run_inline(&x, &pair).unwrap();
+            assert!(mse(&got.data, &want.data) < 1e-25, "pair {pair:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_oversplit() {
+        assert!(CodedAvgPool::new(6, 2, 2, 8, 10).is_err());
+    }
+}

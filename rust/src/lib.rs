@@ -1,0 +1,36 @@
+//! # FCDCC — Flexible Coded Distributed Convolution Computing
+//!
+//! A reproduction of *"Flexible Coded Distributed Convolution Computing
+//! for Enhanced Straggler Resilience and Numerical Stability in
+//! Distributed CNNs"* (Tan et al., 2024) as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: APCP/KCCP coded partitioning,
+//!   CRME encoding, a simulated heterogeneous worker cluster with
+//!   straggler injection, first-δ decoding, the (k_A,k_B) cost optimizer,
+//!   baselines and rival coding schemes.
+//! * **L2/L1 (`python/compile`)** — build-time JAX worker-task graph and
+//!   Pallas convolution kernel, AOT-lowered to HLO text artifacts that
+//!   the [`runtime`] module loads and executes via PJRT (`xla` crate).
+//!
+//! See `DESIGN.md` for the full system inventory and per-experiment index.
+
+pub mod baseline;
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod cluster;
+pub mod coding;
+pub mod coordinator;
+pub mod engine;
+pub mod fcdcc;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod partition;
+pub mod prop;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use tensor::{conv2d, ConvParams, Tensor3, Tensor4};

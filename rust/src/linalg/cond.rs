@@ -1,0 +1,65 @@
+//! Condition numbers of recovery matrices (paper Fig. 4 and §V-A).
+
+use crate::linalg::{lu, singular_values, Mat};
+
+/// Exact 2-norm condition number via Jacobi SVD: κ₂ = σ_max / σ_min.
+/// Returns `f64::INFINITY` for (numerically) singular matrices.
+pub fn cond_2(a: &Mat) -> f64 {
+    let sv = singular_values(a);
+    let smax = sv.first().copied().unwrap_or(0.0);
+    let smin = sv.last().copied().unwrap_or(0.0);
+    if smin <= 0.0 || !smin.is_finite() {
+        f64::INFINITY
+    } else {
+        smax / smin
+    }
+}
+
+/// 1-norm condition estimate κ₁ = ‖A‖₁·‖A⁻¹‖₁ computed with an explicit
+/// inverse (fine at recovery-matrix sizes). Returns INFINITY when the
+/// factorization fails.
+pub fn cond_1_estimate(a: &Mat) -> f64 {
+    match lu::invert(a) {
+        Ok(inv) => a.norm_1() * inv.norm_1(),
+        Err(_) => f64::INFINITY,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_cond_is_one() {
+        let i = Mat::identity(6);
+        assert!((cond_2(&i) - 1.0).abs() < 1e-12);
+        assert!((cond_1_estimate(&i) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diag_cond_ratio() {
+        let a = Mat::from_vec(2, 2, vec![100.0, 0.0, 0.0, 0.5]);
+        assert!((cond_2(&a) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn singular_is_infinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert_eq!(cond_2(&a), f64::INFINITY);
+        assert_eq!(cond_1_estimate(&a), f64::INFINITY);
+    }
+
+    #[test]
+    fn norm_bounds_hold() {
+        // For any n x n matrix: cond_1 / n <= cond_2 <= n * cond_1.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(17);
+        for n in [3usize, 6, 10] {
+            let a = Mat::random(n, n, &mut rng);
+            let c2 = cond_2(&a);
+            let c1 = cond_1_estimate(&a);
+            assert!(c2 <= c1 * n as f64 * (1.0 + 1e-9), "n={n} c2={c2} c1={c1}");
+            assert!(c2 >= c1 / n as f64 * (1.0 - 1e-9), "n={n} c2={c2} c1={c1}");
+        }
+    }
+}

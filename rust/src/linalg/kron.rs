@@ -1,0 +1,76 @@
+//! Kronecker product — the joint encoding matrix G = A ⊗ B (paper
+//! eq. (41)) and the per-worker column blocks G_i = A_i ⊗ B_i.
+
+use crate::linalg::Mat;
+
+/// Kronecker product A ⊗ B: (a.rows·b.rows) × (a.cols·b.cols).
+pub fn kron(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows * b.rows, a.cols * b.cols);
+    for ar in 0..a.rows {
+        for ac in 0..a.cols {
+            let av = a.get(ar, ac);
+            if av == 0.0 {
+                continue;
+            }
+            for br in 0..b.rows {
+                let orow = (ar * b.rows + br) * out.cols + ac * b.cols;
+                let brow = br * b.cols;
+                for bc in 0..b.cols {
+                    out.data[orow + bc] = av * b.data[brow + bc];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kron_known_2x2() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let k = kron(&a, &b);
+        assert_eq!(k.rows, 4);
+        assert_eq!(k.cols, 4);
+        #[rustfmt::skip]
+        let expect = vec![
+            0.0, 1.0, 0.0, 2.0,
+            1.0, 0.0, 2.0, 0.0,
+            0.0, 3.0, 0.0, 4.0,
+            3.0, 0.0, 4.0, 0.0,
+        ];
+        assert_eq!(k.data, expect);
+    }
+
+    #[test]
+    fn kron_with_identity() {
+        let mut rng = Rng::new(5);
+        let a = Mat::random(3, 3, &mut rng);
+        let i1 = Mat::identity(1);
+        assert_eq!(kron(&a, &i1), a);
+        assert_eq!(kron(&i1, &a), a);
+    }
+
+    #[test]
+    fn mixed_product_property() {
+        // (A⊗B)(C⊗D) = (AC)⊗(BD)
+        let mut rng = Rng::new(6);
+        let a = Mat::random(2, 3, &mut rng);
+        let b = Mat::random(2, 2, &mut rng);
+        let c = Mat::random(3, 2, &mut rng);
+        let d = Mat::random(2, 2, &mut rng);
+        let lhs = kron(&a, &b).matmul(&kron(&c, &d));
+        let rhs = kron(&a.matmul(&c), &b.matmul(&d));
+        let err: f64 = lhs
+            .data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f64::max);
+        assert!(err < 1e-12);
+    }
+}

@@ -1,0 +1,186 @@
+//! LU decomposition with partial pivoting: solve / invert the recovery
+//! matrix E (paper eq. (43), D = E⁻¹).
+
+use crate::linalg::Mat;
+use anyhow::{bail, Result};
+
+/// LU factorization PA = LU with partial pivoting, stored compactly.
+pub struct Lu {
+    lu: Mat,
+    piv: Vec<usize>,
+    /// Sign of the permutation (for determinants).
+    sign: f64,
+}
+
+impl Lu {
+    /// Factor a square matrix. Fails on exact singularity.
+    pub fn factor(a: &Mat) -> Result<Self> {
+        if !a.is_square() {
+            bail!("Lu::factor: matrix is {}x{}, not square", a.rows, a.cols);
+        }
+        let n = a.rows;
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for k in 0..n {
+            // Pivot search.
+            let mut p = k;
+            let mut best = lu.get(k, k).abs();
+            for r in (k + 1)..n {
+                let v = lu.get(r, k).abs();
+                if v > best {
+                    best = v;
+                    p = r;
+                }
+            }
+            if best == 0.0 {
+                bail!("Lu::factor: singular matrix (pivot {k} is zero)");
+            }
+            if p != k {
+                for c in 0..n {
+                    let t = lu.get(k, c);
+                    lu.set(k, c, lu.get(p, c));
+                    lu.set(p, c, t);
+                }
+                piv.swap(k, p);
+                sign = -sign;
+            }
+            let pivot = lu.get(k, k);
+            for r in (k + 1)..n {
+                let f = lu.get(r, k) / pivot;
+                lu.set(r, k, f);
+                if f != 0.0 {
+                    for c in (k + 1)..n {
+                        let v = lu.get(r, c) - f * lu.get(k, c);
+                        lu.set(r, c, v);
+                    }
+                }
+            }
+        }
+        Ok(Self { lu, piv, sign })
+    }
+
+    pub fn n(&self) -> usize {
+        self.lu.rows
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n, "Lu::solve: dim mismatch");
+        // Apply permutation.
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // Forward substitution (unit lower).
+        for i in 1..n {
+            let mut s = x[i];
+            for j in 0..i {
+                s -= self.lu.get(i, j) * x[j];
+            }
+            x[i] = s;
+        }
+        // Back substitution.
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for j in (i + 1)..n {
+                s -= self.lu.get(i, j) * x[j];
+            }
+            x[i] = s / self.lu.get(i, i);
+        }
+        x
+    }
+
+    /// Solve A X = B column by column.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        assert_eq!(b.rows, self.n());
+        let mut out = Mat::zeros(b.rows, b.cols);
+        for c in 0..b.cols {
+            let col = b.col(c);
+            let x = self.solve(&col);
+            for r in 0..b.rows {
+                out.set(r, c, x[r]);
+            }
+        }
+        out
+    }
+
+    /// Explicit inverse (solve against identity).
+    pub fn inverse(&self) -> Mat {
+        self.solve_mat(&Mat::identity(self.n()))
+    }
+
+    pub fn determinant(&self) -> f64 {
+        let mut d = self.sign;
+        for i in 0..self.n() {
+            d *= self.lu.get(i, i);
+        }
+        d
+    }
+}
+
+/// Convenience: invert a square matrix.
+pub fn invert(a: &Mat) -> Result<Mat> {
+    Ok(Lu::factor(a)?.inverse())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_known_system() {
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 3.0]);
+        let lu = Lu::factor(&a).unwrap();
+        let x = lu.solve(&[3.0, 5.0]);
+        assert!((x[0] - 0.8).abs() < 1e-12);
+        assert!((x[1] - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_roundtrip_random() {
+        let mut rng = Rng::new(42);
+        for n in [1usize, 2, 3, 5, 8, 16, 32] {
+            // Random matrices are a.s. well conditioned enough at this size.
+            let a = Mat::random(n, n, &mut rng);
+            let inv = invert(&a).unwrap();
+            let prod = a.matmul(&inv);
+            let id = Mat::identity(n);
+            let err: f64 = prod
+                .data
+                .iter()
+                .zip(&id.data)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-8, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn rejects_singular() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(Lu::factor(&a).is_err());
+    }
+
+    #[test]
+    fn rejects_nonsquare() {
+        let a = Mat::zeros(2, 3);
+        assert!(Lu::factor(&a).is_err());
+    }
+
+    #[test]
+    fn determinant_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let lu = Lu::factor(&a).unwrap();
+        assert!((lu.determinant() + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn permutation_handled() {
+        // Leading zero forces a pivot swap.
+        let a = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let lu = Lu::factor(&a).unwrap();
+        let x = lu.solve(&[3.0, 7.0]);
+        assert_eq!(x, vec![7.0, 3.0]);
+        assert!((lu.determinant() + 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,256 @@
+//! Dense row-major f64 matrix.
+
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// Dense matrix, row-major storage.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for r in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for c in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self.get(r, c))?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec: size mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        assert!(!rows.is_empty());
+        let cols = rows[0].len();
+        assert!(rows.iter().all(|r| r.len() == cols));
+        Self {
+            rows: rows.len(),
+            cols,
+            data: rows.concat(),
+        }
+    }
+
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Self {
+            rows,
+            cols,
+            data: rng.fill_uniform(rows * cols, -1.0, 1.0),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.set(c, r, self.get(r, c));
+            }
+        }
+        t
+    }
+
+    /// Matrix product (ikj loop order for cache friendliness).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul: inner dim mismatch {}x{} · {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for (k, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// y = A·x for a dense vector x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len(), "matvec: dim mismatch");
+        (0..self.rows)
+            .map(|r| self.row(r).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// Columns [v, e) as a new matrix.
+    pub fn slice_cols(&self, v: usize, e: usize) -> Mat {
+        assert!(v <= e && e <= self.cols);
+        let mut out = Mat::zeros(self.rows, e - v);
+        for r in 0..self.rows {
+            let src = r * self.cols + v;
+            let dst = r * (e - v);
+            out.data[dst..dst + (e - v)].copy_from_slice(&self.data[src..src + (e - v)]);
+        }
+        out
+    }
+
+    /// Horizontal concatenation of column blocks.
+    pub fn hcat(blocks: &[&Mat]) -> Mat {
+        assert!(!blocks.is_empty());
+        let rows = blocks[0].rows;
+        assert!(blocks.iter().all(|b| b.rows == rows), "hcat: row mismatch");
+        let cols: usize = blocks.iter().map(|b| b.cols).sum();
+        let mut out = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            let mut off = 0usize;
+            for b in blocks {
+                let dst = r * cols + off;
+                out.data[dst..dst + b.cols].copy_from_slice(b.row(r));
+                off += b.cols;
+            }
+        }
+        out
+    }
+
+    /// Gather the given columns (in order) into a new matrix.
+    pub fn gather_cols(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for r in 0..self.rows {
+            for (j, &c) in idx.iter().enumerate() {
+                out.set(r, j, self.get(r, c));
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, v| m.max(v.abs()))
+    }
+
+    /// Induced 1-norm (max column abs sum).
+    pub fn norm_1(&self) -> f64 {
+        (0..self.cols)
+            .map(|c| (0..self.rows).map(|r| self.get(r, c).abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
+    /// Induced inf-norm (max row abs sum).
+    pub fn norm_inf(&self) -> f64 {
+        (0..self.rows)
+            .map(|r| self.row(r).iter().map(|v| v.abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn identity_neutral() {
+        let mut rng = Rng::new(1);
+        let a = Mat::random(4, 4, &mut rng);
+        let i = Mat::identity(4);
+        assert_eq!(a.matmul(&i).data, a.data);
+        assert_eq!(i.matmul(&a).data, a.data);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Mat::random(3, 5, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn hcat_and_slice_cols() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 5.0, 6.0]);
+        let b = Mat::from_vec(2, 1, vec![3.0, 7.0]);
+        let c = Mat::hcat(&[&a, &b]);
+        assert_eq!(c.data, vec![1.0, 2.0, 3.0, 5.0, 6.0, 7.0]);
+        assert_eq!(c.slice_cols(1, 3).data, vec![2.0, 3.0, 6.0, 7.0]);
+        assert_eq!(c.gather_cols(&[2, 0]).data, vec![3.0, 1.0, 7.0, 5.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Mat::from_vec(2, 2, vec![1.0, -2.0, 3.0, 4.0]);
+        assert_eq!(a.norm_1(), 6.0);
+        assert_eq!(a.norm_inf(), 7.0);
+        assert_eq!(a.max_abs(), 4.0);
+        assert!((a.fro_norm() - 30f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 0.0, 2.0, 0.0, 1.0, -1.0]);
+        assert_eq!(a.matvec(&[1.0, 2.0, 3.0]), vec![7.0, -1.0]);
+    }
+}

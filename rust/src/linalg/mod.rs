@@ -1,0 +1,16 @@
+//! Dense f64 linear algebra substrate: the recovery-matrix machinery of
+//! the coding layer (inversion, condition numbers, Kronecker products).
+//! No external crates are available; LU and Jacobi-SVD are implemented
+//! from the standard algorithms.
+
+pub mod cond;
+pub mod kron;
+pub mod lu;
+pub mod mat;
+pub mod svd;
+
+pub use cond::{cond_1_estimate, cond_2};
+pub use kron::kron;
+pub use lu::Lu;
+pub use mat::Mat;
+pub use svd::singular_values;

@@ -1,0 +1,126 @@
+//! Singular values via one-sided Jacobi — used for exact 2-norm condition
+//! numbers of recovery matrices (paper Fig. 4). One-sided Jacobi is slow
+//! but extremely accurate for small/ill-conditioned matrices, which is
+//! exactly the regime of interest (k_A·k_B ≤ ~128).
+
+use crate::linalg::Mat;
+
+/// Singular values of `a` (descending). One-sided Jacobi on the columns of
+/// a working copy of A (rows >= cols is handled by transposing as needed).
+pub fn singular_values(a: &Mat) -> Vec<f64> {
+    // Work on the matrix with rows >= cols.
+    let work = if a.rows >= a.cols { a.clone() } else { a.transpose() };
+    let m = work.rows;
+    let n = work.cols;
+    // Column-major copy for cheap column access.
+    let mut u = vec![0.0f64; m * n];
+    for r in 0..m {
+        for c in 0..n {
+            u[c * m + r] = work.get(r, c);
+        }
+    }
+    let eps = f64::EPSILON;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Compute [app apq; apq aqq] of A^T A for columns p,q.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let x = u[p * m + i];
+                    let y = u[q * m + i];
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(f64::MIN_POSITIVE));
+                // Jacobi rotation annihilating apq.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let x = u[p * m + i];
+                    let y = u[q * m + i];
+                    u[p * m + i] = c * x - s * y;
+                    u[q * m + i] = s * x + c * y;
+                }
+            }
+        }
+        if off < 1e-15 {
+            break;
+        }
+    }
+    let mut sv: Vec<f64> = (0..n)
+        .map(|c| (0..m).map(|i| u[c * m + i] * u[c * m + i]).sum::<f64>().sqrt())
+        .collect();
+    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, -5.0, 0.0, 0.0, 0.0, 1.0]);
+        let sv = singular_values(&a);
+        assert!((sv[0] - 5.0).abs() < 1e-12);
+        assert!((sv[1] - 3.0).abs() < 1e-12);
+        assert!((sv[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn orthogonal_matrix_all_ones() {
+        let th = 0.3f64;
+        let a = Mat::from_vec(2, 2, vec![th.cos(), -th.sin(), th.sin(), th.cos()]);
+        let sv = singular_values(&a);
+        assert!((sv[0] - 1.0).abs() < 1e-12);
+        assert!((sv[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_deficient_has_zero_sv() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        let sv = singular_values(&a);
+        assert!(sv[1].abs() < 1e-12, "sv={sv:?}");
+    }
+
+    #[test]
+    fn frobenius_consistency_random() {
+        let mut rng = Rng::new(9);
+        for (r, c) in [(4, 4), (6, 3), (3, 6), (12, 12)] {
+            let a = Mat::random(r, c, &mut rng);
+            let sv = singular_values(&a);
+            let fro2: f64 = sv.iter().map(|s| s * s).sum();
+            assert!(
+                (fro2.sqrt() - a.fro_norm()).abs() < 1e-9,
+                "{r}x{c}: {} vs {}",
+                fro2.sqrt(),
+                a.fro_norm()
+            );
+        }
+    }
+
+    #[test]
+    fn matches_known_2x2() {
+        // A = [[1,1],[0,1]]: singular values are golden-ratio related:
+        // sigma = sqrt((3±sqrt(5))/2)
+        let a = Mat::from_vec(2, 2, vec![1.0, 1.0, 0.0, 1.0]);
+        let sv = singular_values(&a);
+        let s1 = ((3.0 + 5f64.sqrt()) / 2.0).sqrt();
+        let s2 = ((3.0 - 5f64.sqrt()) / 2.0).sqrt();
+        assert!((sv[0] - s1).abs() < 1e-12);
+        assert!((sv[1] - s2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,200 @@
+//! The `fcdcc` CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! fcdcc run       --arch alexnet --layer 2 --ka 2 --kb 16 --n 18 \
+//!                 [--stragglers 2] [--delay-ms 100] [--engine im2col|direct|pjrt]
+//! fcdcc optimize  --arch vgg [--q 16,32,64]          # Table IV planner
+//! fcdcc stability [--samples 6]                      # Fig. 3/4 report
+//! fcdcc serve     [--requests 16] [--n 4] [--stragglers 1] [--engine pjrt]
+//! fcdcc artifacts [--dir artifacts]                  # verify AOT artifacts
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use fcdcc::cli::Args;
+use fcdcc::cluster::StragglerModel;
+use fcdcc::coordinator::{self, stability, RunConfig, ServeConfig};
+use fcdcc::engine::TaskEngine;
+use fcdcc::metrics::{fmt_sci, Table};
+use fcdcc::model::zoo;
+use fcdcc::runtime::PjrtService;
+use std::sync::Arc;
+use std::time::Duration;
+
+const USAGE: &str = "\
+fcdcc — Flexible Coded Distributed Convolution Computing
+
+USAGE:
+  fcdcc run       --arch <lenet|alexnet|vgg> [--layer I] [--ka K] [--kb K]
+                  [--n N] [--stragglers S] [--delay-ms MS]
+                  [--engine direct|im2col|pjrt] [--scale F] [--seed S]
+  fcdcc optimize  [--arch NAME] [--q Q1,Q2,...]
+  fcdcc stability [--samples N] [--seed S]
+  fcdcc serve     [--requests R] [--n N] [--stragglers S] [--delay-ms MS]
+                  [--engine direct|im2col|pjrt]
+  fcdcc artifacts [--dir DIR]
+";
+
+fn resolve_engine(name: &str, artifacts_dir: &str) -> Result<Arc<dyn TaskEngine>> {
+    if name == "pjrt" {
+        let host = PjrtService::spawn(artifacts_dir)?;
+        let handle = host.handle.clone();
+        // Detach the host: the service lives until all handles drop.
+        std::mem::forget(host);
+        Ok(Arc::new(handle))
+    } else {
+        coordinator::engine_by_name(name)
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let arch = args.get_str("arch", "lenet");
+    let layers = zoo::by_name(arch).ok_or_else(|| anyhow!("unknown arch {arch:?}"))?;
+    let idx = args.get_usize("layer", 0)?;
+    let layer = layers
+        .get(idx)
+        .ok_or_else(|| anyhow!("{arch} has only {} conv layers", layers.len()))?;
+    let scale = args.get_usize("scale", 1)?;
+    let layer = layer.scaled_spatial(scale);
+    let k_a = args.get_usize("ka", 2)?;
+    let k_b = args.get_usize("kb", 2)?;
+    let n = args.get_usize("n", 4)?;
+    let engine = resolve_engine(
+        args.get_str("engine", "im2col"),
+        args.get_str("artifacts", "artifacts"),
+    )?;
+    coordinator::run_layer(RunConfig {
+        layer,
+        k_a,
+        k_b,
+        n,
+        stragglers: args.get_usize("stragglers", 0)?,
+        delay: Duration::from_millis(args.get_usize("delay-ms", 100)? as u64),
+        engine,
+        seed: args.get_usize("seed", 7)? as u64,
+    })?;
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let qs: Vec<usize> = args
+        .get_str("q", "16,32,64")
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|_| anyhow!("bad Q list")))
+        .collect::<Result<_>>()?;
+    match args.get("arch") {
+        Some(arch) => coordinator::print_optimizer_table(arch, &qs)?,
+        None => {
+            for arch in ["lenet", "alexnet", "vgg"] {
+                coordinator::print_optimizer_table(arch, &qs)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_stability(args: &Args) -> Result<()> {
+    let samples = args.get_usize("samples", 4)?;
+    let seed = args.get_usize("seed", 1)? as u64;
+    // VGG conv4 structure at reduced scale (see DESIGN.md §Hardware
+    // adaptation): channel geometry preserved, spatial/channel scale
+    // reduced so the sweep runs in seconds.
+    let layer = fcdcc::model::ConvLayer::new("vgg.conv4/s", 16, 14, 14, 64, 3, 3, 1, 1);
+    let configs = [(5, 4), (20, 16), (40, 32), (48, 32), (60, 32)];
+    let pts = stability::stability_sweep(&layer, &configs, samples, seed);
+    let mut t = Table::new(
+        "Numerical stability across CDC schemes (paper Figs. 3-4)",
+        &[
+            "scheme",
+            "n",
+            "delta",
+            "gamma",
+            "(kA,kB)",
+            "cond median",
+            "cond worst",
+            "MSE mean",
+            "MSE worst",
+        ],
+    );
+    for p in &pts {
+        t.row(&[
+            p.scheme.to_string(),
+            p.n.to_string(),
+            p.delta.to_string(),
+            p.gamma.to_string(),
+            format!("({},{})", p.k_a, p.k_b),
+            fmt_sci(p.cond_median),
+            fmt_sci(p.cond_worst),
+            fmt_sci(p.mse_mean),
+            fmt_sci(p.mse_worst),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = resolve_engine(
+        args.get_str("engine", "im2col"),
+        args.get_str("artifacts", "artifacts"),
+    )?;
+    let mut cfg = ServeConfig::default_with_engine(engine);
+    cfg.requests = args.get_usize("requests", 16)?;
+    cfg.n_workers = args.get_usize("n", 4)?;
+    let stragglers = args.get_usize("stragglers", 0)?;
+    if stragglers > 0 {
+        cfg.straggler = StragglerModel::FixedCount {
+            count: stragglers,
+            delay: Duration::from_millis(args.get_usize("delay-ms", 100)? as u64),
+        };
+    }
+    let stats = coordinator::serve_lenet(cfg)?;
+    println!(
+        "served {} requests: mean latency {:.2}ms (p95 {:.2}ms), throughput {:.1} req/s",
+        stats.requests,
+        stats.latency.mean * 1e3,
+        stats.latency.p95 * 1e3,
+        stats.throughput_rps
+    );
+    println!(
+        "decode mean {:.3}ms | logit MSE {} | class mismatches {}/{}",
+        stats.decode.mean * 1e3,
+        fmt_sci(stats.mean_logit_mse),
+        stats.class_mismatches,
+        stats.requests
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.get_str("dir", "artifacts");
+    let manifest = fcdcc::runtime::Manifest::load(
+        std::path::Path::new(dir).join("manifest.json").as_path(),
+    )?;
+    println!("manifest OK: {} artifacts", manifest.artifacts.len());
+    let host = PjrtService::spawn(dir)?;
+    println!("PJRT compile OK (all artifacts)");
+    drop(host);
+    for a in &manifest.artifacts {
+        println!(
+            "  {}  x{:?} k{:?} -> out{:?} (stride {})",
+            a.name, a.x_shape, a.k_shape, a.out_shape, a.stride
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    match args.command.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("optimize") => cmd_optimize(&args),
+        Some("stability") => cmd_stability(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
+        None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Reporting helpers: aligned markdown tables and simple summary
+//! statistics — the output layer for every bench (Tables III/IV,
+//! Figs. 3–7 series) and the examples.
+
+/// Summary statistics over a sample of f64 measurements.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub std: f64,
+}
+
+impl Stats {
+    pub fn from(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty(), "Stats::from on empty sample");
+        let mut s: Vec<f64> = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| s[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            n,
+            mean,
+            min: s[0],
+            max: s[n - 1],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            std: var.sqrt(),
+        }
+    }
+}
+
+/// A simple aligned-markdown table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("\n### {}\n\n", self.title));
+        }
+        out.push_str(&line(&self.header));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Human formatting helpers used across benches.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+pub fn fmt_sci(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.is_infinite() {
+        "inf".to_string()
+    } else {
+        format!("{v:.2e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_known() {
+        let s = Stats::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+        assert!((s.std - 2f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "long_header"]);
+        t.row(&["x".into(), "1".into()]);
+        let out = t.render();
+        assert!(out.contains("### T"));
+        assert!(out.contains("| a | long_header |"));
+        assert!(out.contains("| x | 1           |"));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_secs(2.5), "2.500s");
+        assert_eq!(fmt_secs(0.0025), "2.500ms");
+        assert_eq!(fmt_sci(0.0), "0");
+        assert_eq!(fmt_sci(1.23e-27), "1.23e-27");
+    }
+}

@@ -1,0 +1,146 @@
+//! Convolutional-layer geometry (Table I notation) and derived quantities
+//! used by the cost model and the benches.
+
+use crate::tensor::{conv2d_shape, ConvParams};
+
+/// One convolutional layer's shape parameters (paper Table I).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConvLayer {
+    pub name: String,
+    /// Input channels C.
+    pub c: usize,
+    /// Unpadded input height H and width W.
+    pub h: usize,
+    pub w: usize,
+    /// Output channels N.
+    pub n: usize,
+    /// Kernel height/width K_H, K_W.
+    pub kh: usize,
+    pub kw: usize,
+    /// Stride s and padding p.
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvLayer {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &str,
+        c: usize,
+        h: usize,
+        w: usize,
+        n: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Self {
+        Self {
+            name: name.to_string(),
+            c,
+            h,
+            w,
+            n,
+            kh,
+            kw,
+            stride,
+            pad,
+        }
+    }
+
+    pub fn params(&self) -> ConvParams {
+        ConvParams::new(self.stride, self.pad)
+    }
+
+    /// (H', W') output spatial dims.
+    pub fn out_shape(&self) -> (usize, usize) {
+        conv2d_shape(self.h, self.w, self.kh, self.kw, self.params())
+    }
+
+    pub fn h_out(&self) -> usize {
+        self.out_shape().0
+    }
+
+    pub fn w_out(&self) -> usize {
+        self.out_shape().1
+    }
+
+    /// Padded input entry count C·(H+2p)·(W+2p).
+    pub fn input_entries(&self) -> usize {
+        self.c * (self.h + 2 * self.pad) * (self.w + 2 * self.pad)
+    }
+
+    /// Filter entry count N·C·K_H·K_W.
+    pub fn filter_entries(&self) -> usize {
+        self.n * self.c * self.kh * self.kw
+    }
+
+    /// Output entry count N·H'·W'.
+    pub fn output_entries(&self) -> usize {
+        let (h, w) = self.out_shape();
+        self.n * h * w
+    }
+
+    /// Total MAC count of the layer: N·H'·W'·C·K_H·K_W (paper §V).
+    pub fn macs(&self) -> usize {
+        self.output_entries() * self.c * self.kh * self.kw
+    }
+
+    /// A copy with spatial dims scaled down by `f` (≥1) — used to run
+    /// VGG-geometry benches at tractable sizes on this testbed (DESIGN.md
+    /// §Hardware adaptation); channel structure is preserved.
+    pub fn scaled_spatial(&self, f: usize) -> ConvLayer {
+        assert!(f >= 1);
+        let mut l = self.clone();
+        l.name = if f == 1 {
+            l.name
+        } else {
+            format!("{}/s{f}", l.name)
+        };
+        l.h = (l.h / f).max(l.kh);
+        l.w = (l.w / f).max(l.kw);
+        l
+    }
+
+    /// A copy with channel counts scaled down by `f` (≥1), keeping the
+    /// output-channel count a multiple of 8 (so KCCP divisor choices stay
+    /// rich); used with [`Self::scaled_spatial`] by the benches.
+    pub fn scaled_channels(&self, f: usize) -> ConvLayer {
+        assert!(f >= 1);
+        let mut l = self.clone();
+        if f == 1 {
+            return l;
+        }
+        l.name = format!("{}/c{f}", l.name);
+        l.c = (l.c / f).max(1);
+        l.n = ((l.n / f) / 8 * 8).max(8);
+        l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_conv1_geometry() {
+        let l = ConvLayer::new("conv1", 3, 227, 227, 96, 11, 11, 4, 0);
+        assert_eq!(l.out_shape(), (55, 55));
+        assert_eq!(l.macs(), 96 * 55 * 55 * 3 * 11 * 11);
+    }
+
+    #[test]
+    fn vgg_conv_keeps_spatial() {
+        let l = ConvLayer::new("c", 64, 224, 224, 64, 3, 3, 1, 1);
+        assert_eq!(l.out_shape(), (224, 224));
+        assert_eq!(l.input_entries(), 64 * 226 * 226);
+    }
+
+    #[test]
+    fn scaled_spatial_floors_at_kernel() {
+        let l = ConvLayer::new("c", 8, 14, 14, 8, 3, 3, 1, 1);
+        let s = l.scaled_spatial(8);
+        assert_eq!(s.h, 3);
+        assert_eq!(s.w, 3);
+    }
+}

@@ -1,0 +1,10 @@
+//! CNN model zoo: the convolutional-layer geometries of LeNet-5, AlexNet
+//! and VGG-16 used throughout the paper's evaluation (§VI), plus a full
+//! Rust forward pass (conv/ReLU/pool/FC) for the end-to-end example.
+
+pub mod layers;
+pub mod network;
+pub mod zoo;
+
+pub use layers::ConvLayer;
+pub use network::{Layer, Network};

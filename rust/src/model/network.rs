@@ -1,0 +1,231 @@
+//! A small CNN inference graph in Rust (conv / ReLU / pool / FC /
+//! softmax) — the substrate for the end-to-end distributed-inference
+//! example: every Conv layer can be executed either locally or through
+//! the FCDCC distributed pipeline (the hook is a callback, so the network
+//! definition stays transport-agnostic).
+
+use crate::model::ConvLayer;
+use crate::tensor::{conv2d, Tensor3, Tensor4};
+use crate::util::rng::Rng;
+
+/// One layer of the inference graph.
+pub enum Layer {
+    /// Convolution with weights and per-output-channel bias.
+    Conv {
+        shape: ConvLayer,
+        weights: Tensor4,
+        bias: Vec<f64>,
+    },
+    Relu,
+    /// Max pooling with square window `size` and stride `stride`.
+    MaxPool { size: usize, stride: usize },
+    /// Average pooling.
+    AvgPool { size: usize, stride: usize },
+    /// Fully connected on the flattened tensor: out = W·x + b.
+    Dense {
+        w: crate::linalg::Mat,
+        b: Vec<f64>,
+    },
+}
+
+/// How a Conv layer is executed: given (input, weights, shape) produce
+/// the output feature map. The default runs locally; the e2e example
+/// plugs in the FCDCC distributed pipeline.
+pub type ConvExec<'a> = dyn Fn(&Tensor3, &Tensor4, &ConvLayer) -> Tensor3 + 'a;
+
+/// A feed-forward network (sequence of layers).
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+/// Square-window pooling (shared by the forward pass and the serving
+/// coordinator).
+pub fn pool(x: &Tensor3, size: usize, stride: usize, max: bool) -> Tensor3 {
+    let oh = (x.h - size) / stride + 1;
+    let ow = (x.w - size) / stride + 1;
+    let mut out = Tensor3::zeros(x.c, oh, ow);
+    for c in 0..x.c {
+        for h in 0..oh {
+            for w in 0..ow {
+                let mut acc = if max { f64::NEG_INFINITY } else { 0.0 };
+                for i in 0..size {
+                    for j in 0..size {
+                        let v = x.get(c, h * stride + i, w * stride + j);
+                        if max {
+                            acc = acc.max(v);
+                        } else {
+                            acc += v;
+                        }
+                    }
+                }
+                out.set(c, h, w, if max { acc } else { acc / (size * size) as f64 });
+            }
+        }
+    }
+    out
+}
+
+/// Numerically-stable softmax over a vector.
+pub fn softmax(xs: &[f64]) -> Vec<f64> {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = xs.iter().map(|x| (x - m).exp()).collect();
+    let s: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / s).collect()
+}
+
+impl Network {
+    /// Forward pass with the default (local) conv executor.
+    pub fn forward(&self, x: &Tensor3) -> Vec<f64> {
+        self.forward_with(x, &|x, k, shape| conv2d(x, k, shape.params()))
+    }
+
+    /// Forward pass with a custom conv executor (e.g. FCDCC distributed).
+    pub fn forward_with(&self, x: &Tensor3, conv_exec: &ConvExec) -> Vec<f64> {
+        let mut t = x.clone();
+        let mut flat: Option<Vec<f64>> = None;
+        for layer in &self.layers {
+            match layer {
+                Layer::Conv {
+                    shape,
+                    weights,
+                    bias,
+                } => {
+                    let mut y = conv_exec(&t, weights, shape);
+                    for n in 0..y.c {
+                        let base = y.idx(n, 0, 0);
+                        let plane = y.h * y.w;
+                        for v in &mut y.data[base..base + plane] {
+                            *v += bias[n];
+                        }
+                    }
+                    t = y;
+                }
+                Layer::Relu => {
+                    if let Some(f) = &mut flat {
+                        for v in f.iter_mut() {
+                            if *v < 0.0 {
+                                *v = 0.0;
+                            }
+                        }
+                    } else {
+                        t.relu_inplace();
+                    }
+                }
+                Layer::MaxPool { size, stride } => t = pool(&t, *size, *stride, true),
+                Layer::AvgPool { size, stride } => t = pool(&t, *size, *stride, false),
+                Layer::Dense { w, b } => {
+                    let input = flat.take().unwrap_or_else(|| t.data.clone());
+                    let mut y = w.matvec(&input);
+                    for (yi, bi) in y.iter_mut().zip(b) {
+                        *yi += bi;
+                    }
+                    flat = Some(y);
+                }
+            }
+        }
+        flat.unwrap_or_else(|| t.data.clone())
+    }
+
+    /// LeNet-5 with random (synthetically "trained") weights — the model
+    /// served by the e2e example. Deterministic for a given seed.
+    pub fn lenet5_random(seed: u64) -> Network {
+        let mut rng = Rng::new(seed);
+        let shapes = crate::model::zoo::lenet5();
+        let scale1 = (2.0f64 / 25.0).sqrt(); // He init
+        let w1 = {
+            let mut t = Tensor4::random(6, 1, 5, 5, &mut rng);
+            t.data.iter_mut().for_each(|v| *v *= scale1);
+            t
+        };
+        let scale2 = (2.0f64 / 150.0).sqrt();
+        let w2 = {
+            let mut t = Tensor4::random(16, 6, 5, 5, &mut rng);
+            t.data.iter_mut().for_each(|v| *v *= scale2);
+            t
+        };
+        // conv2 output: 16×10×10 -> pool -> 16×5×5 = 400 -> 120 -> 84 -> 10
+        let dense = |rng: &mut Rng, rows: usize, cols: usize| {
+            let scale = (2.0 / cols as f64).sqrt();
+            let mut m = crate::linalg::Mat::random(rows, cols, rng);
+            m.data.iter_mut().for_each(|v| *v *= scale);
+            m
+        };
+        Network {
+            name: "lenet5".into(),
+            layers: vec![
+                Layer::Conv {
+                    shape: shapes[0].clone(),
+                    weights: w1,
+                    bias: vec![0.01; 6],
+                },
+                Layer::Relu,
+                Layer::MaxPool { size: 2, stride: 2 },
+                Layer::Conv {
+                    shape: shapes[1].clone(),
+                    weights: w2,
+                    bias: vec![0.01; 16],
+                },
+                Layer::Relu,
+                Layer::MaxPool { size: 2, stride: 2 },
+                Layer::Dense {
+                    w: dense(&mut rng, 120, 400),
+                    b: vec![0.0; 120],
+                },
+                Layer::Relu,
+                Layer::Dense {
+                    w: dense(&mut rng, 84, 120),
+                    b: vec![0.0; 84],
+                },
+                Layer::Relu,
+                Layer::Dense {
+                    w: dense(&mut rng, 10, 84),
+                    b: vec![0.0; 10],
+                },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxpool_known() {
+        let x = Tensor3::from_vec(1, 2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let y = pool(&x, 2, 2, true);
+        assert_eq!(y.data, vec![4.0]);
+        let a = pool(&x, 2, 2, false);
+        assert_eq!(a.data, vec![2.5]);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn lenet_forward_produces_10_logits() {
+        let net = Network::lenet5_random(7);
+        let x = Tensor3::random(1, 32, 32, &mut Rng::new(1));
+        let logits = net.forward(&x);
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn custom_exec_matches_default() {
+        let net = Network::lenet5_random(9);
+        let x = Tensor3::random(1, 32, 32, &mut Rng::new(2));
+        let a = net.forward(&x);
+        let b = net.forward_with(&x, &|x, k, s| {
+            crate::tensor::im2col::conv2d_im2col(x, k, s.params())
+        });
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! The three CNN architectures evaluated in the paper (§VI): LeNet-5,
+//! AlexNet and VGG-16 convolutional-layer geometries.
+
+use crate::model::ConvLayer;
+
+/// LeNet-5 ConvLs (LeCun et al.; 32×32 grayscale input).
+pub fn lenet5() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::new("lenet.conv1", 1, 32, 32, 6, 5, 5, 1, 0), // -> 6×28×28
+        ConvLayer::new("lenet.conv2", 6, 14, 14, 16, 5, 5, 1, 0), // -> 16×10×10
+    ]
+}
+
+/// AlexNet ConvLs (Krizhevsky et al. [39], single-tower shapes).
+pub fn alexnet() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::new("alexnet.conv1", 3, 227, 227, 96, 11, 11, 4, 0), // -> 96×55×55
+        ConvLayer::new("alexnet.conv2", 96, 27, 27, 256, 5, 5, 1, 2),   // -> 256×27×27
+        ConvLayer::new("alexnet.conv3", 256, 13, 13, 384, 3, 3, 1, 1),  // -> 384×13×13
+        ConvLayer::new("alexnet.conv4", 384, 13, 13, 384, 3, 3, 1, 1),  // -> 384×13×13
+        ConvLayer::new("alexnet.conv5", 384, 13, 13, 256, 3, 3, 1, 1),  // -> 256×13×13
+    ]
+}
+
+/// VGG-16 ConvLs (Simonyan & Zisserman). Layers with identical geometry
+/// are listed once with the paper's combined naming (e.g. conv3_2/3).
+pub fn vggnet() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::new("vgg.conv1_1", 3, 224, 224, 64, 3, 3, 1, 1),
+        ConvLayer::new("vgg.conv1_2", 64, 224, 224, 64, 3, 3, 1, 1),
+        ConvLayer::new("vgg.conv2_1", 64, 112, 112, 128, 3, 3, 1, 1),
+        ConvLayer::new("vgg.conv2_2", 128, 112, 112, 128, 3, 3, 1, 1),
+        ConvLayer::new("vgg.conv3_1", 128, 56, 56, 256, 3, 3, 1, 1),
+        ConvLayer::new("vgg.conv3_2/3", 256, 56, 56, 256, 3, 3, 1, 1),
+        ConvLayer::new("vgg.conv4_1", 256, 28, 28, 512, 3, 3, 1, 1),
+        ConvLayer::new("vgg.conv4_2/3", 512, 28, 28, 512, 3, 3, 1, 1),
+        ConvLayer::new("vgg.conv5_1/2/3", 512, 14, 14, 512, 3, 3, 1, 1),
+    ]
+}
+
+/// The "Conv4 of VGGNet" layer used in the paper's Experiment 2
+/// (numerical-stability comparison): the conv4 block geometry.
+pub fn vgg_conv4() -> ConvLayer {
+    ConvLayer::new("vgg.conv4_1", 256, 28, 28, 512, 3, 3, 1, 1)
+}
+
+/// Representative "Conv1..Conv5" five-layer view of VGG used by the
+/// paper's Table IV (one representative per block).
+pub fn vgg_blocks() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::new("vgg.conv1", 3, 224, 224, 64, 3, 3, 1, 1),
+        ConvLayer::new("vgg.conv2", 64, 112, 112, 128, 3, 3, 1, 1),
+        ConvLayer::new("vgg.conv3", 128, 56, 56, 256, 3, 3, 1, 1),
+        ConvLayer::new("vgg.conv4", 256, 28, 28, 512, 3, 3, 1, 1),
+        ConvLayer::new("vgg.conv5", 512, 14, 14, 512, 3, 3, 1, 1),
+    ]
+}
+
+/// Look up an architecture by name ("lenet" | "alexnet" | "vgg").
+pub fn by_name(name: &str) -> Option<Vec<ConvLayer>> {
+    match name {
+        "lenet" | "lenet5" | "lenet-5" => Some(lenet5()),
+        "alexnet" => Some(alexnet()),
+        "vgg" | "vggnet" | "vgg16" | "vgg-16" => Some(vggnet()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_shapes() {
+        let ls = lenet5();
+        assert_eq!(ls[0].out_shape(), (28, 28));
+        assert_eq!(ls[1].out_shape(), (10, 10));
+    }
+
+    #[test]
+    fn alexnet_shapes_chain() {
+        let ls = alexnet();
+        assert_eq!(ls[0].out_shape(), (55, 55));
+        assert_eq!(ls[1].out_shape(), (27, 27));
+        assert_eq!(ls[2].out_shape(), (13, 13));
+        assert_eq!(ls[4].out_shape(), (13, 13));
+    }
+
+    #[test]
+    fn vgg_preserves_spatial_within_block() {
+        for l in vggnet() {
+            let (h, w) = l.out_shape();
+            assert_eq!((h, w), (l.h, l.w), "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(by_name("alexnet").is_some());
+        assert!(by_name("resnet").is_none());
+    }
+}

@@ -1,0 +1,178 @@
+//! Adaptive-Padding (Coded) Partitioning of the input tensor — paper
+//! §IV-A, Algorithm 2 (the partitioning half; the coding half is the
+//! generic `coding::encode_inputs`).
+//!
+//! The input is assumed **already spatially padded** (the paper's
+//! X ∈ ℝ^{C×(H+2p)×(W+2p)}); APCP splits it along the height axis into
+//! `k_A` *overlapping* slabs of height Ĥ = (H′/k_A − 1)·s + K_H starting
+//! at stride Ŝ = (H′/k_A)·s, so each slab convolves (stride s, no extra
+//! padding) into exactly the corresponding H′/k_A rows of the output.
+//! When H′ is not a multiple of k_A the input is zero-padded at the
+//! bottom to extend H′ to the next multiple; the merge step trims.
+
+use crate::tensor::Tensor3;
+use anyhow::{ensure, Result};
+
+/// Precomputed APCP geometry for one convolutional layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ApcpPlan {
+    /// Number of input partitions (paper k_A).
+    pub k_a: usize,
+    /// Kernel height K_H.
+    pub k_h: usize,
+    /// Stride s.
+    pub stride: usize,
+    /// Height of the (pre-padded) input this plan was built for.
+    pub h_in: usize,
+    /// True output height H′ of the layer.
+    pub h_out: usize,
+    /// Output height after rounding up to a multiple of k_A.
+    pub h_out_pad: usize,
+    /// Adaptive slab height Ĥ (paper eq. (24), on the padded output).
+    pub h_hat: usize,
+    /// Slab start stride Ŝ (paper eq. (25)).
+    pub s_hat: usize,
+    /// Bottom zero-padding added to the input before slicing.
+    pub pad_bottom: usize,
+}
+
+impl ApcpPlan {
+    /// Build the plan for a pre-padded input of height `h_in`, kernel
+    /// height `k_h`, stride `stride`, and `k_a` partitions.
+    pub fn new(h_in: usize, k_h: usize, stride: usize, k_a: usize) -> Result<Self> {
+        ensure!(k_a >= 1, "k_a must be >= 1");
+        ensure!(stride >= 1, "stride must be >= 1");
+        ensure!(h_in >= k_h, "input height {h_in} smaller than kernel {k_h}");
+        let h_out = (h_in - k_h) / stride + 1;
+        ensure!(
+            h_out >= k_a,
+            "cannot split H'={h_out} output rows into k_a={k_a} partitions"
+        );
+        let h_out_pad = h_out.div_ceil(k_a) * k_a;
+        let rows_per = h_out_pad / k_a;
+        let h_hat = (rows_per - 1) * stride + k_h; // eq. (24)
+        let s_hat = rows_per * stride; // eq. (25)
+        // The last slab ends at (k_a-1)·Ŝ + Ĥ = (H'_pad - 1)s + K_H.
+        let needed = (h_out_pad - 1) * stride + k_h;
+        let pad_bottom = needed.saturating_sub(h_in);
+        Ok(Self {
+            k_a,
+            k_h,
+            stride,
+            h_in,
+            h_out,
+            h_out_pad,
+            h_hat,
+            s_hat,
+            pad_bottom,
+        })
+    }
+
+    /// Output rows produced per partition (H′_pad / k_A).
+    pub fn rows_per_partition(&self) -> usize {
+        self.h_out_pad / self.k_a
+    }
+
+    /// Slice the (pre-padded) input into the k_A overlapping slabs
+    /// (paper eq. (27)).
+    pub fn partition(&self, x: &Tensor3) -> Vec<Tensor3> {
+        assert_eq!(
+            x.h, self.h_in,
+            "ApcpPlan built for input height {}, got {}",
+            self.h_in, x.h
+        );
+        let xp;
+        let x = if self.pad_bottom > 0 {
+            xp = x.pad_bottom(self.pad_bottom);
+            &xp
+        } else {
+            x
+        };
+        (0..self.k_a)
+            .map(|i| x.slice_h(i * self.s_hat, i * self.s_hat + self.h_hat))
+            .collect()
+    }
+
+    /// Tensor entries uploaded per coded slab — the V_comm_up building
+    /// block of the cost model (§IV-E): C·Ĥ·W for a width-W input.
+    pub fn entries_per_slab(&self, c: usize, w: usize) -> usize {
+        c * self.h_hat * w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{conv2d, ConvParams, Tensor4};
+    use crate::util::{max_abs_diff, rng::Rng};
+
+    #[test]
+    fn paper_figure2_geometry() {
+        // Fig. 2: 10×10 input, 3×3 kernel, s=1, k_A=4 ⇒ H'=8, Ĥ=4, Ŝ=2.
+        let plan = ApcpPlan::new(10, 3, 1, 4).unwrap();
+        assert_eq!(plan.h_out, 8);
+        assert_eq!(plan.h_out_pad, 8);
+        assert_eq!(plan.h_hat, 4);
+        assert_eq!(plan.s_hat, 2);
+        assert_eq!(plan.pad_bottom, 0);
+    }
+
+    #[test]
+    fn slab_conv_rows_match_direct() {
+        let mut rng = Rng::new(31);
+        for (h, kh, s, k_a) in [(10, 3, 1, 4), (28, 5, 1, 4), (23, 5, 4, 2), (11, 3, 2, 5)] {
+            let x = Tensor3::random(2, h, 7 + kh, &mut rng);
+            let k = Tensor4::random(3, 2, kh, kh, &mut rng);
+            let p = ConvParams::new(s, 0);
+            let want = conv2d(&x, &k, p);
+            let plan = ApcpPlan::new(h, kh, s, k_a).unwrap();
+            let rows = plan.rows_per_partition();
+            for (i, slab) in plan.partition(&x).iter().enumerate() {
+                assert_eq!(slab.h, plan.h_hat);
+                let y = conv2d(slab, &k, p);
+                assert_eq!(y.h, rows, "partition {i}");
+                // Rows beyond the true H' are the zero-pad artifact; only
+                // compare the real ones.
+                let lo = i * rows;
+                let hi = ((i + 1) * rows).min(want.h);
+                if lo >= want.h {
+                    continue;
+                }
+                let got = y.slice_h(0, hi - lo);
+                let exp = want.slice_h(lo, hi);
+                assert!(
+                    max_abs_diff(&got.data, &exp.data) < 1e-12,
+                    "partition {i} of case {:?}",
+                    (h, kh, s, k_a)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pads_when_not_divisible() {
+        // H'=8 rows into k_A=3 ⇒ padded to 9, one extra bottom row needed.
+        let plan = ApcpPlan::new(10, 3, 1, 3).unwrap();
+        assert_eq!(plan.h_out_pad, 9);
+        assert_eq!(plan.rows_per_partition(), 3);
+        assert!(plan.pad_bottom > 0);
+        let x = Tensor3::random(1, 10, 5, &mut Rng::new(1));
+        let parts = plan.partition(&x);
+        assert_eq!(parts.len(), 3);
+        assert!(parts.iter().all(|p| p.h == plan.h_hat));
+    }
+
+    #[test]
+    fn k_a_one_is_whole_input() {
+        let plan = ApcpPlan::new(9, 3, 1, 1).unwrap();
+        let x = Tensor3::random(2, 9, 4, &mut Rng::new(2));
+        let parts = plan.partition(&x);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0], x);
+    }
+
+    #[test]
+    fn rejects_oversplit() {
+        assert!(ApcpPlan::new(5, 3, 1, 4).is_err()); // H'=3 < k_A=4
+    }
+}

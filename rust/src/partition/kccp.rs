@@ -1,0 +1,90 @@
+//! Kernel-Channel (Coded) Partitioning of the filter tensor — paper
+//! §IV-B, Algorithm 3 (partitioning half). The filter bank
+//! K ∈ ℝ^{N×C×K_H×K_W} is split into k_B disjoint banks of N/k_B output
+//! channels each (eq. (33)); kernel geometry and input channels are
+//! untouched, so each partition convolves independently.
+
+use crate::tensor::Tensor4;
+use anyhow::{ensure, Result};
+
+/// Precomputed KCCP geometry for one convolutional layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KccpPlan {
+    /// Total output channels N.
+    pub n_out: usize,
+    /// Number of filter partitions (paper k_B); must divide N.
+    pub k_b: usize,
+}
+
+impl KccpPlan {
+    pub fn new(n_out: usize, k_b: usize) -> Result<Self> {
+        ensure!(k_b >= 1, "k_b must be >= 1");
+        ensure!(
+            n_out % k_b == 0,
+            "k_b={k_b} must divide the output-channel count N={n_out}"
+        );
+        Ok(Self { n_out, k_b })
+    }
+
+    /// Output channels per partition (N / k_B).
+    pub fn channels_per_partition(&self) -> usize {
+        self.n_out / self.k_b
+    }
+
+    /// Split the filter bank into the k_B channel groups (eq. (33)).
+    pub fn partition(&self, k: &Tensor4) -> Vec<Tensor4> {
+        assert_eq!(
+            k.n, self.n_out,
+            "KccpPlan built for N={}, got {}",
+            self.n_out, k.n
+        );
+        let per = self.channels_per_partition();
+        (0..self.k_b)
+            .map(|i| k.slice_n(i * per, (i + 1) * per))
+            .collect()
+    }
+
+    /// Filter entries stored per partition — the V_store building block
+    /// of the cost model: (N/k_B)·C·K_H·K_W.
+    pub fn entries_per_partition(&self, c: usize, kh: usize, kw: usize) -> usize {
+        self.channels_per_partition() * c * kh * kw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn partitions_cover_disjointly() {
+        let mut rng = Rng::new(41);
+        let k = Tensor4::random(8, 3, 3, 3, &mut rng);
+        let plan = KccpPlan::new(8, 4).unwrap();
+        let parts = plan.partition(&k);
+        assert_eq!(parts.len(), 4);
+        assert!(parts.iter().all(|p| p.n == 2));
+        let merged = Tensor4::concat_n(&parts.iter().collect::<Vec<_>>());
+        assert_eq!(merged, k);
+    }
+
+    #[test]
+    fn k_b_one_is_whole_bank() {
+        let k = Tensor4::random(6, 2, 3, 3, &mut Rng::new(42));
+        let plan = KccpPlan::new(6, 1).unwrap();
+        let parts = plan.partition(&k);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0], k);
+    }
+
+    #[test]
+    fn rejects_nondivisor() {
+        assert!(KccpPlan::new(8, 3).is_err());
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let plan = KccpPlan::new(64, 8).unwrap();
+        assert_eq!(plan.entries_per_partition(16, 3, 3), 8 * 16 * 9);
+    }
+}

@@ -1,0 +1,86 @@
+//! Tensor partitioning for FCDCC: APCP for the input tensor (spatial,
+//! overlapping, adaptive padding — paper §IV-A) and KCCP for the filter
+//! tensor (output-channel, disjoint — paper §IV-B), plus the inverse
+//! merge of decoded output blocks (paper Alg. 5 step 6).
+
+pub mod apcp;
+pub mod kccp;
+
+pub use apcp::ApcpPlan;
+pub use kccp::KccpPlan;
+
+use crate::tensor::Tensor3;
+
+/// Reassemble the `k_a·k_b` decoded output blocks (ordered `a·k_b + b`,
+/// each `N/k_b × H'_pad/k_a × W'`) into the output tensor `N × H' × W'`:
+/// concatenate along H within each channel group, then along channels,
+/// finally trimming the APCP height padding (paper eqs. (48)–(49)).
+pub fn merge_output_blocks(
+    blocks: &[Tensor3],
+    k_a: usize,
+    k_b: usize,
+    h_out_true: usize,
+) -> Tensor3 {
+    assert_eq!(blocks.len(), k_a * k_b, "merge: expected k_a*k_b blocks");
+    let groups: Vec<Tensor3> = (0..k_b)
+        .map(|b| {
+            let slabs: Vec<&Tensor3> = (0..k_a).map(|a| &blocks[a * k_b + b]).collect();
+            Tensor3::concat_h(&slabs)
+        })
+        .collect();
+    let full = Tensor3::concat_c(&groups.iter().collect::<Vec<_>>());
+    if full.h == h_out_true {
+        full
+    } else {
+        full.slice_h(0, h_out_true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{conv2d, ConvParams, Tensor4};
+    use crate::util::{max_abs_diff, rng::Rng};
+
+    /// Partition with APCP+KCCP, convolve every (a,b) pair directly, merge,
+    /// and compare against the monolithic convolution — the uncoded
+    /// correctness core of the whole framework (paper eq. (14)).
+    #[test]
+    fn partition_convolve_merge_equals_direct() {
+        let mut rng = Rng::new(21);
+        // (c, h, w, n, kh, kw, stride, pad, k_a, k_b)
+        let cases = [
+            (3, 12, 10, 8, 3, 3, 1, 0, 4, 2),
+            (2, 11, 9, 6, 3, 3, 1, 1, 2, 3),
+            (1, 28, 28, 6, 5, 5, 1, 2, 4, 2),
+            (3, 23, 17, 4, 5, 5, 4, 0, 2, 4),
+            (2, 9, 9, 4, 3, 3, 2, 1, 4, 1),
+            (2, 10, 8, 5, 3, 3, 1, 0, 1, 5),
+        ];
+        for (c, h, w, n, kh, kw, s, pad, k_a, k_b) in cases {
+            let x = crate::tensor::Tensor3::random(c, h, w, &mut rng);
+            let k = Tensor4::random(n, c, kh, kw, &mut rng);
+            let p = ConvParams::new(s, pad);
+            let want = conv2d(&x, &k, p);
+
+            let xp = x.pad_spatial(pad);
+            let apcp = ApcpPlan::new(xp.h, kh, s, k_a).unwrap();
+            let kccp = KccpPlan::new(n, k_b).unwrap();
+            let xparts = apcp.partition(&xp);
+            let kparts = kccp.partition(&k);
+            let mut blocks = Vec::new();
+            for xa in &xparts {
+                for kb in &kparts {
+                    blocks.push(conv2d(xa, kb, ConvParams::new(s, 0)));
+                }
+            }
+            let got = merge_output_blocks(&blocks, k_a, k_b, want.h);
+            assert_eq!(got.shape(), want.shape(), "case {:?}", (c, h, w, k_a, k_b));
+            assert!(
+                max_abs_diff(&got.data, &want.data) < 1e-12,
+                "case {:?}",
+                (c, h, w, k_a, k_b)
+            );
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Mini property-testing harness (proptest is unavailable offline):
+//! seeded generators + a runner that reports the failing case number and
+//! seed so any failure is reproducible with one env var.
+//!
+//! ```ignore
+//! prop::run("decode roundtrip", 100, |g| {
+//!     let k_a = g.choose(&[1, 2, 4, 6]);
+//!     ...
+//!     prop::ensure(cond, "message")
+//! });
+//! ```
+//!
+//! `FCDCC_PROP_SEED` overrides the base seed; `FCDCC_PROP_CASES` scales
+//! the case count.
+
+use crate::util::rng::Rng;
+
+/// Case-generation context handed to every property.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi_incl: usize) -> usize {
+        self.rng.range(lo, hi_incl + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+}
+
+/// A property outcome: `Ok(())` passes, `Err(msg)` fails with context.
+pub type PropResult = Result<(), String>;
+
+/// Check helper.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+fn base_seed() -> u64 {
+    std::env::var("FCDCC_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xFCDC_2024)
+}
+
+fn scaled_cases(cases: usize) -> usize {
+    match std::env::var("FCDCC_PROP_CASES").ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) => n,
+        None => cases,
+    }
+}
+
+/// Run `cases` random cases of a property; panics (test failure) on the
+/// first failing case with full reproduction info.
+pub fn run(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    let seed = base_seed();
+    let cases = scaled_cases(cases);
+    for case in 0..cases {
+        // Independent stream per case: failures reproduce in isolation.
+        let mut g = Gen {
+            rng: Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            case,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases}: {msg}\n\
+                 reproduce with FCDCC_PROP_SEED={seed} (case index {case})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run("trivial", 10, |g| {
+            count += 1;
+            ensure(g.usize_in(0, 5) <= 5, "in range")
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"failing\" failed")]
+    fn failing_property_panics_with_context() {
+        run("failing", 10, |g| {
+            ensure(g.case < 3, format!("case {} too big", g.case))
+        });
+    }
+
+    #[test]
+    fn gen_helpers_in_bounds() {
+        run("gen bounds", 50, |g| {
+            let v = g.usize_in(2, 7);
+            ensure((2..=7).contains(&v), format!("usize_in out of bounds: {v}"))?;
+            let f = g.f64_in(-1.0, 1.0);
+            ensure((-1.0..1.0).contains(&f), format!("f64_in out of bounds: {f}"))?;
+            let c = *g.choose(&[10, 20, 30]);
+            ensure([10, 20, 30].contains(&c), "choose out of set")
+        });
+    }
+}

@@ -1,0 +1,161 @@
+//! The artifact manifest: the contract between `python/compile/aot.py`
+//! (which writes it) and the Rust runtime (which reads it). Artifact
+//! names are a pure function of the worker-task slab shapes, so the
+//! coordinator can look up the right executable for any planned layer.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// One AOT-compiled worker-task variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// (ell_a, C, Ĥ, W_padded)
+    pub x_shape: Vec<usize>,
+    /// (ell_b, N/k_b, C, K_H, K_W)
+    pub k_shape: Vec<usize>,
+    /// (ell_a·ell_b, N/k_b, H'_pad/k_a, W')
+    pub out_shape: Vec<usize>,
+    pub stride: usize,
+}
+
+impl ArtifactMeta {
+    pub fn x_len(&self) -> usize {
+        self.x_shape.iter().product()
+    }
+
+    pub fn k_len(&self) -> usize {
+        self.k_shape.iter().product()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+/// Canonical artifact key — mirrors `artifact_name` in aot.py.
+#[allow(clippy::too_many_arguments)]
+pub fn artifact_name(
+    ell_a: usize,
+    ell_b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    n: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+) -> String {
+    format!("wt_ea{ell_a}_eb{ell_b}_c{c}_h{h}_w{w}_n{n}_k{kh}x{kw}_s{stride}")
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&src)
+    }
+
+    pub fn parse(src: &str) -> Result<Self> {
+        let j = Json::parse(src).context("manifest is not valid JSON")?;
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for (i, a) in arts.iter().enumerate() {
+            let field = |key: &str| {
+                a.get(key)
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("artifact {i}: missing string field {key:?}"))
+            };
+            let shape = |key: &str| {
+                a.usize_array(key)
+                    .ok_or_else(|| anyhow!("artifact {i}: missing shape field {key:?}"))
+            };
+            artifacts.push(ArtifactMeta {
+                name: field("name")?,
+                file: field("file")?,
+                x_shape: shape("x_shape")?,
+                k_shape: shape("k_shape")?,
+                out_shape: shape("out_shape")?,
+                stride: a
+                    .get("stride")
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("artifact {i}: missing stride"))?,
+            });
+        }
+        Ok(Self { artifacts })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find the artifact matching a worker-task slab geometry.
+    #[allow(clippy::too_many_arguments)]
+    pub fn lookup(
+        &self,
+        ell_a: usize,
+        ell_b: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+        n: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.by_name(&artifact_name(ell_a, ell_b, c, h, w, n, kh, kw, stride))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "dtype": "f64",
+      "artifacts": [
+        {
+          "name": "wt_ea2_eb2_c2_h5_w10_n4_k3x3_s1",
+          "file": "wt_ea2_eb2_c2_h5_w10_n4_k3x3_s1.hlo.txt",
+          "layer": "testlayer", "k_a": 4, "k_b": 2,
+          "ell_a": 2, "ell_b": 2,
+          "x_shape": [2, 2, 5, 10],
+          "k_shape": [2, 4, 2, 3, 3],
+          "out_shape": [4, 4, 3, 8],
+          "stride": 1
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.x_shape, vec![2, 2, 5, 10]);
+        assert_eq!(a.x_len(), 200);
+        assert_eq!(a.k_len(), 2 * 4 * 2 * 9);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(artifact_name(2, 2, 2, 5, 10, 4, 3, 3, 1), m.artifacts[0].name);
+        assert!(m.lookup(2, 2, 2, 5, 10, 4, 3, 3, 1).is_some());
+        assert!(m.lookup(2, 2, 2, 5, 10, 4, 3, 3, 2).is_none());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"artifacts": [{"name": "x"}]}"#).is_err());
+        assert!(Manifest::parse(r#"{}"#).is_err());
+    }
+}

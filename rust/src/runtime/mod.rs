@@ -1,0 +1,182 @@
+//! The PJRT runtime: loads the AOT-compiled HLO-text artifacts produced
+//! by `python/compile/aot.py` and executes them on the XLA CPU client —
+//! the L3↔L2 bridge. Python never runs here; the artifacts directory is
+//! the entire interface.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so the runtime is wrapped in
+//! a dedicated [`service::PjrtService`] thread; worker threads talk to it
+//! through channels. On a real deployment each worker node owns its own
+//! PJRT context — a single service thread is the 1-vCPU equivalent
+//! (DESIGN.md §Hardware adaptation).
+
+pub mod manifest;
+pub mod service;
+
+pub use manifest::{ArtifactMeta, Manifest};
+pub use service::PjrtService;
+
+use crate::tensor::{Tensor3, Tensor4};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A loaded PJRT runtime: one compiled executable per artifact.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: std::path::PathBuf,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and read the manifest; artifacts are
+    /// compiled lazily on first use (compile-once, cached).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            executables: HashMap::new(),
+            dir,
+        })
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let meta = self
+                .manifest
+                .by_name(name)
+                .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Eagerly compile every artifact in the manifest.
+    pub fn compile_all(&mut self) -> Result<()> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .map(|a| a.name.clone())
+            .collect();
+        for n in names {
+            self.executable(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute the worker task `name` on coded slabs, returning the
+    /// ℓ_A·ℓ_B coded output blocks (slabA-major, matching the Rust
+    /// reference worker).
+    pub fn run_worker_task(
+        &mut self,
+        name: &str,
+        xs: &[Tensor3],
+        ks: &[Tensor4],
+    ) -> Result<Vec<Tensor3>> {
+        let meta = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        check_shapes(&meta, xs, ks)?;
+
+        // Pack the slab lists into the stacked f64 literals the artifact
+        // expects: xs -> (ell_a, C, Ĥ, Wp), ks -> (ell_b, N/k_b, C, KH, KW).
+        let mut xdata = Vec::with_capacity(meta.x_len());
+        for t in xs {
+            xdata.extend_from_slice(&t.data);
+        }
+        let mut kdata = Vec::with_capacity(meta.k_len());
+        for t in ks {
+            kdata.extend_from_slice(&t.data);
+        }
+        let xdims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
+        let kdims: Vec<i64> = meta.k_shape.iter().map(|&d| d as i64).collect();
+        let xlit = xla::Literal::vec1(&xdata)
+            .reshape(&xdims)
+            .map_err(|e| anyhow!("reshape x literal: {e:?}"))?;
+        let klit = xla::Literal::vec1(&kdata)
+            .reshape(&kdims)
+            .map_err(|e| anyhow!("reshape k literal: {e:?}"))?;
+
+        let exe = self.executable(&meta.name)?;
+        let result = exe
+            .execute::<xla::Literal>(&[xlit, klit])
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let data = out
+            .to_vec::<f64>()
+            .map_err(|e| anyhow!("reading result of {name}: {e:?}"))?;
+
+        let [blocks, n, h, w] = meta.out_shape[..] else {
+            bail!("artifact {name}: out_shape must be rank 4");
+        };
+        let per = n * h * w;
+        if data.len() != blocks * per {
+            bail!(
+                "artifact {name}: expected {} output values, got {}",
+                blocks * per,
+                data.len()
+            );
+        }
+        Ok((0..blocks)
+            .map(|b| Tensor3::from_vec(n, h, w, data[b * per..(b + 1) * per].to_vec()))
+            .collect())
+    }
+}
+
+fn check_shapes(meta: &ArtifactMeta, xs: &[Tensor3], ks: &[Tensor4]) -> Result<()> {
+    let [ea, c, h, w] = meta.x_shape[..] else {
+        bail!("bad x_shape in manifest");
+    };
+    let [eb, n, c2, kh, kw] = meta.k_shape[..] else {
+        bail!("bad k_shape in manifest");
+    };
+    if xs.len() != ea || ks.len() != eb {
+        bail!(
+            "slab count mismatch: artifact wants ({ea},{eb}), got ({},{})",
+            xs.len(),
+            ks.len()
+        );
+    }
+    for t in xs {
+        if t.shape() != (c, h, w) {
+            bail!(
+                "input slab shape {:?} != artifact {:?}",
+                t.shape(),
+                (c, h, w)
+            );
+        }
+    }
+    for t in ks {
+        if t.shape() != (n, c2, kh, kw) {
+            bail!(
+                "filter slab shape {:?} != artifact {:?}",
+                t.shape(),
+                (n, c2, kh, kw)
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! The PJRT service thread: owns the (non-`Send`) [`PjrtRuntime`] and
+//! serves worker-task execution requests from any thread through
+//! channels. Cloneable handles implement [`TaskEngine`], so simulated
+//! cluster workers can use the AOT artifacts as their convolution
+//! engine.
+
+use crate::engine::TaskEngine;
+use crate::fcdcc::{WorkerPayload, WorkerResult};
+use crate::runtime::{manifest::artifact_name, PjrtRuntime};
+use crate::tensor::{Tensor3, Tensor4};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+struct Request {
+    name: String,
+    xs: Vec<Tensor3>,
+    ks: Vec<Tensor4>,
+    reply: Sender<Result<Vec<Tensor3>>>,
+}
+
+/// Cloneable, `Send` handle to the PJRT service thread.
+#[derive(Clone)]
+pub struct PjrtService {
+    tx: Sender<Request>,
+}
+
+/// Keeps the service thread alive; drop (after dropping all handles) to
+/// shut the runtime down.
+pub struct PjrtServiceHost {
+    pub handle: PjrtService,
+    join: Option<JoinHandle<()>>,
+}
+
+impl PjrtService {
+    /// Spawn the service for an artifacts directory. Compiles the
+    /// manifest eagerly so request-path latency is execution-only.
+    pub fn spawn(dir: impl Into<std::path::PathBuf>) -> Result<PjrtServiceHost> {
+        let dir = dir.into();
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let mut rt = match PjrtRuntime::load(&dir).and_then(|mut rt| {
+                    rt.compile_all()?;
+                    Ok(rt)
+                }) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    let out = rt.run_worker_task(&req.name, &req.xs, &req.ks);
+                    let _ = req.reply.send(out);
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("PJRT service thread died during startup"))??;
+        Ok(PjrtServiceHost {
+            handle: PjrtService { tx },
+            join: Some(join),
+        })
+    }
+
+    /// Execute one worker task by artifact name.
+    pub fn run_named(&self, name: &str, xs: Vec<Tensor3>, ks: Vec<Tensor4>) -> Result<Vec<Tensor3>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request {
+                name: name.to_string(),
+                xs,
+                ks,
+                reply,
+            })
+            .map_err(|_| anyhow!("PJRT service is gone"))?;
+        rx.recv().map_err(|_| anyhow!("PJRT service dropped request"))?
+    }
+}
+
+impl Drop for PjrtServiceHost {
+    fn drop(&mut self) {
+        // The service thread exits when the last handle (sender) is
+        // dropped; we intentionally do NOT join here — worker threads may
+        // still hold cloned handles, and joining would deadlock. The
+        // detached thread drains and dies once every clone is gone.
+        self.join.take();
+    }
+}
+
+impl TaskEngine for PjrtService {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn run(&self, payload: &WorkerPayload) -> Result<WorkerResult> {
+        let x0 = payload
+            .inputs
+            .first()
+            .ok_or_else(|| anyhow!("payload has no input slabs"))?;
+        let k0 = payload
+            .filters
+            .first()
+            .ok_or_else(|| anyhow!("payload has no filter slabs"))?;
+        let name = artifact_name(
+            payload.inputs.len(),
+            payload.filters.len(),
+            x0.c,
+            x0.h,
+            x0.w,
+            k0.n,
+            k0.kh,
+            k0.kw,
+            payload.conv.stride,
+        );
+        let blocks = self.run_named(&name, payload.inputs.clone(), payload.filters.clone())?;
+        Ok(WorkerResult {
+            worker_id: payload.worker_id,
+            blocks,
+        })
+    }
+}

@@ -1,0 +1,152 @@
+//! Reference 2-D convolution (paper eq. (1)): the correctness oracle for
+//! the whole system and the CPU fallback worker implementation.
+//!
+//! Conventions follow the paper: the convolution is a cross-correlation
+//! (no kernel flip), the input is C×H×W, the filter bank is N×C×K_H×K_W,
+//! and the output is N×H'×W' with
+//!   H' = floor((H + 2p − K_H)/s) + 1,  W' = floor((W + 2p − K_W)/s) + 1.
+
+use crate::tensor::{Tensor3, Tensor4};
+
+/// Stride + padding pair for a convolutional layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvParams {
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvParams {
+    pub fn new(stride: usize, pad: usize) -> Self {
+        assert!(stride >= 1, "stride must be >= 1");
+        Self { stride, pad }
+    }
+
+    pub fn unit() -> Self {
+        Self { stride: 1, pad: 0 }
+    }
+}
+
+/// Output spatial dims (H', W') for input (h, w), kernel (kh, kw).
+pub fn conv2d_shape(h: usize, w: usize, kh: usize, kw: usize, p: ConvParams) -> (usize, usize) {
+    let hh = h + 2 * p.pad;
+    let ww = w + 2 * p.pad;
+    assert!(hh >= kh && ww >= kw, "kernel larger than padded input");
+    ((hh - kh) / p.stride + 1, (ww - kw) / p.stride + 1)
+}
+
+/// Direct (naive triple-loop) convolution — the oracle. Padding is applied
+/// internally when `p.pad > 0`.
+pub fn conv2d(x: &Tensor3, k: &Tensor4, p: ConvParams) -> Tensor3 {
+    assert_eq!(x.c, k.c, "conv2d: channel mismatch (x.c={} k.c={})", x.c, k.c);
+    let xp;
+    let x = if p.pad > 0 {
+        xp = x.pad_spatial(p.pad);
+        &xp
+    } else {
+        x
+    };
+    let (hp, wp) = (x.h, x.w);
+    let (oh, ow) = ((hp - k.kh) / p.stride + 1, (wp - k.kw) / p.stride + 1);
+    let mut out = Tensor3::zeros(k.n, oh, ow);
+    for n in 0..k.n {
+        for c in 0..x.c {
+            for i in 0..k.kh {
+                for j in 0..k.kw {
+                    let kv = k.get(n, c, i, j);
+                    if kv == 0.0 {
+                        continue;
+                    }
+                    for h in 0..oh {
+                        let xrow = x.idx(c, h * p.stride + i, j);
+                        let orow = out.idx(n, h, 0);
+                        if p.stride == 1 {
+                            // contiguous fast path
+                            for w in 0..ow {
+                                out.data[orow + w] += kv * x.data[xrow + w];
+                            }
+                        } else {
+                            for w in 0..ow {
+                                out.data[orow + w] += kv * x.data[xrow + w * p.stride];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_kernel_is_identity() {
+        // 1x1 kernel of value 1 on a single channel reproduces the input.
+        let mut rng = Rng::new(1);
+        let x = Tensor3::random(1, 5, 5, &mut rng);
+        let k = Tensor4::from_vec(1, 1, 1, 1, vec![1.0]);
+        let y = conv2d(&x, &k, ConvParams::unit());
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn known_small_case() {
+        // X = [[1,2],[3,4]], K = [[1,0],[0,1]] -> single output 1+4=5.
+        let x = Tensor3::from_vec(1, 2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let k = Tensor4::from_vec(1, 1, 2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let y = conv2d(&x, &k, ConvParams::unit());
+        assert_eq!(y.shape(), (1, 1, 1));
+        assert_eq!(y.data, vec![5.0]);
+    }
+
+    #[test]
+    fn stride_and_padding_shapes() {
+        let (h, w) = conv2d_shape(28, 28, 5, 5, ConvParams::new(1, 2));
+        assert_eq!((h, w), (28, 28));
+        let (h, w) = conv2d_shape(227, 227, 11, 11, ConvParams::new(4, 0));
+        assert_eq!((h, w), (55, 55)); // AlexNet conv1
+        let (h, w) = conv2d_shape(224, 224, 3, 3, ConvParams::new(1, 1));
+        assert_eq!((h, w), (224, 224)); // VGG conv
+    }
+
+    #[test]
+    fn sums_over_channels() {
+        // Two channels, 1x1 unit kernels: output = sum of channels.
+        let x = Tensor3::from_vec(2, 1, 2, vec![1.0, 2.0, 10.0, 20.0]);
+        let k = Tensor4::from_vec(1, 2, 1, 1, vec![1.0, 1.0]);
+        let y = conv2d(&x, &k, ConvParams::unit());
+        assert_eq!(y.data, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn padding_matches_explicit_prepad() {
+        let mut rng = Rng::new(2);
+        let x = Tensor3::random(3, 6, 7, &mut rng);
+        let k = Tensor4::random(4, 3, 3, 3, &mut rng);
+        let y1 = conv2d(&x, &k, ConvParams::new(2, 1));
+        let xp = x.pad_spatial(1);
+        let y2 = conv2d(&xp, &k, ConvParams::new(2, 0));
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn linearity_in_both_arguments() {
+        // conv(aX1 + bX2, K) = a conv(X1,K) + b conv(X2,K), and similarly in K.
+        let mut rng = Rng::new(3);
+        let x1 = Tensor3::random(2, 5, 5, &mut rng);
+        let x2 = Tensor3::random(2, 5, 5, &mut rng);
+        let k = Tensor4::random(3, 2, 3, 3, &mut rng);
+        let (a, b) = (2.5, -1.25);
+        let mut xc = x1.clone();
+        xc.scale(a);
+        xc.axpy(b, &x2);
+        let lhs = conv2d(&xc, &k, ConvParams::unit());
+        let mut rhs = conv2d(&x1, &k, ConvParams::unit());
+        rhs.scale(a);
+        rhs.axpy(b, &conv2d(&x2, &k, ConvParams::unit()));
+        assert!(crate::util::max_abs_diff(&lhs.data, &rhs.data) < 1e-12);
+    }
+}

@@ -1,0 +1,138 @@
+//! im2col convolution: lowers conv to a (N × CK_HK_W)·(CK_HK_W × H'W')
+//! GEMM. This is the optimized CPU worker path (and the algorithm RSPCC
+//! builds its codes around — here it is just one interchangeable black-box
+//! conv implementation, per the paper's generality claim).
+
+use crate::tensor::{conv2d_shape, ConvParams, Tensor3, Tensor4};
+
+/// Build the im2col patch matrix: (C·K_H·K_W) × (H'·W'), column-major over
+/// output positions (column = output pixel (h,w), row = (c,i,j) patch slot).
+pub fn im2col(x: &Tensor3, kh: usize, kw: usize, p: ConvParams) -> (Vec<f64>, usize, usize) {
+    let xp;
+    let x = if p.pad > 0 {
+        xp = x.pad_spatial(p.pad);
+        &xp
+    } else {
+        x
+    };
+    let (oh, ow) = ((x.h - kh) / p.stride + 1, (x.w - kw) / p.stride + 1);
+    let rows = x.c * kh * kw;
+    let cols = oh * ow;
+    let mut m = vec![0.0f64; rows * cols];
+    for c in 0..x.c {
+        for i in 0..kh {
+            for j in 0..kw {
+                let r = (c * kh + i) * kw + j;
+                let row_base = r * cols;
+                for h in 0..oh {
+                    let src = x.idx(c, h * p.stride + i, j);
+                    let dst = row_base + h * ow;
+                    if p.stride == 1 {
+                        m[dst..dst + ow].copy_from_slice(&x.data[src..src + ow]);
+                    } else {
+                        for w in 0..ow {
+                            m[dst + w] = x.data[src + w * p.stride];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (m, rows, cols)
+}
+
+/// Convolution via im2col + GEMM. Produces bit-compatible layout with
+/// `conv2d` (N × H' × W').
+pub fn conv2d_im2col(x: &Tensor3, k: &Tensor4, p: ConvParams) -> Tensor3 {
+    assert_eq!(x.c, k.c, "conv2d_im2col: channel mismatch");
+    let (oh, ow) = conv2d_shape(x.h, x.w, k.kh, k.kw, p);
+    let (cols_mat, rows, cols) = im2col(x, k.kh, k.kw, p);
+    debug_assert_eq!(rows, k.c * k.kh * k.kw);
+    debug_assert_eq!(cols, oh * ow);
+    // GEMM: out[n, pix] = sum_r K[n, r] * M[r, pix]
+    // K is already laid out row-major as (N × rows). Two-level blocking
+    // (EXPERIMENTS.md §Perf):
+    //   * columns are processed in L2-resident panels, so the patch
+    //     matrix M is streamed from memory once instead of N times;
+    //   * the contraction is blocked by 4, folding four M rows per pass
+    //     over the accumulator (4x less accumulator traffic).
+    const PANEL: usize = 256; // 576 rows x 256 cols x 8 B ≈ L2-sized
+    let mut out = vec![0.0f64; k.n * cols];
+    let mut p0 = 0;
+    while p0 < cols {
+        let pw = PANEL.min(cols - p0);
+        for n in 0..k.n {
+            let krow = &k.data[n * rows..(n + 1) * rows];
+            let orow = &mut out[n * cols + p0..n * cols + p0 + pw];
+            let mut r = 0;
+            while r + 4 <= rows {
+                let (k0, k1, k2, k3) = (krow[r], krow[r + 1], krow[r + 2], krow[r + 3]);
+                if k0 != 0.0 || k1 != 0.0 || k2 != 0.0 || k3 != 0.0 {
+                    let m0 = &cols_mat[r * cols + p0..r * cols + p0 + pw];
+                    let m1 = &cols_mat[(r + 1) * cols + p0..(r + 1) * cols + p0 + pw];
+                    let m2 = &cols_mat[(r + 2) * cols + p0..(r + 2) * cols + p0 + pw];
+                    let m3 = &cols_mat[(r + 3) * cols + p0..(r + 3) * cols + p0 + pw];
+                    for i in 0..pw {
+                        orow[i] += k0 * m0[i] + k1 * m1[i] + k2 * m2[i] + k3 * m3[i];
+                    }
+                }
+                r += 4;
+            }
+            while r < rows {
+                let kv = krow[r];
+                if kv != 0.0 {
+                    let mrow = &cols_mat[r * cols + p0..r * cols + p0 + pw];
+                    for (o, &m) in orow.iter_mut().zip(mrow) {
+                        *o += kv * m;
+                    }
+                }
+                r += 1;
+            }
+        }
+        p0 += pw;
+    }
+    Tensor3::from_vec(k.n, oh, ow, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::conv2d;
+    use crate::util::{max_abs_diff, rng::Rng};
+
+    #[test]
+    fn matches_direct_conv_over_shapes() {
+        let mut rng = Rng::new(11);
+        let cases = [
+            (1, 5, 5, 1, 3, 3, 1, 0),
+            (3, 8, 8, 4, 3, 3, 1, 1),
+            (2, 9, 7, 5, 2, 4, 1, 0),
+            (3, 11, 11, 2, 3, 3, 2, 1),
+            (1, 28, 28, 6, 5, 5, 1, 2),
+            (4, 13, 13, 8, 5, 5, 4, 0),
+        ];
+        for (c, h, w, n, kh, kw, s, pad) in cases {
+            let x = Tensor3::random(c, h, w, &mut rng);
+            let k = Tensor4::random(n, c, kh, kw, &mut rng);
+            let p = ConvParams::new(s, pad);
+            let y1 = conv2d(&x, &k, p);
+            let y2 = conv2d_im2col(&x, &k, p);
+            assert_eq!(y1.shape(), y2.shape());
+            assert!(
+                max_abs_diff(&y1.data, &y2.data) < 1e-12,
+                "mismatch for case {:?}",
+                (c, h, w, n, kh, kw, s, pad)
+            );
+        }
+    }
+
+    #[test]
+    fn im2col_dims() {
+        let mut rng = Rng::new(12);
+        let x = Tensor3::random(3, 6, 6, &mut rng);
+        let (m, rows, cols) = im2col(&x, 3, 3, ConvParams::unit());
+        assert_eq!(rows, 3 * 3 * 3);
+        assert_eq!(cols, 4 * 4);
+        assert_eq!(m.len(), rows * cols);
+    }
+}

@@ -1,0 +1,13 @@
+//! Dense tensor substrate: 3-D feature maps (C×H×W), 4-D filter banks
+//! (N×C×K_H×K_W), slicing/padding/concatenation primitives, and the
+//! convolution oracle (direct and im2col) used by the coordinator, the
+//! baselines, and as the correctness reference for the PJRT worker path.
+
+pub mod conv;
+pub mod im2col;
+pub mod tensor3;
+pub mod tensor4;
+
+pub use conv::{conv2d, conv2d_shape, ConvParams};
+pub use tensor3::Tensor3;
+pub use tensor4::Tensor4;

@@ -1,0 +1,273 @@
+//! 3-D tensor (C × H × W, row-major) — the paper's input / output feature
+//! map representation (Table I: X ∈ R^{C×(H+2p)×(W+2p)}, Y ∈ R^{N×H'×W'}).
+
+use crate::util::rng::Rng;
+
+/// Dense f64 tensor with shape (c, h, w), laid out row-major
+/// (w fastest, then h, then c).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor3 {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f64>,
+}
+
+impl Tensor3 {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        Self {
+            c,
+            h,
+            w,
+            data: vec![0.0; c * h * w],
+        }
+    }
+
+    pub fn from_vec(c: usize, h: usize, w: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), c * h * w, "Tensor3::from_vec: size mismatch");
+        Self { c, h, w, data }
+    }
+
+    /// Fill with iid uniform values in [-1, 1) — the synthetic workload
+    /// generator used throughout the benches.
+    pub fn random(c: usize, h: usize, w: usize, rng: &mut Rng) -> Self {
+        Self {
+            c,
+            h,
+            w,
+            data: rng.fill_uniform(c * h * w, -1.0, 1.0),
+        }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.c, self.h, self.w)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn idx(&self, c: usize, h: usize, w: usize) -> usize {
+        debug_assert!(c < self.c && h < self.h && w < self.w);
+        (c * self.h + h) * self.w + w
+    }
+
+    #[inline]
+    pub fn get(&self, c: usize, h: usize, w: usize) -> f64 {
+        self.data[self.idx(c, h, w)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, h: usize, w: usize, v: f64) {
+        let i = self.idx(c, h, w);
+        self.data[i] = v;
+    }
+
+    /// Zero-pad spatially by `p` on every side (paper's input padding).
+    pub fn pad_spatial(&self, p: usize) -> Self {
+        if p == 0 {
+            return self.clone();
+        }
+        let mut out = Self::zeros(self.c, self.h + 2 * p, self.w + 2 * p);
+        for c in 0..self.c {
+            for h in 0..self.h {
+                let src = self.idx(c, h, 0);
+                let dst = out.idx(c, h + p, p);
+                out.data[dst..dst + self.w].copy_from_slice(&self.data[src..src + self.w]);
+            }
+        }
+        out
+    }
+
+    /// Zero-pad only at the bottom of the H axis (used by APCP to extend
+    /// H' to a multiple of k_A).
+    pub fn pad_bottom(&self, extra_h: usize) -> Self {
+        if extra_h == 0 {
+            return self.clone();
+        }
+        let mut out = Self::zeros(self.c, self.h + extra_h, self.w);
+        for c in 0..self.c {
+            let src = self.idx(c, 0, 0);
+            let dst = out.idx(c, 0, 0);
+            out.data[dst..dst + self.h * self.w]
+                .copy_from_slice(&self.data[src..src + self.h * self.w]);
+        }
+        out
+    }
+
+    /// Contiguous slab along H: rows [v, e) of every channel — the paper's
+    /// T[:, v:e, :] partition primitive (eq. (26), applied to axis H).
+    pub fn slice_h(&self, v: usize, e: usize) -> Self {
+        assert!(v <= e && e <= self.h, "slice_h: bad range {v}..{e} (h={})", self.h);
+        let nh = e - v;
+        let mut out = Self::zeros(self.c, nh, self.w);
+        for c in 0..self.c {
+            let src = self.idx(c, v, 0);
+            let dst = out.idx(c, 0, 0);
+            out.data[dst..dst + nh * self.w]
+                .copy_from_slice(&self.data[src..src + nh * self.w]);
+        }
+        out
+    }
+
+    /// Slab along the channel axis: channels [v, e).
+    pub fn slice_c(&self, v: usize, e: usize) -> Self {
+        assert!(v <= e && e <= self.c, "slice_c: bad range {v}..{e} (c={})", self.c);
+        let nc = e - v;
+        let plane = self.h * self.w;
+        Self {
+            c: nc,
+            h: self.h,
+            w: self.w,
+            data: self.data[v * plane..e * plane].to_vec(),
+        }
+    }
+
+    /// Concatenate along the channel axis (paper's concat_axis=0).
+    pub fn concat_c(parts: &[&Tensor3]) -> Self {
+        assert!(!parts.is_empty());
+        let (h, w) = (parts[0].h, parts[0].w);
+        assert!(
+            parts.iter().all(|t| t.h == h && t.w == w),
+            "concat_c: spatial shape mismatch"
+        );
+        let c: usize = parts.iter().map(|t| t.c).sum();
+        let mut data = Vec::with_capacity(c * h * w);
+        for t in parts {
+            data.extend_from_slice(&t.data);
+        }
+        Self { c, h, w, data }
+    }
+
+    /// Concatenate along the height axis (paper's concat_axis=1).
+    pub fn concat_h(parts: &[&Tensor3]) -> Self {
+        assert!(!parts.is_empty());
+        let (c, w) = (parts[0].c, parts[0].w);
+        assert!(
+            parts.iter().all(|t| t.c == c && t.w == w),
+            "concat_h: shape mismatch"
+        );
+        let h: usize = parts.iter().map(|t| t.h).sum();
+        let mut out = Self::zeros(c, h, w);
+        for ci in 0..c {
+            let mut hoff = 0usize;
+            for t in parts {
+                let src = t.idx(ci, 0, 0);
+                let dst = out.idx(ci, hoff, 0);
+                out.data[dst..dst + t.h * w].copy_from_slice(&t.data[src..src + t.h * w]);
+                hoff += t.h;
+            }
+        }
+        out
+    }
+
+    /// In-place saturating ReLU (used by the CNN forward pass).
+    pub fn relu_inplace(&mut self) {
+        for v in &mut self.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// a ← a + s·b (same shape); the coded-combination primitive for
+    /// tensor-block-list × matrix multiplication (paper eq. (18)).
+    pub fn axpy(&mut self, s: f64, other: &Tensor3) {
+        assert_eq!(self.shape(), other.shape(), "axpy: shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(c: usize, h: usize, w: usize) -> Tensor3 {
+        Tensor3::from_vec(c, h, w, (0..c * h * w).map(|i| i as f64).collect())
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let t = seq(2, 3, 4);
+        assert_eq!(t.get(0, 0, 0), 0.0);
+        assert_eq!(t.get(0, 0, 3), 3.0);
+        assert_eq!(t.get(0, 1, 0), 4.0);
+        assert_eq!(t.get(1, 0, 0), 12.0);
+        assert_eq!(t.get(1, 2, 3), 23.0);
+    }
+
+    #[test]
+    fn pad_spatial_places_interior() {
+        let t = seq(1, 2, 2);
+        let p = t.pad_spatial(1);
+        assert_eq!(p.shape(), (1, 4, 4));
+        assert_eq!(p.get(0, 0, 0), 0.0);
+        assert_eq!(p.get(0, 1, 1), 0.0); // original (0,0,0)=0
+        assert_eq!(p.get(0, 1, 2), 1.0);
+        assert_eq!(p.get(0, 2, 1), 2.0);
+        assert_eq!(p.get(0, 2, 2), 3.0);
+        assert_eq!(p.get(0, 3, 3), 0.0);
+    }
+
+    #[test]
+    fn slice_concat_h_roundtrip() {
+        let t = seq(2, 6, 3);
+        let a = t.slice_h(0, 2);
+        let b = t.slice_h(2, 5);
+        let c = t.slice_h(5, 6);
+        let r = Tensor3::concat_h(&[&a, &b, &c]);
+        assert_eq!(r, t);
+    }
+
+    #[test]
+    fn slice_concat_c_roundtrip() {
+        let t = seq(4, 2, 3);
+        let a = t.slice_c(0, 1);
+        let b = t.slice_c(1, 4);
+        let r = Tensor3::concat_c(&[&a, &b]);
+        assert_eq!(r, t);
+    }
+
+    #[test]
+    fn pad_bottom_keeps_content() {
+        let t = seq(2, 2, 2);
+        let p = t.pad_bottom(3);
+        assert_eq!(p.shape(), (2, 5, 2));
+        assert_eq!(p.slice_h(0, 2), t);
+        assert!(p.slice_h(2, 5).data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn axpy_linear() {
+        let a0 = seq(1, 2, 2);
+        let b = seq(1, 2, 2);
+        let mut a = a0.clone();
+        a.axpy(2.0, &b);
+        for i in 0..4 {
+            assert_eq!(a.data[i], a0.data[i] + 2.0 * b.data[i]);
+        }
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut t = Tensor3::from_vec(1, 1, 3, vec![-1.0, 0.0, 2.0]);
+        t.relu_inplace();
+        assert_eq!(t.data, vec![0.0, 0.0, 2.0]);
+    }
+}

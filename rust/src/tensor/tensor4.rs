@@ -1,0 +1,160 @@
+//! 4-D filter tensor (N × C × K_H × K_W, row-major) — the paper's filter
+//! bank K (Table I).
+
+use crate::tensor::Tensor3;
+use crate::util::rng::Rng;
+
+/// Dense f64 filter tensor with shape (n, c, kh, kw), row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor4 {
+    pub n: usize,
+    pub c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub data: Vec<f64>,
+}
+
+impl Tensor4 {
+    pub fn zeros(n: usize, c: usize, kh: usize, kw: usize) -> Self {
+        Self {
+            n,
+            c,
+            kh,
+            kw,
+            data: vec![0.0; n * c * kh * kw],
+        }
+    }
+
+    pub fn from_vec(n: usize, c: usize, kh: usize, kw: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), n * c * kh * kw, "Tensor4::from_vec: size mismatch");
+        Self { n, c, kh, kw, data }
+    }
+
+    pub fn random(n: usize, c: usize, kh: usize, kw: usize, rng: &mut Rng) -> Self {
+        Self {
+            n,
+            c,
+            kh,
+            kw,
+            data: rng.fill_uniform(n * c * kh * kw, -1.0, 1.0),
+        }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize, usize, usize) {
+        (self.n, self.c, self.kh, self.kw)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn idx(&self, n: usize, c: usize, i: usize, j: usize) -> usize {
+        debug_assert!(n < self.n && c < self.c && i < self.kh && j < self.kw);
+        ((n * self.c + c) * self.kh + i) * self.kw + j
+    }
+
+    #[inline]
+    pub fn get(&self, n: usize, c: usize, i: usize, j: usize) -> f64 {
+        self.data[self.idx(n, c, i, j)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, n: usize, c: usize, i: usize, j: usize, v: f64) {
+        let k = self.idx(n, c, i, j);
+        self.data[k] = v;
+    }
+
+    /// Filters [v, e) along the output-channel axis — KCCP's partition
+    /// primitive (paper eq. (33)).
+    pub fn slice_n(&self, v: usize, e: usize) -> Self {
+        assert!(v <= e && e <= self.n, "slice_n: bad range {v}..{e} (n={})", self.n);
+        let per = self.c * self.kh * self.kw;
+        Self {
+            n: e - v,
+            c: self.c,
+            kh: self.kh,
+            kw: self.kw,
+            data: self.data[v * per..e * per].to_vec(),
+        }
+    }
+
+    /// Concatenate filter banks along the output-channel axis.
+    pub fn concat_n(parts: &[&Tensor4]) -> Self {
+        assert!(!parts.is_empty());
+        let (c, kh, kw) = (parts[0].c, parts[0].kh, parts[0].kw);
+        assert!(
+            parts.iter().all(|t| t.c == c && t.kh == kh && t.kw == kw),
+            "concat_n: shape mismatch"
+        );
+        let n: usize = parts.iter().map(|t| t.n).sum();
+        let mut data = Vec::with_capacity(n * c * kh * kw);
+        for t in parts {
+            data.extend_from_slice(&t.data);
+        }
+        Self { n, c, kh, kw, data }
+    }
+
+    /// View filter `n` as a 3-D tensor (C × K_H × K_W).
+    pub fn filter(&self, n: usize) -> Tensor3 {
+        let per = self.c * self.kh * self.kw;
+        Tensor3::from_vec(
+            self.c,
+            self.kh,
+            self.kw,
+            self.data[n * per..(n + 1) * per].to_vec(),
+        )
+    }
+
+    /// a ← a + s·b (same shape) — the coded-combination primitive used by
+    /// KCCP encoding (paper eq. (37)).
+    pub fn axpy(&mut self, s: f64, other: &Tensor4) {
+        assert_eq!(self.shape(), other.shape(), "axpy: shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, c: usize, kh: usize, kw: usize) -> Tensor4 {
+        Tensor4::from_vec(n, c, kh, kw, (0..n * c * kh * kw).map(|i| i as f64).collect())
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let t = seq(2, 3, 2, 2);
+        assert_eq!(t.get(0, 0, 0, 0), 0.0);
+        assert_eq!(t.get(0, 0, 1, 1), 3.0);
+        assert_eq!(t.get(0, 1, 0, 0), 4.0);
+        assert_eq!(t.get(1, 0, 0, 0), 12.0);
+        assert_eq!(t.get(1, 2, 1, 1), 23.0);
+    }
+
+    #[test]
+    fn slice_concat_n_roundtrip() {
+        let t = seq(6, 2, 3, 3);
+        let a = t.slice_n(0, 2);
+        let b = t.slice_n(2, 6);
+        assert_eq!(Tensor4::concat_n(&[&a, &b]), t);
+    }
+
+    #[test]
+    fn filter_view() {
+        let t = seq(3, 2, 2, 2);
+        let f = t.filter(1);
+        assert_eq!(f.shape(), (2, 2, 2));
+        assert_eq!(f.get(0, 0, 0), 8.0);
+        assert_eq!(f.get(1, 1, 1), 15.0);
+    }
+}

@@ -1,0 +1,79 @@
+//! Small shared utilities: PRNG, float comparison helpers, timing.
+
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+/// Relative-or-absolute closeness test for floating point comparisons in
+/// tests and oracles (mirrors `numpy.allclose` semantics).
+pub fn approx_eq(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs()
+}
+
+/// Max absolute elementwise difference between two slices.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "max_abs_diff: length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Mean squared error between two slices (paper eq. (62), flattened).
+pub fn mse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "mse: length mismatch");
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>() / a.len() as f64
+}
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+pub fn next_multiple_of(x: usize, m: usize) -> usize {
+    assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Smallest odd integer `q >= n.max(1)` (the paper's `Nextodd(n)`).
+pub fn next_odd(n: usize) -> usize {
+    let n = n.max(1);
+    if n % 2 == 1 {
+        n
+    } else {
+        n + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_next_odd() {
+        assert_eq!(next_odd(0), 1);
+        assert_eq!(next_odd(1), 1);
+        assert_eq!(next_odd(4), 5);
+        assert_eq!(next_odd(5), 5);
+        assert_eq!(next_odd(18), 19);
+    }
+
+    #[test]
+    fn test_next_multiple_of() {
+        assert_eq!(next_multiple_of(0, 4), 0);
+        assert_eq!(next_multiple_of(1, 4), 4);
+        assert_eq!(next_multiple_of(4, 4), 4);
+        assert_eq!(next_multiple_of(5, 4), 8);
+    }
+
+    #[test]
+    fn test_mse() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((mse(&[1.0, 2.0], &[2.0, 4.0]) - 2.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn test_approx_eq() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-9, 0.0));
+        assert!(!approx_eq(1.0, 1.1, 1e-9, 1e-9));
+    }
+}

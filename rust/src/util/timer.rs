@@ -1,0 +1,88 @@
+//! Lightweight phase timing used by the coordinator and benches.
+
+use std::time::{Duration, Instant};
+
+/// A named stopwatch that accumulates durations across start/stop cycles.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+    laps: usize,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self {
+            total: Duration::ZERO,
+            started: None,
+            laps: 0,
+        }
+    }
+
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "stopwatch already running");
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed();
+            self.laps += 1;
+        }
+    }
+
+    /// Time a closure, accumulating its duration.
+    pub fn time<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        self.start();
+        let r = f();
+        self.stop();
+        r
+    }
+
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.total.as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.total.as_secs_f64() * 1e3
+    }
+
+    pub fn laps(&self) -> usize {
+        self.laps
+    }
+
+    pub fn reset(&mut self) {
+        *self = Self::new();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut sw = Stopwatch::new();
+        let x = sw.time(|| {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(x, 42);
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(sw.millis() >= 9.0, "elapsed={}ms", sw.millis());
+        assert_eq!(sw.laps(), 2);
+        sw.reset();
+        assert_eq!(sw.laps(), 0);
+        assert_eq!(sw.total(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,148 @@
+//! Failure-injection integration tests over the threaded cluster: crash
+//! fates, flaky engines, repeated jobs, and recovery-threshold edges.
+
+use fcdcc::cluster::{Cluster, StragglerModel};
+use fcdcc::engine::{DirectEngine, TaskEngine};
+use fcdcc::fcdcc::{FcdccPlan, WorkerPayload, WorkerResult};
+use fcdcc::model::ConvLayer;
+use fcdcc::tensor::{conv2d, Tensor3, Tensor4};
+use fcdcc::util::{mse, rng::Rng};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn setup() -> (ConvLayer, Tensor3, Tensor4) {
+    let layer = ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0);
+    let mut rng = Rng::new(123);
+    let x = Tensor3::random(2, 12, 10, &mut rng);
+    let k = Tensor4::random(8, 2, 3, 3, &mut rng);
+    (layer, x, k)
+}
+
+/// An engine that fails every `period`-th task — models soft errors.
+struct FlakyEngine {
+    inner: DirectEngine,
+    counter: AtomicUsize,
+    period: usize,
+}
+
+impl TaskEngine for FlakyEngine {
+    fn name(&self) -> &str {
+        "flaky"
+    }
+
+    fn run(&self, payload: &WorkerPayload) -> anyhow::Result<WorkerResult> {
+        let n = self.counter.fetch_add(1, Ordering::Relaxed);
+        if n % self.period == self.period - 1 {
+            anyhow::bail!("injected soft error");
+        }
+        TaskEngine::run(&self.inner, payload)
+    }
+}
+
+#[test]
+fn exactly_gamma_failures_still_recovers() {
+    let (layer, x, k) = setup();
+    // delta=2, n=6 => gamma=4.
+    let plan = FcdccPlan::new_crme(&layer, 4, 2, 6).unwrap();
+    let cf = plan.encode_filters(&k);
+    let want = conv2d(&x, &k, layer.params());
+    let mut cluster = Cluster::new(6, Arc::new(DirectEngine));
+    let mut rng = Rng::new(1);
+    let (y, report) = cluster
+        .run_job(&plan, &x, &cf, &StragglerModel::Failures { count: 4 }, &mut rng)
+        .unwrap();
+    cluster.shutdown();
+    assert!(mse(&y.data, &want.data) < 1e-18);
+    assert_eq!(report.used_workers.len(), 2);
+}
+
+#[test]
+fn engine_soft_errors_absorbed_by_redundancy() {
+    let (layer, x, k) = setup();
+    let plan = FcdccPlan::new_crme(&layer, 4, 2, 6).unwrap(); // delta=2
+    let cf = plan.encode_filters(&k);
+    let want = conv2d(&x, &k, layer.params());
+    let engine = Arc::new(FlakyEngine {
+        inner: DirectEngine,
+        counter: AtomicUsize::new(0),
+        period: 3, // every third task dies
+    });
+    let mut cluster = Cluster::new(6, engine);
+    let mut rng = Rng::new(2);
+    for _ in 0..4 {
+        let (y, _) = cluster
+            .run_job(&plan, &x, &cf, &StragglerModel::None, &mut rng)
+            .unwrap();
+        assert!(mse(&y.data, &want.data) < 1e-18);
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn mixed_failures_and_stragglers() {
+    let (layer, x, k) = setup();
+    let plan = FcdccPlan::new_crme(&layer, 4, 4, 8).unwrap(); // delta=4, gamma=4
+    let cf = plan.encode_filters(&k);
+    let want = conv2d(&x, &k, layer.params());
+    let mut cluster = Cluster::new(8, Arc::new(DirectEngine));
+    let mut rng = Rng::new(3);
+    // 2 crashed + 2 delayed = exactly gamma misbehaving workers.
+    let (y, _) = cluster
+        .run_job(&plan, &x, &cf, &StragglerModel::Failures { count: 2 }, &mut rng)
+        .unwrap();
+    assert!(mse(&y.data, &want.data) < 1e-18);
+    let (y, report) = cluster
+        .run_job(
+            &plan,
+            &x,
+            &cf,
+            &StragglerModel::FixedCount {
+                count: 4,
+                delay: Duration::from_millis(150),
+            },
+            &mut rng,
+        )
+        .unwrap();
+    cluster.shutdown();
+    assert!(mse(&y.data, &want.data) < 1e-18);
+    // The four prompt workers must have been the ones used.
+    assert_eq!(report.used_workers.len(), 4);
+    assert!(report.collect_secs < 0.12, "waited for stragglers: {}", report.collect_secs);
+}
+
+#[test]
+fn bernoulli_availability_over_many_jobs() {
+    let (layer, x, k) = setup();
+    let plan = FcdccPlan::new_crme(&layer, 2, 4, 6).unwrap(); // delta=2, gamma=4
+    let cf = plan.encode_filters(&k);
+    let want = conv2d(&x, &k, layer.params());
+    let mut cluster = Cluster::new(6, Arc::new(DirectEngine));
+    let mut rng = Rng::new(4);
+    let model = StragglerModel::Bernoulli {
+        p: 0.3,
+        delay: Duration::from_millis(40),
+    };
+    for _ in 0..6 {
+        let (y, _) = cluster.run_job(&plan, &x, &cf, &model, &mut rng).unwrap();
+        assert!(mse(&y.data, &want.data) < 1e-18);
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn exponential_latency_model_runs() {
+    let (layer, x, k) = setup();
+    let plan = FcdccPlan::new_crme(&layer, 2, 2, 3).unwrap(); // delta=1
+    let cf = plan.encode_filters(&k);
+    let want = conv2d(&x, &k, layer.params());
+    let mut cluster = Cluster::new(3, Arc::new(DirectEngine));
+    let mut rng = Rng::new(5);
+    let model = StragglerModel::Exponential {
+        mean: Duration::from_millis(10),
+    };
+    let (y, report) = cluster.run_job(&plan, &x, &cf, &model, &mut rng).unwrap();
+    cluster.shutdown();
+    assert!(mse(&y.data, &want.data) < 1e-18);
+    assert_eq!(report.used_workers.len(), 1);
+}

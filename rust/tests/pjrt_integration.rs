@@ -1,0 +1,123 @@
+//! Three-layer integration: the AOT artifacts (L1 Pallas kernel inside
+//! the L2 JAX worker task, lowered to HLO text) executed from the Rust
+//! coordinator via PJRT, composed with APCP/KCCP + CRME + the simulated
+//! cluster — the full stack of DESIGN.md.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+//! If the artifacts directory is missing the tests are skipped with a
+//! loud message rather than failing, so plain `cargo test` works in a
+//! fresh checkout.
+
+use fcdcc::cluster::{Cluster, StragglerModel};
+use fcdcc::engine::TaskEngine;
+use fcdcc::fcdcc::FcdccPlan;
+use fcdcc::model::ConvLayer;
+use fcdcc::runtime::PjrtService;
+use fcdcc::tensor::{conv2d, Tensor3, Tensor4};
+use fcdcc::util::{mse, rng::Rng};
+use std::path::Path;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(Box::leak(dir.into_boxed_path()))
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json not found — run `make artifacts`");
+        None
+    }
+}
+
+fn testlayer() -> ConvLayer {
+    // Must match LAYERS["testlayer"] in python/compile/aot.py.
+    ConvLayer::new("testlayer", 2, 12, 10, 8, 3, 3, 1, 0)
+}
+
+#[test]
+fn pjrt_worker_task_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let host = PjrtService::spawn(dir).expect("spawn PJRT service");
+    let layer = testlayer();
+    let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap();
+    let mut rng = Rng::new(81);
+    let x = Tensor3::random(2, 12, 10, &mut rng);
+    let k = Tensor4::random(8, 2, 3, 3, &mut rng);
+    let payloads = plan.make_payloads(plan.encode_input(&x), &plan.encode_filters(&k));
+    for p in &payloads {
+        let native = p.run_local();
+        let pjrt = host.handle.run(p).expect("pjrt task");
+        assert_eq!(native.blocks.len(), pjrt.blocks.len());
+        for (a, b) in native.blocks.iter().zip(&pjrt.blocks) {
+            assert_eq!(a.shape(), b.shape());
+            let e = mse(&a.data, &b.data);
+            assert!(e < 1e-24, "worker {}: mse={e:e}", p.worker_id);
+        }
+    }
+}
+
+#[test]
+fn full_stack_cluster_with_pjrt_engine_and_stragglers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let host = PjrtService::spawn(dir).expect("spawn PJRT service");
+    let layer = testlayer();
+    let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap(); // delta=2, gamma=2
+    let mut rng = Rng::new(82);
+    let x = Tensor3::random(2, 12, 10, &mut rng);
+    let k = Tensor4::random(8, 2, 3, 3, &mut rng);
+    let coded_filters = plan.encode_filters(&k);
+    let engine: Arc<dyn TaskEngine> = Arc::new(host.handle.clone());
+    let mut cluster = Cluster::new(4, engine);
+    let straggler = StragglerModel::FixedCount {
+        count: 2,
+        delay: std::time::Duration::from_millis(150),
+    };
+    let (y, report) = cluster
+        .run_job(&plan, &x, &coded_filters, &straggler, &mut rng)
+        .expect("cluster job");
+    cluster.shutdown();
+    let want = conv2d(&x, &k, layer.params());
+    let e = mse(&y.data, &want.data);
+    assert!(e < 1e-22, "mse={e:e}");
+    assert_eq!(report.used_workers.len(), 2);
+    assert!(report.decode_secs > 0.0);
+}
+
+#[test]
+fn pjrt_handles_alternate_partitioning() {
+    let Some(dir) = artifacts_dir() else { return };
+    let host = PjrtService::spawn(dir).expect("spawn PJRT service");
+    // testlayer with (k_a, k_b) = (2, 4): second artifact variant.
+    let layer = testlayer();
+    let plan = FcdccPlan::new_crme(&layer, 2, 4, 4).unwrap();
+    let mut rng = Rng::new(83);
+    let x = Tensor3::random(2, 12, 10, &mut rng);
+    let k = Tensor4::random(8, 2, 3, 3, &mut rng);
+    let payloads = plan.make_payloads(plan.encode_input(&x), &plan.encode_filters(&k));
+    let results: Vec<_> = payloads[..plan.delta()]
+        .iter()
+        .map(|p| host.handle.run(p).expect("pjrt"))
+        .collect();
+    let y = plan.decode(&results).unwrap();
+    let want = conv2d(&x, &k, layer.params());
+    assert!(mse(&y.data, &want.data) < 1e-22);
+}
+
+#[test]
+fn unknown_shape_is_a_clean_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let host = PjrtService::spawn(dir).expect("spawn PJRT service");
+    // A layer shape that was never AOT-compiled.
+    let layer = ConvLayer::new("nope", 3, 16, 16, 4, 3, 3, 1, 0);
+    let plan = FcdccPlan::new_crme(&layer, 2, 2, 4).unwrap();
+    let mut rng = Rng::new(84);
+    let x = Tensor3::random(3, 16, 16, &mut rng);
+    let k = Tensor4::random(4, 3, 3, 3, &mut rng);
+    let payloads = plan.make_payloads(plan.encode_input(&x), &plan.encode_filters(&k));
+    let Err(err) = host.handle.run(&payloads[0]) else {
+        panic!("expected an error for an unknown artifact shape");
+    };
+    assert!(
+        format!("{err:#}").contains("not in manifest"),
+        "unexpected error: {err:#}"
+    );
+}

@@ -1,0 +1,277 @@
+//! Property-based test suite over the coordinator invariants (DESIGN.md
+//! deliverable (c)): coding-scheme round trips, partitioning identities,
+//! optimizer optimality, recovery invertibility, JSON parsing totality.
+
+use fcdcc::coding::{self, Code, CrmeCode};
+use fcdcc::coordinator::stability::factor_pair;
+use fcdcc::fcdcc::{cost, FcdccPlan};
+use fcdcc::linalg::lu;
+use fcdcc::model::ConvLayer;
+use fcdcc::partition::{merge_output_blocks, ApcpPlan, KccpPlan};
+use fcdcc::prop::{ensure, run, Gen};
+use fcdcc::tensor::{conv2d, ConvParams, Tensor3, Tensor4};
+use fcdcc::util::{json::Json, mse};
+
+/// Random feasible CRME configuration + matching layer geometry.
+fn random_config(g: &mut Gen) -> (ConvLayer, usize, usize, usize) {
+    let k_a = *g.choose(&[1usize, 2, 4, 6]);
+    let k_b = *g.choose(&[1usize, 2, 4, 8]);
+    let delta = (k_a * k_b).div_ceil(if k_a == 1 { 1 } else { 2 } * if k_b == 1 { 1 } else { 2 });
+    let n = delta + g.usize_in(1, 3);
+    let c = g.usize_in(1, 3);
+    let kh = *g.choose(&[1usize, 3, 5]);
+    let kw = *g.choose(&[1usize, 3]);
+    let stride = g.usize_in(1, 2);
+    let pad = g.usize_in(0, 1);
+    // Ensure H' >= k_a and W' >= 1.
+    let h_out_min = k_a.max(2);
+    let h = (h_out_min - 1) * stride + kh + g.usize_in(0, 4);
+    let h = h.saturating_sub(2 * pad).max(kh);
+    let w = kw + stride * g.usize_in(1, 5);
+    let n_out = k_b * g.usize_in(1, 3);
+    let layer = ConvLayer::new("prop", c, h, w, n_out, kh, kw, stride, pad);
+    (layer, k_a, k_b, n)
+}
+
+#[test]
+fn prop_crme_pipeline_roundtrip_any_subset() {
+    run("CRME encode->conv->decode == direct conv", 40, |g| {
+        let (layer, k_a, k_b, n) = random_config(g);
+        let plan = match FcdccPlan::new_crme(&layer, k_a, k_b, n) {
+            Ok(p) => p,
+            Err(e) => return Err(format!("plan failed for {layer:?}: {e:#}")),
+        };
+        let x = Tensor3::random(layer.c, layer.h, layer.w, &mut g.rng);
+        let k = Tensor4::random(layer.n, layer.c, layer.kh, layer.kw, &mut g.rng);
+        let want = conv2d(&x, &k, layer.params());
+        let survivors = g.rng.choose_indices(n, plan.delta());
+        let got = plan
+            .run_inline(&x, &k, Some(&survivors))
+            .map_err(|e| format!("decode failed: {e:#}"))?;
+        ensure(got.shape() == want.shape(), "shape mismatch")?;
+        let e = mse(&got.data, &want.data);
+        ensure(
+            e < 1e-16,
+            format!(
+                "mse {e:e} too large for layer {:?} (k_a={k_a}, k_b={k_b}, n={n}, subset {survivors:?})",
+                layer
+            ),
+        )
+    });
+}
+
+#[test]
+fn prop_apcp_slabs_tile_the_output() {
+    run("APCP slab convs tile the direct conv", 60, |g| {
+        let kh = *g.choose(&[1usize, 3, 5]);
+        let stride = g.usize_in(1, 3);
+        let k_a = g.usize_in(1, 5);
+        let rows_min = k_a.max(1);
+        let h = (rows_min - 1) * stride + kh + g.usize_in(0, 6);
+        let c = g.usize_in(1, 3);
+        let w = kh + g.usize_in(0, 5);
+        let x = Tensor3::random(c, h, w, &mut g.rng);
+        let nk = g.usize_in(1, 4);
+        let k = Tensor4::random(nk, c, kh, kh.min(w), &mut g.rng);
+        let p = ConvParams::new(stride, 0);
+        let plan = match ApcpPlan::new(h, kh, stride, k_a) {
+            Ok(p) => p,
+            Err(_) => return Ok(()), // infeasible split: vacuous
+        };
+        let want = conv2d(&x, &k, p);
+        let rows = plan.rows_per_partition();
+        for (i, slab) in plan.partition(&x).iter().enumerate() {
+            let y = conv2d(slab, &k, p);
+            ensure(y.h == rows, format!("slab {i} rows {} != {rows}", y.h))?;
+            let lo = i * rows;
+            let hi = ((i + 1) * rows).min(want.h);
+            if lo >= want.h {
+                continue;
+            }
+            let got = y.slice_h(0, hi - lo);
+            let exp = want.slice_h(lo, hi);
+            let e = mse(&got.data, &exp.data);
+            ensure(e < 1e-20, format!("slab {i} mse {e:e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merge_is_inverse_of_blockwise_conv() {
+    run("merge(blocks) == direct conv", 40, |g| {
+        let k_a = g.usize_in(1, 4);
+        let k_b = g.usize_in(1, 3);
+        let c = g.usize_in(1, 3);
+        let kh = *g.choose(&[1usize, 3]);
+        let h = k_a.max(1) + kh - 1 + g.usize_in(0, 5);
+        let w = kh + g.usize_in(0, 4);
+        let n_out = k_b * g.usize_in(1, 3);
+        let x = Tensor3::random(c, h, w, &mut g.rng);
+        let k = Tensor4::random(n_out, c, kh, kh.min(w), &mut g.rng);
+        let p = ConvParams::new(1, 0);
+        let apcp = match ApcpPlan::new(h, kh, 1, k_a) {
+            Ok(a) => a,
+            Err(_) => return Ok(()),
+        };
+        let kccp = KccpPlan::new(n_out, k_b).unwrap();
+        let want = conv2d(&x, &k, p);
+        let mut blocks = Vec::new();
+        for xa in apcp.partition(&x) {
+            for kb in kccp.partition(&k) {
+                blocks.push(conv2d(&xa, &kb, p));
+            }
+        }
+        let got = merge_output_blocks(&blocks, k_a, k_b, want.h);
+        ensure(
+            mse(&got.data, &want.data) < 1e-20,
+            format!("merge mismatch (k_a={k_a}, k_b={k_b})"),
+        )
+    });
+}
+
+#[test]
+fn prop_recovery_invertible_for_random_subsets() {
+    run("CRME recovery matrices are invertible", 60, |g| {
+        let k_a = *g.choose(&[2usize, 4, 6, 8]);
+        let k_b = *g.choose(&[2usize, 4, 8]);
+        let delta = k_a * k_b / 4;
+        let n = delta + g.usize_in(0, 6);
+        let code = match CrmeCode::new(k_a, k_b, n) {
+            Ok(c) => c,
+            Err(_) => return Ok(()),
+        };
+        let subset = g.rng.choose_indices(n, delta);
+        let e = code.recovery(&subset);
+        ensure(e.is_square(), "recovery not square")?;
+        ensure(
+            lu::Lu::factor(&e).is_ok(),
+            format!("singular recovery for k_a={k_a} k_b={k_b} n={n} subset {subset:?}"),
+        )
+    });
+}
+
+#[test]
+fn prop_encode_linearity() {
+    run("coded slabs are linear in the partitions", 30, |g| {
+        let k_a = *g.choose(&[2usize, 4]);
+        let n = k_a + g.usize_in(1, 4);
+        let code = CrmeCode::new(k_a, k_a, n.max(k_a * k_a / 4 + 1)).unwrap();
+        let (c, h, w) = (g.usize_in(1, 2), g.usize_in(2, 5), g.usize_in(2, 5));
+        let parts1: Vec<Tensor3> = (0..k_a).map(|_| Tensor3::random(c, h, w, &mut g.rng)).collect();
+        let parts2: Vec<Tensor3> = (0..k_a).map(|_| Tensor3::random(c, h, w, &mut g.rng)).collect();
+        let a = g.f64_in(-2.0, 2.0);
+        let mixed: Vec<Tensor3> = parts1
+            .iter()
+            .zip(&parts2)
+            .map(|(p1, p2)| {
+                let mut t = p1.clone();
+                t.scale(a);
+                t.axpy(1.0, p2);
+                t
+            })
+            .collect();
+        let e_mixed = coding::encode_inputs(&code, &mixed);
+        let e1 = coding::encode_inputs(&code, &parts1);
+        let e2 = coding::encode_inputs(&code, &parts2);
+        for i in 0..e_mixed.len() {
+            for j in 0..e_mixed[i].len() {
+                let mut want = e1[i][j].clone();
+                want.scale(a);
+                want.axpy(1.0, &e2[i][j]);
+                let e = mse(&e_mixed[i][j].data, &want.data);
+                ensure(e < 1e-20, format!("encode not linear at ({i},{j}): {e:e}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_optimizer_is_argmin_over_feasible_set() {
+    run("optimizer returns the feasible minimum", 40, |g| {
+        let layer = ConvLayer::new(
+            "opt",
+            g.usize_in(1, 256),
+            g.usize_in(16, 224),
+            g.usize_in(16, 224),
+            *g.choose(&[16usize, 64, 96, 256, 384, 512]),
+            *g.choose(&[1usize, 3, 5, 11]),
+            3,
+            g.usize_in(1, 4),
+            g.usize_in(0, 2),
+        );
+        let cm = cost::CostModel {
+            lambda_comm: g.f64_in(0.01, 1.0),
+            lambda_comp: 0.0,
+            lambda_store: g.f64_in(0.01, 1.0),
+        };
+        let q = *g.choose(&[16usize, 32, 64]);
+        let Some(choice) = cost::optimize(&layer, &cm, q) else {
+            return Ok(()); // no feasible pair: vacuous
+        };
+        for c in &choice.candidates {
+            ensure(
+                choice.best.total() <= c.total() + 1e-9,
+                format!(
+                    "candidate ({},{}) beats 'best' ({},{})",
+                    c.k_a, c.k_b, choice.best.k_a, choice.best.k_b
+                ),
+            )?;
+            ensure(c.k_a * c.k_b == q, "product violated")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_factor_pair_feasibility() {
+    run("factor_pair returns valid factors", 60, |g| {
+        let p = *g.choose(&[4usize, 8, 16, 36, 64, 100, 128]);
+        let n_out = *g.choose(&[8usize, 24, 64, 96, 512]);
+        let h_out = g.usize_in(4, 64);
+        let even = g.bool();
+        match factor_pair(p, n_out, h_out, even) {
+            Err(_) => Ok(()), // nothing feasible is a legal outcome
+            Ok((ka, kb)) => {
+                ensure(ka * kb == p, "product")?;
+                ensure(ka <= h_out, "k_a <= H'")?;
+                ensure(n_out % kb == 0, "k_b | N")?;
+                if even {
+                    ensure(ka == 1 || ka % 2 == 0, "k_a even-or-1")?;
+                    ensure(kb == 1 || kb % 2 == 0, "k_b even-or-1")?;
+                }
+                Ok(())
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_json_numbers_roundtrip() {
+    run("JSON number parsing", 100, |g| {
+        let v = (g.f64_in(-1e6, 1e6) * 1e3).round() / 1e3;
+        let s = format!("{v}");
+        let j = Json::parse(&s).map_err(|e| format!("parse {s:?}: {e:#}"))?;
+        ensure(j.as_f64() == Some(v), format!("roundtrip {s}"))
+    });
+}
+
+#[test]
+fn prop_tensor_slice_concat_identities() {
+    run("tensor slice/concat round trips", 60, |g| {
+        let (c, h, w) = (g.usize_in(1, 4), g.usize_in(2, 8), g.usize_in(1, 6));
+        let t = Tensor3::random(c, h, w, &mut g.rng);
+        let cut = g.usize_in(1, h - 1);
+        let a = t.slice_h(0, cut);
+        let b = t.slice_h(cut, h);
+        ensure(Tensor3::concat_h(&[&a, &b]) == t, "concat_h(slice_h) != id")?;
+        if c >= 2 {
+            let cc = g.usize_in(1, c - 1);
+            let a = t.slice_c(0, cc);
+            let b = t.slice_c(cc, c);
+            ensure(Tensor3::concat_c(&[&a, &b]) == t, "concat_c(slice_c) != id")?;
+        }
+        Ok(())
+    });
+}
