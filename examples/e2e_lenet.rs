@@ -15,10 +15,9 @@
 
 use anyhow::Result;
 use fcdcc::cluster::StragglerModel;
-use fcdcc::coordinator::{serve_lenet, ServeConfig};
-use fcdcc::engine::{Im2colEngine, TaskEngine};
+use fcdcc::coordinator::{pjrt_engine_or_native, serve_lenet, ServeConfig};
+use fcdcc::engine::TaskEngine;
 use fcdcc::metrics::fmt_sci;
-use fcdcc::runtime::PjrtService;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -49,19 +48,8 @@ fn run(tag: &str, engine: Arc<dyn TaskEngine>, straggler: StragglerModel) -> Res
 fn main() -> Result<()> {
     println!("e2e: distributed LeNet-5 serving (2 ConvLs via FCDCC, n=4, δ=2/1)");
 
-    // Preferred: the AOT JAX/Pallas artifacts through PJRT.
-    let engine: Arc<dyn TaskEngine> = match PjrtService::spawn("artifacts") {
-        Ok(host) => {
-            println!("engine: PJRT (AOT artifacts)");
-            let h = host.handle.clone();
-            std::mem::forget(host);
-            Arc::new(h)
-        }
-        Err(e) => {
-            println!("engine: native im2col (PJRT unavailable: {e})");
-            Arc::new(Im2colEngine)
-        }
-    };
+    // AOT JAX/Pallas artifacts through PJRT if available, else native.
+    let engine: Arc<dyn TaskEngine> = pjrt_engine_or_native("artifacts");
 
     run("no stragglers", Arc::clone(&engine), StragglerModel::None)?;
     run(

@@ -12,11 +12,11 @@
 
 use anyhow::Result;
 use fcdcc::cluster::{Cluster, StragglerModel};
-use fcdcc::engine::{Im2colEngine, TaskEngine};
+use fcdcc::coordinator::pjrt_engine_or_native;
+use fcdcc::engine::TaskEngine;
 use fcdcc::fcdcc::FcdccPlan;
 use fcdcc::metrics::{fmt_secs, fmt_sci};
 use fcdcc::model::ConvLayer;
-use fcdcc::runtime::PjrtService;
 use fcdcc::tensor::{conv2d, Tensor3, Tensor4};
 use fcdcc::util::{mse, rng::Rng};
 use std::sync::Arc;
@@ -27,19 +27,8 @@ fn main() -> Result<()> {
     let layer = ConvLayer::new("quickstart", 2, 12, 10, 8, 3, 3, 1, 0);
     let (k_a, k_b, n) = (4, 2, 4); // δ = k_A·k_B/4 = 2, tolerates γ = 2 stragglers
 
-    // Engine: AOT JAX/Pallas artifact via PJRT if available, else native.
-    let engine: Arc<dyn TaskEngine> = match PjrtService::spawn("artifacts") {
-        Ok(host) => {
-            println!("engine: PJRT (AOT JAX/Pallas artifacts)");
-            let h = host.handle.clone();
-            std::mem::forget(host);
-            Arc::new(h)
-        }
-        Err(e) => {
-            println!("engine: native im2col (PJRT unavailable: {e})");
-            Arc::new(Im2colEngine)
-        }
-    };
+    // AOT JAX/Pallas artifact via PJRT if available, else native im2col.
+    let engine: Arc<dyn TaskEngine> = pjrt_engine_or_native("artifacts");
 
     let mut rng = Rng::new(7);
     let x = Tensor3::random(layer.c, layer.h, layer.w, &mut rng);

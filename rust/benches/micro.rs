@@ -49,7 +49,10 @@ fn main() {
     report("encode_input", &bench(cfg, || plan.encode_input(&x)));
     let cf = plan.encode_filters(&kk);
     let payloads = plan.make_payloads(plan.encode_input(&x), &cf);
-    report("worker subtask (im2col)", &bench(cfg, || payloads[0].run_with(|a, b, c| conv2d_im2col(a, b, c))));
+    report(
+        "worker subtask (im2col)",
+        &bench(cfg, || payloads[0].run_with(|a, b, c| conv2d_im2col(a, b, c))),
+    );
     let results: Vec<_> = payloads[..plan.delta()]
         .iter()
         .map(|p| p.run_with(|a, b, c| conv2d_im2col(a, b, c)))

@@ -18,7 +18,6 @@ use fcdcc::engine::{DirectEngine, Im2colEngine, TaskEngine};
 use fcdcc::fcdcc::FcdccPlan;
 use fcdcc::metrics::Table;
 use fcdcc::model::{zoo, ConvLayer};
-use fcdcc::runtime::PjrtService;
 use fcdcc::tensor::{Tensor3, Tensor4};
 use fcdcc::util::rng::Rng;
 use std::sync::Arc;
@@ -120,7 +119,12 @@ fn engine_ablation() {
     report("direct (naive loops)", &s);
     let s = bench(cfg, || Im2colEngine.run(p).unwrap());
     report("im2col + GEMM", &s);
-    match PjrtService::spawn("artifacts") {
+    pjrt_ablation(p, cfg);
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_ablation(p: &fcdcc::fcdcc::WorkerPayload, cfg: BenchConfig) {
+    match fcdcc::runtime::PjrtService::spawn("artifacts") {
         Ok(host) => {
             let h = host.handle.clone();
             let s = bench(cfg, || h.run(p).unwrap());
@@ -129,6 +133,11 @@ fn engine_ablation() {
         }
         Err(e) => println!("PJRT engine skipped: {e}"),
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_ablation(_p: &fcdcc::fcdcc::WorkerPayload, _cfg: BenchConfig) {
+    println!("PJRT engine skipped (built without the `pjrt` feature)");
 }
 
 fn main() {

@@ -1,6 +1,15 @@
-//! The master node: owns the worker pool, runs coded jobs end to end
-//! (encode → dispatch → first-δ collection → decode → merge), and
-//! accounts every phase (paper §II-C phases and §VI metrics).
+//! The master node: owns the worker pool and a job-oriented runtime.
+//!
+//! [`Cluster::submit`] is non-blocking: it encodes, dispatches, and
+//! registers the job in a per-job in-flight table (keyed by `job_id`,
+//! first-δ completion, per-job deadline). A collector demultiplexes
+//! every [`WorkerReply`] coming off the shared result channel into that
+//! table, so **any number of jobs overlap on the same worker pool** —
+//! e.g. conv layers of different serving requests. [`Cluster::wait`]
+//! blocks until one job is decodable (routing other jobs' replies while
+//! it waits) and returns its output + [`JobReport`]; [`Cluster::run_job`]
+//! is the submit+wait convenience for single-job callers. Every phase is
+//! accounted (paper §II-C phases and §VI metrics).
 
 use crate::cluster::straggler::StragglerModel;
 use crate::cluster::worker::{worker_loop, WorkerMsg, WorkerReply};
@@ -8,8 +17,9 @@ use crate::engine::TaskEngine;
 use crate::fcdcc::FcdccPlan;
 use crate::tensor::{Tensor3, Tensor4};
 use crate::util::rng::Rng;
-use anyhow::{bail, Context, Result};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -20,7 +30,9 @@ pub struct JobReport {
     pub job_id: u64,
     pub n: usize,
     pub delta: usize,
-    /// Worker ids whose results were used for decoding, in arrival order.
+    /// Worker ids whose results were used for decoding: the first δ to
+    /// arrive, ordered by worker id (so decoding is deterministic for a
+    /// fixed reply set).
     pub used_workers: Vec<usize>,
     /// Master-side input encoding time (APCP partition + CRME combine).
     pub encode_secs: f64,
@@ -40,17 +52,62 @@ pub struct JobReport {
     pub upload_entries: usize,
     /// Tensor entries downloaded from the δ used workers.
     pub download_entries: usize,
+    /// Jobs in flight on the pool when this one was dispatched
+    /// (including itself): 1 = sequential, >1 = pipelined.
+    pub concurrent_jobs: usize,
 }
 
-/// A pool of worker threads plus the result channel.
+/// Handle to a submitted job. Consume it with [`Cluster::wait`]; every
+/// submitted job should eventually be waited on (abandoned handles keep
+/// a slot in the in-flight table alive).
+#[must_use = "wait() on the handle to collect the job's output"]
+pub struct JobHandle {
+    job_id: u64,
+}
+
+impl JobHandle {
+    pub fn job_id(&self) -> u64 {
+        self.job_id
+    }
+}
+
+/// Collection state of one in-flight job.
+#[derive(Clone, Copy)]
+enum JobPhase {
+    /// Fewer than δ replies so far.
+    Collecting,
+    /// δ replies arrived; `collect_secs` is dispatch → δ-th arrival.
+    Done { collect_secs: f64 },
+    /// The per-job deadline passed before δ replies arrived.
+    TimedOut,
+}
+
+/// One row of the in-flight table.
+struct InFlight {
+    delta: usize,
+    replies: Vec<WorkerReply>,
+    phase: JobPhase,
+    deadline: Instant,
+    dispatched_at: Instant,
+    encode_secs: f64,
+    upload_entries: usize,
+    concurrent_jobs: usize,
+}
+
+/// A pool of worker threads plus the demultiplexing collector.
 pub struct Cluster {
     n: usize,
     senders: Vec<Sender<WorkerMsg>>,
     results: Receiver<WorkerReply>,
     handles: Vec<JoinHandle<()>>,
     next_job: u64,
-    /// Per-job collection timeout (guards against >γ failures).
+    /// Per-job collection timeout (guards against >γ failures). Applied
+    /// at submit time: changing it affects subsequently submitted jobs.
     pub collect_timeout: Duration,
+    /// In-flight table: job id → collection state. A `BTreeMap` so the
+    /// smallest outstanding id (the workers' prune watermark) is cheap.
+    jobs: BTreeMap<u64, InFlight>,
+    watermark_sent: u64,
 }
 
 impl Cluster {
@@ -78,6 +135,8 @@ impl Cluster {
             handles,
             next_job: 1,
             collect_timeout: Duration::from_secs(60),
+            jobs: BTreeMap::new(),
+            watermark_sent: 0,
         }
     }
 
@@ -85,22 +144,31 @@ impl Cluster {
         self.n
     }
 
-    /// Run one coded convolution job end to end. `coded_filters` are the
-    /// per-worker resident filter slabs from `plan.encode_filters`
-    /// (encoded once at model load, per the paper's steady-state model).
-    pub fn run_job(
+    /// Number of jobs currently collecting replies.
+    pub fn in_flight(&self) -> usize {
+        self.jobs
+            .values()
+            .filter(|j| matches!(j.phase, JobPhase::Collecting))
+            .count()
+    }
+
+    /// Encode one job's input against `plan`, dispatch the coded subtasks
+    /// to all n workers, and register the job in the in-flight table —
+    /// non-blocking. `coded_filters` are the per-worker resident filter
+    /// slabs from `plan.encode_filters` (encoded once at model load, per
+    /// the paper's steady-state model).
+    pub fn submit(
         &mut self,
         plan: &FcdccPlan,
         x: &Tensor3,
-        coded_filters: &[Vec<Tensor4>],
+        coded_filters: &[Arc<Vec<Tensor4>>],
         straggler: &StragglerModel,
         rng: &mut Rng,
-    ) -> Result<(Tensor3, JobReport)> {
+    ) -> Result<JobHandle> {
         assert_eq!(coded_filters.len(), self.n, "filters for every worker");
         assert_eq!(plan.spec().n, self.n, "plan/cluster n mismatch");
         let job_id = self.next_job;
         self.next_job += 1;
-        let delta = plan.delta();
 
         // --- Encode phase (master).
         let t0 = Instant::now();
@@ -111,7 +179,7 @@ impl Cluster {
 
         // --- Dispatch with straggler fates.
         let fates = straggler.draw(self.n, rng);
-        let t1 = Instant::now();
+        let dispatched_at = Instant::now();
         for (payload, fate) in payloads.into_iter().zip(fates.iter()) {
             let wid = payload.worker_id;
             self.senders[wid]
@@ -123,65 +191,212 @@ impl Cluster {
                 .with_context(|| format!("worker {wid} channel closed"))?;
         }
 
-        // --- Collect the first δ results for THIS job.
-        let mut replies: Vec<WorkerReply> = Vec::with_capacity(delta);
-        let deadline = Instant::now() + self.collect_timeout;
-        while replies.len() < delta {
-            let now = Instant::now();
-            if now >= deadline {
-                bail!(
-                    "job {job_id}: timed out with {}/{delta} results (>{} workers failed?)",
-                    replies.len(),
-                    self.n - delta
-                );
-            }
-            match self.results.recv_timeout(deadline - now) {
-                Ok(r) if r.job_id == job_id => replies.push(r),
-                Ok(_) => {} // stale result from a previous job: drop
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => bail!("all workers gone"),
-            }
-        }
-        let collect_secs = t1.elapsed().as_secs_f64();
+        let concurrent_jobs = 1 + self.in_flight();
+        self.jobs.insert(
+            job_id,
+            InFlight {
+                delta: plan.delta(),
+                replies: Vec::with_capacity(plan.delta()),
+                phase: JobPhase::Collecting,
+                deadline: dispatched_at + self.collect_timeout,
+                dispatched_at,
+                encode_secs,
+                upload_entries,
+                concurrent_jobs,
+            },
+        );
+        Ok(JobHandle { job_id })
+    }
 
-        // Cancel the stragglers' superseded subtasks so their injected
-        // delays don't cascade into the next job.
-        for tx in &self.senders {
-            let _ = tx.send(WorkerMsg::Cancel(job_id));
+    /// Block until the job behind `handle` has its first δ results, then
+    /// decode and report. Replies for *other* in-flight jobs arriving in
+    /// the meantime are routed into the table, never dropped. `plan` must
+    /// be the plan the job was submitted with.
+    pub fn wait(&mut self, plan: &FcdccPlan, handle: JobHandle) -> Result<(Tensor3, JobReport)> {
+        let job_id = handle.job_id;
+        loop {
+            self.drain_ready()?;
+            self.expire_deadlines();
+            let Some(job) = self.jobs.get(&job_id) else {
+                bail!("job {job_id} is not in flight");
+            };
+            let (phase, got, delta, deadline) =
+                (job.phase, job.replies.len(), job.delta, job.deadline);
+            match phase {
+                JobPhase::Done { .. } => break,
+                JobPhase::TimedOut => {
+                    self.remove_job(job_id);
+                    bail!(
+                        "job {job_id}: timed out with {got}/{delta} results (>{} workers failed?)",
+                        self.n - delta
+                    );
+                }
+                JobPhase::Collecting => {
+                    let wait_for = deadline.saturating_duration_since(Instant::now());
+                    match self.results.recv_timeout(wait_for) {
+                        Ok(r) => self.route(r),
+                        // The loop re-checks this job's deadline.
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => bail!("all workers gone"),
+                    }
+                }
+            }
         }
+
+        let mut job = self.remove_job(job_id);
+        let JobPhase::Done { collect_secs } = job.phase else {
+            unreachable!("loop exits only on Done");
+        };
+        ensure!(
+            plan.delta() == job.delta,
+            "job {job_id}: wait() called with a different plan (delta {} vs submitted {})",
+            plan.delta(),
+            job.delta
+        );
+        // First-δ semantics: the δ earliest arrivals were kept; order them
+        // by worker id so decoding is deterministic for a fixed reply set.
+        job.replies.truncate(job.delta);
+        job.replies.sort_by_key(|r| r.worker_id);
 
         // --- Decode phase (master).
         let t2 = Instant::now();
         let results: Vec<&crate::fcdcc::WorkerResult> =
-            replies.iter().map(|r| &r.result).collect();
+            job.replies.iter().map(|r| &r.result).collect();
         let out = plan.decode_refs(&results)?;
         let decode_secs = t2.elapsed().as_secs_f64();
 
         let download_entries = results.iter().map(|r| r.download_entries()).sum();
-        let used_workers: Vec<usize> = replies.iter().map(|r| r.worker_id).collect();
-        let sim_makespan_secs = replies
+        let used_workers: Vec<usize> = job.replies.iter().map(|r| r.worker_id).collect();
+        let sim_makespan_secs = job
+            .replies
             .iter()
             .map(|r| r.delay_secs + r.compute_secs)
             .fold(0.0, f64::max);
         let mean_compute_secs =
-            replies.iter().map(|r| r.compute_secs).sum::<f64>() / replies.len() as f64;
+            job.replies.iter().map(|r| r.compute_secs).sum::<f64>() / job.replies.len() as f64;
 
         Ok((
             out,
             JobReport {
                 job_id,
                 n: self.n,
-                delta,
+                delta: job.delta,
                 used_workers,
-                encode_secs,
+                encode_secs: job.encode_secs,
                 collect_secs,
                 decode_secs,
                 sim_makespan_secs,
                 mean_compute_secs,
-                upload_entries,
+                upload_entries: job.upload_entries,
                 download_entries,
+                concurrent_jobs: job.concurrent_jobs,
             },
         ))
+    }
+
+    /// Non-blocking poll: true once the job has either collected its δ
+    /// replies or timed out, i.e. once `wait` would return immediately.
+    pub fn job_ready(&mut self, handle: &JobHandle) -> Result<bool> {
+        self.drain_ready()?;
+        self.expire_deadlines();
+        match self.jobs.get(&handle.job_id) {
+            Some(j) => Ok(!matches!(j.phase, JobPhase::Collecting)),
+            None => bail!("job {} is not in flight", handle.job_id),
+        }
+    }
+
+    /// Run one coded convolution job end to end (submit + wait) — the
+    /// blocking single-job path.
+    pub fn run_job(
+        &mut self,
+        plan: &FcdccPlan,
+        x: &Tensor3,
+        coded_filters: &[Arc<Vec<Tensor4>>],
+        straggler: &StragglerModel,
+        rng: &mut Rng,
+    ) -> Result<(Tensor3, JobReport)> {
+        let handle = self.submit(plan, x, coded_filters, straggler, rng)?;
+        self.wait(plan, handle)
+    }
+
+    /// Route one reply into the in-flight table. Replies for unknown jobs
+    /// (already decoded, timed out, or superseded) are dropped — that is
+    /// the demultiplexer's stale-result filter.
+    fn route(&mut self, reply: WorkerReply) {
+        let job_id = reply.job_id;
+        // Collection ends when the δ-th reply was *sent*, not when the
+        // master got around to draining it — under pipelined serving the
+        // two differ by arbitrary scheduler work.
+        let sent_at = reply.sent_at;
+        let mut finished = false;
+        if let Some(job) = self.jobs.get_mut(&job_id) {
+            if matches!(job.phase, JobPhase::Collecting) {
+                job.replies.push(reply);
+                if job.replies.len() >= job.delta {
+                    job.phase = JobPhase::Done {
+                        collect_secs: sent_at
+                            .saturating_duration_since(job.dispatched_at)
+                            .as_secs_f64(),
+                    };
+                    finished = true;
+                }
+            }
+        }
+        if finished {
+            // Cancel the stragglers' superseded subtasks so their injected
+            // delays don't cascade into the other in-flight jobs.
+            self.broadcast_cancel(job_id);
+        }
+    }
+
+    /// Drain every reply that is already buffered, without blocking.
+    fn drain_ready(&mut self) -> Result<()> {
+        loop {
+            match self.results.try_recv() {
+                Ok(r) => self.route(r),
+                Err(TryRecvError::Empty) => return Ok(()),
+                Err(TryRecvError::Disconnected) => bail!("all workers gone"),
+            }
+        }
+    }
+
+    /// Mark jobs whose per-job deadline has passed as timed out and tell
+    /// the workers to drop their subtasks. Other in-flight jobs are
+    /// untouched — one job blowing its deadline never poisons the rest.
+    fn expire_deadlines(&mut self) {
+        let now = Instant::now();
+        let expired: Vec<u64> = self
+            .jobs
+            .iter()
+            .filter(|(_, j)| matches!(j.phase, JobPhase::Collecting) && now >= j.deadline)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in expired {
+            if let Some(j) = self.jobs.get_mut(&id) {
+                j.phase = JobPhase::TimedOut;
+            }
+            self.broadcast_cancel(id);
+        }
+    }
+
+    /// Remove a settled job from the table and, if the smallest
+    /// outstanding id advanced, raise the workers' prune watermark.
+    fn remove_job(&mut self, job_id: u64) -> InFlight {
+        let job = self.jobs.remove(&job_id).expect("job in table");
+        let watermark = self.jobs.keys().next().map_or(self.next_job - 1, |&m| m - 1);
+        if watermark > self.watermark_sent {
+            self.watermark_sent = watermark;
+            for tx in &self.senders {
+                let _ = tx.send(WorkerMsg::CancelUpTo(watermark));
+            }
+        }
+        job
+    }
+
+    fn broadcast_cancel(&self, job_id: u64) {
+        for tx in &self.senders {
+            let _ = tx.send(WorkerMsg::Cancel(job_id));
+        }
     }
 
     /// Graceful shutdown: tell every worker to exit and join the threads.
@@ -226,6 +441,7 @@ mod tests {
         assert!(mse(&y.data, &want.data) < 1e-20);
         assert_eq!(report.delta, 2);
         assert_eq!(report.used_workers.len(), 2);
+        assert_eq!(report.concurrent_jobs, 1);
         assert!(report.upload_entries > 0);
         assert!(report.download_entries > 0);
     }
@@ -314,6 +530,33 @@ mod tests {
                 .unwrap();
             assert!(mse(&y.data, &want.data) < 1e-18);
         }
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn overlapping_jobs_wait_in_any_order() {
+        let (layer, x, k) = small_setup();
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap(); // delta=2
+        let coded_filters = plan.encode_filters(&k);
+        let mut cluster = Cluster::new(4, Arc::new(DirectEngine));
+        let mut rng = Rng::new(6);
+        let want = conv2d(&x, &k, layer.params());
+        let handles: Vec<JobHandle> = (0..3)
+            .map(|_| {
+                cluster
+                    .submit(&plan, &x, &coded_filters, &StragglerModel::None, &mut rng)
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(cluster.in_flight(), 3);
+        // Waiting in reverse forces the collector to demultiplex replies
+        // of the not-yet-waited jobs into the in-flight table.
+        for handle in handles.into_iter().rev() {
+            let (y, report) = cluster.wait(&plan, handle).unwrap();
+            assert!(mse(&y.data, &want.data) < 1e-18);
+            assert!(report.concurrent_jobs >= 1);
+        }
+        assert_eq!(cluster.in_flight(), 0);
         cluster.shutdown();
     }
 }

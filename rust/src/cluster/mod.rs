@@ -4,6 +4,12 @@
 //! δ results arrive — the same semantics as the paper's EC2/mpi4py
 //! testbed with the wire replaced by channels.
 //!
+//! The master is a **job runtime**: `Cluster::submit` is non-blocking and
+//! any number of jobs (e.g. conv layers of different serving requests)
+//! overlap on the same pool; a collector demultiplexes replies into a
+//! per-job in-flight table with first-δ completion and per-job deadlines
+//! (DESIGN.md §Job runtime).
+//!
 //! Because the testbed has a single vCPU, wall-clock parallel speedup is
 //! not observable; the cluster therefore *also* computes the simulated
 //! makespan (per-worker completion = straggler delay + measured compute
@@ -15,6 +21,6 @@ pub mod sim;
 pub mod straggler;
 pub mod worker;
 
-pub use master::{Cluster, JobReport};
+pub use master::{Cluster, JobHandle, JobReport};
 pub use sim::{simulate_job, SimJob};
 pub use straggler::StragglerModel;

@@ -15,6 +15,7 @@ use crate::engine::TaskEngine;
 use crate::fcdcc::FcdccPlan;
 use crate::tensor::{Tensor3, Tensor4};
 use anyhow::{bail, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Virtual-time result of one coded job.
@@ -56,7 +57,7 @@ impl SimJob {
 pub fn simulate_job(
     plan: &FcdccPlan,
     x: &Tensor3,
-    coded_filters: &[Vec<Tensor4>],
+    coded_filters: &[Arc<Vec<Tensor4>>],
     engine: &dyn TaskEngine,
     fates: &[WorkerFate],
 ) -> Result<SimJob> {

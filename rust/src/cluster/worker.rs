@@ -2,17 +2,21 @@
 //! injected straggler fate, computes the pairwise coded convolutions with
 //! its [`TaskEngine`], and sends the coded result back.
 //!
-//! The master broadcasts `Cancel(job_id)` once it has decoded a job;
-//! a worker that wakes from a straggler sleep checks for cancellation
-//! before computing, so superseded subtasks are dropped instead of
-//! cascading delay into subsequent jobs (the paper's per-job straggler
-//! independence).
+//! Under the concurrent job runtime any number of jobs are in flight at
+//! once and they complete **out of order**, so cancellation is per-job:
+//! the master sends `Cancel(job_id)` as soon as a job has its δ results
+//! (or times out), and periodically `CancelUpTo(watermark)` once every
+//! job below a watermark is settled, which lets workers prune their
+//! cancellation memory. A straggler sleeping out its injected delay
+//! watches the channel and abandons the subtask the moment its job is
+//! canceled — superseded work is dropped, not slept out, so one job's
+//! stragglers don't cascade delay into the other in-flight jobs.
 
 use crate::cluster::straggler::WorkerFate;
 use crate::engine::TaskEngine;
 use crate::fcdcc::{WorkerPayload, WorkerResult};
-use std::collections::VecDeque;
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::collections::{HashSet, VecDeque};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -23,8 +27,10 @@ pub enum WorkerMsg {
         payload: Box<WorkerPayload>,
         fate: WorkerFate,
     },
-    /// All jobs with id <= the given one are complete; drop their tasks.
+    /// This specific job is settled (decoded or timed out); drop its task.
     Cancel(u64),
+    /// Every job with id <= the watermark is settled; prune per-job state.
+    CancelUpTo(u64),
     Shutdown,
 }
 
@@ -37,6 +43,44 @@ pub struct WorkerReply {
     pub compute_secs: f64,
     /// The injected delay actually slept.
     pub delay_secs: f64,
+    /// When the worker finished (sent) this reply — lets the master
+    /// account collection time up to arrival rather than up to whenever
+    /// it next drains the channel (they differ under pipelined serving).
+    pub sent_at: Instant,
+}
+
+/// The set of jobs this worker must not compute: a low watermark (all
+/// ids at or below it are settled) plus the individual ids canceled
+/// above it — jobs finish out of order, so both parts are needed.
+struct CancelSet {
+    up_to: u64,
+    ids: HashSet<u64>,
+}
+
+impl CancelSet {
+    fn new() -> Self {
+        Self {
+            up_to: 0,
+            ids: HashSet::new(),
+        }
+    }
+
+    fn cancel(&mut self, id: u64) {
+        if id > self.up_to {
+            self.ids.insert(id);
+        }
+    }
+
+    fn raise_watermark(&mut self, watermark: u64) {
+        if watermark > self.up_to {
+            self.up_to = watermark;
+            self.ids.retain(|&id| id > watermark);
+        }
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        id <= self.up_to || self.ids.contains(&id)
+    }
 }
 
 /// The worker event loop. Runs until `Shutdown` or the channel closes.
@@ -46,7 +90,7 @@ pub fn worker_loop(
     rx: Receiver<WorkerMsg>,
     tx: Sender<WorkerReply>,
 ) {
-    let mut canceled_up_to = 0u64;
+    let mut canceled = CancelSet::new();
     let mut pending: VecDeque<WorkerMsg> = VecDeque::new();
     'outer: loop {
         let msg = match pending.pop_front() {
@@ -58,13 +102,14 @@ pub fn worker_loop(
         };
         match msg {
             WorkerMsg::Shutdown => break,
-            WorkerMsg::Cancel(id) => canceled_up_to = canceled_up_to.max(id),
+            WorkerMsg::Cancel(id) => canceled.cancel(id),
+            WorkerMsg::CancelUpTo(w) => canceled.raise_watermark(w),
             WorkerMsg::Task {
                 job_id,
                 payload,
                 fate,
             } => {
-                if job_id <= canceled_up_to {
+                if canceled.contains(job_id) {
                     continue; // superseded before we even started
                 }
                 let delay = match fate.delay() {
@@ -72,21 +117,29 @@ pub fn worker_loop(
                     None => continue, // failed worker: silently drop the task
                 };
                 if !delay.is_zero() {
-                    std::thread::sleep(delay);
-                    // Drain whatever arrived while we slept; cancellations
-                    // take effect immediately, tasks queue up in order.
+                    // Interruptible straggler sleep: cancellations take
+                    // effect immediately (a Cancel for THIS job abandons
+                    // the subtask instead of sleeping it out), other
+                    // messages queue up in arrival order.
+                    let deadline = Instant::now() + delay;
                     loop {
-                        match rx.try_recv() {
-                            Ok(WorkerMsg::Cancel(id)) => {
-                                canceled_up_to = canceled_up_to.max(id)
-                            }
+                        if canceled.contains(job_id) {
+                            break;
+                        }
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match rx.recv_timeout(deadline - now) {
+                            Ok(WorkerMsg::Cancel(id)) => canceled.cancel(id),
+                            Ok(WorkerMsg::CancelUpTo(w)) => canceled.raise_watermark(w),
                             Ok(m) => pending.push_back(m),
-                            Err(TryRecvError::Empty) => break,
-                            Err(TryRecvError::Disconnected) => break 'outer,
+                            Err(RecvTimeoutError::Timeout) => break,
+                            Err(RecvTimeoutError::Disconnected) => break 'outer,
                         }
                     }
-                    if job_id <= canceled_up_to {
-                        continue; // the sleep outlived the job
+                    if canceled.contains(job_id) {
+                        continue; // the job was decoded (or abandoned) without us
                     }
                 }
                 let t0 = Instant::now();
@@ -108,8 +161,43 @@ pub fn worker_loop(
                     result,
                     compute_secs,
                     delay_secs: delay.as_secs_f64(),
+                    sent_at: Instant::now(),
                 });
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_set_tracks_out_of_order_completions() {
+        let mut c = CancelSet::new();
+        c.cancel(5); // job 5 finished before jobs 2..4
+        c.cancel(3);
+        assert!(c.contains(5));
+        assert!(c.contains(3));
+        assert!(!c.contains(2));
+        assert!(!c.contains(4));
+    }
+
+    #[test]
+    fn watermark_prunes_and_subsumes() {
+        let mut c = CancelSet::new();
+        c.cancel(2);
+        c.cancel(7);
+        c.raise_watermark(4);
+        assert!(c.contains(1), "below the watermark");
+        assert!(c.contains(2));
+        assert!(c.contains(4));
+        assert!(c.contains(7), "individual cancel above the watermark");
+        assert!(!c.contains(5));
+        // Pruned ids at or below the watermark; kept the one above.
+        assert_eq!(c.ids.len(), 1);
+        // Watermarks never move backwards.
+        c.raise_watermark(3);
+        assert_eq!(c.up_to, 4);
     }
 }

@@ -1,7 +1,8 @@
 //! High-level coordinator commands — the application layer behind the
 //! `fcdcc` CLI and the examples: single-layer distributed runs, the
-//! cost planner, the numerical-stability report, and the distributed
-//! LeNet-5 serving loop.
+//! cost planner, the numerical-stability report, and the pipelined
+//! distributed LeNet-5 serving loop (see [`serve`] for the
+//! request scheduler over the concurrent job runtime).
 
 pub mod serve;
 pub mod stability;
@@ -29,6 +30,34 @@ pub fn engine_by_name(name: &str) -> Result<Arc<dyn TaskEngine>> {
             "unknown engine {other:?} (expected direct|im2col|pjrt)"
         )),
     }
+}
+
+/// Best-available engine for the examples: the PJRT AOT artifacts when
+/// the `pjrt` feature is enabled and the artifacts load, otherwise the
+/// native im2col fallback. Prints which engine was picked.
+#[cfg(feature = "pjrt")]
+pub fn pjrt_engine_or_native(artifacts_dir: &str) -> Arc<dyn TaskEngine> {
+    match crate::runtime::PjrtService::spawn(artifacts_dir) {
+        Ok(host) => {
+            println!("engine: PJRT (AOT JAX/Pallas artifacts)");
+            let handle = host.handle.clone();
+            // Detach the host: the service lives until all handles drop.
+            std::mem::forget(host);
+            Arc::new(handle)
+        }
+        Err(e) => {
+            println!("engine: native im2col (PJRT unavailable: {e})");
+            Arc::new(Im2colEngine)
+        }
+    }
+}
+
+/// Best-available engine: without the `pjrt` feature this is always the
+/// native im2col engine.
+#[cfg(not(feature = "pjrt"))]
+pub fn pjrt_engine_or_native(_artifacts_dir: &str) -> Arc<dyn TaskEngine> {
+    println!("engine: native im2col (built without the `pjrt` feature)");
+    Arc::new(Im2colEngine)
 }
 
 /// Options for a single-layer distributed run.

@@ -1,17 +1,26 @@
 //! Distributed LeNet-5 serving: the end-to-end driver (DESIGN.md §E2E).
-//! Every convolutional layer of a LeNet-5 runs through the full FCDCC
-//! stack (APCP/KCCP → CRME encode → simulated cluster with stragglers →
-//! first-δ decode); pooling, ReLU and the FC head run on the master, as
-//! in the paper (CDC is applied to ConvLs only).
+//! Every convolutional layer runs through the full FCDCC stack
+//! (APCP/KCCP → CRME encode → coded cluster with stragglers → first-δ
+//! decode); pooling, ReLU and the FC head run on the master, as in the
+//! paper (CDC is applied to ConvLs only).
+//!
+//! Serving is a **pipelined request scheduler** over the concurrent job
+//! runtime: up to [`ServeConfig::max_in_flight`] requests are in flight
+//! at once, so while request *i*'s conv2 job is collecting results,
+//! request *i+1*'s conv1 is already encoded and dispatched on the same
+//! worker pool. Depth 1 degenerates to the old strictly-sequential
+//! serving loop — same code path, no overlap.
 
-use crate::cluster::{Cluster, StragglerModel};
+use crate::cluster::{Cluster, JobHandle, StragglerModel};
 use crate::engine::TaskEngine;
-use crate::fcdcc::FcdccPlan;
+use crate::fcdcc::NetworkPlan;
 use crate::metrics::Stats;
-use crate::model::{network::softmax, Layer, Network};
-use crate::tensor::{Tensor3, Tensor4};
+use crate::model::network::softmax;
+use crate::model::{Activation, Network};
+use crate::tensor::Tensor3;
 use crate::util::{mse, rng::Rng};
-use anyhow::{anyhow, Result};
+use anyhow::{ensure, Result};
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -24,11 +33,19 @@ pub struct ServeConfig {
     /// (k_A, k_B) per conv layer (conv1, conv2).
     pub partitions: [(usize, usize); 2],
     pub seed: u64,
+    /// Maximum requests concurrently in flight on the cluster
+    /// (1 = strictly sequential serving).
+    pub max_in_flight: usize,
+    /// Check every k-th request (0, k, 2k, …) against the single-node
+    /// reference forward pass. 0 disables verification entirely, so
+    /// throughput numbers aren't dominated by the uncoded reference.
+    pub verify_every: usize,
 }
 
 impl ServeConfig {
     /// The default configuration matching the AOT artifact set:
-    /// conv1 (4,2), conv2 (2,2), n = 4 workers.
+    /// conv1 (4,2), conv2 (2,2), n = 4 workers, sequential serving with
+    /// every request verified.
     pub fn default_with_engine(engine: Arc<dyn TaskEngine>) -> Self {
         Self {
             n_workers: 4,
@@ -37,6 +54,8 @@ impl ServeConfig {
             engine,
             partitions: [(4, 2), (2, 2)],
             seed: 2024,
+            max_in_flight: 1,
+            verify_every: 1,
         }
     }
 }
@@ -44,147 +63,197 @@ impl ServeConfig {
 /// Serving-loop results.
 #[derive(Clone, Debug)]
 pub struct ServeStats {
+    /// Per-request latency, admission → logits (includes queueing under
+    /// pipelined serving).
     pub latency: Stats,
     pub throughput_rps: f64,
     pub decode: Stats,
-    /// Logit MSE vs the single-node forward pass, averaged over requests.
+    /// Logit MSE vs the single-node forward pass, averaged over the
+    /// verified requests (0.0 when verification is disabled).
     pub mean_logit_mse: f64,
-    /// Requests whose argmax class differed from the reference.
+    /// Verified requests whose argmax class differed from the reference.
     pub class_mismatches: usize,
     pub requests: usize,
+    /// Requests actually checked against the reference.
+    pub verified: usize,
+    /// The in-flight depth the scheduler ran with.
+    pub max_in_flight: usize,
+    /// Final logits of every request, in request order.
+    pub logits: Vec<Vec<f64>>,
 }
 
-struct ConvStage {
-    plan: FcdccPlan,
-    coded_filters: Vec<Vec<Tensor4>>,
-    bias: Vec<f64>,
+/// One request moving through the pipeline: its activation, its position
+/// in the layer sequence, and (at most) one outstanding conv job.
+struct InFlightRequest {
+    a: Activation,
+    layer_idx: usize,
+    pending: Option<(usize, JobHandle)>,
+    done: bool,
+    /// Kept only for requests selected for reference verification.
+    input: Option<Tensor3>,
+    admitted_at: Instant,
+    /// Set when the request runs out of layers; retirement (and the
+    /// verification pass) may happen later, but latency ends here.
+    finished_at: Option<Instant>,
 }
 
 /// Run the distributed LeNet-5 serving loop; returns latency/throughput
 /// plus fidelity vs the single-node reference.
 pub fn serve_lenet(cfg: ServeConfig) -> Result<ServeStats> {
+    ensure!(cfg.requests > 0, "need at least one request");
+    ensure!(cfg.max_in_flight >= 1, "max_in_flight must be >= 1");
     let net = Network::lenet5_random(42);
-    // Pull the two conv layers' weights out of the network definition.
-    let mut stages: Vec<ConvStage> = Vec::new();
-    for layer in &net.layers {
-        if let Layer::Conv {
-            shape,
-            weights,
-            bias,
-        } = layer
-        {
-            let (k_a, k_b) = cfg.partitions[stages.len()];
-            let plan = FcdccPlan::new_crme(shape, k_a, k_b, cfg.n_workers)?;
-            let coded_filters = plan.encode_filters(weights);
-            stages.push(ConvStage {
-                plan,
-                coded_filters,
-                bias: bias.clone(),
-            });
-        }
-    }
-    if stages.len() != 2 {
-        return Err(anyhow!("expected 2 conv layers in LeNet-5"));
-    }
-
+    let plan = NetworkPlan::new(net, &cfg.partitions, cfg.n_workers)?;
     let mut cluster = Cluster::new(cfg.n_workers, Arc::clone(&cfg.engine));
-    let mut rng = Rng::new(cfg.seed);
+    let stats = run_pipeline(&plan, &mut cluster, &cfg);
+    cluster.shutdown();
+    stats
+}
+
+fn run_pipeline(
+    plan: &NetworkPlan,
+    cluster: &mut Cluster,
+    cfg: &ServeConfig,
+) -> Result<ServeStats> {
+    // Separate input / fate streams so request inputs are identical at
+    // any pipeline depth (fate draws interleave differently once jobs
+    // overlap, inputs must not).
+    let mut input_rng = Rng::new(cfg.seed);
+    let mut fate_rng = Rng::new(cfg.seed ^ 0x9E37_79B9_7F4A_7C15);
+    let mut next_req = 0usize;
+    let mut active: VecDeque<InFlightRequest> = VecDeque::new();
     let mut latencies = Vec::with_capacity(cfg.requests);
     let mut decodes = Vec::new();
-    let mut mses = Vec::with_capacity(cfg.requests);
+    let mut logits: Vec<Vec<f64>> = Vec::with_capacity(cfg.requests);
+    let mut mses = Vec::new();
     let mut mismatches = 0usize;
     let t_all = Instant::now();
 
-    for _ in 0..cfg.requests {
-        let x = Tensor3::random(1, 32, 32, &mut rng);
-        let t0 = Instant::now();
+    while next_req < cfg.requests || !active.is_empty() {
+        // Admit new requests up to the pipeline depth.
+        while active.len() < cfg.max_in_flight && next_req < cfg.requests {
+            let x = Tensor3::random(1, 32, 32, &mut input_rng);
+            let verify = cfg.verify_every > 0 && next_req % cfg.verify_every == 0;
+            active.push_back(InFlightRequest {
+                a: Activation::new(&x),
+                layer_idx: 0,
+                pending: None,
+                done: false,
+                input: verify.then_some(x),
+                admitted_at: Instant::now(),
+                finished_at: None,
+            });
+            next_req += 1;
+        }
 
-        // conv1 distributed + bias + relu + pool
-        let mut stage_idx = 0usize;
-        let mut t = x.clone();
-        let mut logits: Vec<f64> = Vec::new();
-        let mut flat: Option<Vec<f64>> = None;
-        for layer in &net.layers {
-            match layer {
-                Layer::Conv { .. } => {
-                    let stage = &stages[stage_idx];
-                    stage_idx += 1;
-                    let (mut y, report) = cluster.run_job(
-                        &stage.plan,
-                        &t,
-                        &stage.coded_filters,
-                        &cfg.straggler,
-                        &mut rng,
-                    )?;
-                    decodes.push(report.decode_secs);
-                    for n in 0..y.c {
-                        let base = y.idx(n, 0, 0);
-                        let plane = y.h * y.w;
-                        for v in &mut y.data[base..base + plane] {
-                            *v += stage.bias[n];
-                        }
-                    }
-                    t = y;
-                }
-                Layer::Relu => {
-                    if let Some(f) = &mut flat {
-                        for v in f.iter_mut() {
-                            if *v < 0.0 {
-                                *v = 0.0;
-                            }
-                        }
-                    } else {
-                        t.relu_inplace();
-                    }
-                }
-                Layer::MaxPool { size, stride } => {
-                    t = crate::model::network::pool(&t, *size, *stride, true);
-                }
-                Layer::AvgPool { size, stride } => {
-                    t = crate::model::network::pool(&t, *size, *stride, false);
-                }
-                Layer::Dense { w, b } => {
-                    let input = flat.take().unwrap_or_else(|| t.data.clone());
-                    let mut y = w.matvec(&input);
-                    for (yi, bi) in y.iter_mut().zip(b) {
-                        *yi += bi;
-                    }
-                    flat = Some(y);
+        // Non-blocking sweep: absorb any finished conv jobs, run
+        // master-side layers, dispatch next conv jobs. This is where
+        // request i+1's conv1 is encoded and dispatched while request
+        // i's conv2 is still in flight.
+        for req in active.iter_mut() {
+            advance(plan, cluster, cfg, req, &mut fate_rng, &mut decodes, false)?;
+        }
+
+        // Retire finished requests in FIFO order.
+        while active.front().is_some_and(|r| r.done) {
+            let req = active.pop_front().expect("front exists");
+            let finished = req.finished_at.unwrap_or_else(Instant::now);
+            latencies.push(
+                finished
+                    .saturating_duration_since(req.admitted_at)
+                    .as_secs_f64(),
+            );
+            let out = req.a.into_logits();
+            if let Some(x) = req.input {
+                let want = plan.forward_reference(&x);
+                mses.push(mse(&out, &want));
+                if argmax(&softmax(&out)) != argmax(&softmax(&want)) {
+                    mismatches += 1;
                 }
             }
+            logits.push(out);
         }
-        if let Some(f) = flat {
-            logits = f;
-        }
-        latencies.push(t0.elapsed().as_secs_f64());
 
-        // Fidelity vs single-node reference.
-        let want = net.forward(&x);
-        mses.push(mse(&logits, &want));
-        let argmax = |v: &[f64]| {
-            v.iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap()
-        };
-        let p_got = softmax(&logits);
-        let p_want = softmax(&want);
-        if argmax(&p_got) != argmax(&p_want) {
-            mismatches += 1;
+        // Guarantee progress: block on the oldest outstanding job.
+        if let Some(req) = active.front_mut() {
+            if !req.done {
+                advance(plan, cluster, cfg, req, &mut fate_rng, &mut decodes, true)?;
+            }
         }
     }
     let total = t_all.elapsed().as_secs_f64();
-    cluster.shutdown();
 
+    let verified = mses.len();
     Ok(ServeStats {
-        latency: Stats::from(&latencies),
+        latency: Stats::from_or_zero(&latencies),
         throughput_rps: cfg.requests as f64 / total,
-        decode: Stats::from(&decodes),
-        mean_logit_mse: mses.iter().sum::<f64>() / mses.len() as f64,
+        decode: Stats::from_or_zero(&decodes),
+        mean_logit_mse: if mses.is_empty() {
+            0.0
+        } else {
+            mses.iter().sum::<f64>() / verified as f64
+        },
         class_mismatches: mismatches,
         requests: cfg.requests,
+        verified,
+        max_in_flight: cfg.max_in_flight,
+        logits,
     })
+}
+
+/// Advance one request as far as possible. With `block == false` this
+/// never waits: a still-collecting conv job leaves the request parked.
+/// With `block == true` it waits for the outstanding job once, absorbs
+/// it, and then continues non-blocking (running local layers and
+/// dispatching the request's next conv job).
+fn advance(
+    plan: &NetworkPlan,
+    cluster: &mut Cluster,
+    cfg: &ServeConfig,
+    req: &mut InFlightRequest,
+    fate_rng: &mut Rng,
+    decodes: &mut Vec<f64>,
+    block: bool,
+) -> Result<()> {
+    if req.done {
+        return Ok(());
+    }
+    let mut may_block = block;
+    loop {
+        if let Some((stage, handle)) = req.pending.take() {
+            if !may_block && !cluster.job_ready(&handle)? {
+                req.pending = Some((stage, handle));
+                return Ok(());
+            }
+            may_block = false; // at most one blocking wait per call
+            let (y, report) = cluster.wait(&plan.stages()[stage].plan, handle)?;
+            decodes.push(report.decode_secs);
+            plan.absorb_conv_output(stage, y, &mut req.a, &mut req.layer_idx);
+        }
+        match plan.run_local(&mut req.a, &mut req.layer_idx) {
+            Some(stage) => {
+                let handle =
+                    plan.stages()[stage].submit(cluster, &req.a, &cfg.straggler, fate_rng)?;
+                req.pending = Some((stage, handle));
+                if !may_block {
+                    return Ok(());
+                }
+            }
+            None => {
+                req.done = true;
+                req.finished_at = Some(Instant::now());
+                return Ok(());
+            }
+        }
+    }
+}
+
+fn argmax(v: &[f64]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
 }
 
 #[cfg(test)]
@@ -203,8 +272,46 @@ mod tests {
         };
         let stats = serve_lenet(cfg).unwrap();
         assert_eq!(stats.requests, 3);
+        assert_eq!(stats.verified, 3);
         assert_eq!(stats.class_mismatches, 0);
         assert!(stats.mean_logit_mse < 1e-16, "mse={:e}", stats.mean_logit_mse);
         assert!(stats.throughput_rps > 0.0);
+        assert_eq!(stats.logits.len(), 3);
+    }
+
+    #[test]
+    fn pipelined_serve_matches_single_node() {
+        let mut cfg = ServeConfig::default_with_engine(Arc::new(Im2colEngine));
+        cfg.requests = 5;
+        cfg.max_in_flight = 3;
+        cfg.straggler = StragglerModel::FixedCount {
+            count: 1,
+            delay: Duration::from_millis(20),
+        };
+        let stats = serve_lenet(cfg).unwrap();
+        assert_eq!(stats.requests, 5);
+        assert_eq!(stats.verified, 5);
+        assert_eq!(stats.class_mismatches, 0);
+        assert!(stats.mean_logit_mse < 1e-16, "mse={:e}", stats.mean_logit_mse);
+        assert_eq!(stats.logits.len(), 5);
+        assert_eq!(stats.max_in_flight, 3);
+    }
+
+    #[test]
+    fn verification_sampling() {
+        let mut cfg = ServeConfig::default_with_engine(Arc::new(Im2colEngine));
+        cfg.requests = 5;
+        cfg.verify_every = 2; // requests 0, 2, 4
+        let stats = serve_lenet(cfg).unwrap();
+        assert_eq!(stats.verified, 3);
+        assert_eq!(stats.class_mismatches, 0);
+
+        let mut cfg = ServeConfig::default_with_engine(Arc::new(Im2colEngine));
+        cfg.requests = 2;
+        cfg.verify_every = 0; // throughput mode: no reference pass
+        let stats = serve_lenet(cfg).unwrap();
+        assert_eq!(stats.verified, 0);
+        assert_eq!(stats.mean_logit_mse, 0.0);
+        assert_eq!(stats.logits.len(), 2);
     }
 }

@@ -4,8 +4,14 @@
 //!
 //! * [`DirectEngine`] — the naive triple-loop oracle,
 //! * [`Im2colEngine`] — im2col + GEMM (the optimized CPU path),
-//! * `runtime::PjrtEngine` — the AOT-compiled JAX/Pallas artifact
-//!   executed via PJRT (the L1/L2 layers of the stack).
+//! * `runtime::PjrtService` (feature `pjrt`) — the AOT-compiled
+//!   JAX/Pallas artifact executed via PJRT (the L1/L2 layers of the
+//!   stack).
+//!
+//! Engines are shared (`Arc`) across all workers of a cluster, and under
+//! the concurrent job runtime a single engine instance serves subtasks
+//! of many overlapping jobs — implementations must be `Send + Sync` and
+//! reentrant.
 
 use crate::fcdcc::{WorkerPayload, WorkerResult};
 use crate::tensor::{conv2d, im2col::conv2d_im2col, ConvParams, Tensor3, Tensor4};

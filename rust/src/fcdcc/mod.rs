@@ -4,9 +4,11 @@
 //! model and optimizer (§IV-E).
 
 pub mod cost;
+pub mod network_plan;
 pub mod pipeline;
 pub mod pooling;
 
 pub use cost::{CostModel, CostBreakdown, PlanChoice};
+pub use network_plan::{ConvStage, NetworkPlan};
 pub use pipeline::{FcdccPlan, WorkerPayload, WorkerResult};
 pub use pooling::CodedAvgPool;

@@ -1,0 +1,195 @@
+//! Whole-network FCDCC planning: plan every conv layer of a [`Network`]
+//! **once** — an [`FcdccPlan`] plus `Arc`-shared resident coded filter
+//! slabs per layer — and own the forward-pass walk over the layer
+//! sequence. Both the blocking single-request path
+//! ([`NetworkPlan::forward_distributed`]) and the pipelined request
+//! scheduler (`coordinator::serve`) are built from the same two steps:
+//! [`NetworkPlan::run_local`] advances an [`Activation`] through
+//! master-side layers up to the next conv, and
+//! [`NetworkPlan::absorb_conv_output`] folds a decoded conv job's output
+//! back in. That keeps the layer semantics in exactly one place
+//! (`Network::apply_local`) instead of the two near-identical loops the
+//! pre-runtime code carried.
+
+use crate::cluster::{Cluster, JobHandle, JobReport, StragglerModel};
+use crate::fcdcc::FcdccPlan;
+use crate::model::network::add_bias;
+use crate::model::{Activation, Layer, Network};
+use crate::tensor::{Tensor3, Tensor4};
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// One planned conv layer: code/geometry plan, resident coded filters
+/// (encoded once at model load, shared across every request), bias.
+pub struct ConvStage {
+    pub plan: FcdccPlan,
+    pub coded_filters: Vec<Arc<Vec<Tensor4>>>,
+    pub bias: Vec<f64>,
+    /// Index of this conv in the network's layer sequence.
+    pub layer_idx: usize,
+}
+
+impl ConvStage {
+    /// Dispatch this stage's coded job for one activation (non-blocking).
+    pub fn submit(
+        &self,
+        cluster: &mut Cluster,
+        a: &Activation,
+        straggler: &StragglerModel,
+        rng: &mut Rng,
+    ) -> Result<JobHandle> {
+        cluster.submit(&self.plan, a.spatial(), &self.coded_filters, straggler, rng)
+    }
+}
+
+/// A network compiled against a coded cluster: per-conv [`ConvStage`]s
+/// plus the shared forward-pass walk.
+pub struct NetworkPlan {
+    net: Network,
+    stages: Vec<ConvStage>,
+}
+
+impl NetworkPlan {
+    /// Plan every conv layer of `net` with the given per-conv `(k_A,
+    /// k_B)` partitions on an `n_workers` cluster, encoding each filter
+    /// bank once (the paper's steady-state model: coded filter slabs are
+    /// resident on the workers across requests).
+    pub fn new(net: Network, partitions: &[(usize, usize)], n_workers: usize) -> Result<Self> {
+        let mut stages = Vec::new();
+        for (layer_idx, layer) in net.layers.iter().enumerate() {
+            if let Layer::Conv {
+                shape,
+                weights,
+                bias,
+            } = layer
+            {
+                ensure!(
+                    stages.len() < partitions.len(),
+                    "network has more conv layers than (k_A,k_B) pairs"
+                );
+                let (k_a, k_b) = partitions[stages.len()];
+                let plan = FcdccPlan::new_crme(shape, k_a, k_b, n_workers)?;
+                let coded_filters = plan.encode_filters(weights);
+                stages.push(ConvStage {
+                    plan,
+                    coded_filters,
+                    bias: bias.clone(),
+                    layer_idx,
+                });
+            }
+        }
+        ensure!(
+            stages.len() == partitions.len(),
+            "got {} (k_A,k_B) pairs for {} conv layers",
+            partitions.len(),
+            stages.len()
+        );
+        Ok(Self { net, stages })
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    pub fn stages(&self) -> &[ConvStage] {
+        &self.stages
+    }
+
+    /// Advance `a` through master-side (non-conv) layers starting at
+    /// `*layer_idx`. Returns the stage index of the next conv layer (with
+    /// `*layer_idx` pointing at that conv), or `None` when the pass
+    /// finished (`*layer_idx` one past the end).
+    pub fn run_local(&self, a: &mut Activation, layer_idx: &mut usize) -> Option<usize> {
+        while *layer_idx < self.net.layers.len() {
+            let layer = &self.net.layers[*layer_idx];
+            if matches!(layer, Layer::Conv { .. }) {
+                return Some(self.stage_at(*layer_idx));
+            }
+            self.net.apply_local(layer, a);
+            *layer_idx += 1;
+        }
+        None
+    }
+
+    fn stage_at(&self, layer_idx: usize) -> usize {
+        self.stages
+            .iter()
+            .position(|s| s.layer_idx == layer_idx)
+            .expect("every conv layer was planned")
+    }
+
+    /// Fold a decoded conv output back into the activation (per-channel
+    /// bias epilogue) and step past the conv layer.
+    pub fn absorb_conv_output(
+        &self,
+        stage: usize,
+        mut y: Tensor3,
+        a: &mut Activation,
+        layer_idx: &mut usize,
+    ) {
+        add_bias(&mut y, &self.stages[stage].bias);
+        a.set_spatial(y);
+        *layer_idx += 1;
+    }
+
+    /// One distributed forward pass, blocking per conv layer — the
+    /// single-request path shared by tests and examples. Returns the
+    /// logits plus one [`JobReport`] per conv stage.
+    pub fn forward_distributed(
+        &self,
+        cluster: &mut Cluster,
+        x: &Tensor3,
+        straggler: &StragglerModel,
+        rng: &mut Rng,
+    ) -> Result<(Vec<f64>, Vec<JobReport>)> {
+        let mut reports = Vec::with_capacity(self.stages.len());
+        let mut a = Activation::new(x);
+        let mut layer_idx = 0usize;
+        while let Some(s) = self.run_local(&mut a, &mut layer_idx) {
+            let handle = self.stages[s].submit(cluster, &a, straggler, rng)?;
+            let (y, report) = cluster.wait(&self.stages[s].plan, handle)?;
+            reports.push(report);
+            self.absorb_conv_output(s, y, &mut a, &mut layer_idx);
+        }
+        Ok((a.into_logits(), reports))
+    }
+
+    /// Single-node reference forward pass (the fidelity oracle).
+    pub fn forward_reference(&self, x: &Tensor3) -> Vec<f64> {
+        self.net.forward(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Im2colEngine;
+    use crate::util::mse;
+
+    #[test]
+    fn plans_lenet_and_matches_reference() {
+        let net = Network::lenet5_random(31);
+        let plan = NetworkPlan::new(net, &[(4, 2), (2, 2)], 4).unwrap();
+        assert_eq!(plan.stages().len(), 2);
+        let mut cluster = Cluster::new(4, Arc::new(Im2colEngine));
+        let mut rng = Rng::new(1);
+        let x = Tensor3::random(1, 32, 32, &mut rng);
+        let want = plan.forward_reference(&x);
+        let (got, reports) = plan
+            .forward_distributed(&mut cluster, &x, &StragglerModel::None, &mut rng)
+            .unwrap();
+        cluster.shutdown();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(got.len(), want.len());
+        assert!(mse(&got, &want) < 1e-16);
+    }
+
+    #[test]
+    fn partition_count_must_match_conv_count() {
+        let net = Network::lenet5_random(32);
+        assert!(NetworkPlan::new(net, &[(4, 2)], 4).is_err());
+        let net = Network::lenet5_random(32);
+        assert!(NetworkPlan::new(net, &[(4, 2), (2, 2), (2, 2)], 4).is_err());
+    }
+}

@@ -25,8 +25,10 @@ pub struct WorkerPayload {
     pub worker_id: usize,
     /// ℓ_A coded input slabs.
     pub inputs: Vec<Tensor3>,
-    /// ℓ_B coded filter slabs (pre-distributed in steady state).
-    pub filters: Vec<Tensor4>,
+    /// ℓ_B coded filter slabs. Pre-distributed in steady state (paper:
+    /// filters are encoded once at model load), so every job sharing the
+    /// resident slabs clones an `Arc`, never the tensors themselves.
+    pub filters: Arc<Vec<Tensor4>>,
     /// Convolution parameters for the slab-level conv (stride s, pad 0 —
     /// APCP already materialized the padding).
     pub conv: ConvParams,
@@ -52,10 +54,13 @@ impl WorkerPayload {
     }
 
     /// Execute with a custom conv engine.
-    pub fn run_with(&self, conv: impl Fn(&Tensor3, &Tensor4, ConvParams) -> Tensor3) -> WorkerResult {
+    pub fn run_with(
+        &self,
+        conv: impl Fn(&Tensor3, &Tensor4, ConvParams) -> Tensor3,
+    ) -> WorkerResult {
         let mut blocks = Vec::with_capacity(self.inputs.len() * self.filters.len());
         for xa in &self.inputs {
-            for kb in &self.filters {
+            for kb in self.filters.iter() {
                 blocks.push(conv(xa, kb, self.conv));
             }
         }
@@ -124,10 +129,14 @@ impl FcdccPlan {
     }
 
     /// Encode the filter bank once (model initialization): per-worker
-    /// resident coded filter slabs.
-    pub fn encode_filters(&self, k: &Tensor4) -> Vec<Vec<Tensor4>> {
+    /// resident coded filter slabs, `Arc`-shared so that every subsequent
+    /// job reuses them without deep-cloning.
+    pub fn encode_filters(&self, k: &Tensor4) -> Vec<Arc<Vec<Tensor4>>> {
         let parts = self.kccp.partition(k);
         coding::encode_filters(self.code.as_ref(), &parts)
+            .into_iter()
+            .map(Arc::new)
+            .collect()
     }
 
     /// Encode one input tensor (per inference): per-worker coded slabs.
@@ -138,11 +147,12 @@ impl FcdccPlan {
         coding::encode_inputs(self.code.as_ref(), &parts)
     }
 
-    /// Bundle payloads for all n workers.
+    /// Bundle payloads for all n workers. The resident coded filter slabs
+    /// are shared by reference (`Arc`), not copied per job.
     pub fn make_payloads(
         &self,
         coded_inputs: Vec<Vec<Tensor3>>,
-        coded_filters: &[Vec<Tensor4>],
+        coded_filters: &[Arc<Vec<Tensor4>>],
     ) -> Vec<WorkerPayload> {
         let conv = ConvParams::new(self.layer.stride, 0);
         coded_inputs
@@ -152,7 +162,7 @@ impl FcdccPlan {
             .map(|(worker_id, (inputs, filters))| WorkerPayload {
                 worker_id,
                 inputs,
-                filters: filters.clone(),
+                filters: Arc::clone(filters),
                 conv,
             })
             .collect()
@@ -282,6 +292,22 @@ mod tests {
         let plan = FcdccPlan::new_crme(&layer, 2, 2, 3).unwrap(); // delta=1
         let r: Vec<WorkerResult> = vec![];
         assert!(plan.decode(&r).is_err());
+    }
+
+    #[test]
+    fn payloads_share_resident_filters() {
+        // Steady-state model: coded filter slabs are encoded once and
+        // shared across jobs — payload construction must not deep-clone.
+        let layer = ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0);
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap();
+        let mut rng = Rng::new(55);
+        let x = Tensor3::random(2, 12, 10, &mut rng);
+        let k = Tensor4::random(8, 2, 3, 3, &mut rng);
+        let cf = plan.encode_filters(&k);
+        let payloads = plan.make_payloads(plan.encode_input(&x), &cf);
+        for (p, f) in payloads.iter().zip(&cf) {
+            assert!(Arc::ptr_eq(&p.filters, f), "filter slabs were copied");
+        }
     }
 
     #[test]

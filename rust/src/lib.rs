@@ -11,7 +11,9 @@
 //!   baselines and rival coding schemes.
 //! * **L2/L1 (`python/compile`)** — build-time JAX worker-task graph and
 //!   Pallas convolution kernel, AOT-lowered to HLO text artifacts that
-//!   the [`runtime`] module loads and executes via PJRT (`xla` crate).
+//!   the `runtime` module loads and executes via PJRT (`xla` crate).
+//!   The runtime is gated behind the off-by-default `pjrt` feature, since
+//!   the `xla` dependency is unavailable in the offline build environment.
 //!
 //! See `DESIGN.md` for the full system inventory and per-experiment index.
 
@@ -29,6 +31,7 @@ pub mod metrics;
 pub mod model;
 pub mod partition;
 pub mod prop;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tensor;
 pub mod util;

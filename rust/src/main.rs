@@ -16,7 +16,6 @@ use fcdcc::coordinator::{self, stability, RunConfig, ServeConfig};
 use fcdcc::engine::TaskEngine;
 use fcdcc::metrics::{fmt_sci, Table};
 use fcdcc::model::zoo;
-use fcdcc::runtime::PjrtService;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -30,17 +29,28 @@ USAGE:
   fcdcc optimize  [--arch NAME] [--q Q1,Q2,...]
   fcdcc stability [--samples N] [--seed S]
   fcdcc serve     [--requests R] [--n N] [--stragglers S] [--delay-ms MS]
-                  [--engine direct|im2col|pjrt]
-  fcdcc artifacts [--dir DIR]
+                  [--engine direct|im2col|pjrt] [--depth D]
+                  [--verify-every K]
+  fcdcc artifacts [--dir DIR]   (needs the `pjrt` feature)
 ";
+
+#[cfg(feature = "pjrt")]
+fn pjrt_engine(artifacts_dir: &str) -> Result<Arc<dyn TaskEngine>> {
+    let host = fcdcc::runtime::PjrtService::spawn(artifacts_dir)?;
+    let handle = host.handle.clone();
+    // Detach the host: the service lives until all handles drop.
+    std::mem::forget(host);
+    Ok(Arc::new(handle))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_engine(_artifacts_dir: &str) -> Result<Arc<dyn TaskEngine>> {
+    bail!("built without the `pjrt` feature (enable it and add the `xla` dependency)")
+}
 
 fn resolve_engine(name: &str, artifacts_dir: &str) -> Result<Arc<dyn TaskEngine>> {
     if name == "pjrt" {
-        let host = PjrtService::spawn(artifacts_dir)?;
-        let handle = host.handle.clone();
-        // Detach the host: the service lives until all handles drop.
-        std::mem::forget(host);
-        Ok(Arc::new(handle))
+        pjrt_engine(artifacts_dir)
     } else {
         coordinator::engine_by_name(name)
     }
@@ -140,6 +150,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = ServeConfig::default_with_engine(engine);
     cfg.requests = args.get_usize("requests", 16)?;
     cfg.n_workers = args.get_usize("n", 4)?;
+    cfg.max_in_flight = args.get_usize("depth", 1)?;
+    cfg.verify_every = args.get_usize("verify-every", 1)?;
     let stragglers = args.get_usize("stragglers", 0)?;
     if stragglers > 0 {
         cfg.straggler = StragglerModel::FixedCount {
@@ -149,29 +161,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let stats = coordinator::serve_lenet(cfg)?;
     println!(
-        "served {} requests: mean latency {:.2}ms (p95 {:.2}ms), throughput {:.1} req/s",
+        "served {} requests (depth {}): mean latency {:.2}ms (p95 {:.2}ms), {:.1} req/s",
         stats.requests,
+        stats.max_in_flight,
         stats.latency.mean * 1e3,
         stats.latency.p95 * 1e3,
         stats.throughput_rps
     );
     println!(
-        "decode mean {:.3}ms | logit MSE {} | class mismatches {}/{}",
+        "decode mean {:.3}ms | logit MSE {} | class mismatches {}/{} verified",
         stats.decode.mean * 1e3,
         fmt_sci(stats.mean_logit_mse),
         stats.class_mismatches,
-        stats.requests
+        stats.verified
     );
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_artifacts(args: &Args) -> Result<()> {
     let dir = args.get_str("dir", "artifacts");
     let manifest = fcdcc::runtime::Manifest::load(
         std::path::Path::new(dir).join("manifest.json").as_path(),
     )?;
     println!("manifest OK: {} artifacts", manifest.artifacts.len());
-    let host = PjrtService::spawn(dir)?;
+    let host = fcdcc::runtime::PjrtService::spawn(dir)?;
     println!("PJRT compile OK (all artifacts)");
     drop(host);
     for a in &manifest.artifacts {
@@ -181,6 +195,11 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_artifacts(_args: &Args) -> Result<()> {
+    bail!("the artifacts command needs the `pjrt` feature (and the `xla` dependency)")
 }
 
 fn main() -> Result<()> {

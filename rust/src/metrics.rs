@@ -15,6 +15,24 @@ pub struct Stats {
 }
 
 impl Stats {
+    /// Like [`Stats::from`], but an empty sample (e.g. a serving run with
+    /// verification or decode accounting disabled) yields all-zero stats
+    /// instead of panicking.
+    pub fn from_or_zero(samples: &[f64]) -> Stats {
+        if samples.is_empty() {
+            return Stats {
+                n: 0,
+                mean: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                std: 0.0,
+            };
+        }
+        Stats::from(samples)
+    }
+
     pub fn from(samples: &[f64]) -> Stats {
         assert!(!samples.is_empty(), "Stats::from on empty sample");
         let mut s: Vec<f64> = samples.to_vec();
@@ -127,6 +145,14 @@ mod tests {
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
         assert!((s.std - 2f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_or_zero_tolerates_empty() {
+        let s = Stats::from_or_zero(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+        assert_eq!(Stats::from_or_zero(&[1.0, 3.0]).mean, 2.0);
     }
 
     #[test]

@@ -7,4 +7,4 @@ pub mod network;
 pub mod zoo;
 
 pub use layers::ConvLayer;
-pub use network::{Layer, Network};
+pub use network::{Activation, Layer, Network};

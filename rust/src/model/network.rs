@@ -74,57 +74,111 @@ pub fn softmax(xs: &[f64]) -> Vec<f64> {
     exps.into_iter().map(|e| e / s).collect()
 }
 
+/// The value flowing through a network during a forward pass: a spatial
+/// feature map until the first Dense layer flattens it, a plain vector
+/// afterwards. Requests paused mid-pass (waiting on a distributed conv
+/// job) are represented by exactly this state.
+pub struct Activation {
+    t: Tensor3,
+    flat: Option<Vec<f64>>,
+}
+
+impl Activation {
+    pub fn new(x: &Tensor3) -> Self {
+        Self {
+            t: x.clone(),
+            flat: None,
+        }
+    }
+
+    /// The spatial feature map (the input of the next conv layer).
+    pub fn spatial(&self) -> &Tensor3 {
+        &self.t
+    }
+
+    /// Replace the spatial feature map (a conv layer's output).
+    pub fn set_spatial(&mut self, t: Tensor3) {
+        debug_assert!(self.flat.is_none(), "conv applied after flatten");
+        self.t = t;
+    }
+
+    /// Finish the pass: the logits vector (or the flattened feature map
+    /// when the network has no Dense head).
+    pub fn into_logits(self) -> Vec<f64> {
+        self.flat.unwrap_or(self.t.data)
+    }
+}
+
+/// Add a per-output-channel bias in place — the master-side epilogue of
+/// both local and distributed conv execution.
+pub fn add_bias(y: &mut Tensor3, bias: &[f64]) {
+    assert_eq!(y.c, bias.len(), "one bias per output channel");
+    let plane = y.h * y.w;
+    for (chunk, b) in y.data.chunks_mut(plane).zip(bias) {
+        for v in chunk {
+            *v += b;
+        }
+    }
+}
+
 impl Network {
     /// Forward pass with the default (local) conv executor.
     pub fn forward(&self, x: &Tensor3) -> Vec<f64> {
         self.forward_with(x, &|x, k, shape| conv2d(x, k, shape.params()))
     }
 
-    /// Forward pass with a custom conv executor (e.g. FCDCC distributed).
-    pub fn forward_with(&self, x: &Tensor3, conv_exec: &ConvExec) -> Vec<f64> {
-        let mut t = x.clone();
-        let mut flat: Option<Vec<f64>> = None;
-        for layer in &self.layers {
-            match layer {
-                Layer::Conv {
-                    shape,
-                    weights,
-                    bias,
-                } => {
-                    let mut y = conv_exec(&t, weights, shape);
-                    for n in 0..y.c {
-                        let base = y.idx(n, 0, 0);
-                        let plane = y.h * y.w;
-                        for v in &mut y.data[base..base + plane] {
-                            *v += bias[n];
+    /// Apply one non-convolutional layer in place — the single
+    /// implementation shared by the local forward pass and the
+    /// distributed serving scheduler (`fcdcc::NetworkPlan`).
+    ///
+    /// # Panics
+    /// On a `Conv` layer: convolutions are executed by the caller (either
+    /// locally or through the FCDCC cluster), never here.
+    pub fn apply_local(&self, layer: &Layer, a: &mut Activation) {
+        match layer {
+            Layer::Conv { .. } => panic!("apply_local cannot execute conv layers"),
+            Layer::Relu => {
+                if let Some(f) = &mut a.flat {
+                    for v in f.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
                         }
                     }
-                    t = y;
-                }
-                Layer::Relu => {
-                    if let Some(f) = &mut flat {
-                        for v in f.iter_mut() {
-                            if *v < 0.0 {
-                                *v = 0.0;
-                            }
-                        }
-                    } else {
-                        t.relu_inplace();
-                    }
-                }
-                Layer::MaxPool { size, stride } => t = pool(&t, *size, *stride, true),
-                Layer::AvgPool { size, stride } => t = pool(&t, *size, *stride, false),
-                Layer::Dense { w, b } => {
-                    let input = flat.take().unwrap_or_else(|| t.data.clone());
-                    let mut y = w.matvec(&input);
-                    for (yi, bi) in y.iter_mut().zip(b) {
-                        *yi += bi;
-                    }
-                    flat = Some(y);
+                } else {
+                    a.t.relu_inplace();
                 }
             }
+            Layer::MaxPool { size, stride } => a.t = pool(&a.t, *size, *stride, true),
+            Layer::AvgPool { size, stride } => a.t = pool(&a.t, *size, *stride, false),
+            Layer::Dense { w, b } => {
+                let input = a.flat.take().unwrap_or_else(|| a.t.data.clone());
+                let mut y = w.matvec(&input);
+                for (yi, bi) in y.iter_mut().zip(b) {
+                    *yi += bi;
+                }
+                a.flat = Some(y);
+            }
         }
-        flat.unwrap_or_else(|| t.data.clone())
+    }
+
+    /// Forward pass with a custom conv executor (e.g. FCDCC distributed).
+    pub fn forward_with(&self, x: &Tensor3, conv_exec: &ConvExec) -> Vec<f64> {
+        let mut a = Activation::new(x);
+        for layer in &self.layers {
+            if let Layer::Conv {
+                shape,
+                weights,
+                bias,
+            } = layer
+            {
+                let mut y = conv_exec(a.spatial(), weights, shape);
+                add_bias(&mut y, bias);
+                a.set_spatial(y);
+            } else {
+                self.apply_local(layer, &mut a);
+            }
+        }
+        a.into_logits()
     }
 
     /// LeNet-5 with random (synthetically "trained") weights — the model

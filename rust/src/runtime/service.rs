@@ -70,7 +70,12 @@ impl PjrtService {
     }
 
     /// Execute one worker task by artifact name.
-    pub fn run_named(&self, name: &str, xs: Vec<Tensor3>, ks: Vec<Tensor4>) -> Result<Vec<Tensor3>> {
+    pub fn run_named(
+        &self,
+        name: &str,
+        xs: Vec<Tensor3>,
+        ks: Vec<Tensor4>,
+    ) -> Result<Vec<Tensor3>> {
         let (reply, rx) = channel();
         self.tx
             .send(Request {
@@ -119,7 +124,8 @@ impl TaskEngine for PjrtService {
             k0.kw,
             payload.conv.stride,
         );
-        let blocks = self.run_named(&name, payload.inputs.clone(), payload.filters.clone())?;
+        let blocks =
+            self.run_named(&name, payload.inputs.clone(), payload.filters.as_ref().clone())?;
         Ok(WorkerResult {
             worker_id: payload.worker_id,
             blocks,

@@ -109,7 +109,12 @@ impl<'a> Parser<'a> {
     fn expect(&mut self, b: u8) -> Result<()> {
         match self.bump() {
             Some(x) if x == b => Ok(()),
-            other => bail!("expected {:?} at byte {}, got {:?}", b as char, self.pos, other.map(|c| c as char)),
+            other => bail!(
+                "expected {:?} at byte {}, got {:?}",
+                b as char,
+                self.pos,
+                other.map(|c| c as char)
+            ),
         }
     }
 

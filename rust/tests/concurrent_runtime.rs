@@ -1,0 +1,147 @@
+//! Integration tests for the concurrent job runtime: N overlapping jobs
+//! on one worker pool decode correctly with interleaved and stale
+//! replies, a per-job timeout fires without poisoning the other
+//! in-flight jobs, and pipelined serving produces bit-identical logits
+//! to sequential serving.
+
+use fcdcc::cluster::{Cluster, JobHandle, StragglerModel};
+use fcdcc::coordinator::{serve_lenet, ServeConfig};
+use fcdcc::engine::DirectEngine;
+use fcdcc::fcdcc::FcdccPlan;
+use fcdcc::model::ConvLayer;
+use fcdcc::tensor::{conv2d, Tensor3, Tensor4};
+use fcdcc::util::{mse, rng::Rng};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn setup() -> (ConvLayer, Tensor4) {
+    let layer = ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0);
+    let mut rng = Rng::new(321);
+    let k = Tensor4::random(8, 2, 3, 3, &mut rng);
+    (layer, k)
+}
+
+#[test]
+fn overlapping_jobs_decode_correctly_with_interleaved_replies() {
+    let (layer, k) = setup();
+    let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap(); // delta=2, gamma=2
+    let cf = plan.encode_filters(&k);
+    let mut cluster = Cluster::new(4, Arc::new(DirectEngine));
+    let mut rng = Rng::new(1);
+    // Distinct inputs so a cross-routed reply would corrupt the output.
+    let inputs: Vec<Tensor3> = (0..4).map(|_| Tensor3::random(2, 12, 10, &mut rng)).collect();
+    let straggler = StragglerModel::FixedCount {
+        count: 2,
+        delay: Duration::from_millis(40),
+    };
+    let handles: Vec<JobHandle> = inputs
+        .iter()
+        .map(|x| cluster.submit(&plan, x, &cf, &straggler, &mut rng).unwrap())
+        .collect();
+    assert_eq!(cluster.in_flight(), 4);
+    // Wait in reverse submission order: collecting job 4 first forces the
+    // collector to demultiplex jobs 1-3's replies (and the stragglers'
+    // stale late replies) into the in-flight table instead of dropping
+    // or misattributing them.
+    for (x, handle) in inputs.iter().zip(handles).rev() {
+        let (y, report) = cluster.wait(&plan, handle).unwrap();
+        let want = conv2d(x, &k, layer.params());
+        assert!(mse(&y.data, &want.data) < 1e-18, "wrong decode for job");
+        assert_eq!(report.used_workers.len(), 2);
+    }
+    assert_eq!(cluster.in_flight(), 0);
+    cluster.shutdown();
+}
+
+#[test]
+fn many_sequentially_waited_jobs_overlap_with_stale_replies() {
+    let (layer, k) = setup();
+    let plan = FcdccPlan::new_crme(&layer, 4, 2, 5).unwrap(); // delta=2, gamma=3
+    let cf = plan.encode_filters(&k);
+    let mut cluster = Cluster::new(5, Arc::new(DirectEngine));
+    let mut rng = Rng::new(2);
+    let straggler = StragglerModel::FixedCount {
+        count: 2,
+        delay: Duration::from_millis(25),
+    };
+    // Submit a burst, then wait FIFO while later jobs are still landing:
+    // late replies of already-decoded jobs arrive during the collection
+    // of the following ones and must be discarded as stale.
+    let inputs: Vec<Tensor3> = (0..6).map(|_| Tensor3::random(2, 12, 10, &mut rng)).collect();
+    let handles: Vec<JobHandle> = inputs
+        .iter()
+        .map(|x| cluster.submit(&plan, x, &cf, &straggler, &mut rng).unwrap())
+        .collect();
+    let mut max_concurrent = 0usize;
+    for (x, handle) in inputs.iter().zip(handles) {
+        let (y, report) = cluster.wait(&plan, handle).unwrap();
+        let want = conv2d(x, &k, layer.params());
+        assert!(mse(&y.data, &want.data) < 1e-18);
+        max_concurrent = max_concurrent.max(report.concurrent_jobs);
+    }
+    assert!(max_concurrent >= 2, "jobs never overlapped on the pool");
+    cluster.shutdown();
+}
+
+#[test]
+fn per_job_timeout_does_not_poison_other_jobs() {
+    let (layer, k) = setup();
+    let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap(); // delta=2
+    let cf = plan.encode_filters(&k);
+    let mut cluster = Cluster::new(4, Arc::new(DirectEngine));
+    cluster.collect_timeout = Duration::from_millis(300);
+    let mut rng = Rng::new(3);
+    let x = Tensor3::random(2, 12, 10, &mut rng);
+    let want = conv2d(&x, &k, layer.params());
+
+    // Job A: every worker fails, so it can never reach delta.
+    let doomed = cluster
+        .submit(&plan, &x, &cf, &StragglerModel::Failures { count: 4 }, &mut rng)
+        .unwrap();
+    // Job B overlaps with the doomed job and must be unaffected.
+    let healthy = cluster
+        .submit(&plan, &x, &cf, &StragglerModel::None, &mut rng)
+        .unwrap();
+    assert_eq!(cluster.in_flight(), 2);
+
+    let (y, _) = cluster.wait(&plan, healthy).unwrap();
+    assert!(mse(&y.data, &want.data) < 1e-18);
+
+    let err = cluster.wait(&plan, doomed).unwrap_err();
+    assert!(err.to_string().contains("timed out"), "unexpected error: {err:#}");
+
+    // The pool is still healthy after the timeout.
+    let (y, _) = cluster
+        .run_job(&plan, &x, &cf, &StragglerModel::None, &mut rng)
+        .unwrap();
+    assert!(mse(&y.data, &want.data) < 1e-18);
+    cluster.shutdown();
+}
+
+/// Bit-identical pipelined vs sequential serving. With n = δ every job
+/// needs all workers' replies, and the runtime orders the chosen δ
+/// replies by worker id before decoding — so the decode (and with it
+/// every logit) is deterministic regardless of reply arrival order or
+/// pipeline depth.
+#[test]
+fn pipelined_serving_bit_identical_to_sequential() {
+    let serve = |depth: usize| {
+        let mut cfg = ServeConfig::default_with_engine(Arc::new(DirectEngine));
+        cfg.n_workers = 2;
+        cfg.partitions = [(4, 2), (2, 4)]; // delta = 2 = n for both convs
+        cfg.requests = 4;
+        cfg.seed = 77;
+        cfg.max_in_flight = depth;
+        cfg.verify_every = 1;
+        serve_lenet(cfg).unwrap()
+    };
+    let sequential = serve(1);
+    let pipelined = serve(4);
+    assert_eq!(sequential.class_mismatches, 0);
+    assert_eq!(pipelined.class_mismatches, 0);
+    assert!(sequential.mean_logit_mse < 1e-16);
+    assert_eq!(sequential.logits.len(), pipelined.logits.len());
+    for (i, (a, b)) in sequential.logits.iter().zip(&pipelined.logits).enumerate() {
+        assert_eq!(a, b, "request {i}: pipelined logits diverged bitwise");
+    }
+}

@@ -6,7 +6,10 @@
 //! Requires `make artifacts` (the Makefile test target guarantees it).
 //! If the artifacts directory is missing the tests are skipped with a
 //! loud message rather than failing, so plain `cargo test` works in a
-//! fresh checkout.
+//! fresh checkout. The whole file is compiled only with the `pjrt`
+//! feature (which wraps the `xla` dependency).
+
+#![cfg(feature = "pjrt")]
 
 use fcdcc::cluster::{Cluster, StragglerModel};
 use fcdcc::engine::TaskEngine;
