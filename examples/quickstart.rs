@@ -12,7 +12,7 @@
 
 use anyhow::Result;
 use fcdcc::cluster::{Cluster, StragglerModel};
-use fcdcc::coordinator::pjrt_engine_or_native;
+use fcdcc::coordinator::{pjrt_engine_or_native, serve_lenet, ServeConfig};
 use fcdcc::engine::TaskEngine;
 use fcdcc::fcdcc::FcdccPlan;
 use fcdcc::metrics::{fmt_secs, fmt_sci};
@@ -65,6 +65,36 @@ fn main() -> Result<()> {
     );
     println!("output {:?}, MSE vs reference = {}", y.shape(), fmt_sci(err));
     assert!(err < 1e-20, "decode error too large");
+
+    // 5. Batched coded serving: concurrent LeNet-5 requests reaching the
+    //    same conv stage are coalesced into multi-sample coded jobs, so
+    //    the recovery-matrix inversion is paid once per batch (and mostly
+    //    not at all, thanks to the inverse LRU cache).
+    let mut cfg = ServeConfig::default_with_engine(pjrt_engine_or_native("artifacts"));
+    cfg.requests = 8;
+    cfg.max_in_flight = 4;
+    cfg.batch_window = 4;
+    cfg.straggler = StragglerModel::FixedCount {
+        count: 1,
+        delay: Duration::from_millis(20),
+    };
+    let stats = serve_lenet(cfg)?;
+    println!(
+        "serve: {} requests -> {} coded jobs (mean batch {:.2}), {:.1} req/s",
+        stats.requests, stats.coded_jobs, stats.mean_batch, stats.throughput_rps
+    );
+    println!(
+        "       recovery inversions {} (cache: {} hits / {} misses, {:.0}% hit rate), logit MSE {}",
+        stats.inverse_cache.misses,
+        stats.inverse_cache.hits,
+        stats.inverse_cache.misses,
+        stats.inverse_cache.hit_rate() * 100.0,
+        fmt_sci(stats.mean_logit_mse)
+    );
+    assert!(
+        stats.inverse_cache.misses < stats.requests as u64,
+        "batching must amortize inversions below one per request"
+    );
     println!("quickstart OK");
     Ok(())
 }

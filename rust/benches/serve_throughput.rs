@@ -1,23 +1,48 @@
-//! Serving-throughput bench: sequential vs pipelined distributed
-//! LeNet-5 serving over the concurrent job runtime.
+//! Serving-throughput bench: sequential vs pipelined vs **batched**
+//! distributed LeNet-5 serving over the concurrent job runtime.
 //!
 //! Sequential serving (depth 1) leaves the worker pool idle during every
 //! master-side encode/decode phase and, worse, during straggler sleeps.
-//! Pipelined serving keeps up to `depth` requests in flight, so while
-//! request *i*'s conv2 job is collecting results, request *i+1*'s conv1
-//! is already encoded and dispatched — the straggler sleeps of one job
-//! overlap the useful compute of the others. Expectation: pipelined
-//! serving beats depth 1 on req/s, most visibly under
-//! `StragglerModel::FixedCount` where sequential serving eats the
-//! injected delay on nearly every request.
+//! Pipelined serving keeps up to `depth` requests in flight, so the
+//! straggler sleeps of one job overlap the useful compute of the others.
+//! Batched serving additionally coalesces requests that reach the same
+//! conv stage into one coded job (`batch_window` samples), amortizing
+//! the per-job master costs — most importantly the recovery-matrix
+//! inversion, which together with the inverse LRU cache drops the
+//! inversion count well below one per request.
+//!
+//! Besides the human-readable table, every config emits **one JSON
+//! line** (`{"bench":"serve_throughput",...}`) so the bench trajectory
+//! (`BENCH_*.json`) can track requests/sec per mode over time.
 
 use fcdcc::bench_harness::{env_usize, fast_mode};
 use fcdcc::cluster::StragglerModel;
-use fcdcc::coordinator::{serve_lenet, ServeConfig};
+use fcdcc::coordinator::{serve_lenet, ServeConfig, ServeStats};
 use fcdcc::engine::Im2colEngine;
 use fcdcc::metrics::Table;
 use std::sync::Arc;
 use std::time::Duration;
+
+fn json_line(model: &str, mode: &str, stats: &ServeStats) {
+    println!(
+        "{{\"bench\":\"serve_throughput\",\"straggler\":\"{}\",\"mode\":\"{}\",\
+         \"depth\":{},\"batch_window\":{},\"requests\":{},\"rps\":{:.3},\
+         \"latency_p50_ms\":{:.3},\"latency_p95_ms\":{:.3},\"coded_jobs\":{},\
+         \"mean_batch\":{:.3},\"inversions\":{},\"inverse_cache_hits\":{}}}",
+        model,
+        mode,
+        stats.max_in_flight,
+        stats.batch_window,
+        stats.requests,
+        stats.throughput_rps,
+        stats.latency.p50 * 1e3,
+        stats.latency.p95 * 1e3,
+        stats.coded_jobs,
+        stats.mean_batch,
+        stats.inverse_cache.misses,
+        stats.inverse_cache.hits,
+    );
+}
 
 fn main() {
     let requests = env_usize("FCDCC_BENCH_REQUESTS", if fast_mode() { 6 } else { 16 });
@@ -26,46 +51,68 @@ fn main() {
     // 3 of 4 workers delayed: conv1 (δ=2) must wait for at least one
     // straggler, so the delay sits on the sequential critical path.
     let models = [
-        ("none".to_string(), StragglerModel::None),
-        (
-            format!("FixedCount(3, {delay_ms}ms)"),
-            StragglerModel::FixedCount { count: 3, delay },
-        ),
+        ("none", StragglerModel::None),
+        ("fixed3", StragglerModel::FixedCount { count: 3, delay }),
+    ];
+    // (mode, in-flight depth, coalescing window).
+    let configs = [
+        ("sequential", 1usize, 1usize),
+        ("pipelined", 4, 1),
+        ("batched", 4, 4),
     ];
 
     let mut t = Table::new(
-        &format!("Serving throughput: sequential vs pipelined (LeNet-5, n=4, {requests} requests)"),
+        &format!(
+            "Serving throughput: sequential vs pipelined vs batched \
+             (LeNet-5, n=4, {requests} requests, straggler delay {delay_ms}ms)"
+        ),
         &[
-            "straggler model",
+            "straggler",
+            "mode",
             "depth",
+            "window",
             "req/s",
             "latency p50 (ms)",
             "latency p95 (ms)",
-            "speedup vs depth 1",
+            "jobs",
+            "mean batch",
+            "inversions",
+            "speedup vs seq",
         ],
     );
     for (name, model) in &models {
         let mut base_rps = 0.0;
-        for depth in [1usize, 2, 4] {
+        for (mode, depth, window) in configs {
             let mut cfg = ServeConfig::default_with_engine(Arc::new(Im2colEngine));
             cfg.requests = requests;
             cfg.straggler = model.clone();
             cfg.max_in_flight = depth;
+            cfg.batch_window = window;
             cfg.verify_every = 0; // throughput run: no reference pass
             let stats = serve_lenet(cfg).expect("serve");
-            if depth == 1 {
+            if depth == 1 && window == 1 {
                 base_rps = stats.throughput_rps;
             }
             t.row(&[
-                name.clone(),
+                name.to_string(),
+                mode.to_string(),
                 depth.to_string(),
+                window.to_string(),
                 format!("{:.1}", stats.throughput_rps),
                 format!("{:.2}", stats.latency.p50 * 1e3),
                 format!("{:.2}", stats.latency.p95 * 1e3),
+                stats.coded_jobs.to_string(),
+                format!("{:.2}", stats.mean_batch),
+                stats.inverse_cache.misses.to_string(),
                 format!("{:.2}x", stats.throughput_rps / base_rps),
             ]);
+            json_line(name, mode, &stats);
         }
     }
     t.print();
-    println!("\nExpected: pipelined depths beat depth 1, most under FixedCount stragglers.");
+    println!(
+        "\nExpected: pipelined beats sequential (straggler sleeps overlap \
+         compute); batched additionally amortizes encode/inversion — fewer \
+         coded jobs and far fewer inversions than requests."
+    );
 }

@@ -1,15 +1,20 @@
 //! The master node: owns the worker pool and a job-oriented runtime.
 //!
-//! [`Cluster::submit`] is non-blocking: it encodes, dispatches, and
-//! registers the job in a per-job in-flight table (keyed by `job_id`,
-//! first-δ completion, per-job deadline). A collector demultiplexes
-//! every [`WorkerReply`] coming off the shared result channel into that
-//! table, so **any number of jobs overlap on the same worker pool** —
-//! e.g. conv layers of different serving requests. [`Cluster::wait`]
-//! blocks until one job is decodable (routing other jobs' replies while
-//! it waits) and returns its output + [`JobReport`]; [`Cluster::run_job`]
-//! is the submit+wait convenience for single-job callers. Every phase is
-//! accounted (paper §II-C phases and §VI metrics).
+//! [`Cluster::submit_batch`] is non-blocking: it encodes a **batch** of
+//! samples into one coded job, dispatches, and registers the job in a
+//! per-job in-flight table (keyed by `job_id`, first-δ completion,
+//! per-job deadline) — job_id = batch, so the table, collector, and
+//! cancellation protocol are untouched by batching. A collector
+//! demultiplexes every [`WorkerReply`] coming off the shared result
+//! channel into that table, so **any number of jobs overlap on the same
+//! worker pool** — e.g. conv layers of different serving requests.
+//! [`Cluster::wait_batch`] blocks until one job is decodable (routing
+//! other jobs' replies while it waits) and returns its per-sample
+//! outputs + [`JobReport`]; a timed-out job fails **all** of its member
+//! samples in one error without touching the other in-flight jobs.
+//! [`Cluster::submit`]/[`Cluster::wait`] are the batch-1 conveniences,
+//! and [`Cluster::run_job`] is submit+wait for single-job callers. Every
+//! phase is accounted (paper §II-C phases and §VI metrics).
 
 use crate::cluster::straggler::StragglerModel;
 use crate::cluster::worker::{worker_loop, WorkerMsg, WorkerReply};
@@ -55,6 +60,8 @@ pub struct JobReport {
     /// Jobs in flight on the pool when this one was dispatched
     /// (including itself): 1 = sequential, >1 = pipelined.
     pub concurrent_jobs: usize,
+    /// Samples carried by this job (1 = unbatched).
+    pub batch: usize,
 }
 
 /// Handle to a submitted job. Consume it with [`Cluster::wait`]; every
@@ -85,6 +92,7 @@ enum JobPhase {
 /// One row of the in-flight table.
 struct InFlight {
     delta: usize,
+    batch: usize,
     replies: Vec<WorkerReply>,
     phase: JobPhase,
     deadline: Instant,
@@ -152,11 +160,7 @@ impl Cluster {
             .count()
     }
 
-    /// Encode one job's input against `plan`, dispatch the coded subtasks
-    /// to all n workers, and register the job in the in-flight table —
-    /// non-blocking. `coded_filters` are the per-worker resident filter
-    /// slabs from `plan.encode_filters` (encoded once at model load, per
-    /// the paper's steady-state model).
+    /// Batch-1 convenience over [`Self::submit_batch`].
     pub fn submit(
         &mut self,
         plan: &FcdccPlan,
@@ -165,14 +169,34 @@ impl Cluster {
         straggler: &StragglerModel,
         rng: &mut Rng,
     ) -> Result<JobHandle> {
+        self.submit_batch(plan, &[x], coded_filters, straggler, rng)
+    }
+
+    /// Encode one job carrying a batch of samples against `plan`,
+    /// dispatch the coded subtasks to all n workers, and register the
+    /// job in the in-flight table — non-blocking. Each worker convolves
+    /// its slab pairs once per sample; the whole batch completes (or
+    /// times out) as one unit. `coded_filters` are the per-worker
+    /// resident filter slabs from `plan.encode_filters` (encoded once at
+    /// model load, per the paper's steady-state model).
+    pub fn submit_batch(
+        &mut self,
+        plan: &FcdccPlan,
+        xs: &[&Tensor3],
+        coded_filters: &[Arc<Vec<Tensor4>>],
+        straggler: &StragglerModel,
+        rng: &mut Rng,
+    ) -> Result<JobHandle> {
         assert_eq!(coded_filters.len(), self.n, "filters for every worker");
         assert_eq!(plan.spec().n, self.n, "plan/cluster n mismatch");
+        ensure!(!xs.is_empty(), "submit_batch: empty batch");
+        let batch = xs.len();
         let job_id = self.next_job;
         self.next_job += 1;
 
         // --- Encode phase (master).
         let t0 = Instant::now();
-        let coded_inputs = plan.encode_input(x);
+        let coded_inputs = plan.encode_input_batch(xs);
         let payloads = plan.make_payloads(coded_inputs, coded_filters);
         let encode_secs = t0.elapsed().as_secs_f64();
         let upload_entries: usize = payloads.iter().map(|p| p.upload_entries()).sum();
@@ -196,6 +220,7 @@ impl Cluster {
             job_id,
             InFlight {
                 delta: plan.delta(),
+                batch,
                 replies: Vec::with_capacity(plan.delta()),
                 phase: JobPhase::Collecting,
                 deadline: dispatched_at + self.collect_timeout,
@@ -208,11 +233,30 @@ impl Cluster {
         Ok(JobHandle { job_id })
     }
 
-    /// Block until the job behind `handle` has its first δ results, then
-    /// decode and report. Replies for *other* in-flight jobs arriving in
-    /// the meantime are routed into the table, never dropped. `plan` must
-    /// be the plan the job was submitted with.
+    /// Batch-1 convenience over [`Self::wait_batch`].
     pub fn wait(&mut self, plan: &FcdccPlan, handle: JobHandle) -> Result<(Tensor3, JobReport)> {
+        let (mut outputs, report) = self.wait_batch(plan, handle)?;
+        ensure!(
+            outputs.len() == 1,
+            "wait: job {} carries a batch of {}, use wait_batch",
+            report.job_id,
+            outputs.len()
+        );
+        Ok((outputs.pop().expect("one sample"), report))
+    }
+
+    /// Block until the job behind `handle` has its first δ results, then
+    /// decode every sample of the batch (one recovery inversion, reused)
+    /// and report. Replies for *other* in-flight jobs arriving in the
+    /// meantime are routed into the table, never dropped. `plan` must be
+    /// the plan the job was submitted with. A timeout fails the whole
+    /// batch — the caller owns fanning the error out to the member
+    /// requests — and leaves every other in-flight job untouched.
+    pub fn wait_batch(
+        &mut self,
+        plan: &FcdccPlan,
+        handle: JobHandle,
+    ) -> Result<(Vec<Tensor3>, JobReport)> {
         let job_id = handle.job_id;
         loop {
             self.drain_ready()?;
@@ -225,9 +269,10 @@ impl Cluster {
             match phase {
                 JobPhase::Done { .. } => break,
                 JobPhase::TimedOut => {
-                    self.remove_job(job_id);
+                    let batch = self.remove_job(job_id).batch;
                     bail!(
-                        "job {job_id}: timed out with {got}/{delta} results (>{} workers failed?)",
+                        "job {job_id}: timed out with {got}/{delta} results \
+                         (>{} workers failed?); all {batch} member sample(s) fail",
                         self.n - delta
                     );
                 }
@@ -258,11 +303,12 @@ impl Cluster {
         job.replies.truncate(job.delta);
         job.replies.sort_by_key(|r| r.worker_id);
 
-        // --- Decode phase (master).
+        // --- Decode phase (master): one recovery inversion (cached),
+        // reused across every sample of the batch.
         let t2 = Instant::now();
         let results: Vec<&crate::fcdcc::WorkerResult> =
             job.replies.iter().map(|r| &r.result).collect();
-        let out = plan.decode_refs(&results)?;
+        let outputs = plan.decode_batch_refs(&results)?;
         let decode_secs = t2.elapsed().as_secs_f64();
 
         let download_entries = results.iter().map(|r| r.download_entries()).sum();
@@ -276,7 +322,7 @@ impl Cluster {
             job.replies.iter().map(|r| r.compute_secs).sum::<f64>() / job.replies.len() as f64;
 
         Ok((
-            out,
+            outputs,
             JobReport {
                 job_id,
                 n: self.n,
@@ -290,6 +336,7 @@ impl Cluster {
                 upload_entries: job.upload_entries,
                 download_entries,
                 concurrent_jobs: job.concurrent_jobs,
+                batch: job.batch,
             },
         ))
     }
@@ -444,6 +491,30 @@ mod tests {
         assert_eq!(report.concurrent_jobs, 1);
         assert!(report.upload_entries > 0);
         assert!(report.download_entries > 0);
+    }
+
+    #[test]
+    fn batched_job_matches_reference_per_sample() {
+        let (layer, _x, k) = small_setup();
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap(); // delta=2
+        let coded_filters = plan.encode_filters(&k);
+        let mut cluster = Cluster::new(4, Arc::new(DirectEngine));
+        let mut rng = Rng::new(9);
+        let xs: Vec<Tensor3> = (0..3).map(|_| Tensor3::random(2, 12, 10, &mut rng)).collect();
+        let refs: Vec<&Tensor3> = xs.iter().collect();
+        let handle = cluster
+            .submit_batch(&plan, &refs, &coded_filters, &StragglerModel::None, &mut rng)
+            .unwrap();
+        let (ys, report) = cluster.wait_batch(&plan, handle).unwrap();
+        cluster.shutdown();
+        assert_eq!(report.batch, 3);
+        assert_eq!(ys.len(), 3);
+        for (x, y) in xs.iter().zip(&ys) {
+            let want = conv2d(x, &k, layer.params());
+            assert!(mse(&y.data, &want.data) < 1e-20, "sample decoded wrong");
+        }
+        // The whole batch shares one decode: exactly one inversion.
+        assert_eq!(plan.inverse_cache().misses(), 1);
     }
 
     #[test]

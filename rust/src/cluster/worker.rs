@@ -2,6 +2,13 @@
 //! injected straggler fate, computes the pairwise coded convolutions with
 //! its [`TaskEngine`], and sends the coded result back.
 //!
+//! A subtask may carry a whole **batch** of samples (`WorkerPayload`'s
+//! batch axis); the wire protocol is oblivious to it — one job id, one
+//! task message, one reply — so batched jobs flow through dispatch,
+//! cancellation, and watermark pruning unchanged. A cancelled batch's
+//! late reply is dropped by the master's stale-reply filter exactly like
+//! an unbatched one.
+//!
 //! Under the concurrent job runtime any number of jobs are in flight at
 //! once and they complete **out of order**, so cancellation is per-job:
 //! the master sends `Cancel(job_id)` as soon as a job has its δ results

@@ -144,6 +144,23 @@ pub fn encode_filters(code: &dyn Code, parts: &[Tensor4]) -> Vec<Vec<Tensor4>> {
         .collect()
 }
 
+/// Invert the recovery matrix for an ordered δ-subset of workers
+/// (paper Alg. 5 step 2). Split out of [`decode_outputs`] so the master
+/// can compute the inverse **once** and reuse it across every sample of
+/// a batched job (and across jobs, via `fcdcc::InverseCache`).
+pub fn recovery_inverse(code: &dyn Code, workers: &[usize]) -> Result<Mat> {
+    let s = code.spec();
+    ensure!(
+        workers.len() == s.delta(),
+        "recovery_inverse: need exactly delta={} workers, got {}",
+        s.delta(),
+        workers.len()
+    );
+    let e = code.recovery(workers);
+    ensure!(e.is_square(), "recovery matrix is not square");
+    lu::invert(&e).context("recovery matrix inversion failed")
+}
+
 /// Decode: given the coded output blocks of exactly `delta` workers
 /// (worker `workers[w]` contributed `blocks[w]`, an `ℓ_A·ℓ_B`-long list in
 /// ℓ_A-major order, i.e. block `j_a·ℓ_B + j_b` is slabA `j_a` * slabB
@@ -155,27 +172,43 @@ pub fn decode_outputs(
     workers: &[usize],
     blocks: &[&[Tensor3]],
 ) -> Result<Vec<Tensor3>> {
+    let d = recovery_inverse(code, workers)?;
+    decode_outputs_with(code, &d, blocks)
+}
+
+/// Decode one sample's coded output blocks against a **precomputed**
+/// recovery-matrix inverse `d` (from [`recovery_inverse`], possibly
+/// cached). `d`'s column order must match the worker order the blocks
+/// are given in — the batched decode hot path.
+pub fn decode_outputs_with(
+    code: &dyn Code,
+    d: &Mat,
+    blocks: &[&[Tensor3]],
+) -> Result<Vec<Tensor3>> {
     let s = code.spec();
     ensure!(
-        workers.len() == s.delta(),
-        "decode_outputs: need exactly delta={} workers, got {}",
+        blocks.len() == s.delta(),
+        "decode_outputs_with: need exactly delta={} block lists, got {}",
         s.delta(),
-        workers.len()
+        blocks.len()
     );
-    ensure!(workers.len() == blocks.len());
     let bpw = s.blocks_per_worker();
     for (w, bs) in blocks.iter().enumerate() {
         ensure!(
             bs.len() == bpw,
-            "worker {} returned {} blocks, expected {}",
-            workers[w],
+            "block list {} has {} blocks, expected {}",
+            w,
             bs.len(),
             bpw
         );
     }
-    let e = code.recovery(workers);
-    ensure!(e.is_square(), "recovery matrix is not square");
-    let d = lu::invert(&e).context("recovery matrix inversion failed")?;
+    ensure!(
+        d.rows == s.delta() * bpw && d.is_square(),
+        "recovery inverse has shape {}x{}, expected {2}x{2}",
+        d.rows,
+        d.cols,
+        s.delta() * bpw
+    );
     // Flatten coded blocks into a single list matching E's column order.
     let coded: Vec<&Tensor3> = blocks.iter().flat_map(|b| b.iter()).collect();
     let (c, h, w) = coded[0].shape();

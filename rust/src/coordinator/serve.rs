@@ -4,17 +4,25 @@
 //! decode); pooling, ReLU and the FC head run on the master, as in the
 //! paper (CDC is applied to ConvLs only).
 //!
-//! Serving is a **pipelined request scheduler** over the concurrent job
+//! Serving is a **coalescing request scheduler** over the concurrent job
 //! runtime: up to [`ServeConfig::max_in_flight`] requests are in flight
-//! at once, so while request *i*'s conv2 job is collecting results,
-//! request *i+1*'s conv1 is already encoded and dispatched on the same
-//! worker pool. Depth 1 degenerates to the old strictly-sequential
-//! serving loop — same code path, no overlap.
+//! at once, and requests that reach the same conv stage wait in that
+//! stage's queue until [`ServeConfig::batch_window`] of them have
+//! gathered (count-based, deterministic) — then the whole window is
+//! fused into **one** coded job via `NetworkPlan::submit_batch`. The
+//! coding is linear, so the per-job master costs (CRME encode setup,
+//! recovery-matrix inversion, dispatch) are paid once per batch instead
+//! of once per request, and after decode the batch is split back into
+//! per-request activations (`NetworkPlan::absorb_batch_output`). A
+//! partial window is flushed only when the pipeline would otherwise
+//! stall, so no request waits forever. `batch_window = 1` degenerates to
+//! pure pipelined serving, and depth 1 to the old strictly-sequential
+//! loop — same code path, no overlap.
 
 use crate::cluster::{Cluster, JobHandle, StragglerModel};
 use crate::engine::TaskEngine;
 use crate::fcdcc::NetworkPlan;
-use crate::metrics::Stats;
+use crate::metrics::{CacheStats, Stats};
 use crate::model::network::softmax;
 use crate::model::{Activation, Network};
 use crate::tensor::Tensor3;
@@ -36,6 +44,11 @@ pub struct ServeConfig {
     /// Maximum requests concurrently in flight on the cluster
     /// (1 = strictly sequential serving).
     pub max_in_flight: usize,
+    /// Requests coalesced per coded job: a stage queue is flushed as soon
+    /// as this many requests gather (partial windows flush only when the
+    /// pipeline would stall). 1 = one job per request (no coalescing).
+    /// Must not exceed `max_in_flight`, or the window could never fill.
+    pub batch_window: usize,
     /// Check every k-th request (0, k, 2k, …) against the single-node
     /// reference forward pass. 0 disables verification entirely, so
     /// throughput numbers aren't dominated by the uncoded reference.
@@ -55,6 +68,7 @@ impl ServeConfig {
             partitions: [(4, 2), (2, 2)],
             seed: 2024,
             max_in_flight: 1,
+            batch_window: 1,
             verify_every: 1,
         }
     }
@@ -78,23 +92,52 @@ pub struct ServeStats {
     pub verified: usize,
     /// The in-flight depth the scheduler ran with.
     pub max_in_flight: usize,
+    /// The coalescing window the scheduler ran with.
+    pub batch_window: usize,
+    /// Coded jobs dispatched (= decodes performed). With coalescing
+    /// (`2 <= batch_window <= max_in_flight`) this lands strictly below
+    /// `requests · conv_stages`.
+    pub coded_jobs: usize,
+    /// Mean samples per coded job.
+    pub mean_batch: f64,
+    /// Recovery-inverse cache counters: `misses` is exactly the number
+    /// of recovery-matrix inversions performed across the whole run.
+    pub inverse_cache: CacheStats,
     /// Final logits of every request, in request order.
     pub logits: Vec<Vec<f64>>,
 }
 
-/// One request moving through the pipeline: its activation, its position
-/// in the layer sequence, and (at most) one outstanding conv job.
-struct InFlightRequest {
+/// Where one request currently is in its lifecycle.
+enum ReqState {
+    /// Needs master-side layers run (or has just been un-parked).
+    Runnable,
+    /// Waiting in a stage's coalescing queue.
+    Queued,
+    /// Member of an in-flight coded job.
+    InJob,
+    /// Out of layers; awaiting retirement.
+    Done,
+}
+
+/// One request moving through the pipeline.
+struct Request {
+    /// Request index; also its slot in the output logits.
+    id: usize,
     a: Activation,
     layer_idx: usize,
-    pending: Option<(usize, JobHandle)>,
-    done: bool,
+    state: ReqState,
     /// Kept only for requests selected for reference verification.
     input: Option<Tensor3>,
     admitted_at: Instant,
-    /// Set when the request runs out of layers; retirement (and the
-    /// verification pass) may happen later, but latency ends here.
     finished_at: Option<Instant>,
+}
+
+/// One in-flight coded job and the requests fused into it.
+struct BatchJob {
+    stage: usize,
+    /// Member request ids, in batch (submission) order.
+    members: Vec<usize>,
+    handle: JobHandle,
 }
 
 /// Run the distributed LeNet-5 serving loop; returns latency/throughput
@@ -102,6 +145,16 @@ struct InFlightRequest {
 pub fn serve_lenet(cfg: ServeConfig) -> Result<ServeStats> {
     ensure!(cfg.requests > 0, "need at least one request");
     ensure!(cfg.max_in_flight >= 1, "max_in_flight must be >= 1");
+    ensure!(cfg.batch_window >= 1, "batch_window must be >= 1");
+    // A window wider than the pipeline depth can never fill: every flush
+    // would be a stall-path partial of at most `max_in_flight` samples,
+    // silently disabling the batching the caller asked for.
+    ensure!(
+        cfg.batch_window <= cfg.max_in_flight,
+        "batch_window ({}) cannot exceed max_in_flight ({}); raise the pipeline depth",
+        cfg.batch_window,
+        cfg.max_in_flight
+    );
     let net = Network::lenet5_random(42);
     let plan = NetworkPlan::new(net, &cfg.partitions, cfg.n_workers)?;
     let mut cluster = Cluster::new(cfg.n_workers, Arc::clone(&cfg.engine));
@@ -116,29 +169,38 @@ fn run_pipeline(
     cfg: &ServeConfig,
 ) -> Result<ServeStats> {
     // Separate input / fate streams so request inputs are identical at
-    // any pipeline depth (fate draws interleave differently once jobs
-    // overlap, inputs must not).
+    // any pipeline depth or window (fate draws interleave differently
+    // once jobs overlap and coalesce, inputs must not).
     let mut input_rng = Rng::new(cfg.seed);
     let mut fate_rng = Rng::new(cfg.seed ^ 0x9E37_79B9_7F4A_7C15);
+    let n_stages = plan.stages().len();
     let mut next_req = 0usize;
-    let mut active: VecDeque<InFlightRequest> = VecDeque::new();
+    let mut completed = 0usize;
+    // Active requests, ascending by id (admission order; retirement
+    // preserves order).
+    let mut active: Vec<Request> = Vec::new();
+    // Per-stage coalescing queues of request ids.
+    let mut queues: Vec<VecDeque<usize>> = vec![VecDeque::new(); n_stages];
+    // In-flight coded jobs, submission (FIFO) order.
+    let mut jobs: VecDeque<BatchJob> = VecDeque::new();
+    let mut batch_sizes: Vec<usize> = Vec::new();
     let mut latencies = Vec::with_capacity(cfg.requests);
     let mut decodes = Vec::new();
-    let mut logits: Vec<Vec<f64>> = Vec::with_capacity(cfg.requests);
+    let mut logits: Vec<Vec<f64>> = vec![Vec::new(); cfg.requests];
     let mut mses = Vec::new();
     let mut mismatches = 0usize;
     let t_all = Instant::now();
 
-    while next_req < cfg.requests || !active.is_empty() {
+    while completed < cfg.requests {
         // Admit new requests up to the pipeline depth.
         while active.len() < cfg.max_in_flight && next_req < cfg.requests {
             let x = Tensor3::random(1, 32, 32, &mut input_rng);
             let verify = cfg.verify_every > 0 && next_req % cfg.verify_every == 0;
-            active.push_back(InFlightRequest {
+            active.push(Request {
+                id: next_req,
                 a: Activation::new(&x),
                 layer_idx: 0,
-                pending: None,
-                done: false,
+                state: ReqState::Runnable,
                 input: verify.then_some(x),
                 admitted_at: Instant::now(),
                 finished_at: None,
@@ -146,17 +208,35 @@ fn run_pipeline(
             next_req += 1;
         }
 
-        // Non-blocking sweep: absorb any finished conv jobs, run
-        // master-side layers, dispatch next conv jobs. This is where
-        // request i+1's conv1 is encoded and dispatched while request
-        // i's conv2 is still in flight.
+        // Advance every runnable request through master-side layers to
+        // its next conv (→ that stage's coalescing queue) or to the end.
+        let mut progressed = false;
         for req in active.iter_mut() {
-            advance(plan, cluster, cfg, req, &mut fate_rng, &mut decodes, false)?;
+            if !matches!(req.state, ReqState::Runnable) {
+                continue;
+            }
+            progressed = true;
+            match plan.run_local(&mut req.a, &mut req.layer_idx) {
+                Some(stage) => {
+                    queues[stage].push_back(req.id);
+                    req.state = ReqState::Queued;
+                }
+                None => {
+                    req.state = ReqState::Done;
+                    req.finished_at = Some(Instant::now());
+                }
+            }
         }
 
-        // Retire finished requests in FIFO order.
-        while active.front().is_some_and(|r| r.done) {
-            let req = active.pop_front().expect("front exists");
+        // Retire finished requests (stats are keyed by request id, so
+        // out-of-order completion under coalescing is fine).
+        let mut i = 0;
+        while i < active.len() {
+            if !matches!(active[i].state, ReqState::Done) {
+                i += 1;
+                continue;
+            }
+            let req = active.remove(i);
             let finished = req.finished_at.unwrap_or_else(Instant::now);
             latencies.push(
                 finished
@@ -171,19 +251,65 @@ fn run_pipeline(
                     mismatches += 1;
                 }
             }
-            logits.push(out);
+            logits[req.id] = out;
+            completed += 1;
         }
 
-        // Guarantee progress: block on the oldest outstanding job.
-        if let Some(req) = active.front_mut() {
-            if !req.done {
-                advance(plan, cluster, cfg, req, &mut fate_rng, &mut decodes, true)?;
+        // Fuse every full window into one coded job, lowest stage first
+        // (deterministic flush order).
+        for stage in 0..n_stages {
+            while queues[stage].len() >= cfg.batch_window {
+                let count = cfg.batch_window;
+                flush_batch(
+                    plan, cluster, cfg, &mut active, &mut queues[stage], stage, count,
+                    &mut fate_rng, &mut jobs, &mut batch_sizes,
+                )?;
+                progressed = true;
             }
+        }
+
+        if completed >= cfg.requests {
+            break;
+        }
+
+        // Absorb every already-decodable job without blocking — this is
+        // where a batch is split back into its member requests.
+        let mut absorbed = false;
+        let mut j = 0;
+        while j < jobs.len() {
+            if cluster.job_ready(&jobs[j].handle)? {
+                let job = jobs.remove(j).expect("index in bounds");
+                absorb_job(plan, cluster, &mut active, &mut decodes, job)?;
+                absorbed = true;
+            } else {
+                j += 1;
+            }
+        }
+        if progressed || absorbed {
+            continue;
+        }
+
+        // Nothing runnable, nothing decodable: block on the oldest job,
+        // or — with no job in flight — flush the most senior partial
+        // window so the pipeline never stalls on a short queue.
+        if let Some(job) = jobs.pop_front() {
+            absorb_job(plan, cluster, &mut active, &mut decodes, job)?;
+        } else {
+            let stage = (0..n_stages)
+                .filter(|&s| !queues[s].is_empty())
+                .min_by_key(|&s| *queues[s].front().expect("non-empty"))
+                .expect("an active request is runnable, queued, or in a job");
+            let count = queues[stage].len();
+            flush_batch(
+                plan, cluster, cfg, &mut active, &mut queues[stage], stage, count,
+                &mut fate_rng, &mut jobs, &mut batch_sizes,
+            )?;
         }
     }
     let total = t_all.elapsed().as_secs_f64();
 
     let verified = mses.len();
+    let coded_jobs = batch_sizes.len();
     Ok(ServeStats {
         latency: Stats::from_or_zero(&latencies),
         throughput_rps: cfg.requests as f64 / total,
@@ -197,55 +323,91 @@ fn run_pipeline(
         requests: cfg.requests,
         verified,
         max_in_flight: cfg.max_in_flight,
+        batch_window: cfg.batch_window,
+        coded_jobs,
+        mean_batch: if coded_jobs == 0 {
+            0.0
+        } else {
+            batch_sizes.iter().sum::<usize>() as f64 / coded_jobs as f64
+        },
+        inverse_cache: plan.inverse_cache_stats(),
         logits,
     })
 }
 
-/// Advance one request as far as possible. With `block == false` this
-/// never waits: a still-collecting conv job leaves the request parked.
-/// With `block == true` it waits for the outstanding job once, absorbs
-/// it, and then continues non-blocking (running local layers and
-/// dispatching the request's next conv job).
-fn advance(
+/// Fuse the first `count` requests of `queue` into one coded job at
+/// `stage` and dispatch it (non-blocking).
+#[allow(clippy::too_many_arguments)]
+fn flush_batch(
     plan: &NetworkPlan,
     cluster: &mut Cluster,
     cfg: &ServeConfig,
-    req: &mut InFlightRequest,
+    active: &mut [Request],
+    queue: &mut VecDeque<usize>,
+    stage: usize,
+    count: usize,
     fate_rng: &mut Rng,
-    decodes: &mut Vec<f64>,
-    block: bool,
+    jobs: &mut VecDeque<BatchJob>,
+    batch_sizes: &mut Vec<usize>,
 ) -> Result<()> {
-    if req.done {
-        return Ok(());
-    }
-    let mut may_block = block;
-    loop {
-        if let Some((stage, handle)) = req.pending.take() {
-            if !may_block && !cluster.job_ready(&handle)? {
-                req.pending = Some((stage, handle));
-                return Ok(());
-            }
-            may_block = false; // at most one blocking wait per call
-            let (y, report) = cluster.wait(&plan.stages()[stage].plan, handle)?;
-            decodes.push(report.decode_secs);
-            plan.absorb_conv_output(stage, y, &mut req.a, &mut req.layer_idx);
-        }
-        match plan.run_local(&mut req.a, &mut req.layer_idx) {
-            Some(stage) => {
-                let handle =
-                    plan.stages()[stage].submit(cluster, &req.a, &cfg.straggler, fate_rng)?;
-                req.pending = Some((stage, handle));
-                if !may_block {
-                    return Ok(());
-                }
-            }
-            None => {
-                req.done = true;
-                req.finished_at = Some(Instant::now());
-                return Ok(());
-            }
+    let members: Vec<usize> = queue.drain(..count).collect();
+    let handle = {
+        let xs: Vec<&Tensor3> = members
+            .iter()
+            .map(|&id| {
+                active
+                    .iter()
+                    .find(|r| r.id == id)
+                    .expect("queued member is active")
+                    .a
+                    .spatial()
+            })
+            .collect();
+        plan.submit_batch(stage, cluster, &xs, &cfg.straggler, fate_rng)?
+    };
+    for req in active.iter_mut() {
+        if members.contains(&req.id) {
+            req.state = ReqState::InJob;
         }
     }
+    batch_sizes.push(members.len());
+    jobs.push_back(BatchJob {
+        stage,
+        members,
+        handle,
+    });
+    Ok(())
+}
+
+/// Wait for one coded job (blocking if its δ-th reply is still on the
+/// wire), decode the batch with a single (cached) recovery inversion,
+/// and split the per-sample outputs back into the member requests.
+fn absorb_job(
+    plan: &NetworkPlan,
+    cluster: &mut Cluster,
+    active: &mut [Request],
+    decodes: &mut Vec<f64>,
+    job: BatchJob,
+) -> Result<()> {
+    let (ys, report) = cluster.wait_batch(&plan.stages()[job.stage].plan, job.handle)?;
+    decodes.push(report.decode_secs);
+    // Pair decoded samples with member ids and sort ascending so the
+    // targets (gathered in `active` order, which is ascending by id)
+    // line up sample-for-sample.
+    let mut pairs: Vec<(usize, Tensor3)> = job.members.into_iter().zip(ys).collect();
+    pairs.sort_by_key(|(id, _)| *id);
+    let ids: Vec<usize> = pairs.iter().map(|(id, _)| *id).collect();
+    let mut targets: Vec<(&mut Activation, &mut usize)> = Vec::with_capacity(ids.len());
+    for req in active.iter_mut() {
+        if ids.binary_search(&req.id).is_ok() {
+            req.state = ReqState::Runnable;
+            targets.push((&mut req.a, &mut req.layer_idx));
+        }
+    }
+    debug_assert_eq!(targets.len(), ids.len(), "every member is active");
+    let ys_sorted: Vec<Tensor3> = pairs.into_iter().map(|(_, y)| y).collect();
+    plan.absorb_batch_output(job.stage, ys_sorted, &mut targets);
+    Ok(())
 }
 
 fn argmax(v: &[f64]) -> usize {
@@ -277,6 +439,9 @@ mod tests {
         assert!(stats.mean_logit_mse < 1e-16, "mse={:e}", stats.mean_logit_mse);
         assert!(stats.throughput_rps > 0.0);
         assert_eq!(stats.logits.len(), 3);
+        // Sequential unbatched serving: one coded job per request per conv.
+        assert_eq!(stats.coded_jobs, 6);
+        assert_eq!(stats.mean_batch, 1.0);
     }
 
     #[test]
@@ -295,6 +460,47 @@ mod tests {
         assert!(stats.mean_logit_mse < 1e-16, "mse={:e}", stats.mean_logit_mse);
         assert_eq!(stats.logits.len(), 5);
         assert_eq!(stats.max_in_flight, 3);
+    }
+
+    #[test]
+    fn batched_serving_amortizes_inversions() {
+        let mut cfg = ServeConfig::default_with_engine(Arc::new(Im2colEngine));
+        cfg.requests = 16;
+        cfg.max_in_flight = 8;
+        cfg.batch_window = 4;
+        cfg.verify_every = 1;
+        cfg.straggler = StragglerModel::FixedCount {
+            count: 1,
+            delay: Duration::from_millis(5),
+        };
+        let stats = serve_lenet(cfg).unwrap();
+        assert_eq!(stats.class_mismatches, 0);
+        assert!(stats.mean_logit_mse < 1e-16, "mse={:e}", stats.mean_logit_mse);
+        // Coalescing: strictly fewer coded jobs than request·stage pairs,
+        // and batches really formed.
+        assert!(stats.coded_jobs < stats.requests * 2, "jobs={}", stats.coded_jobs);
+        assert!(stats.mean_batch > 1.0, "mean_batch={}", stats.mean_batch);
+        // The acceptance bar: strictly fewer recovery-matrix inversions
+        // than requests served, via batch amortization + the LRU cache.
+        assert!(
+            stats.inverse_cache.misses < stats.requests as u64,
+            "{} inversions for {} requests",
+            stats.inverse_cache.misses,
+            stats.requests
+        );
+        assert_eq!(
+            stats.inverse_cache.lookups(),
+            stats.coded_jobs as u64,
+            "one cache lookup per decode"
+        );
+    }
+
+    #[test]
+    fn window_wider_than_depth_is_rejected() {
+        let mut cfg = ServeConfig::default_with_engine(Arc::new(Im2colEngine));
+        cfg.batch_window = 4; // depth stays 1: the window could never fill
+        let err = serve_lenet(cfg).unwrap_err();
+        assert!(err.to_string().contains("batch_window"), "err: {err:#}");
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! LRU cache of recovery-matrix inverses, keyed by `(stage_idx, ordered
+//! surviving-worker subset)`.
+//!
+//! Under pipelined serving the same few δ-subsets recur job after job
+//! (the cluster orders a job's chosen replies by worker id before
+//! decoding, so the key is the *sorted* subset), and re-running the
+//! `O(δ³)` LU inversion per job dominates the decode hot path. One cache
+//! is shared across all conv stages of a `NetworkPlan` — `stage_idx`
+//! disambiguates stages whose codes differ — and every decode either
+//! hits (reuses the `Arc<Mat>`) or misses (inverts once, inserts). The
+//! hit/miss counters are the serving-layer's inversion accounting:
+//! `misses()` is exactly the number of recovery-matrix inversions
+//! performed through the cache.
+
+use crate::linalg::Mat;
+use crate::metrics::CacheStats;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default capacity: comfortably above the distinct δ-subsets a small
+/// cluster can produce per stage (e.g. C(4,2)=6 per stage), so steady
+/// serving never thrashes.
+pub const DEFAULT_INVERSE_CACHE_CAP: usize = 64;
+
+type Key = (usize, Vec<usize>);
+
+struct CacheState {
+    map: HashMap<Key, Arc<Mat>>,
+    /// Recency order, least-recently-used first.
+    order: Vec<Key>,
+}
+
+/// A shared, thread-safe LRU cache of recovery-matrix inverses.
+pub struct InverseCache {
+    capacity: usize,
+    state: Mutex<CacheState>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl InverseCache {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "inverse cache needs capacity >= 1");
+        Self {
+            capacity,
+            state: Mutex::new(CacheState {
+                map: HashMap::new(),
+                order: Vec::new(),
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch the inverse for `(stage, workers)`, computing and inserting
+    /// it via `invert` on a miss. `workers` is the ordered subset the
+    /// decode will run with — callers that want cross-job reuse must
+    /// order replies canonically (the cluster sorts by worker id).
+    pub fn get_or_insert_with(
+        &self,
+        stage: usize,
+        workers: &[usize],
+        invert: impl FnOnce() -> Result<Mat>,
+    ) -> Result<Arc<Mat>> {
+        {
+            let mut st = self.state.lock().expect("inverse cache poisoned");
+            // Borrow-friendly lookup: find first, then touch recency.
+            let key = (stage, workers.to_vec());
+            if let Some(found) = st.map.get(&key).cloned() {
+                if let Some(pos) = st.order.iter().position(|k| *k == key) {
+                    let k = st.order.remove(pos);
+                    st.order.push(k);
+                }
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(found);
+            }
+        }
+        // Invert outside the lock: an O(δ³) LU under a mutex would
+        // serialize concurrent decoders. Two racing misses on the same
+        // key both invert (identical result), last insert wins.
+        let inv = Arc::new(invert()?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut st = self.state.lock().expect("inverse cache poisoned");
+        let key = (stage, workers.to_vec());
+        if !st.map.contains_key(&key) {
+            while st.map.len() >= self.capacity {
+                let evict = st.order.remove(0);
+                st.map.remove(&evict);
+            }
+            st.map.insert(key.clone(), Arc::clone(&inv));
+            st.order.push(key);
+        }
+        Ok(inv)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Misses == recovery-matrix inversions performed through the cache.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits(),
+            misses: self.misses(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("inverse cache poisoned").map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(v: f64) -> Mat {
+        Mat::from_vec(1, 1, vec![v])
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let c = InverseCache::new(4);
+        let a = c.get_or_insert_with(0, &[0, 1], || Ok(mat(1.0))).unwrap();
+        assert_eq!(c.misses(), 1);
+        let b = c.get_or_insert_with(0, &[0, 1], || panic!("must hit")).unwrap();
+        assert_eq!(c.hits(), 1);
+        assert!(Arc::ptr_eq(&a, &b));
+        // Different stage or subset is a different key.
+        c.get_or_insert_with(1, &[0, 1], || Ok(mat(2.0))).unwrap();
+        c.get_or_insert_with(0, &[0, 2], || Ok(mat(3.0))).unwrap();
+        assert_eq!(c.misses(), 3);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let c = InverseCache::new(2);
+        c.get_or_insert_with(0, &[0], || Ok(mat(1.0))).unwrap();
+        c.get_or_insert_with(0, &[1], || Ok(mat(2.0))).unwrap();
+        // Touch [0] so [1] becomes the LRU entry.
+        c.get_or_insert_with(0, &[0], || panic!("must hit")).unwrap();
+        c.get_or_insert_with(0, &[2], || Ok(mat(3.0))).unwrap(); // evicts [1]
+        assert_eq!(c.len(), 2);
+        let mut reinverted = false;
+        c.get_or_insert_with(0, &[1], || {
+            reinverted = true;
+            Ok(mat(2.0))
+        })
+        .unwrap();
+        assert!(reinverted, "evicted entry must be recomputed");
+        // Re-inserting [1] evicted [0]; [2] is still resident.
+        let before = c.hits();
+        c.get_or_insert_with(0, &[2], || panic!("must hit")).unwrap();
+        assert_eq!(c.hits(), before + 1);
+    }
+
+    #[test]
+    fn failed_inversion_is_not_cached() {
+        let c = InverseCache::new(2);
+        assert!(c
+            .get_or_insert_with(0, &[0], || anyhow::bail!("singular"))
+            .is_err());
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.misses(), 0);
+        assert!(c.is_empty());
+        c.get_or_insert_with(0, &[0], || Ok(mat(1.0))).unwrap();
+        assert_eq!(c.misses(), 1);
+    }
+}

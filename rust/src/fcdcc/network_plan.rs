@@ -12,7 +12,9 @@
 //! pre-runtime code carried.
 
 use crate::cluster::{Cluster, JobHandle, JobReport, StragglerModel};
+use crate::fcdcc::inverse_cache::{InverseCache, DEFAULT_INVERSE_CACHE_CAP};
 use crate::fcdcc::FcdccPlan;
+use crate::metrics::CacheStats;
 use crate::model::network::add_bias;
 use crate::model::{Activation, Layer, Network};
 use crate::tensor::{Tensor3, Tensor4};
@@ -41,13 +43,27 @@ impl ConvStage {
     ) -> Result<JobHandle> {
         cluster.submit(&self.plan, a.spatial(), &self.coded_filters, straggler, rng)
     }
+
+    /// Dispatch one coded job carrying a batch of activations — the
+    /// coalesced-serving path (non-blocking).
+    pub fn submit_batch(
+        &self,
+        cluster: &mut Cluster,
+        xs: &[&Tensor3],
+        straggler: &StragglerModel,
+        rng: &mut Rng,
+    ) -> Result<JobHandle> {
+        cluster.submit_batch(&self.plan, xs, &self.coded_filters, straggler, rng)
+    }
 }
 
 /// A network compiled against a coded cluster: per-conv [`ConvStage`]s
-/// plus the shared forward-pass walk.
+/// plus the shared forward-pass walk. All stages decode through one
+/// shared recovery-inverse cache, keyed by `(stage_idx, worker subset)`.
 pub struct NetworkPlan {
     net: Network,
     stages: Vec<ConvStage>,
+    inverse_cache: Arc<InverseCache>,
 }
 
 impl NetworkPlan {
@@ -56,6 +72,7 @@ impl NetworkPlan {
     /// bank once (the paper's steady-state model: coded filter slabs are
     /// resident on the workers across requests).
     pub fn new(net: Network, partitions: &[(usize, usize)], n_workers: usize) -> Result<Self> {
+        let inverse_cache = Arc::new(InverseCache::new(DEFAULT_INVERSE_CACHE_CAP));
         let mut stages = Vec::new();
         for (layer_idx, layer) in net.layers.iter().enumerate() {
             if let Layer::Conv {
@@ -69,7 +86,9 @@ impl NetworkPlan {
                     "network has more conv layers than (k_A,k_B) pairs"
                 );
                 let (k_a, k_b) = partitions[stages.len()];
-                let plan = FcdccPlan::new_crme(shape, k_a, k_b, n_workers)?;
+                let stage_idx = stages.len();
+                let plan = FcdccPlan::new_crme(shape, k_a, k_b, n_workers)?
+                    .with_inverse_cache(Arc::clone(&inverse_cache), stage_idx);
                 let coded_filters = plan.encode_filters(weights);
                 stages.push(ConvStage {
                     plan,
@@ -85,7 +104,11 @@ impl NetworkPlan {
             partitions.len(),
             stages.len()
         );
-        Ok(Self { net, stages })
+        Ok(Self {
+            net,
+            stages,
+            inverse_cache,
+        })
     }
 
     pub fn network(&self) -> &Network {
@@ -94,6 +117,13 @@ impl NetworkPlan {
 
     pub fn stages(&self) -> &[ConvStage] {
         &self.stages
+    }
+
+    /// Hit/miss counters of the shared recovery-inverse cache. `misses`
+    /// is exactly the number of recovery-matrix inversions performed
+    /// across every decode of every stage of this plan.
+    pub fn inverse_cache_stats(&self) -> CacheStats {
+        self.inverse_cache.stats()
     }
 
     /// Advance `a` through master-side (non-conv) layers starting at
@@ -131,6 +161,35 @@ impl NetworkPlan {
         add_bias(&mut y, &self.stages[stage].bias);
         a.set_spatial(y);
         *layer_idx += 1;
+    }
+
+    /// Dispatch one coded job for a batch of conv inputs at `stage`
+    /// (non-blocking) — the coalesced-serving submit path.
+    pub fn submit_batch(
+        &self,
+        stage: usize,
+        cluster: &mut Cluster,
+        xs: &[&Tensor3],
+        straggler: &StragglerModel,
+        rng: &mut Rng,
+    ) -> Result<JobHandle> {
+        self.stages[stage].submit_batch(cluster, xs, straggler, rng)
+    }
+
+    /// Fold one decoded **batched** conv job back into its member
+    /// requests: the i-th decoded sample goes to the i-th `(activation,
+    /// layer cursor)` pair. The split-back half of the coalesced-serving
+    /// path.
+    pub fn absorb_batch_output(
+        &self,
+        stage: usize,
+        ys: Vec<Tensor3>,
+        members: &mut [(&mut Activation, &mut usize)],
+    ) {
+        assert_eq!(ys.len(), members.len(), "one decoded sample per member");
+        for (y, (a, layer_idx)) in ys.into_iter().zip(members.iter_mut()) {
+            self.absorb_conv_output(stage, y, a, layer_idx);
+        }
     }
 
     /// One distributed forward pass, blocking per conv layer — the
@@ -183,6 +242,9 @@ mod tests {
         assert_eq!(reports.len(), 2);
         assert_eq!(got.len(), want.len());
         assert!(mse(&got, &want) < 1e-16);
+        // Both conv stages decoded through the shared inverse cache.
+        let cs = plan.inverse_cache_stats();
+        assert_eq!(cs.lookups(), 2, "one decode per conv stage");
     }
 
     #[test]

@@ -2,17 +2,24 @@
 //!
 //! 1. APCP-partition the (padded) input, KCCP-partition the filters;
 //! 2. CRME-encode both partition lists (paper Algs. 2 & 3);
-//! 3. hand each worker its ℓ_A coded input slabs + ℓ_B coded filter slabs
+//! 3. hand each worker its coded input slabs + ℓ_B coded filter slabs
 //!    (a [`WorkerPayload`]);
 //! 4. each worker convolves every (slabA, slabB) pair — any black-box
 //!    conv implementation works — returning a [`WorkerResult`];
 //! 5. once any δ results arrived, invert the recovery matrix and merge
 //!    (paper Alg. 5).
 //!
+//! One payload carries a **batch** of samples: the coding is linear, so
+//! the master-side fixed costs — most importantly the recovery-matrix
+//! inversion in step 5 — are paid once per job and amortized over every
+//! sample in it. A batch-1 job is exactly the paper's single-inference
+//! pipeline.
+//!
 //! The pipeline is transport-agnostic: the `cluster` module runs payloads
 //! on simulated workers; tests run them inline.
 
 use crate::coding::{self, Code, CrmeCode};
+use crate::fcdcc::inverse_cache::{InverseCache, DEFAULT_INVERSE_CACHE_CAP};
 use crate::model::ConvLayer;
 use crate::partition::{merge_output_blocks, ApcpPlan, KccpPlan};
 use crate::tensor::{conv2d, ConvParams, Tensor3, Tensor4};
@@ -23,8 +30,11 @@ use std::sync::Arc;
 #[derive(Clone)]
 pub struct WorkerPayload {
     pub worker_id: usize,
-    /// ℓ_A coded input slabs.
+    /// `batch · ℓ_A` coded input slabs, sample-major: slab `j` of sample
+    /// `s` is `inputs[s·ℓ_A + j]`.
     pub inputs: Vec<Tensor3>,
+    /// Samples in this job (1 = the paper's single-inference pipeline).
+    pub batch: usize,
     /// ℓ_B coded filter slabs. Pre-distributed in steady state (paper:
     /// filters are encoded once at model load), so every job sharing the
     /// resident slabs clones an `Arc`, never the tensors themselves.
@@ -47,13 +57,23 @@ impl WorkerPayload {
         self.filters.iter().map(|t| t.len()).sum()
     }
 
+    /// Coded input slabs per sample (ℓ_A).
+    pub fn ell_a(&self) -> usize {
+        debug_assert_eq!(self.inputs.len() % self.batch, 0);
+        self.inputs.len() / self.batch
+    }
+
     /// Execute the subtask with the reference conv (paper eq. (39):
-    /// all ℓ_A·ℓ_B pairwise convolutions, slabA-major order).
+    /// all ℓ_A·ℓ_B pairwise convolutions once per sample, sample-major ×
+    /// slabA-major order).
     pub fn run_local(&self) -> WorkerResult {
         self.run_with(|x, k, p| conv2d(x, k, p))
     }
 
-    /// Execute with a custom conv engine.
+    /// Execute with a custom conv engine. Iterating the sample-major
+    /// input slabs in order yields the `batch · ℓ_A · ℓ_B` output blocks
+    /// in the order the decoder expects: sample-major, slabA-major
+    /// within a sample.
     pub fn run_with(
         &self,
         conv: impl Fn(&Tensor3, &Tensor4, ConvParams) -> Tensor3,
@@ -66,15 +86,19 @@ impl WorkerPayload {
         }
         WorkerResult {
             worker_id: self.worker_id,
+            batch: self.batch,
             blocks,
         }
     }
 }
 
-/// A worker's coded output blocks (ℓ_A·ℓ_B of them, slabA-major).
+/// A worker's coded output blocks: `batch · ℓ_A·ℓ_B` of them,
+/// sample-major (slabA-major within each sample).
 #[derive(Clone)]
 pub struct WorkerResult {
     pub worker_id: usize,
+    /// Samples in the job this result belongs to.
+    pub batch: usize,
     pub blocks: Vec<Tensor3>,
 }
 
@@ -83,14 +107,26 @@ impl WorkerResult {
     pub fn download_entries(&self) -> usize {
         self.blocks.iter().map(|t| t.len()).sum()
     }
+
+    /// The ℓ_A·ℓ_B coded output blocks of one sample.
+    pub fn sample_blocks(&self, sample: usize) -> &[Tensor3] {
+        let bpw = self.blocks.len() / self.batch;
+        &self.blocks[sample * bpw..(sample + 1) * bpw]
+    }
 }
 
-/// A fully-planned FCDCC execution for one layer: geometry + code.
+/// A fully-planned FCDCC execution for one layer: geometry + code, plus
+/// the recovery-inverse cache consulted on every decode.
 pub struct FcdccPlan {
     pub layer: ConvLayer,
     pub apcp: ApcpPlan,
     pub kccp: KccpPlan,
     pub code: Arc<dyn Code>,
+    /// Recovery-inverse cache. Standalone plans own a private one;
+    /// `NetworkPlan` shares a single cache across all of its stages.
+    inverse_cache: Arc<InverseCache>,
+    /// This plan's stage index within the shared cache's key space.
+    cache_stage: usize,
 }
 
 impl FcdccPlan {
@@ -116,7 +152,22 @@ impl FcdccPlan {
             apcp,
             kccp,
             code,
+            inverse_cache: Arc::new(InverseCache::new(DEFAULT_INVERSE_CACHE_CAP)),
+            cache_stage: 0,
         })
+    }
+
+    /// Attach a shared recovery-inverse cache: decodes key their
+    /// inversions as `(stage_idx, worker subset)` in `cache`.
+    pub fn with_inverse_cache(mut self, cache: Arc<InverseCache>, stage_idx: usize) -> Self {
+        self.inverse_cache = cache;
+        self.cache_stage = stage_idx;
+        self
+    }
+
+    /// The recovery-inverse cache this plan decodes through.
+    pub fn inverse_cache(&self) -> &Arc<InverseCache> {
+        &self.inverse_cache
     }
 
     pub fn spec(&self) -> coding::CodeSpec {
@@ -147,23 +198,45 @@ impl FcdccPlan {
         coding::encode_inputs(self.code.as_ref(), &parts)
     }
 
+    /// Encode a batch of input tensors into per-worker **sample-major**
+    /// coded slab lists: worker `i` receives `batch·ℓ_A` slabs, sample
+    /// `s`'s slab `j` at index `s·ℓ_A + j`.
+    pub fn encode_input_batch(&self, xs: &[&Tensor3]) -> Vec<Vec<Tensor3>> {
+        let s = self.spec();
+        let mut per_worker: Vec<Vec<Tensor3>> =
+            (0..s.n).map(|_| Vec::with_capacity(xs.len() * s.ell_a)).collect();
+        for x in xs {
+            for (w, slabs) in self.encode_input(x).into_iter().enumerate() {
+                per_worker[w].extend(slabs);
+            }
+        }
+        per_worker
+    }
+
     /// Bundle payloads for all n workers. The resident coded filter slabs
-    /// are shared by reference (`Arc`), not copied per job.
+    /// are shared by reference (`Arc`), not copied per job. The batch
+    /// size is inferred from the slab count (`batch·ℓ_A` slabs per
+    /// worker), so single-sample callers are unchanged.
     pub fn make_payloads(
         &self,
         coded_inputs: Vec<Vec<Tensor3>>,
         coded_filters: &[Arc<Vec<Tensor4>>],
     ) -> Vec<WorkerPayload> {
         let conv = ConvParams::new(self.layer.stride, 0);
+        let ell_a = self.spec().ell_a;
         coded_inputs
             .into_iter()
             .zip(coded_filters)
             .enumerate()
-            .map(|(worker_id, (inputs, filters))| WorkerPayload {
-                worker_id,
-                inputs,
-                filters: Arc::clone(filters),
-                conv,
+            .map(|(worker_id, (inputs, filters))| {
+                debug_assert_eq!(inputs.len() % ell_a, 0);
+                WorkerPayload {
+                    worker_id,
+                    batch: inputs.len() / ell_a,
+                    inputs,
+                    filters: Arc::clone(filters),
+                    conv,
+                }
             })
             .collect()
     }
@@ -175,8 +248,25 @@ impl FcdccPlan {
         self.decode_refs(&refs)
     }
 
-    /// Zero-copy variant of [`Self::decode`] (the cluster hot path).
+    /// Zero-copy variant of [`Self::decode`] (the batch-1 hot path).
     pub fn decode_refs(&self, results: &[&WorkerResult]) -> Result<Tensor3> {
+        let mut outputs = self.decode_batch_refs(results)?;
+        ensure!(
+            outputs.len() == 1,
+            "decode: job carries a batch of {}, use decode_batch_refs",
+            outputs.len()
+        );
+        Ok(outputs.pop().expect("one decoded sample"))
+    }
+
+    /// Decode a **batched** job from any δ worker results: one recovery
+    /// matrix inversion (LRU-cached across jobs, keyed by the ordered
+    /// worker subset) reused for every sample, then a per-sample
+    /// blockwise combine + merge. Returns the layer outputs in batch
+    /// order. Per-sample arithmetic is identical to the batch-1 decode,
+    /// so batched outputs are bit-identical to per-request decoding from
+    /// the same worker subset.
+    pub fn decode_batch_refs(&self, results: &[&WorkerResult]) -> Result<Vec<Tensor3>> {
         ensure!(
             results.len() >= self.delta(),
             "decode: need delta={} results, got {}",
@@ -184,16 +274,35 @@ impl FcdccPlan {
             results.len()
         );
         let chosen = &results[..self.delta()];
+        let batch = chosen[0].batch;
+        for r in chosen {
+            ensure!(
+                r.batch == batch,
+                "decode: worker {} reports batch {}, expected {batch}",
+                r.worker_id,
+                r.batch
+            );
+        }
         let workers: Vec<usize> = chosen.iter().map(|r| r.worker_id).collect();
-        let blocks: Vec<&[Tensor3]> = chosen.iter().map(|r| r.blocks.as_slice()).collect();
-        let decoded = coding::decode_outputs(self.code.as_ref(), &workers, &blocks)?;
+        let d = self
+            .inverse_cache
+            .get_or_insert_with(self.cache_stage, &workers, || {
+                coding::recovery_inverse(self.code.as_ref(), &workers)
+            })?;
         let s = self.spec();
-        Ok(merge_output_blocks(
-            &decoded,
-            s.k_a,
-            s.k_b,
-            self.layer.h_out(),
-        ))
+        let mut outputs = Vec::with_capacity(batch);
+        for sample in 0..batch {
+            let blocks: Vec<&[Tensor3]> =
+                chosen.iter().map(|r| r.sample_blocks(sample)).collect();
+            let decoded = coding::decode_outputs_with(self.code.as_ref(), &d, &blocks)?;
+            outputs.push(merge_output_blocks(
+                &decoded,
+                s.k_a,
+                s.k_b,
+                self.layer.h_out(),
+            ));
+        }
+        Ok(outputs)
     }
 
     /// Run the whole pipeline inline (no cluster): encode, compute every
@@ -205,15 +314,30 @@ impl FcdccPlan {
         k: &Tensor4,
         survivors: Option<&[usize]>,
     ) -> Result<Tensor3> {
+        let mut ys = self.run_inline_batch(&[x], k, survivors)?;
+        Ok(ys.pop().expect("one sample"))
+    }
+
+    /// Batched counterpart of [`Self::run_inline`]: encode the whole
+    /// batch into one coded job, compute every chosen worker's subtask
+    /// locally, decode with a single recovery inversion. Returns one
+    /// output per sample, in batch order.
+    pub fn run_inline_batch(
+        &self,
+        xs: &[&Tensor3],
+        k: &Tensor4,
+        survivors: Option<&[usize]>,
+    ) -> Result<Vec<Tensor3>> {
         let coded_filters = self.encode_filters(k);
-        let coded_inputs = self.encode_input(x);
+        let coded_inputs = self.encode_input_batch(xs);
         let payloads = self.make_payloads(coded_inputs, &coded_filters);
         let ids: Vec<usize> = match survivors {
             Some(s) => s.to_vec(),
             None => (0..self.delta()).collect(),
         };
         let results: Vec<WorkerResult> = ids.iter().map(|&i| payloads[i].run_local()).collect();
-        self.decode(&results)
+        let refs: Vec<&WorkerResult> = results.iter().collect();
+        self.decode_batch_refs(&refs)
     }
 }
 
@@ -292,6 +416,46 @@ mod tests {
         let plan = FcdccPlan::new_crme(&layer, 2, 2, 3).unwrap(); // delta=1
         let r: Vec<WorkerResult> = vec![];
         assert!(plan.decode(&r).is_err());
+    }
+
+    #[test]
+    fn batched_job_bit_identical_to_per_sample_decode() {
+        let mut rng = Rng::new(57);
+        let layer = ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0);
+        let k = Tensor4::random(8, 2, 3, 3, &mut rng);
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 5).unwrap(); // delta=2
+        let survivors = [3usize, 1];
+        for batch in 1..=4usize {
+            let xs: Vec<Tensor3> =
+                (0..batch).map(|_| Tensor3::random(2, 12, 10, &mut rng)).collect();
+            let refs: Vec<&Tensor3> = xs.iter().collect();
+            let got = plan.run_inline_batch(&refs, &k, Some(&survivors)).unwrap();
+            assert_eq!(got.len(), batch);
+            for (x, y) in xs.iter().zip(&got) {
+                let want = plan.run_inline(x, &k, Some(&survivors)).unwrap();
+                assert_eq!(y.data, want.data, "batched decode diverged bitwise");
+            }
+        }
+        // All 10 decodes above share one worker subset: the recovery
+        // matrix was inverted exactly once, everything else hit the LRU.
+        assert_eq!(plan.inverse_cache().misses(), 1);
+        assert!(plan.inverse_cache().hits() >= 4 + 9);
+    }
+
+    #[test]
+    fn mismatched_batch_sizes_rejected() {
+        let layer = ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0);
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap(); // delta=2
+        let mut rng = Rng::new(58);
+        let x = Tensor3::random(2, 12, 10, &mut rng);
+        let k = Tensor4::random(8, 2, 3, 3, &mut rng);
+        let cf = plan.encode_filters(&k);
+        let single = plan.make_payloads(plan.encode_input(&x), &cf);
+        let double = plan.make_payloads(plan.encode_input_batch(&[&x, &x]), &cf);
+        assert_eq!(single[0].batch, 1);
+        assert_eq!(double[0].batch, 2);
+        let results = vec![single[0].run_local(), double[1].run_local()];
+        assert!(plan.decode(&results).is_err(), "mixed batch sizes must fail");
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //!                 [--stragglers 2] [--delay-ms 100] [--engine im2col|direct|pjrt]
 //! fcdcc optimize  --arch vgg [--q 16,32,64]          # Table IV planner
 //! fcdcc stability [--samples 6]                      # Fig. 3/4 report
-//! fcdcc serve     [--requests 16] [--n 4] [--stragglers 1] [--engine pjrt]
+//! fcdcc serve     [--requests 16] [--n 4] [--stragglers 1] [--engine pjrt] \
+//!                 [--max-in-flight 4] [--batch-window 4]
 //! fcdcc artifacts [--dir artifacts]                  # verify AOT artifacts
 //! ```
 
@@ -29,8 +30,8 @@ USAGE:
   fcdcc optimize  [--arch NAME] [--q Q1,Q2,...]
   fcdcc stability [--samples N] [--seed S]
   fcdcc serve     [--requests R] [--n N] [--stragglers S] [--delay-ms MS]
-                  [--engine direct|im2col|pjrt] [--depth D]
-                  [--verify-every K]
+                  [--engine direct|im2col|pjrt] [--max-in-flight D]
+                  [--batch-window B] [--verify-every K]
   fcdcc artifacts [--dir DIR]   (needs the `pjrt` feature)
 ";
 
@@ -150,7 +151,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = ServeConfig::default_with_engine(engine);
     cfg.requests = args.get_usize("requests", 16)?;
     cfg.n_workers = args.get_usize("n", 4)?;
-    cfg.max_in_flight = args.get_usize("depth", 1)?;
+    // `--depth` is the historical spelling of `--max-in-flight`.
+    let depth = args.get_usize("depth", 1)?;
+    cfg.max_in_flight = args.get_usize("max-in-flight", depth)?;
+    cfg.batch_window = args.get_usize("batch-window", 1)?;
+    if args.get("max-in-flight").is_none() && args.get("depth").is_none() {
+        // A wider window implies at least that many requests in flight;
+        // widen the default pipeline depth to match. Explicitly passed
+        // depths are left alone (serve_lenet rejects the conflict).
+        cfg.max_in_flight = cfg.max_in_flight.max(cfg.batch_window);
+    }
     cfg.verify_every = args.get_usize("verify-every", 1)?;
     let stragglers = args.get_usize("stragglers", 0)?;
     if stragglers > 0 {
@@ -161,9 +171,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let stats = coordinator::serve_lenet(cfg)?;
     println!(
-        "served {} requests (depth {}): mean latency {:.2}ms (p95 {:.2}ms), {:.1} req/s",
+        "served {} requests (depth {}, window {}): mean latency {:.2}ms (p95 {:.2}ms), {:.1} req/s",
         stats.requests,
         stats.max_in_flight,
+        stats.batch_window,
         stats.latency.mean * 1e3,
         stats.latency.p95 * 1e3,
         stats.throughput_rps
@@ -174,6 +185,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fmt_sci(stats.mean_logit_mse),
         stats.class_mismatches,
         stats.verified
+    );
+    println!(
+        "batching: {} coded jobs (mean batch {:.2}) | recovery inversions {} \
+         (inverse cache: {} hits / {} misses, {:.0}% hit rate)",
+        stats.coded_jobs,
+        stats.mean_batch,
+        stats.inverse_cache.misses,
+        stats.inverse_cache.hits,
+        stats.inverse_cache.misses,
+        stats.inverse_cache.hit_rate() * 100.0
     );
     Ok(())
 }

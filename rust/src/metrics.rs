@@ -53,6 +53,30 @@ impl Stats {
     }
 }
 
+/// Hit/miss counters of a cache — the recovery-inverse cache in the
+/// decode hot path surfaces these through `ServeStats`. `misses` equals
+/// the number of recomputations (recovery-matrix inversions) performed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served from the cache (0 when never used).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
 /// A simple aligned-markdown table builder.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
@@ -163,6 +187,14 @@ mod tests {
         assert!(out.contains("### T"));
         assert!(out.contains("| a | long_header |"));
         assert!(out.contains("| x | 1           |"));
+    }
+
+    #[test]
+    fn cache_stats_rates() {
+        let c = CacheStats { hits: 3, misses: 1 };
+        assert_eq!(c.lookups(), 4);
+        assert!((c.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
     }
 
     #[test]

@@ -10,12 +10,15 @@ use crate::runtime::{manifest::artifact_name, PjrtRuntime};
 use crate::tensor::{Tensor3, Tensor4};
 use anyhow::{anyhow, Result};
 use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 struct Request {
     name: String,
     xs: Vec<Tensor3>,
-    ks: Vec<Tensor4>,
+    /// Resident coded filter slabs, `Arc`-shared with the payload so a
+    /// batched job's per-sample requests never deep-copy them.
+    ks: Arc<Vec<Tensor4>>,
     reply: Sender<Result<Vec<Tensor3>>>,
 }
 
@@ -74,7 +77,7 @@ impl PjrtService {
         &self,
         name: &str,
         xs: Vec<Tensor3>,
-        ks: Vec<Tensor4>,
+        ks: Arc<Vec<Tensor4>>,
     ) -> Result<Vec<Tensor3>> {
         let (reply, rx) = channel();
         self.tx
@@ -113,8 +116,11 @@ impl TaskEngine for PjrtService {
             .filters
             .first()
             .ok_or_else(|| anyhow!("payload has no filter slabs"))?;
+        // Artifacts are AOT-compiled for the per-sample (ℓ_A, ℓ_B) task
+        // shape; a batched payload runs the same artifact once per sample.
+        let ell_a = payload.ell_a();
         let name = artifact_name(
-            payload.inputs.len(),
+            ell_a,
             payload.filters.len(),
             x0.c,
             x0.h,
@@ -124,10 +130,17 @@ impl TaskEngine for PjrtService {
             k0.kw,
             payload.conv.stride,
         );
-        let blocks =
-            self.run_named(&name, payload.inputs.clone(), payload.filters.as_ref().clone())?;
+        let mut blocks = Vec::with_capacity(payload.inputs.len() * payload.filters.len());
+        for sample_slabs in payload.inputs.chunks(ell_a) {
+            blocks.extend(self.run_named(
+                &name,
+                sample_slabs.to_vec(),
+                Arc::clone(&payload.filters),
+            )?);
+        }
         Ok(WorkerResult {
             worker_id: payload.worker_id,
+            batch: payload.batch,
             blocks,
         })
     }

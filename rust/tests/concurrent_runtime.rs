@@ -2,7 +2,11 @@
 //! on one worker pool decode correctly with interleaved and stale
 //! replies, a per-job timeout fires without poisoning the other
 //! in-flight jobs, and pipelined serving produces bit-identical logits
-//! to sequential serving.
+//! to sequential serving. The batched-job variants cover the same
+//! invariants when one coded job carries several samples: batched decode
+//! is bit-identical to per-request decode, a timed-out batch fails all
+//! of its members at once without poisoning later batches, and late
+//! replies of a cancelled batch are discarded.
 
 use fcdcc::cluster::{Cluster, JobHandle, StragglerModel};
 use fcdcc::coordinator::{serve_lenet, ServeConfig};
@@ -118,30 +122,161 @@ fn per_job_timeout_does_not_poison_other_jobs() {
     cluster.shutdown();
 }
 
-/// Bit-identical pipelined vs sequential serving. With n = δ every job
-/// needs all workers' replies, and the runtime orders the chosen δ
-/// replies by worker id before decoding — so the decode (and with it
-/// every logit) is deterministic regardless of reply arrival order or
-/// pipeline depth.
+/// Batched cluster jobs decode each sample bit-identically to the
+/// per-request (batch-1) decode, for batch sizes 1..4. With n = δ the
+/// surviving subset is always {0, 1}, so the inline reference uses the
+/// same recovery inverse and the comparison is exact to the last bit.
+#[test]
+fn batched_decode_bit_identical_to_per_request() {
+    let (layer, k) = setup();
+    let plan = FcdccPlan::new_crme(&layer, 4, 2, 2).unwrap(); // delta = 2 = n
+    let cf = plan.encode_filters(&k);
+    let mut cluster = Cluster::new(2, Arc::new(DirectEngine));
+    let mut rng = Rng::new(11);
+    for batch in 1..=4usize {
+        let xs: Vec<Tensor3> =
+            (0..batch).map(|_| Tensor3::random(2, 12, 10, &mut rng)).collect();
+        let refs: Vec<&Tensor3> = xs.iter().collect();
+        let handle = cluster
+            .submit_batch(&plan, &refs, &cf, &StragglerModel::None, &mut rng)
+            .unwrap();
+        let (ys, report) = cluster.wait_batch(&plan, handle).unwrap();
+        assert_eq!(report.batch, batch);
+        assert_eq!(ys.len(), batch);
+        for (x, y) in xs.iter().zip(&ys) {
+            let want = plan.run_inline(x, &k, Some(&[0, 1])).unwrap();
+            assert_eq!(y.data, want.data, "batch {batch}: decode diverged bitwise");
+        }
+    }
+    cluster.shutdown();
+    // One subset across every decode: exactly one inversion ever ran.
+    assert_eq!(plan.inverse_cache().misses(), 1);
+}
+
+/// A batch whose job blows its deadline fails **all** member requests in
+/// one error, and neither concurrent nor later batches are poisoned.
+#[test]
+fn batch_timeout_fails_all_members_without_poisoning_later_batches() {
+    let (layer, k) = setup();
+    let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap(); // delta=2
+    let cf = plan.encode_filters(&k);
+    let mut cluster = Cluster::new(4, Arc::new(DirectEngine));
+    cluster.collect_timeout = Duration::from_millis(300);
+    let mut rng = Rng::new(12);
+    let xs: Vec<Tensor3> = (0..3).map(|_| Tensor3::random(2, 12, 10, &mut rng)).collect();
+    let refs: Vec<&Tensor3> = xs.iter().collect();
+    let check = |ys: &[Tensor3]| {
+        for (x, y) in xs.iter().zip(ys) {
+            let want = conv2d(x, &k, layer.params());
+            assert!(mse(&y.data, &want.data) < 1e-18, "member decoded wrong");
+        }
+    };
+
+    // Doomed batch: every worker fails, so it can never reach delta.
+    let doomed = cluster
+        .submit_batch(&plan, &refs, &cf, &StragglerModel::Failures { count: 4 }, &mut rng)
+        .unwrap();
+    // A healthy batch overlapping the doomed one is unaffected.
+    let healthy = cluster
+        .submit_batch(&plan, &refs, &cf, &StragglerModel::None, &mut rng)
+        .unwrap();
+    let (ys, _) = cluster.wait_batch(&plan, healthy).unwrap();
+    check(&ys);
+
+    let err = cluster.wait_batch(&plan, doomed).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("timed out"), "unexpected error: {msg}");
+    assert!(msg.contains("3 member sample"), "error names the whole batch: {msg}");
+
+    // Later batches on the same pool still decode fine.
+    let handle = cluster
+        .submit_batch(&plan, &refs, &cf, &StragglerModel::None, &mut rng)
+        .unwrap();
+    let (ys, _) = cluster.wait_batch(&plan, handle).unwrap();
+    check(&ys);
+    cluster.shutdown();
+}
+
+/// Late replies of already-settled (first-δ-decoded and cancelled)
+/// batched jobs land while later batches are collecting — the stale
+/// filter must drop them. Batch sizes vary across the burst so a
+/// misrouted reply would also trip the batch-size consistency check.
+#[test]
+fn stale_replies_from_cancelled_batch_are_ignored() {
+    let (layer, k) = setup();
+    let plan = FcdccPlan::new_crme(&layer, 4, 2, 5).unwrap(); // delta=2, gamma=3
+    let cf = plan.encode_filters(&k);
+    let mut cluster = Cluster::new(5, Arc::new(DirectEngine));
+    let mut rng = Rng::new(13);
+    let straggler = StragglerModel::FixedCount {
+        count: 2,
+        delay: Duration::from_millis(25),
+    };
+    let batches: Vec<Vec<Tensor3>> = (0..4)
+        .map(|b| {
+            (0..(1 + b % 3))
+                .map(|_| Tensor3::random(2, 12, 10, &mut rng))
+                .collect()
+        })
+        .collect();
+    let handles: Vec<JobHandle> = batches
+        .iter()
+        .map(|xs| {
+            let refs: Vec<&Tensor3> = xs.iter().collect();
+            cluster
+                .submit_batch(&plan, &refs, &cf, &straggler, &mut rng)
+                .unwrap()
+        })
+        .collect();
+    // Wait FIFO: each settled batch's cancelled stragglers may still
+    // reply during the collection of the following ones.
+    for (xs, handle) in batches.iter().zip(handles) {
+        let (ys, report) = cluster.wait_batch(&plan, handle).unwrap();
+        assert_eq!(report.batch, xs.len());
+        for (x, y) in xs.iter().zip(&ys) {
+            let want = conv2d(x, &k, layer.params());
+            assert!(
+                mse(&y.data, &want.data) < 1e-18,
+                "stale or cross-batch reply corrupted a decode"
+            );
+        }
+    }
+    assert_eq!(cluster.in_flight(), 0);
+    cluster.shutdown();
+}
+
+/// Bit-identical pipelined/batched vs sequential serving. With n = δ
+/// every job needs all workers' replies, and the runtime orders the
+/// chosen δ replies by worker id before decoding — so the decode (and
+/// with it every logit) is deterministic regardless of reply arrival
+/// order, pipeline depth, or how requests were coalesced into jobs.
 #[test]
 fn pipelined_serving_bit_identical_to_sequential() {
-    let serve = |depth: usize| {
+    let serve = |depth: usize, window: usize| {
         let mut cfg = ServeConfig::default_with_engine(Arc::new(DirectEngine));
         cfg.n_workers = 2;
         cfg.partitions = [(4, 2), (2, 4)]; // delta = 2 = n for both convs
         cfg.requests = 4;
         cfg.seed = 77;
         cfg.max_in_flight = depth;
+        cfg.batch_window = window;
         cfg.verify_every = 1;
         serve_lenet(cfg).unwrap()
     };
-    let sequential = serve(1);
-    let pipelined = serve(4);
+    let sequential = serve(1, 1);
+    let pipelined = serve(4, 1);
+    let batched = serve(4, 2);
     assert_eq!(sequential.class_mismatches, 0);
     assert_eq!(pipelined.class_mismatches, 0);
+    assert_eq!(batched.class_mismatches, 0);
     assert!(sequential.mean_logit_mse < 1e-16);
+    assert!(batched.mean_batch > 1.0, "coalescing never formed a batch");
     assert_eq!(sequential.logits.len(), pipelined.logits.len());
+    assert_eq!(sequential.logits.len(), batched.logits.len());
     for (i, (a, b)) in sequential.logits.iter().zip(&pipelined.logits).enumerate() {
         assert_eq!(a, b, "request {i}: pipelined logits diverged bitwise");
+    }
+    for (i, (a, b)) in sequential.logits.iter().zip(&batched.logits).enumerate() {
+        assert_eq!(a, b, "request {i}: batched logits diverged bitwise");
     }
 }
