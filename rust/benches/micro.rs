@@ -1,15 +1,43 @@
 //! Micro-benchmarks of the substrates on the hot path — the profiling
 //! entry point for the performance pass (EXPERIMENTS.md §Perf): conv
 //! engines, coded combination (encode), recovery inversion, decode
-//! combination, and the tensor primitives.
+//! combination, the tensor primitives, and the **fused slab algebra**
+//! (batch encode / GEMM decode / patch-matrix reuse) against its scalar
+//! reference path.
+//!
+//! Besides the human-readable lines, the fused-vs-reference sections
+//! emit **one JSON line each** (`{"bench":"micro",...}`) with
+//! entries-per-second for both paths and the speedup, so the bench
+//! trajectory (`BENCH_*.json`) can track the coded hot path over time.
+//! The acceptance bar for the fusion PR is `speedup >= 2` on the
+//! `encode_decode_batch` record.
 
 use fcdcc::bench_harness::{bench, fast_mode, report, BenchConfig};
-use fcdcc::coding::{self, CrmeCode, Code};
-use fcdcc::fcdcc::FcdccPlan;
+use fcdcc::coding::{self, Code, CrmeCode};
+use fcdcc::fcdcc::{FcdccPlan, WorkerResult};
 use fcdcc::linalg::{cond_2, lu, Mat};
+use fcdcc::metrics::Stats;
 use fcdcc::model::ConvLayer;
+use fcdcc::partition::merge_output_blocks;
 use fcdcc::tensor::{conv2d, im2col::conv2d_im2col, ConvParams, Tensor3, Tensor4};
 use fcdcc::util::rng::Rng;
+
+/// One trajectory record: entries/second through the reference and the
+/// fused path, plus the speedup.
+fn json_speed(op: &str, entries: usize, reference: &Stats, fused: &Stats) {
+    let e = entries as f64;
+    println!(
+        "{{\"bench\":\"micro\",\"op\":\"{op}\",\"entries\":{entries},\
+         \"ref_secs\":{:.6e},\"fused_secs\":{:.6e},\
+         \"ref_entries_per_sec\":{:.4e},\"fused_entries_per_sec\":{:.4e},\
+         \"speedup\":{:.3}}}",
+        reference.mean,
+        fused.mean,
+        e / reference.mean,
+        e / fused.mean,
+        reference.mean / fused.mean,
+    );
+}
 
 fn main() {
     let cfg = BenchConfig {
@@ -46,22 +74,81 @@ fn main() {
     let x = Tensor3::random(layer.c, layer.h, layer.w, &mut rng);
     let kk = Tensor4::random(layer.n, layer.c, layer.kh, layer.kw, &mut rng);
     report("encode_filters", &bench(cfg, || plan.encode_filters(&kk)));
-    report("encode_input", &bench(cfg, || plan.encode_input(&x)));
-    let cf = plan.encode_filters(&kk);
-    let payloads = plan.make_payloads(plan.encode_input(&x), &cf);
+    report("encode_input (reference)", &bench(cfg, || plan.encode_input(&x)));
     report(
-        "worker subtask (im2col)",
+        "encode_input_batch (fused, batch 1)",
+        &bench(cfg, || plan.encode_input_batch(&[&x])),
+    );
+    let cf = plan.encode_filters(&kk);
+    let payloads = plan.make_payloads(plan.encode_input_batch(&[&x]), &cf);
+    report(
+        "worker subtask (per-pair im2col)",
         &bench(cfg, || payloads[0].run_with(|a, b, c| conv2d_im2col(a, b, c))),
     );
-    let results: Vec<_> = payloads[..plan.delta()]
-        .iter()
-        .map(|p| p.run_with(|a, b, c| conv2d_im2col(a, b, c)))
-        .collect();
-    report("decode + merge", &bench(cfg, || plan.decode(&results).unwrap()));
+    report(
+        "worker subtask (fused patch reuse)",
+        &bench(cfg, || payloads[0].run_im2col()),
+    );
+    let results: Vec<_> = payloads[..plan.delta()].iter().map(|p| p.run_im2col()).collect();
+    report("decode + merge (GEMM)", &bench(cfg, || plan.decode(&results).unwrap()));
 
-    println!("\n### linalg (256x256 matmul / LU)\n");
+    // --- The fusion acceptance bar: batched encode+decode, fused vs the
+    // pre-fusion reference chain, on the same machine and inputs.
+    let batch = 4usize;
+    println!("\n### fused slab algebra vs reference — {}, batch {batch}\n", layer.name);
+    let xs: Vec<Tensor3> = (0..batch)
+        .map(|_| Tensor3::random(layer.c, layer.h, layer.w, &mut rng))
+        .collect();
+    let xrefs: Vec<&Tensor3> = xs.iter().collect();
+    let spec = plan.spec();
+
+    // Encode: reference = per-sample pad -> partition -> axpy chain.
+    let enc_ref = bench(cfg, || {
+        xrefs.iter().map(|x| plan.encode_input(x)).collect::<Vec<_>>()
+    });
+    let enc_fused = bench(cfg, || plan.encode_input_batch(&xrefs));
+    report("encode batch (reference chain)", &enc_ref);
+    report("encode batch (fused single-pass)", &enc_fused);
+    let slab_entries = layer.c * plan.apcp.h_hat * (layer.w + 2 * layer.pad);
+    let enc_entries = batch * spec.n * spec.ell_a * slab_entries;
+    json_speed("encode_batch", enc_entries, &enc_ref, &enc_fused);
+
+    // Decode: reference = per-sample per-block zeros+axpy combine plus
+    // the tensor-list concat merge; fused = pooled GEMM + flat merge.
+    // The recovery inverse is precomputed for both (the LRU cache makes
+    // it a per-job constant either way).
+    let payloads = plan.make_payloads(plan.encode_input_batch(&xrefs), &cf);
+    let results: Vec<WorkerResult> =
+        payloads[..plan.delta()].iter().map(|p| p.run_im2col()).collect();
+    let result_refs: Vec<&WorkerResult> = results.iter().collect();
+    let workers: Vec<usize> = result_refs.iter().map(|r| r.worker_id).collect();
+    let d = coding::recovery_inverse(plan.code.as_ref(), &workers).unwrap();
+    let dec_ref = bench(cfg, || {
+        (0..batch)
+            .map(|s| {
+                let blocks: Vec<&[Tensor3]> =
+                    result_refs.iter().map(|r| r.sample_blocks(s)).collect();
+                let decoded =
+                    coding::decode_outputs_with(plan.code.as_ref(), &d, &blocks).unwrap();
+                merge_output_blocks(&decoded, spec.k_a, spec.k_b, layer.h_out())
+            })
+            .collect::<Vec<_>>()
+    });
+    let dec_fused = bench(cfg, || plan.decode_batch_refs(&result_refs).unwrap());
+    report("decode batch (reference chain)", &dec_ref);
+    report("decode batch (fused GEMM + pool)", &dec_fused);
+    let dec_entries = batch * layer.n * layer.h_out() * layer.w_out();
+    json_speed("decode_batch", dec_entries, &dec_ref, &dec_fused);
+
+    // Combined encode+decode — the PR acceptance record.
+    let both_ref = Stats::from(&[enc_ref.mean + dec_ref.mean]);
+    let both_fused = Stats::from(&[enc_fused.mean + dec_fused.mean]);
+    json_speed("encode_decode_batch", enc_entries + dec_entries, &both_ref, &both_fused);
+
+    println!("\n### linalg (256x256 matmul / LU / transpose)\n");
     let a = Mat::random(256, 256, &mut rng);
     let b = Mat::random(256, 256, &mut rng);
     report("matmul 256", &bench(cfg, || a.matmul(&b)));
     report("LU factor 256", &bench(cfg, || lu::Lu::factor(&a).unwrap()));
+    report("transpose 256 (blocked)", &bench(cfg, || a.transpose()));
 }

@@ -28,7 +28,8 @@ fn json_line(model: &str, mode: &str, stats: &ServeStats) {
         "{{\"bench\":\"serve_throughput\",\"straggler\":\"{}\",\"mode\":\"{}\",\
          \"depth\":{},\"batch_window\":{},\"requests\":{},\"rps\":{:.3},\
          \"latency_p50_ms\":{:.3},\"latency_p95_ms\":{:.3},\"coded_jobs\":{},\
-         \"mean_batch\":{:.3},\"inversions\":{},\"inverse_cache_hits\":{}}}",
+         \"mean_batch\":{:.3},\"inversions\":{},\"inverse_cache_hits\":{},\
+         \"scratch_allocs\":{},\"scratch_hits\":{}}}",
         model,
         mode,
         stats.max_in_flight,
@@ -41,6 +42,8 @@ fn json_line(model: &str, mode: &str, stats: &ServeStats) {
         stats.mean_batch,
         stats.inverse_cache.misses,
         stats.inverse_cache.hits,
+        stats.scratch.misses,
+        stats.scratch.hits,
     );
 }
 

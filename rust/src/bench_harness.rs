@@ -66,9 +66,11 @@ pub fn env_usize(name: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
-/// `FCDCC_BENCH_FAST=1` shrinks every bench to smoke-test size.
+/// `FCDCC_BENCH_FAST=1` (or the short alias `FCDCC_FAST=1`, used by the
+/// CI smoke step) shrinks every bench to smoke-test size.
 pub fn fast_mode() -> bool {
-    std::env::var("FCDCC_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+    let on = |name: &str| std::env::var(name).map(|v| v == "1").unwrap_or(false);
+    on("FCDCC_BENCH_FAST") || on("FCDCC_FAST")
 }
 
 #[cfg(test)]

@@ -18,7 +18,7 @@
 
 use crate::cluster::straggler::StragglerModel;
 use crate::cluster::worker::{worker_loop, WorkerMsg, WorkerReply};
-use crate::engine::TaskEngine;
+use crate::engine::{Im2colEngine, TaskEngine};
 use crate::fcdcc::FcdccPlan;
 use crate::tensor::{Tensor3, Tensor4};
 use crate::util::rng::Rng;
@@ -148,6 +148,13 @@ impl Cluster {
         }
     }
 
+    /// Spawn `n` workers on the default engine: im2col with per-slab
+    /// patch-matrix reuse ([`Im2colEngine`]) — the optimized production
+    /// path. `DirectEngine` stays available as the correctness oracle.
+    pub fn with_default_engine(n: usize) -> Self {
+        Self::new(n, Arc::new(Im2colEngine))
+    }
+
     pub fn n(&self) -> usize {
         self.n
     }
@@ -194,7 +201,9 @@ impl Cluster {
         let job_id = self.next_job;
         self.next_job += 1;
 
-        // --- Encode phase (master).
+        // --- Encode phase (master): the fused single-pass batch encoder
+        // (no padded intermediate, no partition copies; large batches
+        // fan out across threads).
         let t0 = Instant::now();
         let coded_inputs = plan.encode_input_batch(xs);
         let payloads = plan.make_payloads(coded_inputs, coded_filters);
@@ -515,6 +524,23 @@ mod tests {
         }
         // The whole batch shares one decode: exactly one inversion.
         assert_eq!(plan.inverse_cache().misses(), 1);
+    }
+
+    #[test]
+    fn default_engine_cluster_matches_reference() {
+        // The default worker engine is the fused im2col path; it must
+        // agree with the direct-conv oracle end to end.
+        let (layer, x, k) = small_setup();
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap();
+        let coded_filters = plan.encode_filters(&k);
+        let mut cluster = Cluster::with_default_engine(4);
+        let mut rng = Rng::new(12);
+        let (y, _) = cluster
+            .run_job(&plan, &x, &coded_filters, &StragglerModel::None, &mut rng)
+            .unwrap();
+        cluster.shutdown();
+        let want = conv2d(&x, &k, layer.params());
+        assert!(mse(&y.data, &want.data) < 1e-18);
     }
 
     #[test]

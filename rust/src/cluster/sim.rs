@@ -66,7 +66,9 @@ pub fn simulate_job(
     assert_eq!(coded_filters.len(), n);
 
     let t0 = Instant::now();
-    let coded_inputs = plan.encode_input(x);
+    // The fused batch encoder (batch 1) — the same hot path the live
+    // cluster's submit uses, so the measured encode cost is the real one.
+    let coded_inputs = plan.encode_input_batch(&[x]);
     let payloads = plan.make_payloads(coded_inputs, coded_filters);
     let encode_secs = t0.elapsed().as_secs_f64();
 

@@ -2,6 +2,12 @@
 //! injected straggler fate, computes the pairwise coded convolutions with
 //! its [`TaskEngine`], and sends the coded result back.
 //!
+//! The engine sees the **whole payload**, not individual (slabA, slabB)
+//! pairs, so it can amortize per-slab work: the default `Im2colEngine`
+//! builds each coded input slab's im2col patch matrix once and reuses it
+//! across all ℓ_B filter slabs, with the patch buffer reused across the
+//! batch (`WorkerPayload::run_im2col`).
+//!
 //! A subtask may carry a whole **batch** of samples (`WorkerPayload`'s
 //! batch axis); the wire protocol is oblivious to it — one job id, one
 //! task message, one reply — so batched jobs flow through dispatch,

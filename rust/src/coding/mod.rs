@@ -95,6 +95,12 @@ pub trait Code: Send + Sync {
 /// Encode the input-partition list: worker `i`'s slab `j` is
 /// `Σ_α A(α, i·ℓ_A + j) · X'_α` (paper eq. (2)/(32)). Returns
 /// `n` vectors of `ell_a` coded slabs.
+///
+/// This is the **reference** combiner (one zeros+axpy sweep per coded
+/// slab). The serving hot path uses the fused single-pass batch encoder
+/// (`FcdccPlan::encode_input_batch`), which is bit-identical: per output
+/// element both fold the partitions in ascending-α order and skip zero
+/// coefficients.
 pub fn encode_inputs(code: &dyn Code, parts: &[Tensor3]) -> Vec<Vec<Tensor3>> {
     let s = code.spec();
     assert_eq!(parts.len(), s.k_a, "encode_inputs: expected k_a partitions");
@@ -179,7 +185,13 @@ pub fn decode_outputs(
 /// Decode one sample's coded output blocks against a **precomputed**
 /// recovery-matrix inverse `d` (from [`recovery_inverse`], possibly
 /// cached). `d`'s column order must match the worker order the blocks
-/// are given in — the batched decode hot path.
+/// are given in.
+///
+/// This is the **reference** decoder (per-block zeros+axpy sweep). The
+/// serving hot path expresses the same contraction as a panel-blocked
+/// GEMM over pooled staging buffers (`FcdccPlan::decode_batch_refs` via
+/// `Mat::gemm_t_rows_into`), with an identical per-element summation
+/// order — the property suite asserts bit-identity between the two.
 pub fn decode_outputs_with(
     code: &dyn Code,
     d: &Mat,

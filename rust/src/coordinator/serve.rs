@@ -20,7 +20,7 @@
 //! loop — same code path, no overlap.
 
 use crate::cluster::{Cluster, JobHandle, StragglerModel};
-use crate::engine::TaskEngine;
+use crate::engine::{Im2colEngine, TaskEngine};
 use crate::fcdcc::NetworkPlan;
 use crate::metrics::{CacheStats, Stats};
 use crate::model::network::softmax;
@@ -74,6 +74,15 @@ impl ServeConfig {
     }
 }
 
+impl Default for ServeConfig {
+    /// Default serving configuration: workers run the fused im2col
+    /// engine (the optimized path; `DirectEngine` stays the correctness
+    /// oracle for tests).
+    fn default() -> Self {
+        Self::default_with_engine(Arc::new(Im2colEngine))
+    }
+}
+
 /// Serving-loop results.
 #[derive(Clone, Debug)]
 pub struct ServeStats {
@@ -103,6 +112,10 @@ pub struct ServeStats {
     /// Recovery-inverse cache counters: `misses` is exactly the number
     /// of recovery-matrix inversions performed across the whole run.
     pub inverse_cache: CacheStats,
+    /// Decode scratch-pool counters: `misses` is exactly the number of
+    /// staging-buffer heap allocations the decode hot path performed
+    /// (steady-state serving should allocate only during warm-up).
+    pub scratch: CacheStats,
     /// Final logits of every request, in request order.
     pub logits: Vec<Vec<f64>>,
 }
@@ -331,6 +344,7 @@ fn run_pipeline(
             batch_sizes.iter().sum::<usize>() as f64 / coded_jobs as f64
         },
         inverse_cache: plan.inverse_cache_stats(),
+        scratch: plan.scratch_stats(),
         logits,
     })
 }
@@ -492,6 +506,20 @@ mod tests {
             stats.inverse_cache.lookups(),
             stats.coded_jobs as u64,
             "one cache lookup per decode"
+        );
+        // Steady-state decode staging is pooled: one take per decode,
+        // and at most a couple of warm-up allocations across both conv
+        // stages — everything else reuses a buffer.
+        assert_eq!(
+            stats.scratch.lookups(),
+            stats.coded_jobs as u64,
+            "one staging-buffer take per decode"
+        );
+        assert!(
+            stats.scratch.misses <= 2,
+            "{} staging allocations for {} decodes",
+            stats.scratch.misses,
+            stats.coded_jobs
         );
     }
 

@@ -23,25 +23,18 @@ pub trait ConvEngine: Send + Sync {
 }
 
 /// A whole-subtask executor: runs one coded [`WorkerPayload`] (all
-/// pairwise convolutions). Every [`ConvEngine`] is trivially a
-/// `TaskEngine` (the blanket impl below); the PJRT runtime implements it
-/// directly with the fused AOT artifact.
+/// pairwise convolutions). A `TaskEngine` sees the whole payload, so it
+/// can amortize work across the slab pairs — [`Im2colEngine`] builds
+/// each input slab's im2col patch matrix once and reuses it across all
+/// ℓ_B filter slabs (and the buffer across the batch); the PJRT runtime
+/// implements it directly with the fused AOT artifact.
 pub trait TaskEngine: Send + Sync {
     fn name(&self) -> &str;
     fn run(&self, payload: &WorkerPayload) -> anyhow::Result<WorkerResult>;
 }
 
-impl<E: ConvEngine> TaskEngine for E {
-    fn name(&self) -> &str {
-        ConvEngine::name(self)
-    }
-
-    fn run(&self, payload: &WorkerPayload) -> anyhow::Result<WorkerResult> {
-        Ok(payload.run_with(|x, k, p| self.conv(x, k, p)))
-    }
-}
-
-/// Naive direct convolution (paper's "basic, unoptimized" worker).
+/// Naive direct convolution (paper's "basic, unoptimized" worker) — the
+/// correctness oracle.
 pub struct DirectEngine;
 
 impl ConvEngine for DirectEngine {
@@ -54,7 +47,18 @@ impl ConvEngine for DirectEngine {
     }
 }
 
-/// im2col + GEMM convolution.
+impl TaskEngine for DirectEngine {
+    fn name(&self) -> &str {
+        "direct"
+    }
+
+    fn run(&self, payload: &WorkerPayload) -> anyhow::Result<WorkerResult> {
+        Ok(payload.run_local())
+    }
+}
+
+/// im2col + GEMM convolution — the optimized CPU path and the default
+/// engine for cluster workers.
 pub struct Im2colEngine;
 
 impl ConvEngine for Im2colEngine {
@@ -64,6 +68,18 @@ impl ConvEngine for Im2colEngine {
 
     fn conv(&self, x: &Tensor3, k: &Tensor4, p: ConvParams) -> Tensor3 {
         conv2d_im2col(x, k, p)
+    }
+}
+
+impl TaskEngine for Im2colEngine {
+    fn name(&self) -> &str {
+        "im2col"
+    }
+
+    /// The fused subtask path: one patch matrix per coded input slab,
+    /// reused across every filter slab, buffer reused across the batch.
+    fn run(&self, payload: &WorkerPayload) -> anyhow::Result<WorkerResult> {
+        Ok(payload.run_im2col())
     }
 }
 

@@ -8,9 +8,11 @@ pub mod inverse_cache;
 pub mod network_plan;
 pub mod pipeline;
 pub mod pooling;
+pub mod scratch;
 
 pub use cost::{CostModel, CostBreakdown, PlanChoice};
 pub use inverse_cache::{InverseCache, DEFAULT_INVERSE_CACHE_CAP};
 pub use network_plan::{ConvStage, NetworkPlan};
 pub use pipeline::{FcdccPlan, WorkerPayload, WorkerResult};
 pub use pooling::CodedAvgPool;
+pub use scratch::{ScratchPool, DEFAULT_SCRATCH_POOL_CAP};

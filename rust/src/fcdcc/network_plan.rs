@@ -13,6 +13,7 @@
 
 use crate::cluster::{Cluster, JobHandle, JobReport, StragglerModel};
 use crate::fcdcc::inverse_cache::{InverseCache, DEFAULT_INVERSE_CACHE_CAP};
+use crate::fcdcc::scratch::{ScratchPool, DEFAULT_SCRATCH_POOL_CAP};
 use crate::fcdcc::FcdccPlan;
 use crate::metrics::CacheStats;
 use crate::model::network::add_bias;
@@ -64,6 +65,9 @@ pub struct NetworkPlan {
     net: Network,
     stages: Vec<ConvStage>,
     inverse_cache: Arc<InverseCache>,
+    /// Decode staging buffers, shared by every stage (stages at the same
+    /// geometry reuse each other's buffers; differing sizes coexist).
+    scratch: Arc<ScratchPool>,
 }
 
 impl NetworkPlan {
@@ -73,6 +77,7 @@ impl NetworkPlan {
     /// resident on the workers across requests).
     pub fn new(net: Network, partitions: &[(usize, usize)], n_workers: usize) -> Result<Self> {
         let inverse_cache = Arc::new(InverseCache::new(DEFAULT_INVERSE_CACHE_CAP));
+        let scratch = Arc::new(ScratchPool::new(DEFAULT_SCRATCH_POOL_CAP));
         let mut stages = Vec::new();
         for (layer_idx, layer) in net.layers.iter().enumerate() {
             if let Layer::Conv {
@@ -88,7 +93,8 @@ impl NetworkPlan {
                 let (k_a, k_b) = partitions[stages.len()];
                 let stage_idx = stages.len();
                 let plan = FcdccPlan::new_crme(shape, k_a, k_b, n_workers)?
-                    .with_inverse_cache(Arc::clone(&inverse_cache), stage_idx);
+                    .with_inverse_cache(Arc::clone(&inverse_cache), stage_idx)
+                    .with_scratch_pool(Arc::clone(&scratch));
                 let coded_filters = plan.encode_filters(weights);
                 stages.push(ConvStage {
                     plan,
@@ -108,6 +114,7 @@ impl NetworkPlan {
             net,
             stages,
             inverse_cache,
+            scratch,
         })
     }
 
@@ -124,6 +131,14 @@ impl NetworkPlan {
     /// across every decode of every stage of this plan.
     pub fn inverse_cache_stats(&self) -> CacheStats {
         self.inverse_cache.stats()
+    }
+
+    /// Hit/miss counters of the shared decode scratch-buffer pool.
+    /// `misses` is exactly the number of staging-buffer heap allocations
+    /// the decode hot path performed; in steady-state serving everything
+    /// after warm-up should be a hit.
+    pub fn scratch_stats(&self) -> CacheStats {
+        self.scratch.stats()
     }
 
     /// Advance `a` through master-side (non-conv) layers starting at

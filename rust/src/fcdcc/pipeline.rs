@@ -15,16 +15,35 @@
 //! sample in it. A batch-1 job is exactly the paper's single-inference
 //! pipeline.
 //!
+//! The encode/decode hot path is **fused slab algebra** (DESIGN.md
+//! §Hot-path memory layout): [`FcdccPlan::encode_input_batch`] streams
+//! rows of the *unpadded* inputs straight into per-worker sample-major
+//! slab buffers (padding and APCP overlap are index arithmetic — no
+//! padded intermediate, no partition copies), parallelized across
+//! workers; [`FcdccPlan::decode_batch_refs`] runs one panel-blocked GEMM
+//! per sample against a pooled staging buffer instead of a per-block
+//! zeros+axpy sweep. Both are bit-identical to the scalar reference
+//! implementations (`encode_input` per sample / `coding::decode_outputs`
+//! + `merge_output_blocks`), which stay as the correctness oracles.
+//!
 //! The pipeline is transport-agnostic: the `cluster` module runs payloads
 //! on simulated workers; tests run them inline.
 
 use crate::coding::{self, Code, CrmeCode};
 use crate::fcdcc::inverse_cache::{InverseCache, DEFAULT_INVERSE_CACHE_CAP};
+use crate::fcdcc::scratch::{ScratchPool, DEFAULT_SCRATCH_POOL_CAP};
+use crate::linalg::Mat;
 use crate::model::ConvLayer;
-use crate::partition::{merge_output_blocks, ApcpPlan, KccpPlan};
-use crate::tensor::{conv2d, ConvParams, Tensor3, Tensor4};
+use crate::partition::{merge_output_rows, ApcpPlan, KccpPlan};
+use crate::tensor::im2col::{conv2d_from_patch, im2col_into};
+use crate::tensor::{conv2d, conv2d_shape, ConvParams, Tensor3, Tensor4};
 use anyhow::{ensure, Context, Result};
 use std::sync::Arc;
+
+/// Below this many total output entries a batch encode runs serially:
+/// thread spawn/join overhead would dominate the tiny LeNet-sized jobs,
+/// while AlexNet/VGG-scale slabs comfortably amortize it.
+const PARALLEL_ENCODE_THRESHOLD: usize = 32 * 1024;
 
 /// Everything worker `worker_id` needs for one coded subtask.
 #[derive(Clone)]
@@ -90,6 +109,46 @@ impl WorkerPayload {
             blocks,
         }
     }
+
+    /// Execute with the fused im2col path — the optimized default for
+    /// cluster workers (`Im2colEngine`). The im2col patch matrix of each
+    /// coded input slab is built **once** and reused across all ℓ_B
+    /// filter-slab GEMMs (a per-pair `conv2d_im2col` rebuilds it ℓ_B
+    /// times), and since every slab of a payload shares one shape, the
+    /// patch buffer allocation is reused across the entire batch.
+    /// Bit-identical to `run_with(conv2d_im2col)` — same patch fill,
+    /// same GEMM, same block order.
+    pub fn run_im2col(&self) -> WorkerResult {
+        let Some(first) = self.filters.first() else {
+            return WorkerResult {
+                worker_id: self.worker_id,
+                batch: self.batch,
+                blocks: Vec::new(),
+            };
+        };
+        let mut blocks = Vec::with_capacity(self.inputs.len() * self.filters.len());
+        let mut patch: Vec<f64> = Vec::new();
+        for xa in &self.inputs {
+            // Keep conv2d_im2col's release-mode shape check: a channel
+            // mismatch would silently misalign the GEMM's filter rows.
+            assert_eq!(xa.c, first.c, "run_im2col: channel mismatch");
+            let (oh, ow) = conv2d_shape(xa.h, xa.w, first.kh, first.kw, self.conv);
+            let (rows, cols) = im2col_into(xa, first.kh, first.kw, self.conv, &mut patch);
+            for kb in self.filters.iter() {
+                assert_eq!(
+                    (kb.kh, kb.kw, kb.c),
+                    (first.kh, first.kw, first.c),
+                    "run_im2col: filter slab shape mismatch"
+                );
+                blocks.push(conv2d_from_patch(&patch, rows, cols, kb, oh, ow));
+            }
+        }
+        WorkerResult {
+            worker_id: self.worker_id,
+            batch: self.batch,
+            blocks,
+        }
+    }
 }
 
 /// A worker's coded output blocks: `batch · ℓ_A·ℓ_B` of them,
@@ -127,6 +186,9 @@ pub struct FcdccPlan {
     inverse_cache: Arc<InverseCache>,
     /// This plan's stage index within the shared cache's key space.
     cache_stage: usize,
+    /// Decode staging-buffer pool (see `fcdcc::scratch`). Standalone
+    /// plans own a private one; `NetworkPlan` shares one across stages.
+    scratch: Arc<ScratchPool>,
 }
 
 impl FcdccPlan {
@@ -154,6 +216,7 @@ impl FcdccPlan {
             code,
             inverse_cache: Arc::new(InverseCache::new(DEFAULT_INVERSE_CACHE_CAP)),
             cache_stage: 0,
+            scratch: Arc::new(ScratchPool::new(DEFAULT_SCRATCH_POOL_CAP)),
         })
     }
 
@@ -168,6 +231,18 @@ impl FcdccPlan {
     /// The recovery-inverse cache this plan decodes through.
     pub fn inverse_cache(&self) -> &Arc<InverseCache> {
         &self.inverse_cache
+    }
+
+    /// Attach a shared decode scratch-buffer pool (one per
+    /// `NetworkPlan`, shared by every stage).
+    pub fn with_scratch_pool(mut self, pool: Arc<ScratchPool>) -> Self {
+        self.scratch = pool;
+        self
+    }
+
+    /// The decode staging-buffer pool this plan draws from.
+    pub fn scratch_pool(&self) -> &Arc<ScratchPool> {
+        &self.scratch
     }
 
     pub fn spec(&self) -> coding::CodeSpec {
@@ -192,6 +267,11 @@ impl FcdccPlan {
 
     /// Encode one input tensor (per inference): per-worker coded slabs.
     /// `x` is the **unpadded** input; spatial padding is applied here.
+    ///
+    /// This is the **reference** chain (pad → APCP partition → per-slab
+    /// axpy combine), kept as the correctness oracle for the fused
+    /// [`Self::encode_input_batch`] — the property suite asserts the two
+    /// are bit-identical.
     pub fn encode_input(&self, x: &Tensor3) -> Vec<Vec<Tensor3>> {
         let xp = x.pad_spatial(self.layer.pad);
         let parts = self.apcp.partition(&xp);
@@ -201,13 +281,61 @@ impl FcdccPlan {
     /// Encode a batch of input tensors into per-worker **sample-major**
     /// coded slab lists: worker `i` receives `batch·ℓ_A` slabs, sample
     /// `s`'s slab `j` at index `s·ℓ_A + j`.
+    ///
+    /// Fused single-pass encoder: rows of the *unpadded* inputs stream
+    /// directly into preallocated per-worker slab buffers. Spatial
+    /// padding, APCP's overlapping-slab geometry, and the bottom
+    /// height-padding are all index arithmetic — no padded intermediate
+    /// tensor, no k_A partition copies, no per-slab axpy sweeps. (The
+    /// coded slab buffers themselves are still allocated per job — their
+    /// ownership transfers into the workers' payloads; the fusion
+    /// removes every *intermediate* allocation and pass.) Workers'
+    /// outputs are disjoint, so large batches fan out across threads
+    /// (`std::thread::scope`); serial and parallel fills write every
+    /// element through the identical per-element fold (coefficients in
+    /// ascending-partition order, zero coefficients skipped — the exact
+    /// order of `coding::encode_inputs`), so the result is deterministic
+    /// and bit-identical to the reference path.
     pub fn encode_input_batch(&self, xs: &[&Tensor3]) -> Vec<Vec<Tensor3>> {
         let s = self.spec();
-        let mut per_worker: Vec<Vec<Tensor3>> =
-            (0..s.n).map(|_| Vec::with_capacity(xs.len() * s.ell_a)).collect();
         for x in xs {
-            for (w, slabs) in self.encode_input(x).into_iter().enumerate() {
-                per_worker[w].extend(slabs);
+            assert_eq!(
+                (x.c, x.h, x.w),
+                (self.layer.c, self.layer.h, self.layer.w),
+                "encode_input_batch: sample shape does not match layer {}",
+                self.layer.name
+            );
+        }
+        let pad = self.layer.pad;
+        let wp = self.layer.w + 2 * pad;
+        let a = self.code.mat_a();
+        let apcp = self.apcp;
+        let ell_a = s.ell_a;
+        let mut per_worker: Vec<Vec<Tensor3>> = (0..s.n)
+            .map(|_| Vec::with_capacity(xs.len() * ell_a))
+            .collect();
+        let total_entries = xs.len() * ell_a * self.layer.c * apcp.h_hat * wp * s.n;
+        let threads = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(s.n);
+        if threads > 1 && total_entries >= PARALLEL_ENCODE_THRESHOLD {
+            // Cap the fan-out at the core count: contiguous worker
+            // chunks, one thread each, rather than one thread per worker
+            // (n can exceed the cores of the master by a lot).
+            let chunk = s.n.div_ceil(threads);
+            std::thread::scope(|scope| {
+                for (ci, worker_chunk) in per_worker.chunks_mut(chunk).enumerate() {
+                    scope.spawn(move || {
+                        for (k, slabs) in worker_chunk.iter_mut().enumerate() {
+                            fill_worker_slabs(ci * chunk + k, slabs, xs, a, &apcp, pad, ell_a, wp);
+                        }
+                    });
+                }
+            });
+        } else {
+            for (worker, slabs) in per_worker.iter_mut().enumerate() {
+                fill_worker_slabs(worker, slabs, xs, a, &apcp, pad, ell_a, wp);
             }
         }
         per_worker
@@ -261,11 +389,17 @@ impl FcdccPlan {
 
     /// Decode a **batched** job from any δ worker results: one recovery
     /// matrix inversion (LRU-cached across jobs, keyed by the ordered
-    /// worker subset) reused for every sample, then a per-sample
-    /// blockwise combine + merge. Returns the layer outputs in batch
-    /// order. Per-sample arithmetic is identical to the batch-1 decode,
-    /// so batched outputs are bit-identical to per-request decoding from
-    /// the same worker subset.
+    /// worker subset) reused for every sample, then one panel-blocked
+    /// GEMM per sample — each sample's δ·ℓ_A·ℓ_B coded blocks are the
+    /// rows of a matrix Ỹ and the true blocks are `Y = Dᵀ·Ỹ`
+    /// ([`Mat::gemm_t_rows_into`]), accumulated into a staging buffer
+    /// drawn from the plan's scratch pool and merged straight into the
+    /// layer output. The per-element summation order matches the scalar
+    /// reference (`coding::decode_outputs_with` + `merge_output_blocks`)
+    /// exactly, so outputs are bit-identical to it — and per-sample
+    /// arithmetic is identical to the batch-1 decode, so batched outputs
+    /// are bit-identical to per-request decoding from the same worker
+    /// subset. Returns the layer outputs in batch order.
     pub fn decode_batch_refs(&self, results: &[&WorkerResult]) -> Result<Vec<Tensor3>> {
         ensure!(
             results.len() >= self.delta(),
@@ -275,6 +409,7 @@ impl FcdccPlan {
         );
         let chosen = &results[..self.delta()];
         let batch = chosen[0].batch;
+        ensure!(batch >= 1, "decode: empty batch");
         for r in chosen {
             ensure!(
                 r.batch == batch,
@@ -290,18 +425,65 @@ impl FcdccPlan {
                 coding::recovery_inverse(self.code.as_ref(), &workers)
             })?;
         let s = self.spec();
+        let bpw = s.blocks_per_worker();
+        for r in chosen {
+            ensure!(
+                r.blocks.len() == batch * bpw,
+                "decode: worker {} sent {} blocks, expected {}·{bpw}",
+                r.worker_id,
+                r.blocks.len(),
+                batch
+            );
+        }
+        let (c_b, h_b, w_b) = chosen[0].blocks[0].shape();
+        let block_len = c_b * h_b * w_b;
+        let kab = s.k_a * s.k_b;
+        ensure!(
+            d.rows == s.delta() * bpw && d.is_square(),
+            "recovery inverse has shape {}x{}, expected {2}x{2}",
+            d.rows,
+            d.cols,
+            s.delta() * bpw
+        );
+        // Validate every block up front, before drawing the staging
+        // buffer: an error past `take` would drop the buffer instead of
+        // returning it, leaking the pooled allocation.
+        for r in chosen {
+            for blk in &r.blocks {
+                ensure!(
+                    blk.shape() == (c_b, h_b, w_b),
+                    "decode: worker {} sent a block of shape {:?}, expected {:?}",
+                    r.worker_id,
+                    blk.shape(),
+                    (c_b, h_b, w_b)
+                );
+            }
+        }
+        let mut rows: Vec<&[f64]> = Vec::with_capacity(s.delta() * bpw);
+        let mut staging = self.scratch.take(kab * block_len);
         let mut outputs = Vec::with_capacity(batch);
         for sample in 0..batch {
-            let blocks: Vec<&[Tensor3]> =
-                chosen.iter().map(|r| r.sample_blocks(sample)).collect();
-            let decoded = coding::decode_outputs_with(self.code.as_ref(), &d, &blocks)?;
-            outputs.push(merge_output_blocks(
-                &decoded,
+            if sample > 0 {
+                staging.fill(0.0);
+            }
+            rows.clear();
+            for r in chosen {
+                for blk in r.sample_blocks(sample) {
+                    rows.push(blk.data.as_slice());
+                }
+            }
+            d.gemm_t_rows_into(&rows, &mut staging, block_len);
+            outputs.push(merge_output_rows(
+                &staging,
                 s.k_a,
                 s.k_b,
+                c_b,
+                h_b,
+                w_b,
                 self.layer.h_out(),
             ));
         }
+        self.scratch.put(staging);
         Ok(outputs)
     }
 
@@ -338,6 +520,62 @@ impl FcdccPlan {
         let results: Vec<WorkerResult> = ids.iter().map(|&i| payloads[i].run_local()).collect();
         let refs: Vec<&WorkerResult> = results.iter().collect();
         self.decode_batch_refs(&refs)
+    }
+}
+
+/// Fill one worker's `batch·ℓ_A` coded slabs in a single pass over the
+/// unpadded inputs — the per-worker unit of the fused batch encoder.
+///
+/// Worker `worker`'s slab `j` of a sample is `Σ_α A(α, worker·ℓ_A + j) ·
+/// X'_α`, where `X'_α` covers *padded* rows `[α·Ŝ, α·Ŝ + Ĥ)`. The
+/// padded row `pr` maps to unpadded row `pr − pad` when that is in
+/// `[0, H)`; every other row (top padding, bottom padding, APCP bottom
+/// extension) is zero and contributes nothing, so the slab buffer starts
+/// zeroed and only real input rows are streamed in, into destination
+/// columns `[pad, pad + W)`. Per element, coefficients accumulate in
+/// ascending-α order with zero coefficients skipped — exactly the fold
+/// of the reference `coding::encode_inputs`, hence bit-identical output.
+#[allow(clippy::too_many_arguments)]
+fn fill_worker_slabs(
+    worker: usize,
+    slabs: &mut Vec<Tensor3>,
+    xs: &[&Tensor3],
+    a: &Mat,
+    apcp: &ApcpPlan,
+    pad: usize,
+    ell_a: usize,
+    wp: usize,
+) {
+    for x in xs {
+        for j in 0..ell_a {
+            let col = worker * ell_a + j;
+            let mut slab = Tensor3::zeros(x.c, apcp.h_hat, wp);
+            for alpha in 0..apcp.k_a {
+                let coef = a.get(alpha, col);
+                if coef == 0.0 {
+                    continue;
+                }
+                let pr_base = alpha * apcp.s_hat;
+                for c in 0..x.c {
+                    for r in 0..apcp.h_hat {
+                        let pr = pr_base + r;
+                        if pr < pad {
+                            continue;
+                        }
+                        let ur = pr - pad;
+                        if ur >= x.h {
+                            break; // rows below are padding too
+                        }
+                        let src = x.row(c, ur);
+                        let dst = &mut slab.row_mut(c, r)[pad..pad + x.w];
+                        for (d, &s) in dst.iter_mut().zip(src) {
+                            *d += coef * s;
+                        }
+                    }
+                }
+            }
+            slabs.push(slab);
+        }
     }
 }
 
@@ -456,6 +694,71 @@ mod tests {
         assert_eq!(double[0].batch, 2);
         let results = vec![single[0].run_local(), double[1].run_local()];
         assert!(plan.decode(&results).is_err(), "mixed batch sizes must fail");
+    }
+
+    #[test]
+    fn fused_batch_encoder_bit_identical_to_reference() {
+        // Includes a stride-2 layer with APCP bottom padding and a
+        // padded layer, so every index-arithmetic branch is exercised.
+        let mut rng = Rng::new(61);
+        let cases = [
+            (ConvLayer::new("t1", 2, 12, 10, 8, 3, 3, 1, 0), 4, 2, 5),
+            (ConvLayer::new("t2", 3, 11, 9, 6, 3, 3, 1, 1), 2, 6, 5),
+            (ConvLayer::new("t3", 2, 23, 17, 4, 5, 5, 4, 0), 2, 4, 4),
+            (ConvLayer::new("t4", 1, 10, 8, 5, 3, 3, 1, 2), 4, 1, 3),
+        ];
+        for (layer, k_a, k_b, n) in cases {
+            let plan = FcdccPlan::new_crme(&layer, k_a, k_b, n).unwrap();
+            for batch in 1..=3usize {
+                let xs: Vec<Tensor3> = (0..batch)
+                    .map(|_| Tensor3::random(layer.c, layer.h, layer.w, &mut rng))
+                    .collect();
+                let refs: Vec<&Tensor3> = xs.iter().collect();
+                let fused = plan.encode_input_batch(&refs);
+                // Reference: per-sample pad → partition → axpy chain,
+                // interleaved sample-major exactly like the fused path.
+                let mut want: Vec<Vec<Tensor3>> = (0..n).map(|_| Vec::new()).collect();
+                for x in &xs {
+                    for (w, slabs) in plan.encode_input(x).into_iter().enumerate() {
+                        want[w].extend(slabs);
+                    }
+                }
+                assert_eq!(fused.len(), want.len());
+                for (w, (f, r)) in fused.iter().zip(&want).enumerate() {
+                    assert_eq!(f.len(), r.len(), "worker {w} slab count");
+                    for (i, (fs, rs)) in f.iter().zip(r).enumerate() {
+                        assert_eq!(fs.shape(), rs.shape(), "worker {w} slab {i}");
+                        assert_eq!(
+                            fs.data, rs.data,
+                            "{}: worker {w} slab {i} diverged bitwise",
+                            layer.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_im2col_bit_identical_to_per_pair_im2col() {
+        use crate::tensor::im2col::conv2d_im2col;
+        let layer = ConvLayer::new("t", 3, 12, 10, 8, 3, 3, 1, 1);
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap();
+        let mut rng = Rng::new(62);
+        let xs: Vec<Tensor3> =
+            (0..2).map(|_| Tensor3::random(3, 12, 10, &mut rng)).collect();
+        let k = Tensor4::random(8, 3, 3, 3, &mut rng);
+        let cf = plan.encode_filters(&k);
+        let refs: Vec<&Tensor3> = xs.iter().collect();
+        let payloads = plan.make_payloads(plan.encode_input_batch(&refs), &cf);
+        for p in &payloads {
+            let fused = p.run_im2col();
+            let want = p.run_with(|a, b, c| conv2d_im2col(a, b, c));
+            assert_eq!(fused.blocks.len(), want.blocks.len());
+            for (f, w) in fused.blocks.iter().zip(&want.blocks) {
+                assert_eq!(f.data, w.data, "worker {} block diverged", p.worker_id);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Scratch-buffer pool for the decode hot path.
+//!
+//! Every batched decode needs one flat staging buffer holding the
+//! sample's `k_A·k_B` output blocks while the GEMM accumulates into
+//! them. Allocating that buffer fresh per job (the pre-fusion path
+//! allocated one `Tensor3::zeros` per block per sample) churns the
+//! allocator exactly where latency matters; under steady-state serving
+//! the same few buffer sizes recur job after job, so a small pool turns
+//! every decode after the first into an allocation-free `memset`.
+//!
+//! The pool is shared per `NetworkPlan` (one pool across all conv
+//! stages, like the recovery-inverse cache); standalone `FcdccPlan`s own
+//! a private one. Hit/miss counters make buffer reuse observable:
+//! `misses()` is exactly the number of heap allocations the decode path
+//! performed through the pool.
+
+use crate::metrics::CacheStats;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Default number of idle buffers retained. Serving keeps at most a few
+/// decodes in flight per plan, so a handful of buffers suffices; excess
+/// returns are dropped rather than hoarded.
+pub const DEFAULT_SCRATCH_POOL_CAP: usize = 8;
+
+/// A shared, thread-safe pool of reusable `f64` scratch buffers.
+pub struct ScratchPool {
+    capacity: usize,
+    buffers: Mutex<Vec<Vec<f64>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ScratchPool {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "scratch pool needs capacity >= 1");
+        Self {
+            capacity,
+            buffers: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Take a zeroed buffer of exactly `len` entries, reusing a pooled
+    /// allocation when one is large enough (a hit); otherwise allocate
+    /// fresh (a miss). Return it with [`Self::put`] when done.
+    pub fn take(&self, len: usize) -> Vec<f64> {
+        let reused = {
+            let mut bufs = self.buffers.lock().expect("scratch pool poisoned");
+            bufs.iter()
+                .position(|b| b.capacity() >= len)
+                .map(|p| bufs.swap_remove(p))
+        };
+        match reused {
+            Some(mut b) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                b.clear();
+                b.resize(len, 0.0);
+                b
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Return a buffer to the pool (dropped if the pool is full).
+    pub fn put(&self, buf: Vec<f64>) {
+        let mut bufs = self.buffers.lock().expect("scratch pool poisoned");
+        if bufs.len() < self.capacity {
+            bufs.push(buf);
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Misses == heap allocations performed through the pool.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits(),
+            misses: self.misses(),
+        }
+    }
+
+    /// Idle buffers currently retained.
+    pub fn idle(&self) -> usize {
+        self.buffers.lock().expect("scratch pool poisoned").len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuses_returned_buffers() {
+        let p = ScratchPool::new(4);
+        let b = p.take(16);
+        assert_eq!(b.len(), 16);
+        assert!(b.iter().all(|&v| v == 0.0));
+        assert_eq!(p.misses(), 1);
+        p.put(b);
+        let b = p.take(16);
+        assert_eq!(p.hits(), 1);
+        assert_eq!(p.misses(), 1);
+        p.put(b);
+        // A smaller request reuses the same allocation…
+        let b = p.take(8);
+        assert_eq!(b.len(), 8);
+        assert_eq!(p.hits(), 2);
+        p.put(b);
+        // …a larger one cannot.
+        let b = p.take(64);
+        assert_eq!(p.misses(), 2);
+        p.put(b);
+    }
+
+    #[test]
+    fn reused_buffers_come_back_zeroed() {
+        let p = ScratchPool::new(2);
+        let mut b = p.take(4);
+        b.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        p.put(b);
+        let b = p.take(4);
+        assert!(b.iter().all(|&v| v == 0.0), "stale data leaked: {b:?}");
+    }
+
+    #[test]
+    fn capacity_bounds_retention() {
+        let p = ScratchPool::new(1);
+        p.put(vec![0.0; 4]);
+        p.put(vec![0.0; 4]);
+        assert_eq!(p.idle(), 1);
+    }
+}

@@ -89,12 +89,29 @@ impl Mat {
         (0..self.rows).map(|r| self.get(r, c)).collect()
     }
 
+    /// Cache-blocked transpose: both source and destination are walked
+    /// in `B × B` tiles so one of the two strided streams always stays
+    /// resident while the tile is processed (the naive row-major read /
+    /// column-major write walk misses on every destination store once
+    /// `rows` exceeds a cache way).
     pub fn transpose(&self) -> Mat {
+        const B: usize = 32;
         let mut t = Mat::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                t.set(c, r, self.get(r, c));
+        let mut r0 = 0;
+        while r0 < self.rows {
+            let r1 = (r0 + B).min(self.rows);
+            let mut c0 = 0;
+            while c0 < self.cols {
+                let c1 = (c0 + B).min(self.cols);
+                for r in r0..r1 {
+                    let src = r * self.cols;
+                    for c in c0..c1 {
+                        t.data[c * self.rows + r] = self.data[src + c];
+                    }
+                }
+                c0 = c1;
             }
+            r0 = r1;
         }
         t
     }
@@ -161,15 +178,68 @@ impl Mat {
         out
     }
 
-    /// Gather the given columns (in order) into a new matrix.
+    /// Gather the given columns (in order) into a new matrix. Row-sliced:
+    /// each source/destination row is taken as one slice so the inner
+    /// gather runs over contiguous memory instead of recomputing strided
+    /// `get`/`set` index math per element.
     pub fn gather_cols(&self, idx: &[usize]) -> Mat {
-        let mut out = Mat::zeros(self.rows, idx.len());
+        let k = idx.len();
+        let mut out = Mat::zeros(self.rows, k);
         for r in 0..self.rows {
-            for (j, &c) in idx.iter().enumerate() {
-                out.set(r, j, self.get(r, c));
+            let src = &self.data[r * self.cols..(r + 1) * self.cols];
+            let dst = &mut out.data[r * k..(r + 1) * k];
+            for (d, &c) in dst.iter_mut().zip(idx) {
+                *d = src[c];
             }
         }
         out
+    }
+
+    /// Panel-blocked `out = selfᵀ · Ỹ` over row-pointer operands — the
+    /// shared GEMM kernel of the decode hot path. `self` is the `J × I`
+    /// coefficient matrix (the recovery inverse `D`), `rows` holds the
+    /// `J` coded rows of `Ỹ` (each `row_len` long, typically the data of
+    /// one coded output block), and `out` is the `I·row_len` accumulator,
+    /// which the caller must pass **zeroed**.
+    ///
+    /// Per output element the contraction runs `j` ascending and skips
+    /// zero coefficients — exactly the summation order of the scalar
+    /// reference (`coding::decode_outputs_with`), so results are
+    /// bit-identical; the column panels only regroup whole elements, and
+    /// the panel width keeps the accumulator row plus the active coded
+    /// rows L1/L2-resident instead of streaming full rows `J` times.
+    pub fn gemm_t_rows_into(&self, rows: &[&[f64]], out: &mut [f64], row_len: usize) {
+        let j_n = self.rows;
+        let i_n = self.cols;
+        assert_eq!(rows.len(), j_n, "gemm_t_rows_into: need {j_n} coded rows");
+        assert_eq!(
+            out.len(),
+            i_n * row_len,
+            "gemm_t_rows_into: out must be {i_n}·{row_len}"
+        );
+        for (j, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), row_len, "gemm_t_rows_into: row {j} length mismatch");
+        }
+        const PANEL: usize = 256;
+        let mut p0 = 0;
+        while p0 < row_len {
+            let pw = PANEL.min(row_len - p0);
+            for i in 0..i_n {
+                let base = i * row_len + p0;
+                let orow = &mut out[base..base + pw];
+                for (j, yrow) in rows.iter().enumerate() {
+                    let coef = self.data[j * i_n + i];
+                    if coef == 0.0 {
+                        continue;
+                    }
+                    let ypanel = &yrow[p0..p0 + pw];
+                    for (o, &y) in orow.iter_mut().zip(ypanel) {
+                        *o += coef * y;
+                    }
+                }
+            }
+            p0 += pw;
+        }
     }
 
     /// Frobenius norm.
@@ -227,6 +297,66 @@ mod tests {
         let mut rng = Rng::new(2);
         let a = Mat::random(3, 5, &mut rng);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn transpose_matches_naive_across_tile_boundaries() {
+        // Shapes straddling the 32-wide tile: the blocked walk must
+        // produce exactly the per-element definition.
+        let mut rng = Rng::new(7);
+        for (r, c) in [(1, 1), (5, 70), (33, 32), (64, 31), (100, 3)] {
+            let a = Mat::random(r, c, &mut rng);
+            let t = a.transpose();
+            assert_eq!((t.rows, t.cols), (c, r));
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(t.get(j, i), a.get(i, j), "({i},{j}) of {r}x{c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_cols_arbitrary_order_and_repeats() {
+        let mut rng = Rng::new(8);
+        let a = Mat::random(4, 6, &mut rng);
+        let g = a.gather_cols(&[5, 0, 0, 3]);
+        assert_eq!((g.rows, g.cols), (4, 4));
+        for r in 0..4 {
+            for (j, &c) in [5usize, 0, 0, 3].iter().enumerate() {
+                assert_eq!(g.get(r, j), a.get(r, c));
+            }
+        }
+        let empty = a.gather_cols(&[]);
+        assert_eq!((empty.rows, empty.cols), (4, 0));
+    }
+
+    #[test]
+    fn gemm_t_rows_matches_scalar_reference() {
+        // out[i] = Σ_j D(j,i)·rows[j], j ascending, zero coefs skipped —
+        // verify bit-identity against that exact fold on a row length
+        // that spans multiple 256-wide panels.
+        let mut rng = Rng::new(9);
+        let (j_n, i_n, len) = (6, 4, 600);
+        let mut d = Mat::random(j_n, i_n, &mut rng);
+        d.set(2, 1, 0.0); // exercise the zero-skip path
+        let rows_data: Vec<Vec<f64>> =
+            (0..j_n).map(|_| rng.fill_uniform(len, -1.0, 1.0)).collect();
+        let rows: Vec<&[f64]> = rows_data.iter().map(|r| r.as_slice()).collect();
+        let mut out = vec![0.0; i_n * len];
+        d.gemm_t_rows_into(&rows, &mut out, len);
+        for i in 0..i_n {
+            for t in 0..len {
+                let mut want = 0.0f64;
+                for j in 0..j_n {
+                    let c = d.get(j, i);
+                    if c != 0.0 {
+                        want += c * rows_data[j][t];
+                    }
+                }
+                assert_eq!(out[i * len + t], want, "element ({i},{t})");
+            }
+        }
     }
 
     #[test]

@@ -33,6 +33,9 @@ USAGE:
                   [--engine direct|im2col|pjrt] [--max-in-flight D]
                   [--batch-window B] [--verify-every K]
   fcdcc artifacts [--dir DIR]   (needs the `pjrt` feature)
+
+The worker --engine defaults to im2col (fused patch-matrix reuse);
+direct is the naive correctness oracle.
 ";
 
 #[cfg(feature = "pjrt")]
@@ -195,6 +198,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.inverse_cache.hits,
         stats.inverse_cache.misses,
         stats.inverse_cache.hit_rate() * 100.0
+    );
+    println!(
+        "hot path: decode staging pool {} hits / {} allocations ({:.0}% reuse)",
+        stats.scratch.hits,
+        stats.scratch.misses,
+        stats.scratch.hit_rate() * 100.0
     );
     Ok(())
 }

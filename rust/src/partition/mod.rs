@@ -36,6 +36,47 @@ pub fn merge_output_blocks(
     }
 }
 
+/// Flat-buffer variant of [`merge_output_blocks`] for the GEMM decode
+/// hot path: `flat` holds the `k_a·k_b` decoded blocks back to back
+/// (block `a·k_b + b` at offset `(a·k_b + b)·c_b·h_b·w_b`, each block
+/// `c_b × h_b × w_b` row-major). Instead of materializing per-group
+/// `concat_h` / `concat_c` intermediates and trimming with a final copy,
+/// every output row is copied exactly once, straight from the staging
+/// buffer into its final position; rows beyond `h_out_true` (the APCP
+/// height padding) are simply never copied. Produces the same tensor as
+/// `merge_output_blocks` over the same blocks.
+pub fn merge_output_rows(
+    flat: &[f64],
+    k_a: usize,
+    k_b: usize,
+    c_b: usize,
+    h_b: usize,
+    w_b: usize,
+    h_out_true: usize,
+) -> Tensor3 {
+    let block_len = c_b * h_b * w_b;
+    assert_eq!(flat.len(), k_a * k_b * block_len, "merge: flat buffer size");
+    let mut out = Tensor3::zeros(k_b * c_b, h_out_true, w_b);
+    for a in 0..k_a {
+        let row_base = a * h_b;
+        if row_base >= h_out_true {
+            break;
+        }
+        let rows_here = h_b.min(h_out_true - row_base);
+        for b in 0..k_b {
+            let blk = &flat[(a * k_b + b) * block_len..(a * k_b + b + 1) * block_len];
+            for c in 0..c_b {
+                for r in 0..rows_here {
+                    let src = (c * h_b + r) * w_b;
+                    let dst = out.idx(b * c_b + c, row_base + r, 0);
+                    out.data[dst..dst + w_b].copy_from_slice(&blk[src..src + w_b]);
+                }
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,6 +122,17 @@ mod tests {
                 "case {:?}",
                 (c, h, w, k_a, k_b)
             );
+
+            // The flat-buffer merge must agree bitwise with the
+            // tensor-list merge over the same blocks.
+            let (c_b, h_b, w_b) = blocks[0].shape();
+            let mut flat = Vec::with_capacity(blocks.len() * c_b * h_b * w_b);
+            for blk in &blocks {
+                flat.extend_from_slice(&blk.data);
+            }
+            let got_flat = merge_output_rows(&flat, k_a, k_b, c_b, h_b, w_b, want.h);
+            assert_eq!(got_flat.shape(), got.shape());
+            assert_eq!(got_flat.data, got.data, "flat merge diverged");
         }
     }
 }

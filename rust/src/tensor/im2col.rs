@@ -2,12 +2,29 @@
 //! GEMM. This is the optimized CPU worker path (and the algorithm RSPCC
 //! builds its codes around — here it is just one interchangeable black-box
 //! conv implementation, per the paper's generality claim).
+//!
+//! The two halves are exposed separately: [`im2col_into`] builds the
+//! patch matrix into a caller-owned buffer, and [`conv2d_from_patch`]
+//! runs the GEMM against it. A coded worker subtask convolves the *same*
+//! input slab with ℓ_B filter slabs (and every slab of a batched payload
+//! shares one shape), so `WorkerPayload::run_im2col` builds each patch
+//! matrix once, reuses it across all ℓ_B GEMMs, and reuses the buffer
+//! allocation across the whole batch. [`conv2d_im2col`] is the one-shot
+//! composition of the two halves.
 
 use crate::tensor::{conv2d_shape, ConvParams, Tensor3, Tensor4};
 
-/// Build the im2col patch matrix: (C·K_H·K_W) × (H'·W'), column-major over
-/// output positions (column = output pixel (h,w), row = (c,i,j) patch slot).
-pub fn im2col(x: &Tensor3, kh: usize, kw: usize, p: ConvParams) -> (Vec<f64>, usize, usize) {
+/// Build the im2col patch matrix into `buf` (resized to fit, previous
+/// contents irrelevant — every element is overwritten): (C·K_H·K_W) ×
+/// (H'·W'), column-major over output positions (column = output pixel
+/// (h,w), row = (c,i,j) patch slot). Returns `(rows, cols)`.
+pub fn im2col_into(
+    x: &Tensor3,
+    kh: usize,
+    kw: usize,
+    p: ConvParams,
+    buf: &mut Vec<f64>,
+) -> (usize, usize) {
     let xp;
     let x = if p.pad > 0 {
         xp = x.pad_spatial(p.pad);
@@ -18,7 +35,10 @@ pub fn im2col(x: &Tensor3, kh: usize, kw: usize, p: ConvParams) -> (Vec<f64>, us
     let (oh, ow) = ((x.h - kh) / p.stride + 1, (x.w - kw) / p.stride + 1);
     let rows = x.c * kh * kw;
     let cols = oh * ow;
-    let mut m = vec![0.0f64; rows * cols];
+    // Every element of the rows·cols matrix is written below, so stale
+    // data from a previous (same-shape) use never needs zeroing out.
+    buf.resize(rows * cols, 0.0);
+    let m = &mut buf[..rows * cols];
     for c in 0..x.c {
         for i in 0..kh {
             for j in 0..kw {
@@ -38,17 +58,31 @@ pub fn im2col(x: &Tensor3, kh: usize, kw: usize, p: ConvParams) -> (Vec<f64>, us
             }
         }
     }
-    (m, rows, cols)
+    (rows, cols)
 }
 
-/// Convolution via im2col + GEMM. Produces bit-compatible layout with
-/// `conv2d` (N × H' × W').
-pub fn conv2d_im2col(x: &Tensor3, k: &Tensor4, p: ConvParams) -> Tensor3 {
-    assert_eq!(x.c, k.c, "conv2d_im2col: channel mismatch");
-    let (oh, ow) = conv2d_shape(x.h, x.w, k.kh, k.kw, p);
-    let (cols_mat, rows, cols) = im2col(x, k.kh, k.kw, p);
+/// Build the im2col patch matrix in a fresh buffer (see [`im2col_into`]).
+pub fn im2col(x: &Tensor3, kh: usize, kw: usize, p: ConvParams) -> (Vec<f64>, usize, usize) {
+    let mut buf = Vec::new();
+    let (rows, cols) = im2col_into(x, kh, kw, p, &mut buf);
+    (buf, rows, cols)
+}
+
+/// The GEMM half: contract a prebuilt patch matrix against the filter
+/// bank `k`, producing the (N × H' × W') output. `rows`/`cols` are the
+/// patch-matrix dims returned by [`im2col_into`]; `(oh, ow)` the output
+/// spatial dims (`oh·ow == cols`).
+pub fn conv2d_from_patch(
+    patch: &[f64],
+    rows: usize,
+    cols: usize,
+    k: &Tensor4,
+    oh: usize,
+    ow: usize,
+) -> Tensor3 {
     debug_assert_eq!(rows, k.c * k.kh * k.kw);
     debug_assert_eq!(cols, oh * ow);
+    debug_assert_eq!(patch.len(), rows * cols);
     // GEMM: out[n, pix] = sum_r K[n, r] * M[r, pix]
     // K is already laid out row-major as (N × rows). Two-level blocking
     // (EXPERIMENTS.md §Perf):
@@ -68,10 +102,10 @@ pub fn conv2d_im2col(x: &Tensor3, k: &Tensor4, p: ConvParams) -> Tensor3 {
             while r + 4 <= rows {
                 let (k0, k1, k2, k3) = (krow[r], krow[r + 1], krow[r + 2], krow[r + 3]);
                 if k0 != 0.0 || k1 != 0.0 || k2 != 0.0 || k3 != 0.0 {
-                    let m0 = &cols_mat[r * cols + p0..r * cols + p0 + pw];
-                    let m1 = &cols_mat[(r + 1) * cols + p0..(r + 1) * cols + p0 + pw];
-                    let m2 = &cols_mat[(r + 2) * cols + p0..(r + 2) * cols + p0 + pw];
-                    let m3 = &cols_mat[(r + 3) * cols + p0..(r + 3) * cols + p0 + pw];
+                    let m0 = &patch[r * cols + p0..r * cols + p0 + pw];
+                    let m1 = &patch[(r + 1) * cols + p0..(r + 1) * cols + p0 + pw];
+                    let m2 = &patch[(r + 2) * cols + p0..(r + 2) * cols + p0 + pw];
+                    let m3 = &patch[(r + 3) * cols + p0..(r + 3) * cols + p0 + pw];
                     for i in 0..pw {
                         orow[i] += k0 * m0[i] + k1 * m1[i] + k2 * m2[i] + k3 * m3[i];
                     }
@@ -81,7 +115,7 @@ pub fn conv2d_im2col(x: &Tensor3, k: &Tensor4, p: ConvParams) -> Tensor3 {
             while r < rows {
                 let kv = krow[r];
                 if kv != 0.0 {
-                    let mrow = &cols_mat[r * cols + p0..r * cols + p0 + pw];
+                    let mrow = &patch[r * cols + p0..r * cols + p0 + pw];
                     for (o, &m) in orow.iter_mut().zip(mrow) {
                         *o += kv * m;
                     }
@@ -92,6 +126,15 @@ pub fn conv2d_im2col(x: &Tensor3, k: &Tensor4, p: ConvParams) -> Tensor3 {
         p0 += pw;
     }
     Tensor3::from_vec(k.n, oh, ow, out)
+}
+
+/// Convolution via im2col + GEMM. Produces bit-compatible layout with
+/// `conv2d` (N × H' × W').
+pub fn conv2d_im2col(x: &Tensor3, k: &Tensor4, p: ConvParams) -> Tensor3 {
+    assert_eq!(x.c, k.c, "conv2d_im2col: channel mismatch");
+    let (oh, ow) = conv2d_shape(x.h, x.w, k.kh, k.kw, p);
+    let (cols_mat, rows, cols) = im2col(x, k.kh, k.kw, p);
+    conv2d_from_patch(&cols_mat, rows, cols, k, oh, ow)
 }
 
 #[cfg(test)]
@@ -134,5 +177,24 @@ mod tests {
         assert_eq!(rows, 3 * 3 * 3);
         assert_eq!(cols, 4 * 4);
         assert_eq!(m.len(), rows * cols);
+    }
+
+    #[test]
+    fn patch_buffer_reuse_is_bit_identical() {
+        // The same buffer filled twice (second fill over stale data of
+        // identical shape) must yield the same patch matrix and the same
+        // conv output as a fresh one-shot conv2d_im2col.
+        let mut rng = Rng::new(13);
+        let p = ConvParams::new(1, 1);
+        let xs: Vec<Tensor3> = (0..3).map(|_| Tensor3::random(2, 7, 6, &mut rng)).collect();
+        let k = Tensor4::random(3, 2, 3, 3, &mut rng);
+        let mut buf = Vec::new();
+        for x in &xs {
+            let (oh, ow) = conv2d_shape(x.h, x.w, k.kh, k.kw, p);
+            let (rows, cols) = im2col_into(x, k.kh, k.kw, p, &mut buf);
+            let got = conv2d_from_patch(&buf, rows, cols, &k, oh, ow);
+            let want = conv2d_im2col(x, &k, p);
+            assert_eq!(got.data, want.data, "buffer reuse diverged");
+        }
     }
 }

@@ -71,6 +71,22 @@ impl Tensor3 {
         self.data[i] = v;
     }
 
+    /// Row (c, h, ·) as a contiguous slice — the streaming unit of the
+    /// fused batch encoder.
+    #[inline]
+    pub fn row(&self, c: usize, h: usize) -> &[f64] {
+        let i = self.idx(c, h, 0);
+        &self.data[i..i + self.w]
+    }
+
+    /// Mutable row (c, h, ·) as a contiguous slice.
+    #[inline]
+    pub fn row_mut(&mut self, c: usize, h: usize) -> &mut [f64] {
+        let i = self.idx(c, h, 0);
+        let w = self.w;
+        &mut self.data[i..i + w]
+    }
+
     /// Zero-pad spatially by `p` on every side (paper's input padding).
     pub fn pad_spatial(&self, p: usize) -> Self {
         if p == 0 {
@@ -210,6 +226,14 @@ mod tests {
         assert_eq!(t.get(0, 1, 0), 4.0);
         assert_eq!(t.get(1, 0, 0), 12.0);
         assert_eq!(t.get(1, 2, 3), 23.0);
+    }
+
+    #[test]
+    fn row_views_match_indexing() {
+        let mut t = seq(2, 3, 4);
+        assert_eq!(t.row(1, 2), &[20.0, 21.0, 22.0, 23.0]);
+        t.row_mut(0, 1)[2] = -1.0;
+        assert_eq!(t.get(0, 1, 2), -1.0);
     }
 
     #[test]

@@ -1,0 +1,177 @@
+//! Property suite for the fused slab algebra (DESIGN.md §Hot-path
+//! memory layout): the fused batch encoder, the GEMM decoder, and the
+//! im2col patch-reuse worker path must be **bit-identical** to the
+//! scalar reference implementations (`coding::encode_inputs` /
+//! `coding::decode_outputs` + `merge_output_blocks`) over randomized
+//! layer shapes, batch sizes 1..4, and straggler subsets — and
+//! steady-state serving must reuse decode staging buffers instead of
+//! allocating per job.
+
+use fcdcc::coding;
+use fcdcc::fcdcc::{FcdccPlan, WorkerResult};
+use fcdcc::model::ConvLayer;
+use fcdcc::partition::merge_output_blocks;
+use fcdcc::prop::{ensure, run, Gen};
+use fcdcc::tensor::{im2col::conv2d_im2col, Tensor3, Tensor4};
+
+/// Random feasible CRME configuration + matching layer geometry
+/// (stride, padding, and non-divisible H'/k_A splits all exercised).
+fn random_config(g: &mut Gen) -> (ConvLayer, usize, usize, usize) {
+    let k_a = *g.choose(&[1usize, 2, 4, 6]);
+    let k_b = *g.choose(&[1usize, 2, 4, 8]);
+    let delta = (k_a * k_b).div_ceil(if k_a == 1 { 1 } else { 2 } * if k_b == 1 { 1 } else { 2 });
+    let n = delta + g.usize_in(1, 3);
+    let c = g.usize_in(1, 3);
+    let kh = *g.choose(&[1usize, 3, 5]);
+    let kw = *g.choose(&[1usize, 3]);
+    let stride = g.usize_in(1, 2);
+    let pad = g.usize_in(0, 1);
+    let h_out_min = k_a.max(2);
+    let h = (h_out_min - 1) * stride + kh + g.usize_in(0, 4);
+    let h = h.saturating_sub(2 * pad).max(kh);
+    let w = kw + stride * g.usize_in(1, 5);
+    let n_out = k_b * g.usize_in(1, 3);
+    let layer = ConvLayer::new("prop", c, h, w, n_out, kh, kw, stride, pad);
+    (layer, k_a, k_b, n)
+}
+
+fn random_batch(g: &mut Gen, layer: &ConvLayer) -> Vec<Tensor3> {
+    let batch = g.usize_in(1, 4);
+    (0..batch)
+        .map(|_| Tensor3::random(layer.c, layer.h, layer.w, &mut g.rng))
+        .collect()
+}
+
+#[test]
+fn prop_fused_batch_encoder_bit_identical_to_reference() {
+    run("fused batch encode == per-sample reference encode", 30, |g| {
+        let (layer, k_a, k_b, n) = random_config(g);
+        let plan = FcdccPlan::new_crme(&layer, k_a, k_b, n)
+            .map_err(|e| format!("plan failed for {layer:?}: {e:#}"))?;
+        let xs = random_batch(g, &layer);
+        let refs: Vec<&Tensor3> = xs.iter().collect();
+        let fused = plan.encode_input_batch(&refs);
+        // Reference: pad -> APCP partition -> coding::encode_inputs per
+        // sample, interleaved sample-major like the fused layout.
+        let mut want: Vec<Vec<Tensor3>> = (0..n).map(|_| Vec::new()).collect();
+        for x in &xs {
+            for (w, slabs) in plan.encode_input(x).into_iter().enumerate() {
+                want[w].extend(slabs);
+            }
+        }
+        ensure(fused.len() == want.len(), "worker count mismatch")?;
+        for (w, (f, r)) in fused.iter().zip(&want).enumerate() {
+            ensure(f.len() == r.len(), format!("worker {w}: slab count"))?;
+            for (i, (fs, rs)) in f.iter().zip(r).enumerate() {
+                ensure(
+                    fs.shape() == rs.shape(),
+                    format!("worker {w} slab {i}: shape"),
+                )?;
+                ensure(
+                    fs.data == rs.data,
+                    format!(
+                        "worker {w} slab {i} diverged bitwise \
+                         (layer {layer:?}, k_a={k_a}, k_b={k_b}, n={n}, batch={})",
+                        xs.len()
+                    ),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gemm_decoder_bit_identical_to_reference() {
+    run("GEMM batch decode == reference decode_outputs + merge", 30, |g| {
+        let (layer, k_a, k_b, n) = random_config(g);
+        let plan = FcdccPlan::new_crme(&layer, k_a, k_b, n)
+            .map_err(|e| format!("plan failed for {layer:?}: {e:#}"))?;
+        let xs = random_batch(g, &layer);
+        let refs: Vec<&Tensor3> = xs.iter().collect();
+        let k = Tensor4::random(layer.n, layer.c, layer.kh, layer.kw, &mut g.rng);
+        let cf = plan.encode_filters(&k);
+        let payloads = plan.make_payloads(plan.encode_input_batch(&refs), &cf);
+        // A random straggler pattern: any delta-subset, in arrival
+        // (i.e. arbitrary) order.
+        let survivors = g.rng.choose_indices(n, plan.delta());
+        let results: Vec<WorkerResult> =
+            survivors.iter().map(|&i| payloads[i].run_local()).collect();
+        let result_refs: Vec<&WorkerResult> = results.iter().collect();
+        let fused = plan
+            .decode_batch_refs(&result_refs)
+            .map_err(|e| format!("fused decode failed: {e:#}"))?;
+        ensure(fused.len() == xs.len(), "one output per sample")?;
+        // Reference: scalar per-block combine + tensor-list merge, per
+        // sample, over the same worker subset in the same order.
+        let spec = plan.spec();
+        for (s, got) in fused.iter().enumerate() {
+            let blocks: Vec<&[Tensor3]> =
+                result_refs.iter().map(|r| r.sample_blocks(s)).collect();
+            let decoded =
+                coding::decode_outputs(plan.code.as_ref(), &survivors, &blocks)
+                    .map_err(|e| format!("reference decode failed: {e:#}"))?;
+            let want = merge_output_blocks(&decoded, spec.k_a, spec.k_b, layer.h_out());
+            ensure(got.shape() == want.shape(), format!("sample {s}: shape"))?;
+            ensure(
+                got.data == want.data,
+                format!(
+                    "sample {s} diverged bitwise (layer {layer:?}, k_a={k_a}, \
+                     k_b={k_b}, n={n}, survivors {survivors:?})"
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_im2col_patch_reuse_bit_identical_to_per_pair() {
+    run("run_im2col == run_with(conv2d_im2col)", 20, |g| {
+        let (layer, k_a, k_b, n) = random_config(g);
+        let plan = FcdccPlan::new_crme(&layer, k_a, k_b, n)
+            .map_err(|e| format!("plan failed for {layer:?}: {e:#}"))?;
+        let xs = random_batch(g, &layer);
+        let refs: Vec<&Tensor3> = xs.iter().collect();
+        let k = Tensor4::random(layer.n, layer.c, layer.kh, layer.kw, &mut g.rng);
+        let cf = plan.encode_filters(&k);
+        let payloads = plan.make_payloads(plan.encode_input_batch(&refs), &cf);
+        let p = &payloads[g.usize_in(0, n - 1)];
+        let fused = p.run_im2col();
+        let want = p.run_with(|a, b, c| conv2d_im2col(a, b, c));
+        ensure(
+            fused.blocks.len() == want.blocks.len(),
+            "block count mismatch",
+        )?;
+        for (i, (f, w)) in fused.blocks.iter().zip(&want.blocks).enumerate() {
+            ensure(
+                f.data == w.data,
+                format!("worker {} block {i} diverged bitwise", p.worker_id),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn steady_state_serving_reuses_scratch_buffers() {
+    // Pool-hit accounting: after the first decode of each staging size,
+    // every further decode must reuse a pooled buffer, not allocate.
+    let layer = ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0);
+    let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap();
+    let mut rng = fcdcc::util::rng::Rng::new(71);
+    let k = Tensor4::random(8, 2, 3, 3, &mut rng);
+    let jobs = 6u64;
+    for round in 0..jobs {
+        let xs: Vec<Tensor3> =
+            (0..3).map(|_| Tensor3::random(2, 12, 10, &mut rng)).collect();
+        let refs: Vec<&Tensor3> = xs.iter().collect();
+        plan.run_inline_batch(&refs, &k, None).unwrap();
+        let st = plan.scratch_pool().stats();
+        assert_eq!(st.lookups(), round + 1, "one staging take per decode");
+        assert_eq!(st.misses, 1, "round {round}: decode allocated again");
+    }
+    let st = plan.scratch_pool().stats();
+    assert_eq!(st.hits, jobs - 1);
+    assert!(st.hit_rate() > 0.8);
+}
