@@ -12,7 +12,7 @@
 //! The acceptance bar for the fusion PR is `speedup >= 2` on the
 //! `encode_decode_batch` record.
 
-use fcdcc::bench_harness::{bench, fast_mode, report, BenchConfig};
+use fcdcc::bench_harness::{bench, emit_json, fast_mode, report, BenchConfig};
 use fcdcc::coding::{self, Code, CrmeCode};
 use fcdcc::fcdcc::{FcdccPlan, WorkerResult};
 use fcdcc::linalg::{cond_2, lu, Mat};
@@ -23,20 +23,24 @@ use fcdcc::tensor::{conv2d, im2col::conv2d_im2col, ConvParams, Tensor3, Tensor4}
 use fcdcc::util::rng::Rng;
 
 /// One trajectory record: entries/second through the reference and the
-/// fused path, plus the speedup.
+/// fused path, plus the speedup. The record carries the compute-pool
+/// size so trajectory entries from differently-sized runners stay
+/// interpretable; `FCDCC_BENCH_OUT` appends every record to the
+/// committed artifact.
 fn json_speed(op: &str, entries: usize, reference: &Stats, fused: &Stats) {
     let e = entries as f64;
-    println!(
+    emit_json(&format!(
         "{{\"bench\":\"micro\",\"op\":\"{op}\",\"entries\":{entries},\
-         \"ref_secs\":{:.6e},\"fused_secs\":{:.6e},\
+         \"threads\":{},\"ref_secs\":{:.6e},\"fused_secs\":{:.6e},\
          \"ref_entries_per_sec\":{:.4e},\"fused_entries_per_sec\":{:.4e},\
          \"speedup\":{:.3}}}",
+        fcdcc::util::pool::global().threads(),
         reference.mean,
         fused.mean,
         e / reference.mean,
         e / fused.mean,
         reference.mean / fused.mean,
-    );
+    ));
 }
 
 fn main() {
@@ -148,7 +152,31 @@ fn main() {
     println!("\n### linalg (256x256 matmul / LU / transpose)\n");
     let a = Mat::random(256, 256, &mut rng);
     let b = Mat::random(256, 256, &mut rng);
-    report("matmul 256", &bench(cfg, || a.matmul(&b)));
+    // The pre-packing ikj loop, kept here as the scalar baseline for
+    // the packed register-tiled microkernel.
+    let matmul_ikj = |a: &Mat, b: &Mat| {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let orow = &mut out.data[i * b.cols..(i + 1) * b.cols];
+            for (k, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                for (o, &bv) in orow.iter_mut().zip(b.row(k)) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    };
+    let mm_ref = bench(cfg, || matmul_ikj(&a, &b));
+    let mm_packed = bench(cfg, || a.matmul(&b));
+    report("matmul 256 (ikj reference)", &mm_ref);
+    report("matmul 256 (packed microkernel)", &mm_packed);
+    json_speed("matmul_256", 256 * 256, &mm_ref, &mm_packed);
     report("LU factor 256", &bench(cfg, || lu::Lu::factor(&a).unwrap()));
+    let lu256 = lu::Lu::factor(&a).unwrap();
+    report("LU inverse 256 (reused RHS buffer)", &bench(cfg, || lu256.inverse()));
     report("transpose 256 (blocked)", &bench(cfg, || a.transpose()));
 }

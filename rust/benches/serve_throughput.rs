@@ -15,7 +15,7 @@
 //! line** (`{"bench":"serve_throughput",...}`) so the bench trajectory
 //! (`BENCH_*.json`) can track requests/sec per mode over time.
 
-use fcdcc::bench_harness::{env_usize, fast_mode};
+use fcdcc::bench_harness::{emit_json, env_usize, fast_mode};
 use fcdcc::cluster::StragglerModel;
 use fcdcc::coordinator::{serve_lenet, ServeConfig, ServeStats};
 use fcdcc::engine::Im2colEngine;
@@ -24,14 +24,15 @@ use std::sync::Arc;
 use std::time::Duration;
 
 fn json_line(model: &str, mode: &str, stats: &ServeStats) {
-    println!(
+    emit_json(&format!(
         "{{\"bench\":\"serve_throughput\",\"straggler\":\"{}\",\"mode\":\"{}\",\
-         \"depth\":{},\"batch_window\":{},\"requests\":{},\"rps\":{:.3},\
+         \"threads\":{},\"depth\":{},\"batch_window\":{},\"requests\":{},\"rps\":{:.3},\
          \"latency_p50_ms\":{:.3},\"latency_p95_ms\":{:.3},\"coded_jobs\":{},\
          \"mean_batch\":{:.3},\"inversions\":{},\"inverse_cache_hits\":{},\
          \"scratch_allocs\":{},\"scratch_hits\":{}}}",
         model,
         mode,
+        fcdcc::util::pool::global().threads(),
         stats.max_in_flight,
         stats.batch_window,
         stats.requests,
@@ -44,7 +45,7 @@ fn json_line(model: &str, mode: &str, stats: &ServeStats) {
         stats.inverse_cache.hits,
         stats.scratch.misses,
         stats.scratch.hits,
-    );
+    ));
 }
 
 fn main() {

@@ -58,6 +58,28 @@ pub fn report(name: &str, s: &Stats) {
     );
 }
 
+/// Emit one JSON trajectory record: printed to stdout like every other
+/// bench line and, when `FCDCC_BENCH_OUT=<path>` is set, **appended** to
+/// that file — so a bench run accumulates its records into a committed
+/// perf-trajectory artifact (`BENCH_*.json`, one JSON object per line).
+/// File errors are deliberately non-fatal: a bench never dies over its
+/// telemetry.
+pub fn emit_json(line: &str) {
+    println!("{line}");
+    if let Ok(path) = std::env::var("FCDCC_BENCH_OUT") {
+        if path.is_empty() {
+            return;
+        }
+        use std::io::Write;
+        match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+            Ok(mut f) => {
+                let _ = writeln!(f, "{line}");
+            }
+            Err(e) => eprintln!("FCDCC_BENCH_OUT: cannot append to {path}: {e}"),
+        }
+    }
+}
+
 /// Read an env-var knob for bench scaling (e.g. FCDCC_BENCH_SAMPLES).
 pub fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name)

@@ -202,8 +202,8 @@ impl Cluster {
         self.next_job += 1;
 
         // --- Encode phase (master): the fused single-pass batch encoder
-        // (no padded intermediate, no partition copies; large batches
-        // fan out across threads).
+        // (no padded intermediate, no partition copies; the per-worker
+        // fills fan out on the shared compute pool).
         let t0 = Instant::now();
         let coded_inputs = plan.encode_input_batch(xs);
         let payloads = plan.make_payloads(coded_inputs, coded_filters);

@@ -5,8 +5,11 @@
 //! The engine sees the **whole payload**, not individual (slabA, slabB)
 //! pairs, so it can amortize per-slab work: the default `Im2colEngine`
 //! builds each coded input slab's im2col patch matrix once and reuses it
-//! across all ℓ_B filter slabs, with the patch buffer reused across the
-//! batch (`WorkerPayload::run_im2col`).
+//! across all ℓ_B filter slabs (`WorkerPayload::run_im2col`), and fans
+//! the slabs out over the shared compute pool (`util::pool`) — worker
+//! threads and the master's encode/decode draw from one pool, with the
+//! calling thread always participating, so oversubscription degrades to
+//! inline execution instead of deadlock.
 //!
 //! A subtask may carry a whole **batch** of samples (`WorkerPayload`'s
 //! batch axis); the wire protocol is oblivious to it — one job id, one

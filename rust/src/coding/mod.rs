@@ -188,10 +188,11 @@ pub fn decode_outputs(
 /// are given in.
 ///
 /// This is the **reference** decoder (per-block zeros+axpy sweep). The
-/// serving hot path expresses the same contraction as a panel-blocked
-/// GEMM over pooled staging buffers (`FcdccPlan::decode_batch_refs` via
-/// `Mat::gemm_t_rows_into`), with an identical per-element summation
-/// order — the property suite asserts bit-identity between the two.
+/// serving hot path expresses the same contraction as a packed
+/// register-tiled GEMM over pooled staging buffers
+/// (`FcdccPlan::decode_batch_refs` via `Mat::gemm_t_rows_into` →
+/// `linalg::gemm`), with an identical per-element summation order — the
+/// property suite asserts bit-identity between the two.
 pub fn decode_outputs_with(
     code: &dyn Code,
     d: &Mat,

@@ -28,7 +28,7 @@ use crate::model::{Activation, Network};
 use crate::tensor::Tensor3;
 use crate::util::{mse, rng::Rng};
 use anyhow::{ensure, Result};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -223,20 +223,38 @@ fn run_pipeline(
 
         // Advance every runnable request through master-side layers to
         // its next conv (→ that stage's coalescing queue) or to the end.
+        // Requests at the same layer cursor advance as one group
+        // (`run_local_batch`): the FC head of co-batched requests runs
+        // as a single shared GEMM, bit-identical to advancing each
+        // request alone. Groups are keyed by cursor (BTreeMap:
+        // deterministic order) and members stay in admission order, so
+        // per-queue arrival order is unchanged.
         let mut progressed = false;
+        let mut groups: BTreeMap<usize, Vec<&mut Request>> = BTreeMap::new();
         for req in active.iter_mut() {
-            if !matches!(req.state, ReqState::Runnable) {
-                continue;
+            if matches!(req.state, ReqState::Runnable) {
+                groups.entry(req.layer_idx).or_default().push(req);
             }
+        }
+        for (cursor0, mut members) in groups {
             progressed = true;
-            match plan.run_local(&mut req.a, &mut req.layer_idx) {
-                Some(stage) => {
-                    queues[stage].push_back(req.id);
-                    req.state = ReqState::Queued;
-                }
-                None => {
-                    req.state = ReqState::Done;
-                    req.finished_at = Some(Instant::now());
+            let mut cursor = cursor0;
+            let next_stage = {
+                let mut acts: Vec<&mut Activation> =
+                    members.iter_mut().map(|r| &mut r.a).collect();
+                plan.run_local_batch(&mut acts, &mut cursor)
+            };
+            for req in members.iter_mut() {
+                req.layer_idx = cursor;
+                match next_stage {
+                    Some(stage) => {
+                        queues[stage].push_back(req.id);
+                        req.state = ReqState::Queued;
+                    }
+                    None => {
+                        req.state = ReqState::Done;
+                        req.finished_at = Some(Instant::now());
+                    }
                 }
             }
         }

@@ -146,12 +146,31 @@ impl NetworkPlan {
     /// `*layer_idx` pointing at that conv), or `None` when the pass
     /// finished (`*layer_idx` one past the end).
     pub fn run_local(&self, a: &mut Activation, layer_idx: &mut usize) -> Option<usize> {
+        // A group of one: apply_local_batch short-circuits size-<=1
+        // groups to apply_local, so this is the same arithmetic with the
+        // layer-walk invariant kept in exactly one place.
+        self.run_local_batch(&mut [a], layer_idx)
+    }
+
+    /// Advance a **group** of activations that share one layer cursor
+    /// through master-side layers in lockstep: Dense layers of the FC
+    /// head run as one shared packed GEMM
+    /// (`Network::apply_local_batch`), so co-batched requests stream the
+    /// weight matrices once per group instead of once per request.
+    /// Grouped outputs are bit-identical to advancing each activation
+    /// alone through [`Self::run_local`]. Returns the next conv stage
+    /// (with `*layer_idx` at that conv) or `None` when the pass ends.
+    pub fn run_local_batch(
+        &self,
+        acts: &mut [&mut Activation],
+        layer_idx: &mut usize,
+    ) -> Option<usize> {
         while *layer_idx < self.net.layers.len() {
             let layer = &self.net.layers[*layer_idx];
             if matches!(layer, Layer::Conv { .. }) {
                 return Some(self.stage_at(*layer_idx));
             }
-            self.net.apply_local(layer, a);
+            self.net.apply_local_batch(layer, acts);
             *layer_idx += 1;
         }
         None

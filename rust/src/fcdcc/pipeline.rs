@@ -19,12 +19,17 @@
 //! §Hot-path memory layout): [`FcdccPlan::encode_input_batch`] streams
 //! rows of the *unpadded* inputs straight into per-worker sample-major
 //! slab buffers (padding and APCP overlap are index arithmetic — no
-//! padded intermediate, no partition copies), parallelized across
-//! workers; [`FcdccPlan::decode_batch_refs`] runs one panel-blocked GEMM
-//! per sample against a pooled staging buffer instead of a per-block
-//! zeros+axpy sweep. Both are bit-identical to the scalar reference
-//! implementations (`encode_input` per sample / `coding::decode_outputs`
-//! + `merge_output_blocks`), which stay as the correctness oracles.
+//! padded intermediate, no partition copies);
+//! [`FcdccPlan::decode_batch_refs`] runs one packed GEMM per sample
+//! against a pooled staging buffer instead of a per-block zeros+axpy
+//! sweep. Every hot stage fans out over the persistent compute pool
+//! (`util::pool`, DESIGN.md §Deterministic parallel runtime) with fixed
+//! problem-shaped chunks: encode per coded worker, decode per sample,
+//! the im2col worker engine per input slab. All of them are
+//! bit-identical to the scalar reference implementations
+//! (`encode_input` per sample / `coding::decode_outputs` +
+//! `merge_output_blocks`) at any pool size — the references stay as the
+//! correctness oracles.
 //!
 //! The pipeline is transport-agnostic: the `cluster` module runs payloads
 //! on simulated workers; tests run them inline.
@@ -35,15 +40,20 @@ use crate::fcdcc::scratch::{ScratchPool, DEFAULT_SCRATCH_POOL_CAP};
 use crate::linalg::Mat;
 use crate::model::ConvLayer;
 use crate::partition::{merge_output_rows, ApcpPlan, KccpPlan};
-use crate::tensor::im2col::{conv2d_from_patch, im2col_into};
+use crate::tensor::im2col::{conv2d_from_patch_multi, im2col_into};
 use crate::tensor::{conv2d, conv2d_shape, ConvParams, Tensor3, Tensor4};
+use crate::util::pool;
 use anyhow::{ensure, Context, Result};
 use std::sync::Arc;
 
-/// Below this many total output entries a batch encode runs serially:
-/// thread spawn/join overhead would dominate the tiny LeNet-sized jobs,
-/// while AlexNet/VGG-scale slabs comfortably amortize it.
-const PARALLEL_ENCODE_THRESHOLD: usize = 32 * 1024;
+thread_local! {
+    /// Per-thread im2col patch buffer for `WorkerPayload::run_im2col`:
+    /// every participant of the slab fan-out reuses one allocation
+    /// across chunks (and across payloads — pool threads are
+    /// long-lived). Taken/put with `Cell` so a hypothetical reentrant
+    /// use sees an empty buffer instead of a borrow panic.
+    static PATCH_BUF: std::cell::Cell<Vec<f64>> = const { std::cell::Cell::new(Vec::new()) };
+}
 
 /// Everything worker `worker_id` needs for one coded subtask.
 #[derive(Clone)]
@@ -114,10 +124,13 @@ impl WorkerPayload {
     /// cluster workers (`Im2colEngine`). The im2col patch matrix of each
     /// coded input slab is built **once** and reused across all ℓ_B
     /// filter-slab GEMMs (a per-pair `conv2d_im2col` rebuilds it ℓ_B
-    /// times), and since every slab of a payload shares one shape, the
-    /// patch buffer allocation is reused across the entire batch.
-    /// Bit-identical to `run_with(conv2d_im2col)` — same patch fill,
-    /// same GEMM, same block order.
+    /// times). The `batch·ℓ_A` input slabs fan out over the persistent
+    /// compute pool, one slab per chunk: each chunk builds its slab's
+    /// patch matrix and writes that slab's ℓ_B output blocks — a
+    /// disjoint, contiguous region of the block list — through exactly
+    /// the serial per-pair arithmetic. Bit-identical to
+    /// `run_with(conv2d_im2col)` at any pool size: same patch fill, same
+    /// GEMM, same block order.
     pub fn run_im2col(&self) -> WorkerResult {
         let Some(first) = self.filters.first() else {
             return WorkerResult {
@@ -126,27 +139,51 @@ impl WorkerPayload {
                 blocks: Vec::new(),
             };
         };
-        let mut blocks = Vec::with_capacity(self.inputs.len() * self.filters.len());
-        let mut patch: Vec<f64> = Vec::new();
-        for xa in &self.inputs {
+        let ell_b = self.filters.len();
+        for kb in self.filters.iter() {
+            assert_eq!(
+                (kb.kh, kb.kw, kb.c),
+                (first.kh, first.kw, first.c),
+                "run_im2col: filter slab shape mismatch"
+            );
+        }
+        let filter_refs: Vec<&Tensor4> = self.filters.iter().collect();
+        let mut blocks: Vec<Option<Tensor3>> =
+            (0..self.inputs.len() * ell_b).map(|_| None).collect();
+        // Total coded output entries gate the dispatch.
+        let work = self.inputs.first().map_or(0, |x0| {
+            let (oh, ow) = conv2d_shape(x0.h, x0.w, first.kh, first.kw, self.conv);
+            self.inputs.len() * ell_b * first.n * oh * ow
+        });
+        pool::global().parallel_chunks_mut(work, &mut blocks, ell_b, |slab_idx, out| {
+            let xa = &self.inputs[slab_idx];
             // Keep conv2d_im2col's release-mode shape check: a channel
             // mismatch would silently misalign the GEMM's filter rows.
             assert_eq!(xa.c, first.c, "run_im2col: channel mismatch");
             let (oh, ow) = conv2d_shape(xa.h, xa.w, first.kh, first.kw, self.conv);
-            let (rows, cols) = im2col_into(xa, first.kh, first.kw, self.conv, &mut patch);
-            for kb in self.filters.iter() {
-                assert_eq!(
-                    (kb.kh, kb.kw, kb.c),
-                    (first.kh, first.kw, first.c),
-                    "run_im2col: filter slab shape mismatch"
-                );
-                blocks.push(conv2d_from_patch(&patch, rows, cols, kb, oh, ow));
-            }
-        }
+            // Patch buffer reuse across chunks: pool threads are
+            // long-lived, so each participant keeps one im2col buffer —
+            // at pool size 1 this is exactly PR 3's single reused
+            // allocation, and im2col_into overwrites every element, so
+            // reuse is bit-invisible. The ℓ_B GEMMs then share one
+            // packing of the patch operand (conv2d_from_patch_multi).
+            PATCH_BUF.with(|cell| {
+                let mut patch = cell.take();
+                let (rows, cols) = im2col_into(xa, first.kh, first.kw, self.conv, &mut patch);
+                let ys = conv2d_from_patch_multi(&patch, rows, cols, &filter_refs, oh, ow);
+                for (slot, y) in out.iter_mut().zip(ys) {
+                    *slot = Some(y);
+                }
+                cell.set(patch);
+            });
+        });
         WorkerResult {
             worker_id: self.worker_id,
             batch: self.batch,
-            blocks,
+            blocks: blocks
+                .into_iter()
+                .map(|b| b.expect("every slab chunk ran"))
+                .collect(),
         }
     }
 }
@@ -289,13 +326,13 @@ impl FcdccPlan {
     /// tensor, no k_A partition copies, no per-slab axpy sweeps. (The
     /// coded slab buffers themselves are still allocated per job — their
     /// ownership transfers into the workers' payloads; the fusion
-    /// removes every *intermediate* allocation and pass.) Workers'
-    /// outputs are disjoint, so large batches fan out across threads
-    /// (`std::thread::scope`); serial and parallel fills write every
-    /// element through the identical per-element fold (coefficients in
-    /// ascending-partition order, zero coefficients skipped — the exact
-    /// order of `coding::encode_inputs`), so the result is deterministic
-    /// and bit-identical to the reference path.
+    /// removes every *intermediate* allocation and pass.) The fill fans
+    /// out over the persistent compute pool (`util::pool`), one coded
+    /// worker per chunk — chunk boundaries depend only on n, and every
+    /// element is written through the identical per-element fold
+    /// (coefficients in ascending-partition order, zero coefficients
+    /// skipped — the exact order of `coding::encode_inputs`), so the
+    /// result is bit-identical to the reference path at any pool size.
     pub fn encode_input_batch(&self, xs: &[&Tensor3]) -> Vec<Vec<Tensor3>> {
         let s = self.spec();
         for x in xs {
@@ -314,30 +351,12 @@ impl FcdccPlan {
         let mut per_worker: Vec<Vec<Tensor3>> = (0..s.n)
             .map(|_| Vec::with_capacity(xs.len() * ell_a))
             .collect();
-        let total_entries = xs.len() * ell_a * self.layer.c * apcp.h_hat * wp * s.n;
-        let threads = std::thread::available_parallelism()
-            .map(|p| p.get())
-            .unwrap_or(1)
-            .min(s.n);
-        if threads > 1 && total_entries >= PARALLEL_ENCODE_THRESHOLD {
-            // Cap the fan-out at the core count: contiguous worker
-            // chunks, one thread each, rather than one thread per worker
-            // (n can exceed the cores of the master by a lot).
-            let chunk = s.n.div_ceil(threads);
-            std::thread::scope(|scope| {
-                for (ci, worker_chunk) in per_worker.chunks_mut(chunk).enumerate() {
-                    scope.spawn(move || {
-                        for (k, slabs) in worker_chunk.iter_mut().enumerate() {
-                            fill_worker_slabs(ci * chunk + k, slabs, xs, a, &apcp, pad, ell_a, wp);
-                        }
-                    });
-                }
-            });
-        } else {
-            for (worker, slabs) in per_worker.iter_mut().enumerate() {
-                fill_worker_slabs(worker, slabs, xs, a, &apcp, pad, ell_a, wp);
-            }
-        }
+        // Total coded output entries — the pool's dispatch gate keeps
+        // LeNet-sized encodes inline on the caller.
+        let work = xs.len() * ell_a * self.layer.c * apcp.h_hat * wp * s.n;
+        pool::global().parallel_chunks_mut(work, &mut per_worker, 1, |worker, slabs| {
+            fill_worker_slabs(worker, &mut slabs[0], xs, a, &apcp, pad, ell_a, wp);
+        });
         per_worker
     }
 
@@ -389,17 +408,19 @@ impl FcdccPlan {
 
     /// Decode a **batched** job from any δ worker results: one recovery
     /// matrix inversion (LRU-cached across jobs, keyed by the ordered
-    /// worker subset) reused for every sample, then one panel-blocked
-    /// GEMM per sample — each sample's δ·ℓ_A·ℓ_B coded blocks are the
-    /// rows of a matrix Ỹ and the true blocks are `Y = Dᵀ·Ỹ`
-    /// ([`Mat::gemm_t_rows_into`]), accumulated into a staging buffer
-    /// drawn from the plan's scratch pool and merged straight into the
-    /// layer output. The per-element summation order matches the scalar
-    /// reference (`coding::decode_outputs_with` + `merge_output_blocks`)
-    /// exactly, so outputs are bit-identical to it — and per-sample
-    /// arithmetic is identical to the batch-1 decode, so batched outputs
-    /// are bit-identical to per-request decoding from the same worker
-    /// subset. Returns the layer outputs in batch order.
+    /// worker subset) reused for every sample, then one packed GEMM per
+    /// sample, fanned out across samples on the compute pool — each
+    /// sample's δ·ℓ_A·ℓ_B coded blocks are the rows of a matrix Ỹ and
+    /// the true blocks are `Y = Dᵀ·Ỹ` ([`Mat::gemm_t_rows_into`]),
+    /// accumulated into that sample's disjoint region of a staging
+    /// buffer drawn from the plan's scratch pool and merged straight
+    /// into the layer output. The per-element summation order matches
+    /// the scalar reference (`coding::decode_outputs_with` +
+    /// `merge_output_blocks`) exactly, so outputs are bit-identical to
+    /// it — and per-sample arithmetic is identical to the batch-1
+    /// decode, so batched outputs are bit-identical to per-request
+    /// decoding from the same worker subset, at any pool size. Returns
+    /// the layer outputs in batch order.
     pub fn decode_batch_refs(&self, results: &[&WorkerResult]) -> Result<Vec<Tensor3>> {
         ensure!(
             results.len() >= self.delta(),
@@ -459,32 +480,53 @@ impl FcdccPlan {
                 );
             }
         }
-        let mut rows: Vec<&[f64]> = Vec::with_capacity(s.delta() * bpw);
-        let mut staging = self.scratch.take(kab * block_len);
-        let mut outputs = Vec::with_capacity(batch);
+        // One pooled staging buffer for the whole batch (a single
+        // take/put per decode), split into fixed per-sample regions so
+        // samples decode in parallel on the compute pool: chunk
+        // boundaries depend only on the batch geometry, each sample's
+        // GEMM + merge is the identical serial arithmetic, and each
+        // writes a disjoint staging region and output slot — so batched
+        // decode stays bit-identical to per-sample decode at any pool
+        // size.
+        let sample_len = kab * block_len;
+        let delta_bpw = s.delta() * bpw;
+        let (k_a, k_b) = (s.k_a, s.k_b);
+        let h_out = self.layer.h_out();
+        // One row table for the whole batch, built once up front (pure
+        // pointer pushes — the single decode-path allocation besides the
+        // pooled staging buffer): sample `s`'s coded rows live at
+        // `all_rows[s·δ·bpw .. (s+1)·δ·bpw]`, in the reference order.
+        let mut all_rows: Vec<&[f64]> = Vec::with_capacity(batch * delta_bpw);
         for sample in 0..batch {
-            if sample > 0 {
-                staging.fill(0.0);
-            }
-            rows.clear();
             for r in chosen {
                 for blk in r.sample_blocks(sample) {
-                    rows.push(blk.data.as_slice());
+                    all_rows.push(blk.data.as_slice());
                 }
             }
-            d.gemm_t_rows_into(&rows, &mut staging, block_len);
-            outputs.push(merge_output_rows(
-                &staging,
-                s.k_a,
-                s.k_b,
-                c_b,
-                h_b,
-                w_b,
-                self.layer.h_out(),
-            ));
         }
+        let mut staging = self.scratch.take(batch * sample_len);
+        let mut outputs: Vec<Option<Tensor3>> = (0..batch).map(|_| None).collect();
+        pool::global().parallel_zip_chunks_mut(
+            // Total decoded entries gate the dispatch (tiny decodes on
+            // the latency path stay inline).
+            batch * sample_len,
+            &mut staging,
+            sample_len,
+            &mut outputs,
+            1,
+            |sample, stage_buf, out_slot| {
+                let rows = &all_rows[sample * delta_bpw..(sample + 1) * delta_bpw];
+                d.gemm_t_rows_into(rows, stage_buf, block_len);
+                out_slot[0] = Some(merge_output_rows(
+                    stage_buf, k_a, k_b, c_b, h_b, w_b, h_out,
+                ));
+            },
+        );
         self.scratch.put(staging);
-        Ok(outputs)
+        Ok(outputs
+            .into_iter()
+            .map(|y| y.expect("every sample chunk ran"))
+            .collect())
     }
 
     /// Run the whole pipeline inline (no cluster): encode, compute every

@@ -1,12 +1,14 @@
 //! Scratch-buffer pool for the decode hot path.
 //!
 //! Every batched decode needs one flat staging buffer holding the
-//! sample's `k_A·k_B` output blocks while the GEMM accumulates into
-//! them. Allocating that buffer fresh per job (the pre-fusion path
-//! allocated one `Tensor3::zeros` per block per sample) churns the
-//! allocator exactly where latency matters; under steady-state serving
-//! the same few buffer sizes recur job after job, so a small pool turns
-//! every decode after the first into an allocation-free `memset`.
+//! batch's `batch·k_A·k_B` output blocks while the per-sample GEMMs
+//! accumulate into their disjoint regions (one take/put per decode,
+//! split across samples by the compute pool). Allocating that buffer
+//! fresh per job (the pre-fusion path allocated one `Tensor3::zeros`
+//! per block per sample) churns the allocator exactly where latency
+//! matters; under steady-state serving the same few buffer sizes recur
+//! job after job, so a small pool turns every decode after the first
+//! into an allocation-free `memset`.
 //!
 //! The pool is shared per `NetworkPlan` (one pool across all conv
 //! stages, like the recovery-inverse cache); standalone `FcdccPlan`s own
@@ -66,11 +68,28 @@ impl ScratchPool {
         }
     }
 
-    /// Return a buffer to the pool (dropped if the pool is full).
+    /// Return a buffer to the pool. A full pool retains the *largest*
+    /// capacities: staging sizes scale with the decode batch, and a
+    /// retained small buffer can never serve a larger request while a
+    /// large one serves every smaller request — so an incoming buffer
+    /// bigger than the smallest retained one replaces it (the smaller
+    /// is dropped), and steady-state serving converges to all-hits even
+    /// when small-batch warmup/stall flushes came first.
     pub fn put(&self, buf: Vec<f64>) {
         let mut bufs = self.buffers.lock().expect("scratch pool poisoned");
         if bufs.len() < self.capacity {
             bufs.push(buf);
+            return;
+        }
+        if let Some((idx, min_cap)) = bufs
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (i, b.capacity()))
+            .min_by_key(|&(_, cap)| cap)
+        {
+            if buf.capacity() > min_cap {
+                bufs[idx] = buf;
+            }
         }
     }
 
@@ -139,5 +158,24 @@ mod tests {
         p.put(vec![0.0; 4]);
         p.put(vec![0.0; 4]);
         assert_eq!(p.idle(), 1);
+    }
+
+    #[test]
+    fn full_pool_prefers_larger_buffers() {
+        // Batch-scaled staging: small warmup buffers must not pin the
+        // pool into allocating for every later large-batch decode.
+        let p = ScratchPool::new(2);
+        p.put(vec![0.0; 4]);
+        p.put(vec![0.0; 4]);
+        p.put(vec![0.0; 64]); // full pool: evicts one small buffer
+        assert_eq!(p.idle(), 2);
+        let b = p.take(64);
+        assert_eq!(p.hits(), 1, "large request must hit the retained buffer");
+        p.put(b);
+        // A smaller incoming buffer never evicts a larger retained one.
+        p.put(vec![0.0; 8]);
+        let b = p.take(64);
+        assert_eq!(p.hits(), 2);
+        p.put(b);
     }
 }

@@ -1,0 +1,511 @@
+//! Packed, register-tiled f64 GEMM microkernel — the single dense
+//! contraction engine behind `Mat::matmul`, `Mat::gemm_t_rows_into`,
+//! `tensor::im2col::conv2d_from_patch`, and the batched Dense layers of
+//! `model::Network`.
+//!
+//! Layout: A is packed once per call into `MR`-row strips stored
+//! k-major (for each k, the strip's MR values sit adjacent), and B is
+//! packed panel-by-panel into `NR`-column strips, also k-major. The
+//! microkernel then streams both packed strips linearly while holding an
+//! `MR×NR` accumulator block in registers: every loaded A value is used
+//! NR times and every B value MR times, instead of once per load in a
+//! naive ikj loop. Ragged edges are zero-padded inside the packed
+//! operands — never in C, whose stores are masked to the live `mh×nw`
+//! sub-block — so the kernel itself is branch-free.
+//!
+//! **Summation-order contract** (the repo's bit-identity rule, DESIGN.md
+//! §Deterministic parallel runtime): each output element is produced by
+//! exactly one accumulator that adds `a(i,k)·b(k,j)` for `k = 0…K-1` in
+//! ascending order, starting from 0.0 — precisely the scalar reference
+//! fold (`sum()` / repeated `+=`). No k-blocking, no pairwise
+//! regrouping, no FMA contraction. One deliberate difference from some
+//! scalar references: products whose coefficient is an exact zero are
+//! *added* (as ±0.0) rather than skipped. For finite operands that
+//! cannot change any partial sum — it can at most flip the sign of an
+//! exactly-zero result, which `==` (and therefore every bit-identity
+//! assertion in the suite, all of which compare via `f64::eq`) treats
+//! as equal.
+
+/// Microkernel tile height (rows of A per packed strip).
+pub const MR: usize = 4;
+/// Microkernel tile width (columns of B per packed strip).
+pub const NR: usize = 8;
+/// Column-panel width: B is packed and consumed `NC` columns at a time
+/// so the packed panel (`K·NC` doubles) stays cache-resident across all
+/// A strips. A multiple of `NR`.
+const NC: usize = 256;
+
+/// Read access to the left operand A (element `(i, k)` of an `M×K`
+/// matrix). Implementations are thin index adapters; packing
+/// monomorphizes over them, so the calls inline away.
+pub trait SrcA {
+    fn at(&self, i: usize, k: usize) -> f64;
+}
+
+/// Read access to the right operand B (element `(k, j)` of a `K×N`
+/// matrix).
+pub trait SrcB {
+    fn at(&self, k: usize, j: usize) -> f64;
+}
+
+/// Row-major storage with leading dimension `ld`.
+pub struct RowMajor<'a> {
+    pub data: &'a [f64],
+    pub ld: usize,
+}
+
+impl SrcA for RowMajor<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize, k: usize) -> f64 {
+        self.data[i * self.ld + k]
+    }
+}
+
+impl SrcB for RowMajor<'_> {
+    #[inline(always)]
+    fn at(&self, k: usize, j: usize) -> f64 {
+        self.data[k * self.ld + j]
+    }
+}
+
+/// The transpose of a row-major matrix read as A: element `(i, k)` is
+/// the underlying `(k, i)` — `Dᵀ` in the decode GEMM, without ever
+/// materializing the transpose (packing absorbs the strided reads).
+pub struct TransposedA<'a> {
+    pub data: &'a [f64],
+    pub ld: usize,
+}
+
+impl SrcA for TransposedA<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize, k: usize) -> f64 {
+        self.data[k * self.ld + i]
+    }
+}
+
+/// B given as K independent row slices — the decode path's coded output
+/// blocks, which are separate tensors rather than one flat matrix.
+pub struct RowsB<'a> {
+    pub rows: &'a [&'a [f64]],
+}
+
+impl SrcB for RowsB<'_> {
+    #[inline(always)]
+    fn at(&self, k: usize, j: usize) -> f64 {
+        self.rows[k][j]
+    }
+}
+
+/// B given as N independent column slices — the batched-Dense path,
+/// where column j is request j's flattened activation (an implicit
+/// transpose, again absorbed by packing).
+pub struct ColsB<'a> {
+    pub cols: &'a [&'a [f64]],
+}
+
+impl SrcB for ColsB<'_> {
+    #[inline(always)]
+    fn at(&self, k: usize, j: usize) -> f64 {
+        self.cols[j][k]
+    }
+}
+
+thread_local! {
+    /// Per-thread packing scratch: GEMM calls on the serving hot path
+    /// recur with the same few shapes, so the packed-operand buffers
+    /// are reused instead of reallocated per call (pool threads are
+    /// long-lived). Taken/put with `Cell`, so a hypothetical reentrant
+    /// call degrades to a fresh allocation instead of a borrow panic.
+    static PACKED_A: std::cell::Cell<Vec<f64>> = const { std::cell::Cell::new(Vec::new()) };
+    static PACKED_B: std::cell::Cell<Vec<f64>> = const { std::cell::Cell::new(Vec::new()) };
+}
+
+/// Pack all of A into MR-row strips, k-major, tail rows zero-padded:
+/// strip `s` holds rows `[s·MR, s·MR + MR)`; within a strip, the MR
+/// values of column k sit at `[k·MR, (k+1)·MR)`. Every element of the
+/// used prefix is written (padding lanes explicitly zeroed), so a
+/// reused scratch buffer never leaks stale data. Returns the strip
+/// count.
+fn pack_a_into<A: SrcA>(a: &A, m: usize, kk: usize, packed: &mut Vec<f64>) -> usize {
+    let strips = m.div_ceil(MR);
+    let need = strips * kk * MR;
+    if packed.len() < need {
+        packed.resize(need, 0.0);
+    }
+    for s in 0..strips {
+        let r0 = s * MR;
+        let mh = MR.min(m - r0);
+        let base = s * kk * MR;
+        for k in 0..kk {
+            let dst = base + k * MR;
+            for r in 0..mh {
+                packed[dst + r] = a.at(r0 + r, k);
+            }
+            for r in mh..MR {
+                packed[dst + r] = 0.0;
+            }
+        }
+    }
+    strips
+}
+
+/// Pack the B panel covering columns `[j0, j0 + nw)` into NR-column
+/// strips, k-major, tail columns zero-padded. `packed` must hold
+/// `nw.div_ceil(NR) · kk · NR` values.
+fn pack_b_panel<B: SrcB>(b: &B, kk: usize, j0: usize, nw: usize, packed: &mut [f64]) {
+    let strips = nw.div_ceil(NR);
+    for t in 0..strips {
+        let c0 = j0 + t * NR;
+        let cw = NR.min(j0 + nw - c0);
+        let base = t * kk * NR;
+        for k in 0..kk {
+            let dst = base + k * NR;
+            for l in 0..cw {
+                packed[dst + l] = b.at(k, c0 + l);
+            }
+            for l in cw..NR {
+                packed[dst + l] = 0.0;
+            }
+        }
+    }
+}
+
+/// The MR×NR microkernel: fold one packed A strip against one packed B
+/// strip, k ascending, one register accumulator per output element.
+#[inline]
+fn microkernel(a_strip: &[f64], b_strip: &[f64]) -> [[f64; NR]; MR] {
+    let mut acc = [[0.0f64; NR]; MR];
+    for (av, bv) in a_strip.chunks_exact(MR).zip(b_strip.chunks_exact(NR)) {
+        for (accr, &a) in acc.iter_mut().zip(av) {
+            for (o, &b) in accr.iter_mut().zip(bv) {
+                *o += a * b;
+            }
+        }
+    }
+    acc
+}
+
+/// Contract every packed A strip against one packed B panel (columns
+/// `[j0, j0 + nw)`), accumulating into C — the shared inner driver of
+/// [`gemm_into`] and [`gemm_prepacked_into`].
+#[allow(clippy::too_many_arguments)]
+fn contract_panel(
+    packed_a: &[f64],
+    a_strips: usize,
+    m: usize,
+    kk: usize,
+    panel: &[f64],
+    j0: usize,
+    nw: usize,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    let b_strips = nw.div_ceil(NR);
+    for s in 0..a_strips {
+        let r0 = s * MR;
+        let mh = MR.min(m - r0);
+        let a_strip = &packed_a[s * kk * MR..(s + 1) * kk * MR];
+        for t in 0..b_strips {
+            let c0 = j0 + t * NR;
+            let cw = NR.min(nw - t * NR);
+            let b_strip = &panel[t * kk * NR..(t + 1) * kk * NR];
+            let acc = microkernel(a_strip, b_strip);
+            for (r, accr) in acc.iter().enumerate().take(mh) {
+                let row0 = (r0 + r) * ldc + c0;
+                for (o, &v) in c[row0..row0 + cw].iter_mut().zip(&accr[..cw]) {
+                    *o += v;
+                }
+            }
+        }
+    }
+}
+
+/// `C += A·B` for a row-major C with leading dimension `ldc` (callers
+/// on the bit-identity paths pass C zeroed, making this `C = A·B` with
+/// the exact scalar-fold result — see the module docs). Dimensions:
+/// A is `m×kk`, B is `kk×n`, C covers `m` rows of `ldc >= n` columns.
+/// Packing scratch comes from per-thread buffers, so steady-state calls
+/// are allocation-free.
+pub fn gemm_into<A: SrcA, B: SrcB>(
+    m: usize,
+    n: usize,
+    kk: usize,
+    a: &A,
+    b: &B,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    if m == 0 || n == 0 || kk == 0 {
+        return;
+    }
+    assert!(ldc >= n, "gemm_into: ldc {ldc} < n {n}");
+    assert!(
+        c.len() >= (m - 1) * ldc + n,
+        "gemm_into: C too small for {m} rows x {ldc}"
+    );
+    PACKED_A.with(|ca| {
+        PACKED_B.with(|cb| {
+            let mut pa = ca.take();
+            let mut pb = cb.take();
+            let a_strips = pack_a_into(a, m, kk, &mut pa);
+            let max_panel = NC.min(n).div_ceil(NR) * kk * NR;
+            if pb.len() < max_panel {
+                pb.resize(max_panel, 0.0);
+            }
+            let mut j0 = 0;
+            while j0 < n {
+                let nw = NC.min(n - j0);
+                let b_strips = nw.div_ceil(NR);
+                pack_b_panel(b, kk, j0, nw, &mut pb[..b_strips * kk * NR]);
+                contract_panel(
+                    &pa,
+                    a_strips,
+                    m,
+                    kk,
+                    &pb[..b_strips * kk * NR],
+                    j0,
+                    nw,
+                    c,
+                    ldc,
+                );
+                j0 += nw;
+            }
+            ca.set(pa);
+            cb.set(pb);
+        });
+    });
+}
+
+/// A fully packed B operand (every column panel) borrowed from a
+/// packing buffer, reusable across many left-hand operands: pack once,
+/// contract many times — the worker-side im2col fan-out packs each
+/// patch matrix once for all ℓ_B filter slabs instead of once per slab
+/// pair.
+pub struct PackedB<'a> {
+    data: &'a [f64],
+    kk: usize,
+    n: usize,
+}
+
+impl PackedB<'_> {
+    /// Columns of the packed operand.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The packed panel starting at column `j0` (width `nw`).
+    fn panel(&self, j0: usize, nw: usize) -> &[f64] {
+        let panel_stride = (NC / NR) * self.kk * NR;
+        let start = (j0 / NC) * panel_stride;
+        &self.data[start..start + nw.div_ceil(NR) * self.kk * NR]
+    }
+}
+
+/// Pack all of B (`kk×n`) into the panel/strip layout the microkernel
+/// consumes, into a caller-provided buffer (grown as needed, every used
+/// element overwritten — stale contents are harmless).
+pub fn pack_b_into<'a, B: SrcB>(
+    b: &B,
+    kk: usize,
+    n: usize,
+    buf: &'a mut Vec<f64>,
+) -> PackedB<'a> {
+    let panel_stride = (NC / NR) * kk * NR;
+    let total = (n / NC) * panel_stride + (n % NC).div_ceil(NR) * kk * NR;
+    if buf.len() < total {
+        buf.resize(total, 0.0);
+    }
+    let mut j0 = 0;
+    while j0 < n {
+        let nw = NC.min(n - j0);
+        let start = (j0 / NC) * panel_stride;
+        pack_b_panel(
+            b,
+            kk,
+            j0,
+            nw,
+            &mut buf[start..start + nw.div_ceil(NR) * kk * NR],
+        );
+        j0 += nw;
+    }
+    PackedB {
+        data: &buf[..total],
+        kk,
+        n,
+    }
+}
+
+/// Pack B into **this thread's** packing scratch and run `f` against
+/// the packed view — the multi-contraction entry point: callers issue
+/// any number of [`gemm_prepacked_into`] calls inside `f`, all sharing
+/// one packing and zero steady-state allocations.
+pub fn with_packed_b<B: SrcB, R>(
+    b: &B,
+    kk: usize,
+    n: usize,
+    f: impl FnOnce(&PackedB<'_>) -> R,
+) -> R {
+    PACKED_B.with(|cell| {
+        let mut buf = cell.take();
+        let r = {
+            let pb = pack_b_into(b, kk, n, &mut buf);
+            f(&pb)
+        };
+        cell.set(buf);
+        r
+    })
+}
+
+/// [`gemm_into`] against a pre-packed B: `C += A·B` with the identical
+/// per-element fold (the packed values are the same bytes the one-shot
+/// path packs), amortizing the B packing across calls.
+pub fn gemm_prepacked_into<A: SrcA>(m: usize, a: &A, pb: &PackedB<'_>, c: &mut [f64], ldc: usize) {
+    let (n, kk) = (pb.n, pb.kk);
+    if m == 0 || n == 0 || kk == 0 {
+        return;
+    }
+    assert!(ldc >= n, "gemm_prepacked_into: ldc {ldc} < n {n}");
+    assert!(
+        c.len() >= (m - 1) * ldc + n,
+        "gemm_prepacked_into: C too small for {m} rows x {ldc}"
+    );
+    PACKED_A.with(|ca| {
+        let mut pa = ca.take();
+        let a_strips = pack_a_into(a, m, kk, &mut pa);
+        let mut j0 = 0;
+        while j0 < n {
+            let nw = NC.min(n - j0);
+            contract_panel(&pa, a_strips, m, kk, pb.panel(j0, nw), j0, nw, c, ldc);
+            j0 += nw;
+        }
+        ca.set(pa);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The scalar reference fold: one accumulator per element, k
+    /// ascending from 0.0 — what the kernel must reproduce bit for bit.
+    fn naive(m: usize, n: usize, kk: usize, a: &dyn SrcA, b: &dyn SrcB) -> Vec<f64> {
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for k in 0..kk {
+                    acc += a.at(i, k) * b.at(k, j);
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_scalar_fold_bitwise_across_shapes() {
+        let mut rng = Rng::new(17);
+        // Remainder rows/cols around MR=4 / NR=8, panel edges around
+        // NC=256, and degenerate dims.
+        let shapes = [
+            (0usize, 0usize, 0usize),
+            (0, 5, 3),
+            (4, 0, 3),
+            (4, 5, 0),
+            (1, 1, 1),
+            (3, 7, 2),
+            (4, 8, 16),
+            (5, 9, 7),
+            (13, 17, 11),
+            (33, 65, 40),
+            (8, 300, 5),
+            (2, 257, 1),
+        ];
+        for (m, n, kk) in shapes {
+            let adata = rng.fill_uniform(m * kk, -1.0, 1.0);
+            let bdata = rng.fill_uniform(kk * n, -1.0, 1.0);
+            let a = RowMajor {
+                data: &adata,
+                ld: kk,
+            };
+            let b = RowMajor {
+                data: &bdata,
+                ld: n.max(1),
+            };
+            let mut got = vec![0.0; m * n];
+            gemm_into(m, n, kk, &a, &b, &mut got, n.max(1));
+            let want = naive(m, n, kk, &a, &b);
+            assert_eq!(got, want, "shape {m}x{kk} · {kk}x{n}");
+        }
+    }
+
+    #[test]
+    fn transposed_and_column_sources_agree_with_row_major() {
+        let mut rng = Rng::new(18);
+        let (m, n, kk) = (6, 10, 9);
+        // A as its transpose's TransposedA view.
+        let at_data = rng.fill_uniform(kk * m, -1.0, 1.0); // kk x m, row-major
+        let a_t = TransposedA {
+            data: &at_data,
+            ld: m,
+        };
+        // The same A materialized row-major.
+        let mut a_data = vec![0.0; m * kk];
+        for i in 0..m {
+            for k in 0..kk {
+                a_data[i * kk + k] = at_data[k * m + i];
+            }
+        }
+        let a_rm = RowMajor {
+            data: &a_data,
+            ld: kk,
+        };
+        // B as columns and as the equivalent row-major matrix.
+        let cols_data: Vec<Vec<f64>> = (0..n).map(|_| rng.fill_uniform(kk, -1.0, 1.0)).collect();
+        let cols: Vec<&[f64]> = cols_data.iter().map(|c| c.as_slice()).collect();
+        let b_cols = ColsB { cols: &cols };
+        let mut b_data = vec![0.0; kk * n];
+        for k in 0..kk {
+            for j in 0..n {
+                b_data[k * n + j] = cols_data[j][k];
+            }
+        }
+        let b_rm = RowMajor {
+            data: &b_data,
+            ld: n,
+        };
+        let mut want = vec![0.0; m * n];
+        gemm_into(m, n, kk, &a_rm, &b_rm, &mut want, n);
+        let mut got = vec![0.0; m * n];
+        gemm_into(m, n, kk, &a_t, &b_cols, &mut got, n);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn prepacked_b_matches_one_shot_packing() {
+        let mut rng = Rng::new(19);
+        // Shapes straddling the NC panel and NR strip boundaries.
+        for (m, n, kk) in [(5usize, 9usize, 7usize), (4, 300, 11), (1, 257, 3), (13, 8, 1)] {
+            let adata = rng.fill_uniform(m * kk, -1.0, 1.0);
+            let bdata = rng.fill_uniform(kk * n, -1.0, 1.0);
+            let a = RowMajor {
+                data: &adata,
+                ld: kk,
+            };
+            let b = RowMajor {
+                data: &bdata,
+                ld: n,
+            };
+            let mut want = vec![0.0; m * n];
+            gemm_into(m, n, kk, &a, &b, &mut want, n);
+            let got = with_packed_b(&b, kk, n, |pb| {
+                assert_eq!(pb.n(), n);
+                let mut out = vec![0.0; m * n];
+                gemm_prepacked_into(m, &a, pb, &mut out, n);
+                out
+            });
+            assert_eq!(got, want, "shape {m}x{kk} · {kk}x{n}");
+        }
+    }
+}

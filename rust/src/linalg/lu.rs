@@ -64,48 +64,81 @@ impl Lu {
         self.lu.rows
     }
 
+    /// Forward + back substitution on an already-permuted RHS, in place.
+    /// Inner loops run over contiguous row slices, `j` ascending — the
+    /// same per-element order as the textbook scalar loops, so results
+    /// are bit-identical to them.
+    fn substitute(&self, x: &mut [f64]) {
+        let n = self.n();
+        // Forward substitution (unit lower).
+        for i in 1..n {
+            let row = self.lu.row(i);
+            let mut s = x[i];
+            for (l, xj) in row[..i].iter().zip(x.iter()) {
+                s -= l * xj;
+            }
+            x[i] = s;
+        }
+        // Back substitution.
+        for i in (0..n).rev() {
+            let row = self.lu.row(i);
+            let mut s = x[i];
+            for (u, xj) in row[i + 1..].iter().zip(x[i + 1..].iter()) {
+                s -= u * xj;
+            }
+            x[i] = s / row[i];
+        }
+    }
+
     /// Solve A x = b.
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
         let n = self.n();
         assert_eq!(b.len(), n, "Lu::solve: dim mismatch");
         // Apply permutation.
         let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
-        // Forward substitution (unit lower).
-        for i in 1..n {
-            let mut s = x[i];
-            for j in 0..i {
-                s -= self.lu.get(i, j) * x[j];
-            }
-            x[i] = s;
-        }
-        // Back substitution.
-        for i in (0..n).rev() {
-            let mut s = x[i];
-            for j in (i + 1)..n {
-                s -= self.lu.get(i, j) * x[j];
-            }
-            x[i] = s / self.lu.get(i, i);
-        }
+        self.substitute(&mut x);
         x
     }
 
-    /// Solve A X = B column by column.
+    /// Solve A X = B: all RHS columns stream through one reused buffer
+    /// (the permutation is applied during the gather), instead of the
+    /// old allocate-a-`Mat::col`-then-allocate-the-solution round trip
+    /// per column — this sits on the recovery-inversion path every
+    /// `InverseCache` miss pays.
     pub fn solve_mat(&self, b: &Mat) -> Mat {
         assert_eq!(b.rows, self.n());
+        let n = self.n();
         let mut out = Mat::zeros(b.rows, b.cols);
+        let mut x = vec![0.0; n];
         for c in 0..b.cols {
-            let col = b.col(c);
-            let x = self.solve(&col);
-            for r in 0..b.rows {
-                out.set(r, c, x[r]);
+            for (r, xv) in x.iter_mut().enumerate() {
+                *xv = b.get(self.piv[r], c);
+            }
+            self.substitute(&mut x);
+            for (r, xv) in x.iter().enumerate() {
+                out.set(r, c, *xv);
             }
         }
         out
     }
 
-    /// Explicit inverse (solve against identity).
+    /// Explicit inverse: solve against the identity without ever
+    /// materializing it — column c's permuted RHS is the indicator of
+    /// `piv[r] == c`, written straight into the reused buffer.
     pub fn inverse(&self) -> Mat {
-        self.solve_mat(&Mat::identity(self.n()))
+        let n = self.n();
+        let mut out = Mat::zeros(n, n);
+        let mut x = vec![0.0; n];
+        for c in 0..n {
+            for (r, xv) in x.iter_mut().enumerate() {
+                *xv = if self.piv[r] == c { 1.0 } else { 0.0 };
+            }
+            self.substitute(&mut x);
+            for (r, xv) in x.iter().enumerate() {
+                out.set(r, c, *xv);
+            }
+        }
+        out
     }
 
     pub fn determinant(&self) -> f64 {

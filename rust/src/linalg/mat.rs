@@ -1,5 +1,6 @@
 //! Dense row-major f64 matrix.
 
+use crate::linalg::gemm;
 use crate::util::rng::Rng;
 use std::fmt;
 
@@ -116,7 +117,11 @@ impl Mat {
         t
     }
 
-    /// Matrix product (ikj loop order for cache friendliness).
+    /// Matrix product through the shared packed GEMM microkernel
+    /// ([`crate::linalg::gemm`]). Per output element the contraction is
+    /// the k-ascending scalar fold from 0.0, so results match the
+    /// textbook triple loop bit for bit (see the gemm module docs for
+    /// the exact-zero caveat).
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(
             self.cols, other.rows,
@@ -124,19 +129,21 @@ impl Mat {
             self.rows, self.cols, other.rows, other.cols
         );
         let mut out = Mat::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
-            for (k, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = other.row(k);
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
-            }
-        }
+        gemm::gemm_into(
+            self.rows,
+            other.cols,
+            self.cols,
+            &gemm::RowMajor {
+                data: &self.data,
+                ld: self.cols.max(1),
+            },
+            &gemm::RowMajor {
+                data: &other.data,
+                ld: other.cols.max(1),
+            },
+            &mut out.data,
+            other.cols.max(1),
+        );
         out
     }
 
@@ -195,19 +202,22 @@ impl Mat {
         out
     }
 
-    /// Panel-blocked `out = selfᵀ · Ỹ` over row-pointer operands — the
-    /// shared GEMM kernel of the decode hot path. `self` is the `J × I`
-    /// coefficient matrix (the recovery inverse `D`), `rows` holds the
-    /// `J` coded rows of `Ỹ` (each `row_len` long, typically the data of
-    /// one coded output block), and `out` is the `I·row_len` accumulator,
-    /// which the caller must pass **zeroed**.
+    /// `out = selfᵀ · Ỹ` over row-pointer operands — the decode hot
+    /// path's GEMM. `self` is the `J × I` coefficient matrix (the
+    /// recovery inverse `D`), `rows` holds the `J` coded rows of `Ỹ`
+    /// (each `row_len` long, typically the data of one coded output
+    /// block), and `out` is the `I·row_len` accumulator, which the
+    /// caller must pass **zeroed**.
     ///
-    /// Per output element the contraction runs `j` ascending and skips
-    /// zero coefficients — exactly the summation order of the scalar
-    /// reference (`coding::decode_outputs_with`), so results are
-    /// bit-identical; the column panels only regroup whole elements, and
-    /// the panel width keeps the accumulator row plus the active coded
-    /// rows L1/L2-resident instead of streaming full rows `J` times.
+    /// Runs on the packed register-tiled microkernel
+    /// ([`crate::linalg::gemm`]): `Dᵀ` is read through a transposed
+    /// adapter (never materialized) and packed once, `Ỹ`'s rows are
+    /// packed panel-by-panel. Per output element the contraction is the
+    /// j-ascending scalar fold — the summation order of the reference
+    /// `coding::decode_outputs_with` — so decoded outputs equal the
+    /// scalar chain's bit for bit (exact-zero coefficients are added as
+    /// ±0.0 instead of skipped; see the gemm module docs for why that
+    /// is indistinguishable under `==`).
     pub fn gemm_t_rows_into(&self, rows: &[&[f64]], out: &mut [f64], row_len: usize) {
         let j_n = self.rows;
         let i_n = self.cols;
@@ -220,26 +230,18 @@ impl Mat {
         for (j, r) in rows.iter().enumerate() {
             assert_eq!(r.len(), row_len, "gemm_t_rows_into: row {j} length mismatch");
         }
-        const PANEL: usize = 256;
-        let mut p0 = 0;
-        while p0 < row_len {
-            let pw = PANEL.min(row_len - p0);
-            for i in 0..i_n {
-                let base = i * row_len + p0;
-                let orow = &mut out[base..base + pw];
-                for (j, yrow) in rows.iter().enumerate() {
-                    let coef = self.data[j * i_n + i];
-                    if coef == 0.0 {
-                        continue;
-                    }
-                    let ypanel = &yrow[p0..p0 + pw];
-                    for (o, &y) in orow.iter_mut().zip(ypanel) {
-                        *o += coef * y;
-                    }
-                }
-            }
-            p0 += pw;
-        }
+        gemm::gemm_into(
+            i_n,
+            row_len,
+            j_n,
+            &gemm::TransposedA {
+                data: &self.data,
+                ld: i_n.max(1),
+            },
+            &gemm::RowsB { rows },
+            out,
+            row_len.max(1),
+        );
     }
 
     /// Frobenius norm.

@@ -4,6 +4,7 @@
 //! from the standard algorithms.
 
 pub mod cond;
+pub mod gemm;
 pub mod kron;
 pub mod lu;
 pub mod mat;

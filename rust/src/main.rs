@@ -34,6 +34,11 @@ USAGE:
                   [--batch-window B] [--verify-every K]
   fcdcc artifacts [--dir DIR]   (needs the `pjrt` feature)
 
+Every command also accepts --threads T: the size of the persistent
+compute pool the hot kernels (encode/decode/worker GEMMs) fan out on.
+Defaults to the FCDCC_THREADS env var, then to all cores; outputs are
+bit-identical at any setting.
+
 The worker --engine defaults to im2col (fused patch-matrix reuse);
 direct is the naive correctness oracle.
 ";
@@ -234,6 +239,12 @@ fn cmd_artifacts(_args: &Args) -> Result<()> {
 
 fn main() -> Result<()> {
     let args = Args::parse()?;
+    // Size the compute pool before any command touches a hot path (the
+    // pool is built on first use and cannot be resized after).
+    let threads = args.get_usize("threads", 0)?;
+    if threads > 0 {
+        fcdcc::util::pool::configure_global(threads);
+    }
     match args.command.as_deref() {
         Some("run") => cmd_run(&args),
         Some("optimize") => cmd_optimize(&args),

@@ -4,6 +4,7 @@
 //! the FCDCC distributed pipeline (the hook is a callback, so the network
 //! definition stays transport-agnostic).
 
+use crate::linalg::gemm;
 use crate::model::ConvLayer;
 use crate::tensor::{conv2d, Tensor3, Tensor4};
 use crate::util::rng::Rng;
@@ -161,6 +162,68 @@ impl Network {
         }
     }
 
+    /// Apply one non-convolutional layer to a **group** of activations
+    /// at the same pipeline position — the coalesced-serving fast path.
+    /// `Dense` layers run as one shared packed GEMM (`linalg::gemm`):
+    /// the weight matrix streams from memory once for the whole group
+    /// instead of once per request, with the flattened activations read
+    /// as the implicit-transposed column operand. Every other layer
+    /// type applies per activation.
+    ///
+    /// Per output element the GEMM is the same k-ascending fold as
+    /// `Mat::matvec`, so grouped logits equal per-request
+    /// `apply_local` logits exactly — batching requests never moves
+    /// their outputs.
+    ///
+    /// # Panics
+    /// On a `Conv` layer, like [`Self::apply_local`].
+    pub fn apply_local_batch(&self, layer: &Layer, acts: &mut [&mut Activation]) {
+        if acts.len() <= 1 {
+            for a in acts.iter_mut() {
+                self.apply_local(layer, a);
+            }
+            return;
+        }
+        match layer {
+            Layer::Dense { w, b } => {
+                let inputs: Vec<Vec<f64>> = acts
+                    .iter_mut()
+                    .map(|a| a.flat.take().unwrap_or_else(|| a.t.data.clone()))
+                    .collect();
+                let cols: Vec<&[f64]> = inputs.iter().map(|v| v.as_slice()).collect();
+                let batch = cols.len();
+                for x in &cols {
+                    assert_eq!(w.cols, x.len(), "dense: dim mismatch");
+                }
+                // out (rows × batch) = W · [x_0 … x_{batch-1}].
+                let mut out = vec![0.0; w.rows * batch];
+                gemm::gemm_into(
+                    w.rows,
+                    batch,
+                    w.cols,
+                    &gemm::RowMajor {
+                        data: &w.data,
+                        ld: w.cols.max(1),
+                    },
+                    &gemm::ColsB { cols: &cols },
+                    &mut out,
+                    batch,
+                );
+                for (sample, a) in acts.iter_mut().enumerate() {
+                    let y: Vec<f64> = (0..w.rows)
+                        .map(|r| out[r * batch + sample] + b[r])
+                        .collect();
+                    a.flat = Some(y);
+                }
+            }
+            _ => {
+                for a in acts.iter_mut() {
+                    self.apply_local(layer, a);
+                }
+            }
+        }
+    }
+
     /// Forward pass with a custom conv executor (e.g. FCDCC distributed).
     pub fn forward_with(&self, x: &Tensor3, conv_exec: &ConvExec) -> Vec<f64> {
         let mut a = Activation::new(x);
@@ -268,6 +331,31 @@ mod tests {
         let logits = net.forward(&x);
         assert_eq!(logits.len(), 10);
         assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn batched_dense_matches_per_sample_bitwise() {
+        // The grouped GEMM must not move logits relative to per-request
+        // matvec application — serve coalescing relies on this.
+        let mut rng = Rng::new(11);
+        let net = Network {
+            name: "t".into(),
+            layers: vec![],
+        };
+        let w = crate::linalg::Mat::random(5, 12, &mut rng);
+        let b = rng.fill_uniform(5, -1.0, 1.0);
+        let dense = Layer::Dense { w, b };
+        let xs: Vec<Tensor3> = (0..3).map(|_| Tensor3::random(1, 3, 4, &mut rng)).collect();
+        let mut singles: Vec<Activation> = xs.iter().map(Activation::new).collect();
+        for a in singles.iter_mut() {
+            net.apply_local(&dense, a);
+        }
+        let mut grouped: Vec<Activation> = xs.iter().map(Activation::new).collect();
+        let mut refs: Vec<&mut Activation> = grouped.iter_mut().collect();
+        net.apply_local_batch(&dense, &mut refs);
+        for (s, g) in singles.into_iter().zip(grouped) {
+            assert_eq!(s.into_logits(), g.into_logits(), "grouped dense diverged");
+        }
     }
 
     #[test]

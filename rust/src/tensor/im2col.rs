@@ -12,6 +12,7 @@
 //! allocation across the whole batch. [`conv2d_im2col`] is the one-shot
 //! composition of the two halves.
 
+use crate::linalg::gemm;
 use crate::tensor::{conv2d_shape, ConvParams, Tensor3, Tensor4};
 
 /// Build the im2col patch matrix into `buf` (resized to fit, previous
@@ -83,49 +84,80 @@ pub fn conv2d_from_patch(
     debug_assert_eq!(rows, k.c * k.kh * k.kw);
     debug_assert_eq!(cols, oh * ow);
     debug_assert_eq!(patch.len(), rows * cols);
-    // GEMM: out[n, pix] = sum_r K[n, r] * M[r, pix]
-    // K is already laid out row-major as (N × rows). Two-level blocking
-    // (EXPERIMENTS.md §Perf):
-    //   * columns are processed in L2-resident panels, so the patch
-    //     matrix M is streamed from memory once instead of N times;
-    //   * the contraction is blocked by 4, folding four M rows per pass
-    //     over the accumulator (4x less accumulator traffic).
-    const PANEL: usize = 256; // 576 rows x 256 cols x 8 B ≈ L2-sized
+    // GEMM: out[n, pix] = sum_r K[n, r] * M[r, pix], on the shared
+    // packed register-tiled microkernel (linalg::gemm). K is already
+    // laid out row-major as (N × rows); the patch matrix is the
+    // panel-packed B operand, streamed from memory once per column
+    // panel instead of once per output channel.
     let mut out = vec![0.0f64; k.n * cols];
-    let mut p0 = 0;
-    while p0 < cols {
-        let pw = PANEL.min(cols - p0);
-        for n in 0..k.n {
-            let krow = &k.data[n * rows..(n + 1) * rows];
-            let orow = &mut out[n * cols + p0..n * cols + p0 + pw];
-            let mut r = 0;
-            while r + 4 <= rows {
-                let (k0, k1, k2, k3) = (krow[r], krow[r + 1], krow[r + 2], krow[r + 3]);
-                if k0 != 0.0 || k1 != 0.0 || k2 != 0.0 || k3 != 0.0 {
-                    let m0 = &patch[r * cols + p0..r * cols + p0 + pw];
-                    let m1 = &patch[(r + 1) * cols + p0..(r + 1) * cols + p0 + pw];
-                    let m2 = &patch[(r + 2) * cols + p0..(r + 2) * cols + p0 + pw];
-                    let m3 = &patch[(r + 3) * cols + p0..(r + 3) * cols + p0 + pw];
-                    for i in 0..pw {
-                        orow[i] += k0 * m0[i] + k1 * m1[i] + k2 * m2[i] + k3 * m3[i];
-                    }
-                }
-                r += 4;
-            }
-            while r < rows {
-                let kv = krow[r];
-                if kv != 0.0 {
-                    let mrow = &patch[r * cols + p0..r * cols + p0 + pw];
-                    for (o, &m) in orow.iter_mut().zip(mrow) {
-                        *o += kv * m;
-                    }
-                }
-                r += 1;
-            }
-        }
-        p0 += pw;
-    }
+    gemm::gemm_into(
+        k.n,
+        cols,
+        rows,
+        &gemm::RowMajor {
+            data: &k.data,
+            ld: rows.max(1),
+        },
+        &gemm::RowMajor {
+            data: patch,
+            ld: cols.max(1),
+        },
+        &mut out,
+        cols.max(1),
+    );
     Tensor3::from_vec(k.n, oh, ow, out)
+}
+
+/// Contract one prebuilt patch matrix against **several** same-shape
+/// filter banks: the patch (the large operand) is packed once into the
+/// thread's packing scratch (`linalg::gemm::with_packed_b`) and reused
+/// across every GEMM, instead of being re-packed per filter bank the
+/// way repeated [`conv2d_from_patch`] calls would. Per-element
+/// arithmetic is the identical k-ascending fold over the identical
+/// packed values, so each output equals the corresponding
+/// `conv2d_from_patch` result bit for bit. Outputs come back in
+/// `filters` order.
+pub fn conv2d_from_patch_multi(
+    patch: &[f64],
+    rows: usize,
+    cols: usize,
+    filters: &[&Tensor4],
+    oh: usize,
+    ow: usize,
+) -> Vec<Tensor3> {
+    debug_assert_eq!(cols, oh * ow);
+    debug_assert_eq!(patch.len(), rows * cols);
+    if filters.is_empty() {
+        return Vec::new();
+    }
+    gemm::with_packed_b(
+        &gemm::RowMajor {
+            data: patch,
+            ld: cols.max(1),
+        },
+        rows,
+        cols,
+        |pb| {
+            filters
+                .iter()
+                .map(|k| {
+                    debug_assert_eq!(rows, k.c * k.kh * k.kw);
+                    let mut out = vec![0.0f64; k.n * cols];
+                    gemm::gemm_prepacked_into(
+                        k.n,
+                        &gemm::RowMajor {
+                            data: &k.data,
+                            ld: rows.max(1),
+                        },
+                        pb,
+                        &mut out,
+                        cols.max(1),
+                    );
+                    Tensor3::from_vec(k.n, oh, ow, out)
+                })
+                .collect()
+        },
+    )
 }
 
 /// Convolution via im2col + GEMM. Produces bit-compatible layout with
@@ -177,6 +209,26 @@ mod tests {
         assert_eq!(rows, 3 * 3 * 3);
         assert_eq!(cols, 4 * 4);
         assert_eq!(m.len(), rows * cols);
+    }
+
+    #[test]
+    fn multi_filter_patch_contraction_matches_per_filter() {
+        // One patch packing shared by several filter banks must produce
+        // exactly the per-filter conv2d_from_patch results.
+        let mut rng = Rng::new(14);
+        let p = ConvParams::new(1, 0);
+        let x = Tensor3::random(3, 9, 8, &mut rng);
+        let ks: Vec<Tensor4> = (0..3).map(|_| Tensor4::random(4, 3, 3, 3, &mut rng)).collect();
+        let (oh, ow) = conv2d_shape(x.h, x.w, 3, 3, p);
+        let (patch, rows, cols) = im2col(&x, 3, 3, p);
+        let refs: Vec<&Tensor4> = ks.iter().collect();
+        let multi = conv2d_from_patch_multi(&patch, rows, cols, &refs, oh, ow);
+        assert_eq!(multi.len(), ks.len());
+        for (k, y) in ks.iter().zip(&multi) {
+            let want = conv2d_from_patch(&patch, rows, cols, k, oh, ow);
+            assert_eq!(y.data, want.data, "multi diverged from per-filter");
+        }
+        assert!(conv2d_from_patch_multi(&patch, rows, cols, &[], oh, ow).is_empty());
     }
 
     #[test]

@@ -1,6 +1,8 @@
-//! Small shared utilities: PRNG, float comparison helpers, timing.
+//! Small shared utilities: PRNG, float comparison helpers, timing, and
+//! the persistent compute pool.
 
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod timer;
 

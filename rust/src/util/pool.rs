@@ -1,0 +1,482 @@
+//! Persistent shared compute pool: long-lived worker threads plus a
+//! scoped, deterministically-chunked `parallel_for` — the single
+//! scheduling substrate for every hot kernel (fused batch encode, GEMM
+//! batch decode, worker-side im2col). Replaces the per-call
+//! `std::thread::scope` spawn/join the encoder used to pay: workers are
+//! spawned once per process and woken through a condvar'd queue, so
+//! dispatching a parallel region costs a queue push instead of N thread
+//! spawns.
+//!
+//! **Determinism contract** (DESIGN.md §Deterministic parallel runtime):
+//! callers split their work into chunks whose boundaries are a function
+//! of the *problem shape only* — one coded worker per chunk in the
+//! encoder, one sample per chunk in the decoder, one input slab per
+//! chunk in the im2col engine — never of the thread count. Chunks are
+//! claimed dynamically (an atomic ticket), so *which thread* runs a
+//! chunk is scheduling noise, but every chunk writes a disjoint output
+//! region through the same serial per-element code regardless of who
+//! runs it. Outputs are therefore bit-identical for any pool size,
+//! including 1 (where everything runs inline on the caller).
+//!
+//! The calling thread always participates in its own parallel region,
+//! so a region completes even when every pool worker is busy with other
+//! regions, and a `parallel_for` issued from *inside* a chunk runs
+//! inline — concurrent and nested regions cannot deadlock. Panics
+//! inside a chunk are caught, the region still joins (the borrowed
+//! state must outlive every worker touching it), and the first panic is
+//! re-raised on the caller.
+//!
+//! The process-wide pool ([`global`]) is sized by the `FCDCC_THREADS`
+//! env var (the `--threads` CLI flag sets it programmatically via
+//! [`configure_global`]), defaulting to `available_parallelism`. Tests
+//! build private [`ThreadPool`]s to pin exact sizes.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+type PanicPayload = Box<dyn Any + Send + 'static>;
+
+/// Work floor (in caller-estimated elements) below which the chunked
+/// entry points run inline instead of dispatching to the pool: a
+/// dispatch costs boxed helper jobs, a queue lock, and wakeups, which
+/// would dominate LeNet-sized regions. One pool-owned constant replaces
+/// the per-call-site thresholds the pre-pool code carried. Gating only
+/// changes *where* chunks run, never their boundaries or arithmetic, so
+/// results are unaffected.
+pub const MIN_PARALLEL_WORK: usize = 32 * 1024;
+
+enum Msg {
+    /// A helper job, tagged with its region's state address so the
+    /// region's caller can cancel still-queued (unclaimed) helpers.
+    Job { tag: usize, job: Job },
+    Exit,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Msg>>,
+    ready: Condvar,
+}
+
+thread_local! {
+    /// True while this thread is executing chunks of some region. A
+    /// `parallel_for` issued from inside a chunk runs inline instead of
+    /// enqueuing: a pool worker that enqueued sub-helpers and then
+    /// blocked waiting for them could deadlock the pool (every worker
+    /// waiting, nobody left to pop), and inline nesting is
+    /// deterministic by construction.
+    static IN_REGION: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// A persistent pool of worker threads executing scoped parallel loops.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    /// Total parallelism of a region: pool workers + the calling thread.
+    threads: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Per-region state shared between the caller and its helper jobs.
+struct ForState<'a> {
+    /// Ticket dispenser: the next unclaimed chunk index.
+    next: AtomicUsize,
+    chunks: usize,
+    f: &'a (dyn Fn(usize) + Sync),
+    /// Helper jobs not yet finished; the caller blocks until 0.
+    pending: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<PanicPayload>>,
+}
+
+/// Claim and run chunks until the dispenser runs dry. Each chunk runs
+/// exactly once; a panic stops this participant but still lets the
+/// region join.
+fn drive(st: &ForState<'_>) {
+    IN_REGION.with(|c| c.set(true));
+    let result = catch_unwind(AssertUnwindSafe(|| loop {
+        let i = st.next.fetch_add(1, Ordering::Relaxed);
+        if i >= st.chunks {
+            break;
+        }
+        (st.f)(i);
+    }));
+    IN_REGION.with(|c| c.set(false));
+    if let Err(p) = result {
+        let mut slot = st.panic.lock().unwrap_or_else(|e| e.into_inner());
+        if slot.is_none() {
+            *slot = Some(p);
+        }
+    }
+}
+
+impl ThreadPool {
+    /// Build a pool with `threads` total parallelism (clamped to >= 1):
+    /// `threads - 1` worker threads are spawned, the calling thread is
+    /// the last participant of every region.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads - 1);
+        for i in 0..threads - 1 {
+            let sh = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("fcdcc-pool-{i}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let mut q = sh.queue.lock().unwrap_or_else(|e| e.into_inner());
+                            loop {
+                                if let Some(m) = q.pop_front() {
+                                    break m;
+                                }
+                                q = sh.ready.wait(q).unwrap_or_else(|e| e.into_inner());
+                            }
+                        };
+                        match msg {
+                            Msg::Job { job, .. } => job(),
+                            Msg::Exit => break,
+                        }
+                    })
+                    .expect("spawn pool worker"),
+            );
+        }
+        Self {
+            shared,
+            threads,
+            handles,
+        }
+    }
+
+    /// Total parallelism of this pool (workers + caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0), f(1), …, f(chunks - 1)`, each exactly once, fanned out
+    /// over the pool with the caller participating; returns when every
+    /// chunk is done. Chunk-to-thread assignment is dynamic, so `f` must
+    /// only depend on the chunk index (the deterministic-chunking rule);
+    /// with `chunks <= 1` or a size-1 pool everything runs inline.
+    pub fn parallel_for<F: Fn(usize) + Sync>(&self, chunks: usize, f: F) {
+        if chunks == 0 {
+            return;
+        }
+        let helpers = (self.threads - 1).min(chunks - 1);
+        if helpers == 0 || IN_REGION.with(|c| c.get()) {
+            // Size-1 pool, single chunk, or a nested region: inline.
+            for i in 0..chunks {
+                f(i);
+            }
+            return;
+        }
+        let st = ForState {
+            next: AtomicUsize::new(0),
+            chunks,
+            f: &f,
+            pending: Mutex::new(helpers),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        };
+        // The helper jobs live on 'static worker threads but borrow the
+        // stack-held region state; the pointer round-trip erases that
+        // lifetime. SAFETY: every submitted helper is either executed (it
+        // then decrements `pending` exactly once — drive never unwinds, it
+        // catches) or cancelled while still queued (removed and dropped
+        // without ever dereferencing `addr`, the caller decrementing for
+        // it), and this function does not return (or unwind) before
+        // `pending` reaches zero — so no helper can touch `st` (or `f`)
+        // after they're gone.
+        let addr = &st as *const ForState<'_> as usize;
+        {
+            let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            for _ in 0..helpers {
+                q.push_back(Msg::Job {
+                    tag: addr,
+                    job: Box::new(move || {
+                        let st = unsafe { &*(addr as *const ForState<'static>) };
+                        drive(st);
+                        let mut left = st.pending.lock().unwrap_or_else(|e| e.into_inner());
+                        *left -= 1;
+                        if *left == 0 {
+                            st.done.notify_all();
+                        }
+                    }),
+                });
+            }
+        }
+        // One wakeup per queued helper: notify_all would stampede every
+        // idle worker at the queue lock for regions that enqueued only a
+        // few jobs.
+        for _ in 0..helpers {
+            self.shared.ready.notify_one();
+        }
+        drive(&st);
+        // The caller is done with its chunks (on the normal path the
+        // ticket dispenser is dry, so still-queued helpers would be pure
+        // no-ops): cancel every helper of THIS region that no worker has
+        // claimed yet, instead of sleeping until a busy worker frees up
+        // just to pop them. Helpers already running still count down.
+        {
+            let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            let before = q.len();
+            q.retain(|m| !matches!(m, Msg::Job { tag, .. } if *tag == addr));
+            let cancelled = before - q.len();
+            if cancelled > 0 {
+                let mut left = st.pending.lock().unwrap_or_else(|e| e.into_inner());
+                *left -= cancelled;
+            }
+        }
+        let mut left = st.pending.lock().unwrap_or_else(|e| e.into_inner());
+        while *left > 0 {
+            left = st.done.wait(left).unwrap_or_else(|e| e.into_inner());
+        }
+        drop(left);
+        if let Some(p) = st.panic.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            resume_unwind(p);
+        }
+    }
+
+    /// Split `data` into fixed `chunk_len`-sized chunks (the last may be
+    /// short) and run `f(chunk_idx, chunk)` for each in parallel. Chunk
+    /// boundaries depend only on `data.len()` and `chunk_len`, never the
+    /// thread count — the deterministic-chunking rule made safe: every
+    /// chunk is a disjoint `&mut` slice.
+    ///
+    /// `work` is the caller's estimate of the region's total work (e.g.
+    /// output elements): below [`MIN_PARALLEL_WORK`] the chunks run
+    /// inline on the caller, so tiny (LeNet-sized) regions never pay the
+    /// dispatch cost (boxed helper jobs, queue lock, wakeups). The gate
+    /// is one pool-owned constant instead of per-call-site thresholds,
+    /// and cannot affect results — only which thread runs a chunk.
+    pub fn parallel_chunks_mut<T, F>(&self, work: usize, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk_len > 0, "parallel_chunks_mut: chunk_len must be >= 1");
+        let len = data.len();
+        if len == 0 {
+            return;
+        }
+        if work < MIN_PARALLEL_WORK || self.threads == 1 {
+            for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+                f(i, chunk);
+            }
+            return;
+        }
+        let chunks = len.div_ceil(chunk_len);
+        let base = SendPtr(data.as_mut_ptr());
+        self.parallel_for(chunks, move |i| {
+            let start = i * chunk_len;
+            let end = (start + chunk_len).min(len);
+            // SAFETY: chunk i covers [start, end), disjoint across i;
+            // the borrow of `data` outlives parallel_for, which joins
+            // every participant before returning.
+            let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+            f(i, chunk);
+        });
+    }
+
+    /// Two-slice variant of [`Self::parallel_chunks_mut`]: chunk `i` of
+    /// `a` (fixed `a_chunk` elements) and chunk `i` of `b` (fixed
+    /// `b_chunk` elements) are handed to the same call — e.g. one decode
+    /// sample's staging region paired with its output slot. Both slices
+    /// must split into the same number of chunks. `work` gates dispatch
+    /// exactly as in [`Self::parallel_chunks_mut`].
+    pub fn parallel_zip_chunks_mut<A, B, F>(
+        &self,
+        work: usize,
+        a: &mut [A],
+        a_chunk: usize,
+        b: &mut [B],
+        b_chunk: usize,
+        f: F,
+    ) where
+        A: Send,
+        B: Send,
+        F: Fn(usize, &mut [A], &mut [B]) + Sync,
+    {
+        assert!(a_chunk > 0 && b_chunk > 0, "zip chunks must be >= 1");
+        let chunks = a.len().div_ceil(a_chunk);
+        assert_eq!(
+            chunks,
+            b.len().div_ceil(b_chunk),
+            "parallel_zip_chunks_mut: slices split into different chunk counts"
+        );
+        if chunks == 0 {
+            return;
+        }
+        if work < MIN_PARALLEL_WORK || self.threads == 1 {
+            for (i, (ca, cb)) in a.chunks_mut(a_chunk).zip(b.chunks_mut(b_chunk)).enumerate() {
+                f(i, ca, cb);
+            }
+            return;
+        }
+        let (alen, blen) = (a.len(), b.len());
+        let (pa, pb) = (SendPtr(a.as_mut_ptr()), SendPtr(b.as_mut_ptr()));
+        self.parallel_for(chunks, move |i| {
+            let (s1, e1) = (i * a_chunk, ((i + 1) * a_chunk).min(alen));
+            let (s2, e2) = (i * b_chunk, ((i + 1) * b_chunk).min(blen));
+            // SAFETY: as in parallel_chunks_mut — disjoint fixed chunks,
+            // joined before the borrows of `a`/`b` end.
+            let ca = unsafe { std::slice::from_raw_parts_mut(pa.0.add(s1), e1 - s1) };
+            let cb = unsafe { std::slice::from_raw_parts_mut(pb.0.add(s2), e2 - s2) };
+            f(i, ca, cb);
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // No region can be live here (`parallel_for` borrows &self), so
+        // the queue holds no jobs — just wake everyone up to exit.
+        {
+            let mut q = self.shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            for _ in &self.handles {
+                q.push_back(Msg::Exit);
+            }
+        }
+        self.shared.ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A raw pointer that crosses threads; soundness is argued at each
+/// construction site (disjoint chunks + join-before-return).
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// Pool size from the environment: `FCDCC_THREADS=N` (N >= 1) pins it,
+/// anything else falls back to `available_parallelism`.
+fn default_threads() -> usize {
+    match std::env::var("FCDCC_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        Some(n) if n >= 1 => n,
+        _ => std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1),
+    }
+}
+
+/// Size the process-wide pool explicitly (the `--threads` CLI flag).
+/// Returns false when the pool was already built — sizing must happen
+/// before first use.
+pub fn configure_global(threads: usize) -> bool {
+    if GLOBAL.get().is_some() {
+        return false;
+    }
+    GLOBAL.set(ThreadPool::new(threads)).is_ok()
+}
+
+/// The process-wide compute pool, built on first use (see
+/// [`default_threads`] for sizing).
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_chunk_runs_exactly_once() {
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let counts: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+            pool.parallel_for(97, |i| {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                counts.iter().all(|c| c.load(Ordering::Relaxed) == 1),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn chunked_fill_is_deterministic_across_pool_sizes() {
+        let total = 1003usize;
+        let chunk = 17;
+        let want: Vec<f64> = (0..total).map(|i| (i as f64) * 1.5 - 7.0).collect();
+        for threads in [1usize, 2, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut data = vec![0.0f64; total];
+            // work = MAX forces real dispatch despite the small fixture.
+            pool.parallel_chunks_mut(usize::MAX, &mut data, chunk, |ci, slice| {
+                for (k, v) in slice.iter_mut().enumerate() {
+                    let i = ci * chunk + k;
+                    *v = (i as f64) * 1.5 - 7.0;
+                }
+            });
+            assert_eq!(data, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn zip_chunks_pair_up() {
+        let pool = ThreadPool::new(3);
+        let mut sums = vec![0.0f64; 5];
+        let mut data: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        pool.parallel_zip_chunks_mut(usize::MAX, &mut data, 4, &mut sums, 1, |_, chunk, out| {
+            out[0] = chunk.iter().sum();
+        });
+        assert_eq!(sums, vec![6.0, 22.0, 38.0, 54.0, 70.0]);
+    }
+
+    #[test]
+    fn panics_propagate_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(64, |i| {
+                if i == 33 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must reach the caller");
+        let n = AtomicUsize::new(0);
+        pool.parallel_for(8, |_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 8, "pool unusable after panic");
+    }
+
+    #[test]
+    fn nested_regions_run_inline_without_deadlock() {
+        let pool = ThreadPool::new(2);
+        let total = AtomicUsize::new(0);
+        pool.parallel_for(4, |_| {
+            pool.parallel_for(3, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn caller_participates_even_with_busy_workers() {
+        // A size-1 pool has no workers at all: everything inline.
+        let pool = ThreadPool::new(1);
+        let n = AtomicUsize::new(0);
+        pool.parallel_for(16, |_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 16);
+    }
+}

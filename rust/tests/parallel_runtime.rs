@@ -1,0 +1,218 @@
+//! Determinism suite for the persistent parallel compute runtime
+//! (DESIGN.md §Deterministic parallel runtime): the shared thread pool
+//! must produce bit-identical results at every pool size, and the
+//! packed GEMM microkernel must reproduce the scalar reference fold bit
+//! for bit, including degenerate and remainder shapes.
+//!
+//! Strategy for the thread-count axis: the pool primitives are compared
+//! directly across private pools of 1..N threads (chunk boundaries are
+//! problem-shaped, so outputs cannot depend on the pool size), and every
+//! pool-backed hot path (fused encode, GEMM batch decode, im2col worker
+//! engine) is compared against its *serial scalar reference* — so if the
+//! suite passes under any `FCDCC_THREADS`, the hot paths equal the same
+//! reference, hence each other, at every thread count. CI runs the whole
+//! suite twice (default pool and `FCDCC_THREADS=1`) to pin both ends.
+
+use fcdcc::fcdcc::FcdccPlan;
+use fcdcc::linalg::Mat;
+use fcdcc::model::ConvLayer;
+use fcdcc::tensor::{im2col::conv2d_im2col, Tensor3, Tensor4};
+use fcdcc::util::pool::ThreadPool;
+use fcdcc::util::rng::Rng;
+
+// --- pool primitives -----------------------------------------------------
+
+#[test]
+fn pool_parallel_fill_deterministic_across_pool_sizes() {
+    // Chunk-local sequential state (a running recurrence) makes any
+    // cross-chunk interference or boundary drift visible immediately.
+    let total = 4 * 4704; // four decode-sized sample regions
+    let chunk = 4704;
+    let mut want: Option<Vec<f64>> = None;
+    for threads in [1usize, 2, 5] {
+        let pool = ThreadPool::new(threads);
+        let mut buf = vec![0.0f64; total];
+        // work = MAX forces real dispatch despite the small fixture.
+        pool.parallel_chunks_mut(usize::MAX, &mut buf, chunk, |ci, slice| {
+            let mut acc = ci as f64 + 1.0;
+            for v in slice.iter_mut() {
+                acc = acc * 1.000001 + 0.5;
+                *v = acc;
+            }
+        });
+        match &want {
+            None => want = Some(buf),
+            Some(w) => assert_eq!(&buf, w, "threads={threads}: fill diverged"),
+        }
+    }
+}
+
+#[test]
+fn pool_zip_chunks_deterministic_across_pool_sizes() {
+    let items = 23usize; // deliberately not a multiple of anything
+    let chunk = 4;
+    let data: Vec<f64> = (0..items * chunk).map(|i| (i as f64) * 0.25 - 3.0).collect();
+    let mut want: Option<Vec<f64>> = None;
+    for threads in [1usize, 3, 8] {
+        let pool = ThreadPool::new(threads);
+        let mut src = data.clone();
+        let mut sums = vec![0.0f64; items];
+        pool.parallel_zip_chunks_mut(usize::MAX, &mut src, chunk, &mut sums, 1, |_, c, out| {
+            out[0] = c.iter().fold(0.0, |a, &v| a + v * v);
+        });
+        match &want {
+            None => want = Some(sums),
+            Some(w) => assert_eq!(&sums, w, "threads={threads}: zip diverged"),
+        }
+    }
+}
+
+// --- packed GEMM vs the scalar reference fold ----------------------------
+
+/// The scalar reference: one accumulator per element, k ascending from
+/// 0.0 — the order the packed microkernel must reproduce exactly.
+fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut acc = 0.0f64;
+            for k in 0..a.cols {
+                acc += a.get(i, k) * b.get(k, j);
+            }
+            out.set(i, j, acc);
+        }
+    }
+    out
+}
+
+#[test]
+fn packed_matmul_bit_identical_to_naive_fold() {
+    let mut rng = Rng::new(41);
+    // Degenerate dims, exact-tile shapes, and remainders around the
+    // MR=4 / NR=8 tiles and the 256-wide packing panel.
+    let shapes = [
+        (0usize, 0usize, 0usize),
+        (0, 5, 3),
+        (4, 0, 3),
+        (4, 5, 0),
+        (1, 1, 1),
+        (3, 5, 2),
+        (4, 8, 4),
+        (5, 9, 13),
+        (12, 16, 7),
+        (33, 65, 21),
+        (31, 257, 9),
+        (2, 300, 40),
+    ];
+    for (m, n, k) in shapes {
+        let a = Mat::random(m, k, &mut rng);
+        let b = Mat::random(k, n, &mut rng);
+        let got = a.matmul(&b);
+        let want = matmul_naive(&a, &b);
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+        assert_eq!(got.data, want.data, "matmul {m}x{k} · {k}x{n} diverged");
+    }
+}
+
+#[test]
+fn gemm_t_rows_matches_fold_including_degenerate_shapes() {
+    let mut rng = Rng::new(42);
+    // (coded rows j_n, output blocks i_n, row length): zero coded rows,
+    // zero output columns, zero-length rows, panel-straddling lengths,
+    // i_n not a multiple of the tile height.
+    let shapes = [
+        (0usize, 4usize, 8usize),
+        (3, 0, 8),
+        (3, 4, 0),
+        (1, 1, 1),
+        (6, 5, 9),
+        (7, 13, 300),
+    ];
+    for (j_n, i_n, len) in shapes {
+        let mut d = Mat::random(j_n, i_n, &mut rng);
+        if j_n > 1 && i_n > 1 {
+            d.set(1, 1, 0.0); // an exact-zero coefficient
+        }
+        let rows_data: Vec<Vec<f64>> =
+            (0..j_n).map(|_| rng.fill_uniform(len, -1.0, 1.0)).collect();
+        let rows: Vec<&[f64]> = rows_data.iter().map(|r| r.as_slice()).collect();
+        let mut got = vec![0.0; i_n * len];
+        d.gemm_t_rows_into(&rows, &mut got, len);
+        for i in 0..i_n {
+            for t in 0..len {
+                let mut want = 0.0f64;
+                for (j, r) in rows_data.iter().enumerate() {
+                    want += d.get(j, i) * r[t];
+                }
+                assert_eq!(got[i * len + t], want, "({i},{t}) of ({j_n},{i_n},{len})");
+            }
+        }
+    }
+}
+
+// --- pool-backed hot paths vs their serial scalar references -------------
+
+#[test]
+fn inline_batch_pipeline_bit_identical_across_straggler_subsets() {
+    // run_inline_batch drives the pooled encode AND the pooled batch
+    // decode; per-sample run_inline over the same survivor subset is the
+    // (batch-1) reference. Shapes cover stride/padding/APCP-extension
+    // branches; subsets rotate so arrival order ≠ worker-id order.
+    let mut rng = Rng::new(43);
+    let cases = [
+        (ConvLayer::new("p1", 2, 12, 10, 8, 3, 3, 1, 0), 4usize, 2usize, 5usize),
+        (ConvLayer::new("p2", 3, 11, 9, 6, 3, 3, 1, 1), 2, 6, 5),
+        (ConvLayer::new("p3", 2, 23, 17, 4, 5, 5, 4, 0), 2, 4, 4),
+    ];
+    for (layer, k_a, k_b, n) in cases {
+        let plan = FcdccPlan::new_crme(&layer, k_a, k_b, n).unwrap();
+        let k = Tensor4::random(layer.n, layer.c, layer.kh, layer.kw, &mut rng);
+        let delta = plan.delta();
+        for batch in 1..=4usize {
+            let xs: Vec<Tensor3> = (0..batch)
+                .map(|_| Tensor3::random(layer.c, layer.h, layer.w, &mut rng))
+                .collect();
+            let refs: Vec<&Tensor3> = xs.iter().collect();
+            let survivors: Vec<usize> = (0..delta).map(|i| (i + batch) % n).collect();
+            let got = plan.run_inline_batch(&refs, &k, Some(&survivors)).unwrap();
+            assert_eq!(got.len(), batch);
+            for (x, y) in xs.iter().zip(&got) {
+                let want = plan.run_inline(x, &k, Some(&survivors)).unwrap();
+                assert_eq!(
+                    y.data, want.data,
+                    "{}: batch {batch} survivors {survivors:?} diverged",
+                    layer.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_worker_engine_bit_identical_to_per_pair_im2col() {
+    // run_im2col fans input slabs out over the pool; the per-pair
+    // conv2d_im2col composition is its serial reference.
+    let mut rng = Rng::new(44);
+    let layer = ConvLayer::new("w", 3, 12, 10, 8, 3, 3, 1, 1);
+    let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap();
+    let k = Tensor4::random(8, 3, 3, 3, &mut rng);
+    let cf = plan.encode_filters(&k);
+    for batch in 1..=3usize {
+        let xs: Vec<Tensor3> =
+            (0..batch).map(|_| Tensor3::random(3, 12, 10, &mut rng)).collect();
+        let refs: Vec<&Tensor3> = xs.iter().collect();
+        let payloads = plan.make_payloads(plan.encode_input_batch(&refs), &cf);
+        for p in &payloads {
+            let fused = p.run_im2col();
+            let want = p.run_with(|a, b, c| conv2d_im2col(a, b, c));
+            assert_eq!(fused.blocks.len(), want.blocks.len());
+            for (i, (f, w)) in fused.blocks.iter().zip(&want.blocks).enumerate() {
+                assert_eq!(
+                    f.data, w.data,
+                    "worker {} block {i} diverged (batch {batch})",
+                    p.worker_id
+                );
+            }
+        }
+    }
+}
