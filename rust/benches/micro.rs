@@ -15,7 +15,7 @@
 use fcdcc::bench_harness::{bench, emit_json, fast_mode, report, BenchConfig};
 use fcdcc::coding::{self, Code, CrmeCode};
 use fcdcc::fcdcc::{FcdccPlan, WorkerResult};
-use fcdcc::linalg::{cond_2, lu, Mat};
+use fcdcc::linalg::{cond_2, gemm, kernel, lu, Mat};
 use fcdcc::metrics::Stats;
 use fcdcc::model::ConvLayer;
 use fcdcc::partition::merge_output_blocks;
@@ -24,23 +24,48 @@ use fcdcc::util::rng::Rng;
 
 /// One trajectory record: entries/second through the reference and the
 /// fused path, plus the speedup. The record carries the compute-pool
-/// size so trajectory entries from differently-sized runners stay
+/// size and the active dispatched kernel backend so trajectory entries
+/// from differently-sized (or differently-vectorized) runners stay
 /// interpretable; `FCDCC_BENCH_OUT` appends every record to the
 /// committed artifact.
 fn json_speed(op: &str, entries: usize, reference: &Stats, fused: &Stats) {
     let e = entries as f64;
     emit_json(&format!(
         "{{\"bench\":\"micro\",\"op\":\"{op}\",\"entries\":{entries},\
-         \"threads\":{},\"ref_secs\":{:.6e},\"fused_secs\":{:.6e},\
+         \"threads\":{},\"kernel\":\"{}\",\"ref_secs\":{:.6e},\"fused_secs\":{:.6e},\
          \"ref_entries_per_sec\":{:.4e},\"fused_entries_per_sec\":{:.4e},\
          \"speedup\":{:.3}}}",
         fcdcc::util::pool::global().threads(),
+        kernel::active().name(),
         reference.mean,
         fused.mean,
         e / reference.mean,
         e / fused.mean,
         reference.mean / fused.mean,
     ));
+}
+
+/// 256×256 matmul through the packed GEMM on an **explicit** backend —
+/// the scalar-vs-dispatched comparison for the SIMD trajectory record.
+fn matmul_kind(kind: kernel::Kind, a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows, b.cols);
+    gemm::gemm_into_kind(
+        kind,
+        a.rows,
+        b.cols,
+        a.cols,
+        &gemm::RowMajor {
+            data: &a.data,
+            ld: a.cols,
+        },
+        &gemm::RowMajor {
+            data: &b.data,
+            ld: b.cols,
+        },
+        &mut out.data,
+        b.cols,
+    );
+    out
 }
 
 fn main() {
@@ -175,6 +200,26 @@ fn main() {
     report("matmul 256 (ikj reference)", &mm_ref);
     report("matmul 256 (packed microkernel)", &mm_packed);
     json_speed("matmul_256", 256 * 256, &mm_ref, &mm_packed);
+
+    // Scalar vs runtime-dispatched backend on the *same* packed GEMM —
+    // the SIMD-dispatch acceptance record. Outputs are bit-identical
+    // (asserted below); only the microkernel's lane width differs.
+    let active = kernel::active();
+    let mm_scalar = bench(cfg, || matmul_kind(kernel::Kind::Scalar, &a, &b));
+    let mm_active = bench(cfg, || matmul_kind(active, &a, &b));
+    report("matmul 256 (scalar microkernel)", &mm_scalar);
+    report(
+        &format!("matmul 256 (dispatched: {})", active.name()),
+        &mm_active,
+    );
+    if active.bit_exact() {
+        assert_eq!(
+            matmul_kind(kernel::Kind::Scalar, &a, &b).data,
+            matmul_kind(active, &a, &b).data,
+            "dispatched backend diverged from scalar"
+        );
+    }
+    json_speed("matmul_256_simd", 256 * 256, &mm_scalar, &mm_active);
     report("LU factor 256", &bench(cfg, || lu::Lu::factor(&a).unwrap()));
     let lu256 = lu::Lu::factor(&a).unwrap();
     report("LU inverse 256 (reused RHS buffer)", &bench(cfg, || lu256.inverse()));

@@ -26,13 +26,15 @@ use std::time::Duration;
 fn json_line(model: &str, mode: &str, stats: &ServeStats) {
     emit_json(&format!(
         "{{\"bench\":\"serve_throughput\",\"straggler\":\"{}\",\"mode\":\"{}\",\
-         \"threads\":{},\"depth\":{},\"batch_window\":{},\"requests\":{},\"rps\":{:.3},\
+         \"threads\":{},\"kernel\":\"{}\",\"depth\":{},\"batch_window\":{},\
+         \"requests\":{},\"rps\":{:.3},\
          \"latency_p50_ms\":{:.3},\"latency_p95_ms\":{:.3},\"coded_jobs\":{},\
          \"mean_batch\":{:.3},\"inversions\":{},\"inverse_cache_hits\":{},\
          \"scratch_allocs\":{},\"scratch_hits\":{}}}",
         model,
         mode,
         fcdcc::util::pool::global().threads(),
+        stats.kernel,
         stats.max_in_flight,
         stats.batch_window,
         stats.requests,

@@ -19,6 +19,13 @@
 //! column-blockwise Kronecker (Khatri–Rao) matrix `G` (paper eq. (41)).
 //! Any subset of `delta = k_a·k_b / (ell_a·ell_b)` workers yields a square
 //! recovery matrix `E` (eq. (42)); decoding is `Y = Ỹ · E⁻¹` (eq. (45)).
+//!
+//! The coefficient application of every scheme (CRME, Vandermonde,
+//! Fahim–Cadambe all flow through the same tensor axpy) rides the
+//! runtime-dispatched SIMD backend (`linalg::kernel::axpy`), which is
+//! bit-identical to the scalar loop on the default path — so these
+//! reference combiners stay valid correctness oracles for the fused
+//! hot paths at every dispatch level.
 
 pub mod crme;
 pub mod fahim_cadambe;

@@ -116,6 +116,10 @@ pub struct ServeStats {
     /// staging-buffer heap allocations the decode hot path performed
     /// (steady-state serving should allocate only during warm-up).
     pub scratch: CacheStats,
+    /// The dispatched compute-kernel backend the run executed on
+    /// (`linalg::kernel::active()`): "scalar", "avx2", "neon", or the
+    /// opt-in "fused-ma".
+    pub kernel: &'static str,
     /// Final logits of every request, in request order.
     pub logits: Vec<Vec<f64>>,
 }
@@ -363,6 +367,7 @@ fn run_pipeline(
         },
         inverse_cache: plan.inverse_cache_stats(),
         scratch: plan.scratch_stats(),
+        kernel: crate::linalg::kernel::active().name(),
         logits,
     })
 }
@@ -468,6 +473,14 @@ mod tests {
         assert_eq!(stats.requests, 3);
         assert_eq!(stats.verified, 3);
         assert_eq!(stats.class_mismatches, 0);
+        // The run reports the dispatched backend it executed on (exact
+        // name-for-name matching lives in tests/simd_kernels.rs, which
+        // serializes its switches of the process-global kernel).
+        assert!(
+            ["scalar", "avx2", "neon", "fused-ma"].contains(&stats.kernel),
+            "unknown kernel tag {:?}",
+            stats.kernel
+        );
         assert!(stats.mean_logit_mse < 1e-16, "mse={:e}", stats.mean_logit_mse);
         assert!(stats.throughput_rps > 0.0);
         assert_eq!(stats.logits.len(), 3);

@@ -577,6 +577,9 @@ impl FcdccPlan {
 /// columns `[pad, pad + W)`. Per element, coefficients accumulate in
 /// ascending-α order with zero coefficients skipped — exactly the fold
 /// of the reference `coding::encode_inputs`, hence bit-identical output.
+/// The per-row combination runs on the runtime-dispatched SIMD axpy
+/// (`linalg::kernel::axpy`) — lane-parallel across the row, per element
+/// the same mul-then-add sequence, so dispatch cannot change the fold.
 #[allow(clippy::too_many_arguments)]
 fn fill_worker_slabs(
     worker: usize,
@@ -588,6 +591,10 @@ fn fill_worker_slabs(
     ell_a: usize,
     wp: usize,
 ) {
+    // Resolve the dispatched backend once per fill, not once per row —
+    // rows are only W doubles wide, so the per-row cost must stay at
+    // one (predictable) match.
+    let kind = crate::linalg::kernel::active();
     for x in xs {
         for j in 0..ell_a {
             let col = worker * ell_a + j;
@@ -610,9 +617,7 @@ fn fill_worker_slabs(
                         }
                         let src = x.row(c, ur);
                         let dst = &mut slab.row_mut(c, r)[pad..pad + x.w];
-                        for (d, &s) in dst.iter_mut().zip(src) {
-                            *d += coef * s;
-                        }
+                        crate::linalg::kernel::axpy_kind(kind, coef, src, dst);
                     }
                 }
             }

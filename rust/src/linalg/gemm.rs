@@ -1,7 +1,15 @@
-//! Packed, register-tiled f64 GEMM microkernel — the single dense
-//! contraction engine behind `Mat::matmul`, `Mat::gemm_t_rows_into`,
+//! Packed, register-tiled f64 GEMM — the single dense contraction
+//! engine behind `Mat::matmul`, `Mat::gemm_t_rows_into`,
 //! `tensor::im2col::conv2d_from_patch`, and the batched Dense layers of
-//! `model::Network`.
+//! `model::Network`. The MR×NR microkernel itself lives in a
+//! runtime-dispatched backend family (`linalg::kernel`): portable
+//! scalar, AVX2, and NEON implementations selected once per process
+//! (overridable with `--kernel` / `FCDCC_KERNEL`), all bit-identical
+//! on the default path. This module owns the packing orchestration and
+//! monomorphizes it over the chosen backend — one `Kind` match per
+//! GEMM call; inside the loops the only residual dispatch cost is the
+//! SIMD wrappers' defensive feature re-check (a cached atomic load per
+//! tile), which keeps the backend entry points sound as safe functions.
 //!
 //! Layout: A is packed once per call into `MR`-row strips stored
 //! k-major (for each k, the strip's MR values sit adjacent), and B is
@@ -14,11 +22,14 @@
 //! sub-block — so the kernel itself is branch-free.
 //!
 //! **Summation-order contract** (the repo's bit-identity rule, DESIGN.md
-//! §Deterministic parallel runtime): each output element is produced by
-//! exactly one accumulator that adds `a(i,k)·b(k,j)` for `k = 0…K-1` in
+//! §Deterministic parallel runtime and §SIMD dispatch): each output
+//! element is produced by exactly one accumulator (one SIMD lane, for
+//! the vector backends) that adds `a(i,k)·b(k,j)` for `k = 0…K-1` in
 //! ascending order, starting from 0.0 — precisely the scalar reference
 //! fold (`sum()` / repeated `+=`). No k-blocking, no pairwise
-//! regrouping, no FMA contraction. One deliberate difference from some
+//! regrouping, no FMA contraction on the default path (the opt-in
+//! `fused-ma` backend is the documented exception, validated by error
+//! bounds instead of `==`). One deliberate difference from some
 //! scalar references: products whose coefficient is an exact zero are
 //! *added* (as ±0.0) rather than skipped. For finite operands that
 //! cannot change any partial sum — it can at most flip the sign of an
@@ -26,14 +37,11 @@
 //! assertion in the suite, all of which compare via `f64::eq`) treats
 //! as equal.
 
-/// Microkernel tile height (rows of A per packed strip).
-pub const MR: usize = 4;
-/// Microkernel tile width (columns of B per packed strip).
-pub const NR: usize = 8;
-/// Column-panel width: B is packed and consumed `NC` columns at a time
-/// so the packed panel (`K·NC` doubles) stays cache-resident across all
-/// A strips. A multiple of `NR`.
-const NC: usize = 256;
+use super::kernel::{self, Backend, Kind};
+
+// Tile geometry: single home in `linalg::kernel`, re-exported here for
+// the existing `gemm::MR`-style call sites.
+pub use super::kernel::{MR, NC, NR};
 
 /// Read access to the left operand A (element `(i, k)` of an `M×K`
 /// matrix). Implementations are thin index adapters; packing
@@ -120,76 +128,20 @@ thread_local! {
     static PACKED_B: std::cell::Cell<Vec<f64>> = const { std::cell::Cell::new(Vec::new()) };
 }
 
-/// Pack all of A into MR-row strips, k-major, tail rows zero-padded:
-/// strip `s` holds rows `[s·MR, s·MR + MR)`; within a strip, the MR
-/// values of column k sit at `[k·MR, (k+1)·MR)`. Every element of the
-/// used prefix is written (padding lanes explicitly zeroed), so a
-/// reused scratch buffer never leaks stale data. Returns the strip
-/// count.
-fn pack_a_into<A: SrcA>(a: &A, m: usize, kk: usize, packed: &mut Vec<f64>) -> usize {
-    let strips = m.div_ceil(MR);
-    let need = strips * kk * MR;
-    if packed.len() < need {
-        packed.resize(need, 0.0);
-    }
-    for s in 0..strips {
-        let r0 = s * MR;
-        let mh = MR.min(m - r0);
-        let base = s * kk * MR;
-        for k in 0..kk {
-            let dst = base + k * MR;
-            for r in 0..mh {
-                packed[dst + r] = a.at(r0 + r, k);
-            }
-            for r in mh..MR {
-                packed[dst + r] = 0.0;
-            }
-        }
-    }
-    strips
-}
-
-/// Pack the B panel covering columns `[j0, j0 + nw)` into NR-column
-/// strips, k-major, tail columns zero-padded. `packed` must hold
-/// `nw.div_ceil(NR) · kk · NR` values.
-fn pack_b_panel<B: SrcB>(b: &B, kk: usize, j0: usize, nw: usize, packed: &mut [f64]) {
-    let strips = nw.div_ceil(NR);
-    for t in 0..strips {
-        let c0 = j0 + t * NR;
-        let cw = NR.min(j0 + nw - c0);
-        let base = t * kk * NR;
-        for k in 0..kk {
-            let dst = base + k * NR;
-            for l in 0..cw {
-                packed[dst + l] = b.at(k, c0 + l);
-            }
-            for l in cw..NR {
-                packed[dst + l] = 0.0;
-            }
-        }
-    }
-}
-
-/// The MR×NR microkernel: fold one packed A strip against one packed B
-/// strip, k ascending, one register accumulator per output element.
+/// Packed elements of one full `NC`-wide B panel (`NC/NR` strips of
+/// `kk·NR` values each) — the stride between consecutive panels of a
+/// fully packed B.
 #[inline]
-fn microkernel(a_strip: &[f64], b_strip: &[f64]) -> [[f64; NR]; MR] {
-    let mut acc = [[0.0f64; NR]; MR];
-    for (av, bv) in a_strip.chunks_exact(MR).zip(b_strip.chunks_exact(NR)) {
-        for (accr, &a) in acc.iter_mut().zip(av) {
-            for (o, &b) in accr.iter_mut().zip(bv) {
-                *o += a * b;
-            }
-        }
-    }
-    acc
+fn panel_stride(kk: usize) -> usize {
+    (NC / NR) * kk * NR
 }
 
 /// Contract every packed A strip against one packed B panel (columns
 /// `[j0, j0 + nw)`), accumulating into C — the shared inner driver of
-/// [`gemm_into`] and [`gemm_prepacked_into`].
+/// [`gemm_into`] and [`gemm_prepacked_into`], monomorphized over the
+/// dispatched backend.
 #[allow(clippy::too_many_arguments)]
-fn contract_panel(
+fn contract_panel<K: Backend>(
     packed_a: &[f64],
     a_strips: usize,
     m: usize,
@@ -209,7 +161,7 @@ fn contract_panel(
             let c0 = j0 + t * NR;
             let cw = NR.min(nw - t * NR);
             let b_strip = &panel[t * kk * NR..(t + 1) * kk * NR];
-            let acc = microkernel(a_strip, b_strip);
+            let acc = K::microkernel(a_strip, b_strip);
             for (r, accr) in acc.iter().enumerate().take(mh) {
                 let row0 = (r0 + r) * ldc + c0;
                 for (o, &v) in c[row0..row0 + cw].iter_mut().zip(&accr[..cw]) {
@@ -220,13 +172,8 @@ fn contract_panel(
     }
 }
 
-/// `C += A·B` for a row-major C with leading dimension `ldc` (callers
-/// on the bit-identity paths pass C zeroed, making this `C = A·B` with
-/// the exact scalar-fold result — see the module docs). Dimensions:
-/// A is `m×kk`, B is `kk×n`, C covers `m` rows of `ldc >= n` columns.
-/// Packing scratch comes from per-thread buffers, so steady-state calls
-/// are allocation-free.
-pub fn gemm_into<A: SrcA, B: SrcB>(
+/// The backend-generic body of [`gemm_into`].
+fn gemm_into_impl<K: Backend, A: SrcA, B: SrcB>(
     m: usize,
     n: usize,
     kk: usize,
@@ -247,7 +194,7 @@ pub fn gemm_into<A: SrcA, B: SrcB>(
         PACKED_B.with(|cb| {
             let mut pa = ca.take();
             let mut pb = cb.take();
-            let a_strips = pack_a_into(a, m, kk, &mut pa);
+            let a_strips = K::pack_a(a, m, kk, &mut pa);
             let max_panel = NC.min(n).div_ceil(NR) * kk * NR;
             if pb.len() < max_panel {
                 pb.resize(max_panel, 0.0);
@@ -256,8 +203,8 @@ pub fn gemm_into<A: SrcA, B: SrcB>(
             while j0 < n {
                 let nw = NC.min(n - j0);
                 let b_strips = nw.div_ceil(NR);
-                pack_b_panel(b, kk, j0, nw, &mut pb[..b_strips * kk * NR]);
-                contract_panel(
+                K::pack_b_panel(b, kk, j0, nw, &mut pb[..b_strips * kk * NR]);
+                contract_panel::<K>(
                     &pa,
                     a_strips,
                     m,
@@ -276,11 +223,61 @@ pub fn gemm_into<A: SrcA, B: SrcB>(
     });
 }
 
+/// `C += A·B` for a row-major C with leading dimension `ldc` (callers
+/// on the bit-identity paths pass C zeroed, making this `C = A·B` with
+/// the exact scalar-fold result — see the module docs). Dimensions:
+/// A is `m×kk`, B is `kk×n`, C covers `m` rows of `ldc >= n` columns.
+/// Packing scratch comes from per-thread buffers, so steady-state calls
+/// are allocation-free. Runs on the **active** dispatched backend
+/// (`kernel::active()`), which is bit-irrelevant on the default path.
+pub fn gemm_into<A: SrcA, B: SrcB>(
+    m: usize,
+    n: usize,
+    kk: usize,
+    a: &A,
+    b: &B,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    gemm_into_kind(kernel::active(), m, n, kk, a, b, c, ldc);
+}
+
+/// [`gemm_into`] on an **explicit** backend — the entry point the
+/// differential tests and the scalar-vs-dispatched bench records use.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into_kind<A: SrcA, B: SrcB>(
+    kind: Kind,
+    m: usize,
+    n: usize,
+    kk: usize,
+    a: &A,
+    b: &B,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    match kind {
+        Kind::Scalar => gemm_into_impl::<kernel::Scalar, A, B>(m, n, kk, a, b, c, ldc),
+        #[cfg(target_arch = "x86_64")]
+        Kind::Avx2 => gemm_into_impl::<kernel::Avx2, A, B>(m, n, kk, a, b, c, ldc),
+        #[cfg(target_arch = "aarch64")]
+        Kind::Neon => gemm_into_impl::<kernel::Neon, A, B>(m, n, kk, a, b, c, ldc),
+        Kind::FusedMa => gemm_into_impl::<kernel::FusedMa, A, B>(m, n, kk, a, b, c, ldc),
+        // A SIMD kind can never be *active* on a foreign architecture
+        // (the dispatcher only installs available kinds); scalar keeps
+        // the match total for direct callers.
+        #[cfg(not(target_arch = "x86_64"))]
+        Kind::Avx2 => gemm_into_impl::<kernel::Scalar, A, B>(m, n, kk, a, b, c, ldc),
+        #[cfg(not(target_arch = "aarch64"))]
+        Kind::Neon => gemm_into_impl::<kernel::Scalar, A, B>(m, n, kk, a, b, c, ldc),
+    }
+}
+
 /// A fully packed B operand (every column panel) borrowed from a
 /// packing buffer, reusable across many left-hand operands: pack once,
 /// contract many times — the worker-side im2col fan-out packs each
 /// patch matrix once for all ℓ_B filter slabs instead of once per slab
-/// pair.
+/// pair. Packing produces identical bytes on every backend (it is pure
+/// data movement), so a prepacked operand is backend-agnostic.
 pub struct PackedB<'a> {
     data: &'a [f64],
     kk: usize,
@@ -295,8 +292,7 @@ impl PackedB<'_> {
 
     /// The packed panel starting at column `j0` (width `nw`).
     fn panel(&self, j0: usize, nw: usize) -> &[f64] {
-        let panel_stride = (NC / NR) * self.kk * NR;
-        let start = (j0 / NC) * panel_stride;
+        let start = (j0 / NC) * panel_stride(self.kk);
         &self.data[start..start + nw.div_ceil(NR) * self.kk * NR]
     }
 }
@@ -310,16 +306,18 @@ pub fn pack_b_into<'a, B: SrcB>(
     n: usize,
     buf: &'a mut Vec<f64>,
 ) -> PackedB<'a> {
-    let panel_stride = (NC / NR) * kk * NR;
-    let total = (n / NC) * panel_stride + (n % NC).div_ceil(NR) * kk * NR;
+    let stride = panel_stride(kk);
+    let total = (n / NC) * stride + (n % NC).div_ceil(NR) * kk * NR;
     if buf.len() < total {
         buf.resize(total, 0.0);
     }
     let mut j0 = 0;
     while j0 < n {
         let nw = NC.min(n - j0);
-        let start = (j0 / NC) * panel_stride;
-        pack_b_panel(
+        let start = (j0 / NC) * stride;
+        // The shared scalar packing: every backend packs these exact
+        // bytes (see `kernel::Backend::pack_b_panel`).
+        kernel::Scalar::pack_b_panel(
             b,
             kk,
             j0,
@@ -356,10 +354,14 @@ pub fn with_packed_b<B: SrcB, R>(
     })
 }
 
-/// [`gemm_into`] against a pre-packed B: `C += A·B` with the identical
-/// per-element fold (the packed values are the same bytes the one-shot
-/// path packs), amortizing the B packing across calls.
-pub fn gemm_prepacked_into<A: SrcA>(m: usize, a: &A, pb: &PackedB<'_>, c: &mut [f64], ldc: usize) {
+/// The backend-generic body of [`gemm_prepacked_into`].
+fn gemm_prepacked_into_impl<K: Backend, A: SrcA>(
+    m: usize,
+    a: &A,
+    pb: &PackedB<'_>,
+    c: &mut [f64],
+    ldc: usize,
+) {
     let (n, kk) = (pb.n, pb.kk);
     if m == 0 || n == 0 || kk == 0 {
         return;
@@ -371,15 +373,46 @@ pub fn gemm_prepacked_into<A: SrcA>(m: usize, a: &A, pb: &PackedB<'_>, c: &mut [
     );
     PACKED_A.with(|ca| {
         let mut pa = ca.take();
-        let a_strips = pack_a_into(a, m, kk, &mut pa);
+        let a_strips = K::pack_a(a, m, kk, &mut pa);
         let mut j0 = 0;
         while j0 < n {
             let nw = NC.min(n - j0);
-            contract_panel(&pa, a_strips, m, kk, pb.panel(j0, nw), j0, nw, c, ldc);
+            contract_panel::<K>(&pa, a_strips, m, kk, pb.panel(j0, nw), j0, nw, c, ldc);
             j0 += nw;
         }
         ca.set(pa);
     });
+}
+
+/// [`gemm_into`] against a pre-packed B: `C += A·B` with the identical
+/// per-element fold (the packed values are the same bytes the one-shot
+/// path packs), amortizing the B packing across calls. Runs on the
+/// active dispatched backend.
+pub fn gemm_prepacked_into<A: SrcA>(m: usize, a: &A, pb: &PackedB<'_>, c: &mut [f64], ldc: usize) {
+    gemm_prepacked_into_kind(kernel::active(), m, a, pb, c, ldc);
+}
+
+/// [`gemm_prepacked_into`] on an explicit backend (differential tests).
+pub fn gemm_prepacked_into_kind<A: SrcA>(
+    kind: Kind,
+    m: usize,
+    a: &A,
+    pb: &PackedB<'_>,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    match kind {
+        Kind::Scalar => gemm_prepacked_into_impl::<kernel::Scalar, A>(m, a, pb, c, ldc),
+        #[cfg(target_arch = "x86_64")]
+        Kind::Avx2 => gemm_prepacked_into_impl::<kernel::Avx2, A>(m, a, pb, c, ldc),
+        #[cfg(target_arch = "aarch64")]
+        Kind::Neon => gemm_prepacked_into_impl::<kernel::Neon, A>(m, a, pb, c, ldc),
+        Kind::FusedMa => gemm_prepacked_into_impl::<kernel::FusedMa, A>(m, a, pb, c, ldc),
+        #[cfg(not(target_arch = "x86_64"))]
+        Kind::Avx2 => gemm_prepacked_into_impl::<kernel::Scalar, A>(m, a, pb, c, ldc),
+        #[cfg(not(target_arch = "aarch64"))]
+        Kind::Neon => gemm_prepacked_into_impl::<kernel::Scalar, A>(m, a, pb, c, ldc),
+    }
 }
 
 #[cfg(test)]
@@ -403,26 +436,27 @@ mod tests {
         out
     }
 
+    // Remainder rows/cols around MR=4 / NR=8, panel edges around
+    // NC=256, and degenerate dims.
+    const SHAPES: [(usize, usize, usize); 12] = [
+        (0, 0, 0),
+        (0, 5, 3),
+        (4, 0, 3),
+        (4, 5, 0),
+        (1, 1, 1),
+        (3, 7, 2),
+        (4, 8, 16),
+        (5, 9, 7),
+        (13, 17, 11),
+        (33, 65, 40),
+        (8, 300, 5),
+        (2, 257, 1),
+    ];
+
     #[test]
     fn matches_scalar_fold_bitwise_across_shapes() {
         let mut rng = Rng::new(17);
-        // Remainder rows/cols around MR=4 / NR=8, panel edges around
-        // NC=256, and degenerate dims.
-        let shapes = [
-            (0usize, 0usize, 0usize),
-            (0, 5, 3),
-            (4, 0, 3),
-            (4, 5, 0),
-            (1, 1, 1),
-            (3, 7, 2),
-            (4, 8, 16),
-            (5, 9, 7),
-            (13, 17, 11),
-            (33, 65, 40),
-            (8, 300, 5),
-            (2, 257, 1),
-        ];
-        for (m, n, kk) in shapes {
+        for (m, n, kk) in SHAPES {
             let adata = rng.fill_uniform(m * kk, -1.0, 1.0);
             let bdata = rng.fill_uniform(kk * n, -1.0, 1.0);
             let a = RowMajor {
@@ -437,6 +471,62 @@ mod tests {
             gemm_into(m, n, kk, &a, &b, &mut got, n.max(1));
             let want = naive(m, n, kk, &a, &b);
             assert_eq!(got, want, "shape {m}x{kk} · {kk}x{n}");
+        }
+    }
+
+    #[test]
+    fn every_available_backend_matches_scalar_bitwise() {
+        // The SIMD dispatch acceptance bar at the kernel level: every
+        // runnable default-path backend reproduces the scalar fold
+        // exactly, over remainder and degenerate shapes.
+        let mut rng = Rng::new(20);
+        for (m, n, kk) in SHAPES {
+            let adata = rng.fill_uniform(m * kk, -1.0, 1.0);
+            let bdata = rng.fill_uniform(kk * n, -1.0, 1.0);
+            let a = RowMajor {
+                data: &adata,
+                ld: kk,
+            };
+            let b = RowMajor {
+                data: &bdata,
+                ld: n.max(1),
+            };
+            let mut want = vec![0.0; m * n];
+            gemm_into_kind(Kind::Scalar, m, n, kk, &a, &b, &mut want, n.max(1));
+            for kind in kernel::available() {
+                let mut got = vec![0.0; m * n];
+                gemm_into_kind(kind, m, n, kk, &a, &b, &mut got, n.max(1));
+                assert_eq!(got, want, "kind {kind:?}, shape {m}x{kk} · {kk}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_ma_backend_within_relative_error() {
+        // The opt-in FMA backend is validated by error bounds, not ==:
+        // contracting mul+add into one rounding perturbs each partial
+        // sum by at most one ulp of the product.
+        let mut rng = Rng::new(21);
+        let (m, n, kk) = (13, 30, 64);
+        let adata = rng.fill_uniform(m * kk, -1.0, 1.0);
+        let bdata = rng.fill_uniform(kk * n, -1.0, 1.0);
+        let a = RowMajor {
+            data: &adata,
+            ld: kk,
+        };
+        let b = RowMajor {
+            data: &bdata,
+            ld: n,
+        };
+        let mut want = vec![0.0; m * n];
+        gemm_into_kind(Kind::Scalar, m, n, kk, &a, &b, &mut want, n);
+        let mut got = vec![0.0; m * n];
+        gemm_into_kind(Kind::FusedMa, m, n, kk, &a, &b, &mut got, n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g - w).abs() <= 1e-13 * (w.abs() + 1.0),
+                "fused-ma drifted: {g} vs {w}"
+            );
         }
     }
 
@@ -506,6 +596,16 @@ mod tests {
                 out
             });
             assert_eq!(got, want, "shape {m}x{kk} · {kk}x{n}");
+            // And per explicit backend: the prepacked bytes are
+            // backend-agnostic, the fold stays bit-identical.
+            for kind in kernel::available() {
+                let got = with_packed_b(&b, kk, n, |pb| {
+                    let mut out = vec![0.0; m * n];
+                    gemm_prepacked_into_kind(kind, m, &a, pb, &mut out, n);
+                    out
+                });
+                assert_eq!(got, want, "kind {kind:?}, shape {m}x{kk} · {kk}x{n}");
+            }
         }
     }
 }

@@ -1,0 +1,566 @@
+//! Runtime-dispatched SIMD backend family for the hot-path kernels: the
+//! packed GEMM microkernel (`linalg::gemm`) and the `axpy`
+//! row-combination primitive shared by the fused batch encoder
+//! (`FcdccPlan::encode_input_batch`) and the CRME/Vandermonde
+//! coefficient application in `coding/` (`Tensor3::axpy` /
+//! `Tensor4::axpy`).
+//!
+//! A [`Backend`] bundles the four kernel primitives; three default-path
+//! implementations exist — portable [`Scalar`], [`Avx2`]
+//! (`std::arch::x86_64`, 4 × f64 lanes), and [`Neon`]
+//! (`std::arch::aarch64`, 2 × f64 lanes) — selected once per process by
+//! runtime feature detection ([`auto_kind`]) and overridable with the
+//! `--kernel` CLI flag / `FCDCC_KERNEL={auto,scalar,avx2,neon,fused-ma}`
+//! env var. Requests for a backend this machine cannot run degrade to
+//! the auto choice with a warning instead of failing ([`resolve`]).
+//!
+//! **Bit-identity by construction** (DESIGN.md §SIMD dispatch): the
+//! SIMD backends vectorize across the `NR` output-column lanes of the
+//! microkernel (and across the elements of `axpy`), so every output
+//! element keeps its own accumulator lane folding `a·b` products in
+//! k-ascending order with a separate multiply rounding and add rounding
+//! per step — exactly the scalar sequence, hence `==`-identical
+//! results. No FMA contraction, no horizontal reductions, no
+//! re-association anywhere on the default path. Packing is shared
+//! scalar data movement, so every backend consumes identical packed
+//! bytes. The one exception is the opt-in [`FusedMa`] backend, which
+//! contracts each multiply-add into a single `mul_add` rounding: it is
+//! *not* on the bit-identity contract ([`Kind::bit_exact`] is false)
+//! and is validated by relative-error bounds instead of `==`.
+
+use super::gemm::{SrcA, SrcB};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Microkernel tile height (rows of A per packed strip). Single home of
+/// the tile geometry; `linalg::gemm` re-exports these.
+pub const MR: usize = 4;
+/// Microkernel tile width (columns of B per packed strip) — also the
+/// SIMD lane axis: backends vectorize across these NR output columns.
+pub const NR: usize = 8;
+/// Column-panel width: B is packed and consumed `NC` columns at a time
+/// so the packed panel (`K·NC` doubles) stays cache-resident across all
+/// A strips. A multiple of `NR`.
+pub const NC: usize = 256;
+
+/// One kernel backend: the microkernel + packing + axpy primitives the
+/// hot paths monomorphize over. Implementations are zero-sized types
+/// dispatched through [`Kind`] (one match per top-level call, so the
+/// inner loops stay fully monomorphized).
+pub trait Backend {
+    /// Name used in logs, bench JSON tags, and `ServeStats`.
+    const NAME: &'static str;
+
+    /// The MR×NR microkernel: fold one packed A strip against one
+    /// packed B strip, k ascending, one accumulator per output element
+    /// (a lane, for the SIMD backends), starting from 0.0.
+    fn microkernel(a_strip: &[f64], b_strip: &[f64]) -> [[f64; NR]; MR];
+
+    /// `dst += coef·src` (equal lengths). Per element this must be the
+    /// scalar two-rounding sequence (multiply, then add) on the
+    /// default path; [`FusedMa`] is the documented exception.
+    fn axpy(coef: f64, src: &[f64], dst: &mut [f64]);
+
+    /// Pack all of A into MR-row strips, k-major, tail rows
+    /// zero-padded: strip `s` holds rows `[s·MR, s·MR + MR)`; within a
+    /// strip, the MR values of column k sit at `[k·MR, (k+1)·MR)`.
+    /// Every element of the used prefix is written (padding lanes
+    /// explicitly zeroed), so a reused scratch buffer never leaks stale
+    /// data. Returns the strip count.
+    ///
+    /// Default: shared scalar packing. Packing is pure data movement —
+    /// every backend packs identical bytes (part of the bit-identity
+    /// argument), and the generic `SrcA` adapters defeat vector loads
+    /// anyway; a backend would only override this for a concrete
+    /// layout it can bulk-load.
+    fn pack_a<A: SrcA>(a: &A, m: usize, kk: usize, packed: &mut Vec<f64>) -> usize {
+        let strips = m.div_ceil(MR);
+        let need = strips * kk * MR;
+        if packed.len() < need {
+            packed.resize(need, 0.0);
+        }
+        for s in 0..strips {
+            let r0 = s * MR;
+            let mh = MR.min(m - r0);
+            let base = s * kk * MR;
+            for k in 0..kk {
+                let dst = base + k * MR;
+                for r in 0..mh {
+                    packed[dst + r] = a.at(r0 + r, k);
+                }
+                for r in mh..MR {
+                    packed[dst + r] = 0.0;
+                }
+            }
+        }
+        strips
+    }
+
+    /// Pack the B panel covering columns `[j0, j0 + nw)` into NR-column
+    /// strips, k-major, tail columns zero-padded. `packed` must hold
+    /// `nw.div_ceil(NR) · kk · NR` values. Default: shared scalar
+    /// packing (see [`Backend::pack_a`]).
+    fn pack_b_panel<B: SrcB>(b: &B, kk: usize, j0: usize, nw: usize, packed: &mut [f64]) {
+        let strips = nw.div_ceil(NR);
+        for t in 0..strips {
+            let c0 = j0 + t * NR;
+            let cw = NR.min(j0 + nw - c0);
+            let base = t * kk * NR;
+            for k in 0..kk {
+                let dst = base + k * NR;
+                for l in 0..cw {
+                    packed[dst + l] = b.at(k, c0 + l);
+                }
+                for l in cw..NR {
+                    packed[dst + l] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Portable scalar backend — the reference fold every other backend
+/// must reproduce (bit for bit on the default path).
+pub struct Scalar;
+
+impl Backend for Scalar {
+    const NAME: &'static str = "scalar";
+
+    #[inline]
+    fn microkernel(a_strip: &[f64], b_strip: &[f64]) -> [[f64; NR]; MR] {
+        let mut acc = [[0.0f64; NR]; MR];
+        for (av, bv) in a_strip.chunks_exact(MR).zip(b_strip.chunks_exact(NR)) {
+            for (accr, &a) in acc.iter_mut().zip(av) {
+                for (o, &b) in accr.iter_mut().zip(bv) {
+                    *o += a * b;
+                }
+            }
+        }
+        acc
+    }
+
+    #[inline]
+    fn axpy(coef: f64, src: &[f64], dst: &mut [f64]) {
+        debug_assert_eq!(src.len(), dst.len());
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += coef * s;
+        }
+    }
+}
+
+/// AVX2 backend (x86_64): 4 × f64 lanes across the NR output columns.
+/// The safe wrappers re-check feature availability (a cached atomic
+/// test) and fall back to [`Scalar`] — same bits either way — so they
+/// are sound even if called outside the dispatcher.
+#[cfg(target_arch = "x86_64")]
+pub struct Avx2;
+
+#[cfg(target_arch = "x86_64")]
+impl Backend for Avx2 {
+    const NAME: &'static str = "avx2";
+
+    #[inline]
+    fn microkernel(a_strip: &[f64], b_strip: &[f64]) -> [[f64; NR]; MR] {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 presence verified just above.
+            unsafe { super::simd_avx2::microkernel(a_strip, b_strip) }
+        } else {
+            Scalar::microkernel(a_strip, b_strip)
+        }
+    }
+
+    #[inline]
+    fn axpy(coef: f64, src: &[f64], dst: &mut [f64]) {
+        debug_assert_eq!(src.len(), dst.len());
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 presence verified just above.
+            unsafe { super::simd_avx2::axpy(coef, src, dst) }
+        } else {
+            Scalar::axpy(coef, src, dst);
+        }
+    }
+}
+
+/// NEON backend (aarch64): 2 × f64 lanes across the NR output columns.
+/// NEON is baseline on every aarch64 target this crate builds for; the
+/// safe wrappers still re-check and fall back to [`Scalar`].
+#[cfg(target_arch = "aarch64")]
+pub struct Neon;
+
+#[cfg(target_arch = "aarch64")]
+impl Backend for Neon {
+    const NAME: &'static str = "neon";
+
+    #[inline]
+    fn microkernel(a_strip: &[f64], b_strip: &[f64]) -> [[f64; NR]; MR] {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            // SAFETY: NEON presence verified just above.
+            unsafe { super::simd_neon::microkernel(a_strip, b_strip) }
+        } else {
+            Scalar::microkernel(a_strip, b_strip)
+        }
+    }
+
+    #[inline]
+    fn axpy(coef: f64, src: &[f64], dst: &mut [f64]) {
+        debug_assert_eq!(src.len(), dst.len());
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            // SAFETY: NEON presence verified just above.
+            unsafe { super::simd_neon::axpy(coef, src, dst) }
+        } else {
+            Scalar::axpy(coef, src, dst);
+        }
+    }
+}
+
+/// Opt-in fused multiply-add backend: contracts each `acc + a·b` step
+/// into one `mul_add` rounding. **Not** on the bit-identity contract —
+/// results differ from the scalar fold by at most the dropped
+/// intermediate roundings and are validated by relative-error bounds
+/// (see `tests/simd_kernels.rs`). Never auto-selected; only active via
+/// `--kernel fused-ma` / `FCDCC_KERNEL=fused-ma`. Portable: on targets
+/// without hardware FMA, `mul_add` falls back to (slow but correct)
+/// software fma — acceptable for an explicit opt-in.
+pub struct FusedMa;
+
+impl Backend for FusedMa {
+    const NAME: &'static str = "fused-ma";
+
+    #[inline]
+    fn microkernel(a_strip: &[f64], b_strip: &[f64]) -> [[f64; NR]; MR] {
+        let mut acc = [[0.0f64; NR]; MR];
+        for (av, bv) in a_strip.chunks_exact(MR).zip(b_strip.chunks_exact(NR)) {
+            for (accr, &a) in acc.iter_mut().zip(av) {
+                for (o, &b) in accr.iter_mut().zip(bv) {
+                    *o = a.mul_add(b, *o);
+                }
+            }
+        }
+        acc
+    }
+
+    #[inline]
+    fn axpy(coef: f64, src: &[f64], dst: &mut [f64]) {
+        debug_assert_eq!(src.len(), dst.len());
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = coef.mul_add(s, *d);
+        }
+    }
+}
+
+/// The dispatchable backend set. Variants exist on every architecture
+/// (so CLI/env parsing is portable); [`Kind::is_available`] says
+/// whether this machine can actually run one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Kind {
+    Scalar = 0,
+    Avx2 = 1,
+    Neon = 2,
+    FusedMa = 3,
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_available() -> bool {
+    false
+}
+
+impl Kind {
+    /// The name used by `--kernel` / `FCDCC_KERNEL`, logs, and bench
+    /// JSON tags.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Scalar => Scalar::NAME,
+            Kind::Avx2 => "avx2",
+            Kind::Neon => "neon",
+            Kind::FusedMa => FusedMa::NAME,
+        }
+    }
+
+    /// Parse a `--kernel` / `FCDCC_KERNEL` value (`"auto"` is handled
+    /// by [`resolve`], not here).
+    pub fn parse(name: &str) -> Option<Kind> {
+        match name {
+            "scalar" => Some(Kind::Scalar),
+            "avx2" => Some(Kind::Avx2),
+            "neon" => Some(Kind::Neon),
+            "fused-ma" | "fused_ma" | "fma" => Some(Kind::FusedMa),
+            _ => None,
+        }
+    }
+
+    /// Can this machine run the backend? (`Scalar` and `FusedMa` are
+    /// always runnable; SIMD kinds need the right architecture and CPU
+    /// feature.)
+    pub fn is_available(self) -> bool {
+        match self {
+            Kind::Scalar | Kind::FusedMa => true,
+            Kind::Avx2 => avx2_available(),
+            Kind::Neon => neon_available(),
+        }
+    }
+
+    /// Whether the backend is on the bit-identity contract (`==`
+    /// against the scalar fold). Only [`FusedMa`] is not: it is
+    /// validated by relative-error bounds instead.
+    pub fn bit_exact(self) -> bool {
+        !matches!(self, Kind::FusedMa)
+    }
+
+    fn from_u8(v: u8) -> Option<Kind> {
+        match v {
+            0 => Some(Kind::Scalar),
+            1 => Some(Kind::Avx2),
+            2 => Some(Kind::Neon),
+            3 => Some(Kind::FusedMa),
+            _ => None,
+        }
+    }
+}
+
+/// Every **default-path** (bit-exact) kind available on this machine,
+/// scalar first — the set the differential tests iterate and assert
+/// `==` over. [`FusedMa`] is deliberately excluded: it is opt-in and
+/// validated by error bounds, not bit identity.
+pub fn available() -> Vec<Kind> {
+    let mut kinds = vec![Kind::Scalar];
+    for k in [Kind::Avx2, Kind::Neon] {
+        if k.is_available() {
+            kinds.push(k);
+        }
+    }
+    kinds
+}
+
+/// The backend runtime feature detection picks on this machine: the
+/// widest available SIMD kind, else scalar. Never [`FusedMa`] — FMA
+/// contraction is strictly opt-in.
+pub fn auto_kind() -> Kind {
+    if avx2_available() {
+        Kind::Avx2
+    } else if neon_available() {
+        Kind::Neon
+    } else {
+        Kind::Scalar
+    }
+}
+
+/// Resolve a requested kernel name to a runnable [`Kind`], with
+/// graceful fallback: `None` / `"auto"` run detection; an unknown name
+/// or an unavailable target degrades to [`auto_kind`] and returns a
+/// warning message for the caller to log (requests never fail hard —
+/// a mis-set `FCDCC_KERNEL` must not take serving down).
+pub fn resolve(request: Option<&str>) -> (Kind, Option<String>) {
+    match request.map(str::trim).filter(|s| !s.is_empty()) {
+        None | Some("auto") => (auto_kind(), None),
+        Some(name) => match Kind::parse(name) {
+            Some(kind) if kind.is_available() => (kind, None),
+            Some(kind) => {
+                let auto = auto_kind();
+                (
+                    auto,
+                    Some(format!(
+                        "kernel {:?} is unavailable on this machine; falling back to {:?}",
+                        kind.name(),
+                        auto.name()
+                    )),
+                )
+            }
+            None => {
+                let auto = auto_kind();
+                (
+                    auto,
+                    Some(format!(
+                        "unknown kernel {name:?} (expected auto|scalar|avx2|neon|fused-ma); \
+                         using {:?}",
+                        auto.name()
+                    )),
+                )
+            }
+        },
+    }
+}
+
+const KIND_UNSET: u8 = u8::MAX;
+
+/// The process-wide dispatch target, initialized lazily from
+/// `FCDCC_KERNEL` (default `auto`) on first use.
+static ACTIVE: AtomicU8 = AtomicU8::new(KIND_UNSET);
+
+/// The active dispatch target. First call resolves `FCDCC_KERNEL`
+/// (logging the fallback warning, once, if the request was
+/// unavailable); later calls are one relaxed atomic load.
+pub fn active() -> Kind {
+    match Kind::from_u8(ACTIVE.load(Ordering::Relaxed)) {
+        Some(kind) => kind,
+        None => init_from_env(),
+    }
+}
+
+#[cold]
+fn init_from_env() -> Kind {
+    let (kind, warning) = resolve(std::env::var("FCDCC_KERNEL").ok().as_deref());
+    if ACTIVE
+        .compare_exchange(KIND_UNSET, kind as u8, Ordering::Relaxed, Ordering::Relaxed)
+        .is_ok()
+    {
+        if let Some(w) = warning {
+            eprintln!("fcdcc: {w}");
+        }
+        kind
+    } else {
+        // Lost the init race to another thread (or to set_active).
+        Kind::from_u8(ACTIVE.load(Ordering::Relaxed)).unwrap_or(Kind::Scalar)
+    }
+}
+
+/// Install `kind` as the process-wide dispatch target (the `--kernel`
+/// CLI path, and the cross-backend tests/benches), returning the
+/// previously active kind so callers can restore it. Panics if `kind`
+/// is unavailable here — use [`resolve`] for the graceful-fallback
+/// path. Safe to switch mid-process: every bit-exact backend produces
+/// identical results, so in-flight work cannot observe the swap (the
+/// non-bit-exact [`FusedMa`] should only be installed process-wide by
+/// an explicit operator opt-in, never mid-run).
+pub fn set_active(kind: Kind) -> Kind {
+    assert!(
+        kind.is_available(),
+        "kernel {:?} is not available on this machine",
+        kind.name()
+    );
+    match Kind::from_u8(ACTIVE.swap(kind as u8, Ordering::Relaxed)) {
+        Some(prev) => prev,
+        // First set of the process: report what lazy init would have
+        // picked, so restoring with this value is meaningful.
+        None => resolve(std::env::var("FCDCC_KERNEL").ok().as_deref()).0,
+    }
+}
+
+/// `dst += coef·src` on the **active** backend — the shared
+/// row-combination primitive behind `Tensor3::axpy` / `Tensor4::axpy`
+/// (the CRME/Vandermonde coefficient application in `coding/`) and the
+/// fused batch encoder's per-row fill. Per element this is the scalar
+/// `d += coef * s` two-rounding sequence on every default-path
+/// backend, so dispatch never changes results.
+#[inline]
+pub fn axpy(coef: f64, src: &[f64], dst: &mut [f64]) {
+    axpy_kind(active(), coef, src, dst);
+}
+
+/// [`axpy`] on an explicit backend (differential tests and benches).
+pub fn axpy_kind(kind: Kind, coef: f64, src: &[f64], dst: &mut [f64]) {
+    assert_eq!(src.len(), dst.len(), "axpy: length mismatch");
+    match kind {
+        Kind::Scalar => Scalar::axpy(coef, src, dst),
+        #[cfg(target_arch = "x86_64")]
+        Kind::Avx2 => Avx2::axpy(coef, src, dst),
+        #[cfg(target_arch = "aarch64")]
+        Kind::Neon => Neon::axpy(coef, src, dst),
+        Kind::FusedMa => FusedMa::axpy(coef, src, dst),
+        // A SIMD kind can never be *active* on a foreign architecture
+        // (the dispatcher only installs available kinds); scalar keeps
+        // the match total for direct callers.
+        #[cfg(not(target_arch = "x86_64"))]
+        Kind::Avx2 => Scalar::axpy(coef, src, dst),
+        #[cfg(not(target_arch = "aarch64"))]
+        Kind::Neon => Scalar::axpy(coef, src, dst),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn names_parse_round_trip() {
+        for kind in [Kind::Scalar, Kind::Avx2, Kind::Neon, Kind::FusedMa] {
+            assert_eq!(Kind::parse(kind.name()), Some(kind), "{kind:?}");
+        }
+        assert_eq!(Kind::parse("fma"), Some(Kind::FusedMa));
+        assert_eq!(Kind::parse("sse9"), None);
+    }
+
+    #[test]
+    fn auto_and_available_are_runnable_and_bit_exact() {
+        assert!(auto_kind().is_available());
+        assert!(auto_kind().bit_exact(), "FMA must never be auto-selected");
+        let kinds = available();
+        assert_eq!(kinds[0], Kind::Scalar);
+        for k in kinds {
+            assert!(k.is_available() && k.bit_exact(), "{k:?}");
+        }
+    }
+
+    #[test]
+    fn resolve_falls_back_gracefully() {
+        assert_eq!(resolve(None), (auto_kind(), None));
+        assert_eq!(resolve(Some("auto")), (auto_kind(), None));
+        assert_eq!(resolve(Some("scalar")), (Kind::Scalar, None));
+        // An unknown name warns and degrades to auto instead of failing.
+        let (kind, warn) = resolve(Some("quantum"));
+        assert_eq!(kind, auto_kind());
+        assert!(warn.is_some());
+        // At most one of avx2/neon exists on any one machine, so the
+        // other must fall back with a warning.
+        let foreign = if Kind::Avx2.is_available() { "neon" } else { "avx2" };
+        let (kind, warn) = resolve(Some(foreign));
+        assert!(kind.is_available());
+        assert!(warn.is_some(), "unavailable {foreign} must warn");
+    }
+
+    #[test]
+    fn set_active_round_trips() {
+        let prev = set_active(Kind::Scalar);
+        assert!(prev.is_available());
+        assert_eq!(active(), Kind::Scalar);
+        set_active(prev);
+        assert_eq!(active(), prev);
+    }
+
+    #[test]
+    fn axpy_backends_match_scalar_bitwise() {
+        let mut rng = Rng::new(23);
+        // Lengths around the 4- and 2-lane vector widths, incl. 0.
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 31, 100] {
+            let src = rng.fill_uniform(len, -1.0, 1.0);
+            let base = rng.fill_uniform(len, -1.0, 1.0);
+            let coef = rng.uniform(-2.0, 2.0);
+            let mut want = base.clone();
+            axpy_kind(Kind::Scalar, coef, &src, &mut want);
+            for kind in available() {
+                let mut got = base.clone();
+                axpy_kind(kind, coef, &src, &mut got);
+                assert_eq!(got, want, "kind {kind:?} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_ma_axpy_within_relative_error() {
+        let mut rng = Rng::new(24);
+        let src = rng.fill_uniform(257, -1.0, 1.0);
+        let base = rng.fill_uniform(257, -1.0, 1.0);
+        let mut want = base.clone();
+        axpy_kind(Kind::Scalar, 0.7, &src, &mut want);
+        let mut got = base.clone();
+        axpy_kind(Kind::FusedMa, 0.7, &src, &mut got);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-14 * (w.abs() + 1.0), "{g} vs {w}");
+        }
+    }
+}

@@ -1,13 +1,20 @@
 //! Dense f64 linear algebra substrate: the recovery-matrix machinery of
 //! the coding layer (inversion, condition numbers, Kronecker products).
 //! No external crates are available; LU and Jacobi-SVD are implemented
-//! from the standard algorithms.
+//! from the standard algorithms. The hot-path contraction primitives
+//! (packed GEMM microkernel, axpy) live in a runtime-dispatched SIMD
+//! backend family: see [`kernel`].
 
 pub mod cond;
 pub mod gemm;
+pub mod kernel;
 pub mod kron;
 pub mod lu;
 pub mod mat;
+#[cfg(target_arch = "x86_64")]
+mod simd_avx2;
+#[cfg(target_arch = "aarch64")]
+mod simd_neon;
 pub mod svd;
 
 pub use cond::{cond_1_estimate, cond_2};

@@ -1,0 +1,82 @@
+//! AVX2 (`std::arch::x86_64`, 4 × f64 lanes) implementations of the
+//! kernel primitives, wrapped by `kernel::Avx2`.
+//!
+//! Bit-identity argument (DESIGN.md §SIMD dispatch): vectorization is
+//! across the `NR` output columns of the microkernel and across the
+//! elements of `axpy` — each output element owns one accumulator lane
+//! folding products in k-ascending order, with a separate
+//! `_mm256_mul_pd` rounding and `_mm256_add_pd` rounding per step.
+//! That is exactly the scalar per-element sequence; there is no FMA,
+//! no horizontal reduction, and no re-association, so results equal
+//! the scalar backend's bit for bit.
+
+use super::kernel::{MR, NR};
+use std::arch::x86_64::*;
+
+// The lane layout below (4 rows × two 4-lane B vectors) is written for
+// exactly this tile geometry; retuning MR/NR in `kernel.rs` must come
+// with a matching rewrite here, not a silent recompile.
+const _: () = assert!(MR == 4 && NR == 8);
+
+/// The MR×NR microkernel over packed strips (see `Backend::microkernel`).
+///
+/// # Safety
+/// Requires AVX2 support; the `kernel::Avx2` wrapper verifies it with
+/// `is_x86_feature_detected!` before every call.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn microkernel(a_strip: &[f64], b_strip: &[f64]) -> [[f64; NR]; MR] {
+    // Clamp to the shorter operand — the scalar kernel's
+    // `chunks_exact().zip()` semantics — so no slice-length combination
+    // can drive the raw-pointer reads out of bounds (packed strips from
+    // the GEMM driver always match exactly).
+    let kk = (a_strip.len() / MR).min(b_strip.len() / NR);
+    let ap = a_strip.as_ptr();
+    let bp = b_strip.as_ptr();
+    // The accumulator block: 4 rows × two 4-lane vectors = 8 ymm
+    // registers; plus two B vectors and one broadcast per step this
+    // fits x86-64's 16 ymm registers without spills.
+    let mut acc = [[_mm256_setzero_pd(); 2]; MR];
+    for k in 0..kk {
+        let b0 = _mm256_loadu_pd(bp.add(k * NR));
+        let b1 = _mm256_loadu_pd(bp.add(k * NR + 4));
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = _mm256_set1_pd(*ap.add(k * MR + r));
+            // mul then add — two roundings, the scalar sequence.
+            accr[0] = _mm256_add_pd(accr[0], _mm256_mul_pd(av, b0));
+            accr[1] = _mm256_add_pd(accr[1], _mm256_mul_pd(av, b1));
+        }
+    }
+    let mut out = [[0.0f64; NR]; MR];
+    for (o, accr) in out.iter_mut().zip(&acc) {
+        _mm256_storeu_pd(o.as_mut_ptr(), accr[0]);
+        _mm256_storeu_pd(o.as_mut_ptr().add(4), accr[1]);
+    }
+    out
+}
+
+/// `dst += coef·src`, 4 lanes at a time with a scalar tail.
+///
+/// # Safety
+/// Requires AVX2 support; the `kernel::Avx2` wrapper verifies it with
+/// `is_x86_feature_detected!` before every call.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn axpy(coef: f64, src: &[f64], dst: &mut [f64]) {
+    // Clamp to the shorter slice (the scalar `zip` semantics) so the
+    // raw-pointer loop stays in bounds for any caller; the dispatcher
+    // asserts equal lengths up front.
+    let n = dst.len().min(src.len());
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let c = _mm256_set1_pd(coef);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let d = _mm256_loadu_pd(dp.add(i));
+        let s = _mm256_loadu_pd(sp.add(i));
+        _mm256_storeu_pd(dp.add(i), _mm256_add_pd(d, _mm256_mul_pd(c, s)));
+        i += 4;
+    }
+    while i < n {
+        *dp.add(i) += coef * *sp.add(i);
+        i += 1;
+    }
+}

@@ -1,0 +1,89 @@
+//! NEON (`std::arch::aarch64`, 2 × f64 lanes) implementations of the
+//! kernel primitives, wrapped by `kernel::Neon`.
+//!
+//! Bit-identity argument (DESIGN.md §SIMD dispatch): vectorization is
+//! across the `NR` output columns of the microkernel and across the
+//! elements of `axpy` — each output element owns one accumulator lane
+//! folding products in k-ascending order, with a separate `vmulq_f64`
+//! rounding and `vaddq_f64` rounding per step. That is exactly the
+//! scalar per-element sequence; there is no `vfmaq` contraction, no
+//! horizontal reduction, and no re-association, so results equal the
+//! scalar backend's bit for bit.
+
+use super::kernel::{MR, NR};
+use std::arch::aarch64::*;
+
+// The lane layout below (4 rows × four 2-lane B vectors) is written for
+// exactly this tile geometry; retuning MR/NR in `kernel.rs` must come
+// with a matching rewrite here, not a silent recompile.
+const _: () = assert!(MR == 4 && NR == 8);
+
+/// The MR×NR microkernel over packed strips (see `Backend::microkernel`).
+///
+/// # Safety
+/// Requires NEON support; the `kernel::Neon` wrapper verifies it with
+/// `is_aarch64_feature_detected!` before every call (NEON is baseline
+/// on aarch64 targets, so the check never fails in practice).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn microkernel(a_strip: &[f64], b_strip: &[f64]) -> [[f64; NR]; MR] {
+    // Clamp to the shorter operand — the scalar kernel's
+    // `chunks_exact().zip()` semantics — so no slice-length combination
+    // can drive the raw-pointer reads out of bounds (packed strips from
+    // the GEMM driver always match exactly).
+    let kk = (a_strip.len() / MR).min(b_strip.len() / NR);
+    let ap = a_strip.as_ptr();
+    let bp = b_strip.as_ptr();
+    // 4 rows × four 2-lane vectors = 16 accumulator registers; with
+    // four B vectors and one broadcast this sits comfortably in
+    // aarch64's 32 × 128-bit register file.
+    let mut acc = [[vdupq_n_f64(0.0); 4]; MR];
+    for k in 0..kk {
+        let b0 = vld1q_f64(bp.add(k * NR));
+        let b1 = vld1q_f64(bp.add(k * NR + 2));
+        let b2 = vld1q_f64(bp.add(k * NR + 4));
+        let b3 = vld1q_f64(bp.add(k * NR + 6));
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = vdupq_n_f64(*ap.add(k * MR + r));
+            // mul then add — two roundings, the scalar sequence.
+            accr[0] = vaddq_f64(accr[0], vmulq_f64(av, b0));
+            accr[1] = vaddq_f64(accr[1], vmulq_f64(av, b1));
+            accr[2] = vaddq_f64(accr[2], vmulq_f64(av, b2));
+            accr[3] = vaddq_f64(accr[3], vmulq_f64(av, b3));
+        }
+    }
+    let mut out = [[0.0f64; NR]; MR];
+    for (o, accr) in out.iter_mut().zip(&acc) {
+        vst1q_f64(o.as_mut_ptr(), accr[0]);
+        vst1q_f64(o.as_mut_ptr().add(2), accr[1]);
+        vst1q_f64(o.as_mut_ptr().add(4), accr[2]);
+        vst1q_f64(o.as_mut_ptr().add(6), accr[3]);
+    }
+    out
+}
+
+/// `dst += coef·src`, 2 lanes at a time with a scalar tail.
+///
+/// # Safety
+/// Requires NEON support; the `kernel::Neon` wrapper verifies it with
+/// `is_aarch64_feature_detected!` before every call.
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn axpy(coef: f64, src: &[f64], dst: &mut [f64]) {
+    // Clamp to the shorter slice (the scalar `zip` semantics) so the
+    // raw-pointer loop stays in bounds for any caller; the dispatcher
+    // asserts equal lengths up front.
+    let n = dst.len().min(src.len());
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let c = vdupq_n_f64(coef);
+    let mut i = 0usize;
+    while i + 2 <= n {
+        let d = vld1q_f64(dp.add(i));
+        let s = vld1q_f64(sp.add(i));
+        vst1q_f64(dp.add(i), vaddq_f64(d, vmulq_f64(c, s)));
+        i += 2;
+    }
+    while i < n {
+        *dp.add(i) += coef * *sp.add(i);
+        i += 1;
+    }
+}

@@ -34,10 +34,17 @@ USAGE:
                   [--batch-window B] [--verify-every K]
   fcdcc artifacts [--dir DIR]   (needs the `pjrt` feature)
 
-Every command also accepts --threads T: the size of the persistent
-compute pool the hot kernels (encode/decode/worker GEMMs) fan out on.
-Defaults to the FCDCC_THREADS env var, then to all cores; outputs are
-bit-identical at any setting.
+Every command also accepts:
+  --threads T   size of the persistent compute pool the hot kernels
+                (encode/decode/worker GEMMs) fan out on. Defaults to
+                the FCDCC_THREADS env var, then to all cores; outputs
+                are bit-identical at any setting.
+  --kernel K    SIMD microkernel backend: auto (default; runtime
+                feature detection), scalar, avx2, neon, or fused-ma
+                (opt-in FMA contraction — validated by error bounds,
+                not bit identity). Also via FCDCC_KERNEL; requesting a
+                backend this machine cannot run warns and falls back.
+                Default-path outputs are bit-identical across backends.
 
 The worker --engine defaults to im2col (fused patch-matrix reuse);
 direct is the naive correctness oracle.
@@ -179,10 +186,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let stats = coordinator::serve_lenet(cfg)?;
     println!(
-        "served {} requests (depth {}, window {}): mean latency {:.2}ms (p95 {:.2}ms), {:.1} req/s",
+        "served {} requests (depth {}, window {}, kernel {}): \
+         mean latency {:.2}ms (p95 {:.2}ms), {:.1} req/s",
         stats.requests,
         stats.max_in_flight,
         stats.batch_window,
+        stats.kernel,
         stats.latency.mean * 1e3,
         stats.latency.p95 * 1e3,
         stats.throughput_rps
@@ -245,6 +254,21 @@ fn main() -> Result<()> {
     if threads > 0 {
         fcdcc::util::pool::configure_global(threads);
     }
+    // Install the SIMD kernel backend before any hot path dispatches:
+    // --kernel overrides FCDCC_KERNEL; unavailable or unknown requests
+    // warn and fall back to runtime detection instead of failing.
+    if let Some(name) = args.get("kernel") {
+        let (kind, warning) = fcdcc::linalg::kernel::resolve(Some(name));
+        if let Some(w) = warning {
+            eprintln!("fcdcc: {w}");
+        }
+        fcdcc::linalg::kernel::set_active(kind);
+    }
+    // Logged once at startup so every run records which backend it ran.
+    eprintln!(
+        "fcdcc: compute kernel = {}",
+        fcdcc::linalg::kernel::active().name()
+    );
     match args.command.as_deref() {
         Some("run") => cmd_run(&args),
         Some("optimize") => cmd_optimize(&args),

@@ -85,10 +85,11 @@ pub fn conv2d_from_patch(
     debug_assert_eq!(cols, oh * ow);
     debug_assert_eq!(patch.len(), rows * cols);
     // GEMM: out[n, pix] = sum_r K[n, r] * M[r, pix], on the shared
-    // packed register-tiled microkernel (linalg::gemm). K is already
-    // laid out row-major as (N × rows); the patch matrix is the
-    // panel-packed B operand, streamed from memory once per column
-    // panel instead of once per output channel.
+    // packed register-tiled microkernel (linalg::gemm, running the
+    // runtime-dispatched SIMD backend — bit-identical across scalar/
+    // AVX2/NEON). K is already laid out row-major as (N × rows); the
+    // patch matrix is the panel-packed B operand, streamed from memory
+    // once per column panel instead of once per output channel.
     let mut out = vec![0.0f64; k.n * cols];
     gemm::gemm_into(
         k.n,

@@ -196,11 +196,12 @@ impl Tensor3 {
 
     /// a ← a + s·b (same shape); the coded-combination primitive for
     /// tensor-block-list × matrix multiplication (paper eq. (18)).
+    /// Rides the runtime-dispatched SIMD axpy (`linalg::kernel`) —
+    /// per element the scalar `a += s·b` sequence, so dispatch never
+    /// changes results on the default path.
     pub fn axpy(&mut self, s: f64, other: &Tensor3) {
         assert_eq!(self.shape(), other.shape(), "axpy: shape mismatch");
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += s * b;
-        }
+        crate::linalg::kernel::axpy(s, &other.data, &mut self.data);
     }
 
     pub fn scale(&mut self, s: f64) {

@@ -114,12 +114,12 @@ impl Tensor4 {
     }
 
     /// a ← a + s·b (same shape) — the coded-combination primitive used by
-    /// KCCP encoding (paper eq. (37)).
+    /// KCCP encoding (paper eq. (37)). Rides the runtime-dispatched
+    /// SIMD axpy (`linalg::kernel`), bit-identical to the scalar loop
+    /// on the default path.
     pub fn axpy(&mut self, s: f64, other: &Tensor4) {
         assert_eq!(self.shape(), other.shape(), "axpy: shape mismatch");
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += s * b;
-        }
+        crate::linalg::kernel::axpy(s, &other.data, &mut self.data);
     }
 }
 

@@ -159,6 +159,18 @@ impl ThreadPool {
         self.threads
     }
 
+    /// The work-floor dispatch gate shared by every chunked entry
+    /// point: a region whose caller-estimated `work` sits below
+    /// [`MIN_PARALLEL_WORK`] — or any region on a size-1 pool — runs
+    /// inline on the caller. One pool-owned predicate instead of the
+    /// same comparison duplicated at each entry point; gating only
+    /// changes *where* chunks run, never their boundaries or
+    /// arithmetic.
+    #[inline]
+    fn runs_inline(&self, work: usize) -> bool {
+        work < MIN_PARALLEL_WORK || self.threads == 1
+    }
+
     /// Run `f(0), f(1), …, f(chunks - 1)`, each exactly once, fanned out
     /// over the pool with the caller participating; returns when every
     /// chunk is done. Chunk-to-thread assignment is dynamic, so `f` must
@@ -265,7 +277,7 @@ impl ThreadPool {
         if len == 0 {
             return;
         }
-        if work < MIN_PARALLEL_WORK || self.threads == 1 {
+        if self.runs_inline(work) {
             for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
                 f(i, chunk);
             }
@@ -313,7 +325,7 @@ impl ThreadPool {
         if chunks == 0 {
             return;
         }
-        if work < MIN_PARALLEL_WORK || self.threads == 1 {
+        if self.runs_inline(work) {
             for (i, (ca, cb)) in a.chunks_mut(a_chunk).zip(b.chunks_mut(b_chunk)).enumerate() {
                 f(i, ca, cb);
             }

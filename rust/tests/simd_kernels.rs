@@ -1,0 +1,225 @@
+//! Backend-equivalence suite for the runtime-dispatched SIMD kernels
+//! (DESIGN.md §SIMD dispatch): every default-path backend available on
+//! this machine (scalar always; AVX2/NEON when detected) must produce
+//! **bit-identical** results — at the kernel level over remainder and
+//! degenerate shapes, and end to end through the coded pipeline and the
+//! pipelined serving loop over rotating straggler subsets.
+//!
+//! Switching the process-global dispatch target mid-suite is safe
+//! precisely *because* of the property under test: all default-path
+//! backends are `==`-indistinguishable, so concurrent tests cannot
+//! observe a swap. The non-bit-exact `fused-ma` backend is never
+//! installed globally here; it is exercised through the explicit-kind
+//! entry points and relative-error bounds in the `linalg` unit tests.
+
+use fcdcc::cluster::StragglerModel;
+use fcdcc::coding::contiguous_subset;
+use fcdcc::coordinator::{serve_lenet, ServeConfig};
+use fcdcc::engine::Im2colEngine;
+use fcdcc::fcdcc::FcdccPlan;
+use fcdcc::linalg::{gemm, kernel};
+use fcdcc::model::ConvLayer;
+use fcdcc::tensor::{Tensor3, Tensor4};
+use fcdcc::util::rng::Rng;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Serializes the tests that install a process-global dispatch target:
+/// every install here is bit-exact, so racing tests could never observe
+/// different *numbers*, but assertions on `ServeStats.kernel` (which
+/// backend a run reports) do need the global to hold still.
+static KERNEL_LOCK: Mutex<()> = Mutex::new(());
+
+// --- kernel level: the source adapters the hot paths actually use ----------
+
+#[test]
+fn decode_and_dense_adapters_bitwise_identical_across_backends() {
+    // TransposedA × RowsB is the decode GEMM's shape; RowMajor × ColsB
+    // is the batched-Dense shape. Dims straddle the MR=4 / NR=8 tile
+    // remainders and include degenerate zeros.
+    let mut rng = Rng::new(71);
+    for (m, n, kk) in [
+        (0usize, 0usize, 0usize),
+        (1, 1, 1),
+        (3, 7, 2),
+        (5, 9, 6),
+        (13, 260, 4),
+    ] {
+        // A as the transpose view of a kk-major matrix.
+        let at_data = rng.fill_uniform(kk * m, -1.0, 1.0);
+        let a_t = gemm::TransposedA {
+            data: &at_data,
+            ld: m.max(1),
+        };
+        // B as independent row slices (coded output blocks).
+        let rows_data: Vec<Vec<f64>> =
+            (0..kk).map(|_| rng.fill_uniform(n, -1.0, 1.0)).collect();
+        let rows: Vec<&[f64]> = rows_data.iter().map(|r| r.as_slice()).collect();
+        let b_rows = gemm::RowsB { rows: &rows };
+        let mut want = vec![0.0; m * n];
+        gemm::gemm_into_kind(
+            kernel::Kind::Scalar,
+            m,
+            n,
+            kk,
+            &a_t,
+            &b_rows,
+            &mut want,
+            n.max(1),
+        );
+        for kind in kernel::available() {
+            let mut got = vec![0.0; m * n];
+            gemm::gemm_into_kind(kind, m, n, kk, &a_t, &b_rows, &mut got, n.max(1));
+            assert_eq!(got, want, "TransposedA×RowsB {kind:?} ({m},{n},{kk})");
+        }
+        // B as independent column slices (batched Dense activations).
+        let cols_data: Vec<Vec<f64>> =
+            (0..n).map(|_| rng.fill_uniform(kk, -1.0, 1.0)).collect();
+        let cols: Vec<&[f64]> = cols_data.iter().map(|c| c.as_slice()).collect();
+        let b_cols = gemm::ColsB { cols: &cols };
+        let a_data = rng.fill_uniform(m * kk, -1.0, 1.0);
+        let a_rm = gemm::RowMajor {
+            data: &a_data,
+            ld: kk.max(1),
+        };
+        let mut want = vec![0.0; m * n];
+        gemm::gemm_into_kind(
+            kernel::Kind::Scalar,
+            m,
+            n,
+            kk,
+            &a_rm,
+            &b_cols,
+            &mut want,
+            n.max(1),
+        );
+        for kind in kernel::available() {
+            let mut got = vec![0.0; m * n];
+            gemm::gemm_into_kind(kind, m, n, kk, &a_rm, &b_cols, &mut got, n.max(1));
+            assert_eq!(got, want, "RowMajor×ColsB {kind:?} ({m},{n},{kk})");
+        }
+    }
+}
+
+#[test]
+fn axpy_remainder_tails_bitwise_identical_across_backends() {
+    // The encode-fill / coding-combination primitive, over lengths
+    // around both SIMD widths (4 for AVX2, 2 for NEON) and zero.
+    let mut rng = Rng::new(72);
+    for len in [0usize, 1, 2, 3, 4, 5, 6, 7, 8, 9, 15, 33, 128] {
+        let src = rng.fill_uniform(len, -1.0, 1.0);
+        let base = rng.fill_uniform(len, -1.0, 1.0);
+        let coef = rng.uniform(-3.0, 3.0);
+        let mut want = base.clone();
+        kernel::axpy_kind(kernel::Kind::Scalar, coef, &src, &mut want);
+        for kind in kernel::available() {
+            let mut got = base.clone();
+            kernel::axpy_kind(kind, coef, &src, &mut got);
+            assert_eq!(got, want, "axpy {kind:?} len {len}");
+        }
+    }
+}
+
+// --- pipeline level: encode / compute / decode on each active backend ------
+
+#[test]
+fn fused_batch_encode_bit_identical_across_backends() {
+    let mut rng = Rng::new(73);
+    let layer = ConvLayer::new("t", 3, 11, 9, 6, 3, 3, 1, 1);
+    let plan = FcdccPlan::new_crme(&layer, 2, 6, 5).unwrap();
+    let xs: Vec<Tensor3> =
+        (0..3).map(|_| Tensor3::random(3, 11, 9, &mut rng)).collect();
+    let refs: Vec<&Tensor3> = xs.iter().collect();
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = kernel::set_active(kernel::Kind::Scalar);
+    let want = plan.encode_input_batch(&refs);
+    for kind in kernel::available() {
+        kernel::set_active(kind);
+        let got = plan.encode_input_batch(&refs);
+        assert_eq!(got.len(), want.len());
+        for (w, (g, r)) in got.iter().zip(&want).enumerate() {
+            for (i, (gs, rs)) in g.iter().zip(r).enumerate() {
+                assert_eq!(gs.data, rs.data, "{kind:?}: worker {w} slab {i}");
+            }
+        }
+    }
+    kernel::set_active(prev);
+}
+
+#[test]
+fn inline_pipeline_bit_identical_across_backends_and_rotating_subsets() {
+    // Encode → worker im2col GEMMs → GEMM decode, end to end, with the
+    // surviving-worker subset rotating through every contiguous
+    // δ-window — at every available dispatch level.
+    let mut rng = Rng::new(74);
+    let layer = ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0);
+    let (k_a, k_b, n) = (4usize, 2usize, 5usize);
+    let plan = FcdccPlan::new_crme(&layer, k_a, k_b, n).unwrap(); // delta=2
+    let k = Tensor4::random(8, 2, 3, 3, &mut rng);
+    let xs: Vec<Tensor3> =
+        (0..2).map(|_| Tensor3::random(2, 12, 10, &mut rng)).collect();
+    let refs: Vec<&Tensor3> = xs.iter().collect();
+    let delta = plan.delta();
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = kernel::set_active(kernel::Kind::Scalar);
+    let wants: Vec<Vec<Tensor3>> = (0..n)
+        .map(|r| {
+            let survivors = contiguous_subset(n, delta, r);
+            plan.run_inline_batch(&refs, &k, Some(&survivors)).unwrap()
+        })
+        .collect();
+    for kind in kernel::available() {
+        kernel::set_active(kind);
+        for (r, want) in wants.iter().enumerate() {
+            let survivors = contiguous_subset(n, delta, r);
+            let got = plan.run_inline_batch(&refs, &k, Some(&survivors)).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(want) {
+                assert_eq!(g.data, w.data, "{kind:?}: subset rotation {r} diverged");
+            }
+        }
+    }
+    kernel::set_active(prev);
+}
+
+// --- serving level: the full pipelined scheduler -------------------------
+
+#[test]
+fn pipelined_serving_bit_identical_across_backends() {
+    // The same pipelined + coalescing serving run must produce
+    // bit-identical logits on every available dispatch level, and
+    // report the backend it ran on. With n = δ for both convs every
+    // job needs all workers' replies and the runtime orders the chosen
+    // δ replies by worker id before decoding, so the run is
+    // deterministic regardless of reply arrival order — the straggler
+    // fates still rotate per job via the seeded fate stream, they only
+    // shift latency, never the decoded subset.
+    let run = |kind: kernel::Kind| {
+        kernel::set_active(kind);
+        let mut cfg = ServeConfig::default_with_engine(Arc::new(Im2colEngine));
+        cfg.n_workers = 2;
+        cfg.partitions = [(4, 2), (2, 4)]; // delta = 2 = n for both convs
+        cfg.requests = 4;
+        cfg.seed = 78;
+        cfg.max_in_flight = 3;
+        cfg.batch_window = 2;
+        cfg.verify_every = 2;
+        cfg.straggler = StragglerModel::FixedCount {
+            count: 1,
+            delay: Duration::from_millis(5),
+        };
+        serve_lenet(cfg).unwrap()
+    };
+    let _guard = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = kernel::set_active(kernel::Kind::Scalar);
+    let want = run(kernel::Kind::Scalar);
+    assert_eq!(want.kernel, "scalar");
+    assert_eq!(want.logits.len(), 4);
+    for kind in kernel::available() {
+        let got = run(kind);
+        assert_eq!(got.kernel, kind.name(), "stats must report the active backend");
+        assert_eq!(got.class_mismatches, 0);
+        assert_eq!(got.logits, want.logits, "{kind:?}: serving logits diverged");
+    }
+    kernel::set_active(prev);
+}
