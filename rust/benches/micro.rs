@@ -118,6 +118,31 @@ fn main() {
         "worker subtask (fused patch reuse)",
         &bench(cfg, || payloads[0].run_im2col()),
     );
+
+    // --- Plan-resident prepacked filter panels vs per-job worker-side
+    // packing: the same fused subtask, with the filter slabs' packed-A
+    // panels built once at plan build (the default) vs re-packed from
+    // the raw slab on every job (`--no-prepack`). Bit-identical by
+    // construction — asserted here in-bench, not just in tests.
+    let plan_nopack = FcdccPlan::new_crme(&layer, 4, 8, 10)
+        .unwrap()
+        .with_prepack(false);
+    let cf_nopack = plan_nopack.encode_filters(&kk);
+    let payloads_nopack =
+        plan_nopack.make_payloads(plan_nopack.encode_input_batch(&[&x]), &cf_nopack);
+    let got_pre = payloads[0].run_im2col();
+    let got_per = payloads_nopack[0].run_im2col();
+    assert_eq!(got_pre.blocks.len(), got_per.blocks.len());
+    for (bp, bj) in got_pre.blocks.iter().zip(&got_per.blocks) {
+        assert_eq!(bp.data, bj.data, "prepacked subtask diverged bitwise");
+    }
+    let sub_entries: usize = got_pre.blocks.iter().map(|b| b.data.len()).sum();
+    let sub_perjob = bench(cfg, || payloads_nopack[0].run_im2col());
+    let sub_prepacked = bench(cfg, || payloads[0].run_im2col());
+    report("worker subtask (per-job filter pack)", &sub_perjob);
+    report("worker subtask (plan-resident prepacked)", &sub_prepacked);
+    json_speed("prepacked_vs_perjob_pack", sub_entries, &sub_perjob, &sub_prepacked);
+
     let results: Vec<_> = payloads[..plan.delta()].iter().map(|p| p.run_im2col()).collect();
     report("decode + merge (GEMM)", &bench(cfg, || plan.decode(&results).unwrap()));
 

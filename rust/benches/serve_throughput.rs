@@ -26,15 +26,16 @@ use std::time::Duration;
 fn json_line(model: &str, mode: &str, stats: &ServeStats) {
     emit_json(&format!(
         "{{\"bench\":\"serve_throughput\",\"straggler\":\"{}\",\"mode\":\"{}\",\
-         \"threads\":{},\"kernel\":\"{}\",\"depth\":{},\"batch_window\":{},\
-         \"requests\":{},\"rps\":{:.3},\
+         \"threads\":{},\"kernel\":\"{}\",\"pack_count\":{},\"depth\":{},\
+         \"batch_window\":{},\"requests\":{},\"rps\":{:.3},\
          \"latency_p50_ms\":{:.3},\"latency_p95_ms\":{:.3},\"coded_jobs\":{},\
          \"mean_batch\":{:.3},\"inversions\":{},\"inverse_cache_hits\":{},\
-         \"scratch_allocs\":{},\"scratch_hits\":{}}}",
+         \"arena_allocs\":{},\"arena_hits\":{}}}",
         model,
         mode,
         fcdcc::util::pool::global().threads(),
         stats.kernel,
+        stats.pack_count,
         stats.max_in_flight,
         stats.batch_window,
         stats.requests,
@@ -45,8 +46,8 @@ fn json_line(model: &str, mode: &str, stats: &ServeStats) {
         stats.mean_batch,
         stats.inverse_cache.misses,
         stats.inverse_cache.hits,
-        stats.scratch.misses,
-        stats.scratch.hits,
+        stats.arena.misses,
+        stats.arena.hits,
     ));
 }
 

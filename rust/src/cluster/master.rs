@@ -19,8 +19,8 @@
 use crate::cluster::straggler::StragglerModel;
 use crate::cluster::worker::{worker_loop, WorkerMsg, WorkerReply};
 use crate::engine::{Im2colEngine, TaskEngine};
-use crate::fcdcc::FcdccPlan;
-use crate::tensor::{Tensor3, Tensor4};
+use crate::fcdcc::{FcdccPlan, ResidentFilters};
+use crate::tensor::Tensor3;
 use crate::util::rng::Rng;
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
@@ -172,7 +172,7 @@ impl Cluster {
         &mut self,
         plan: &FcdccPlan,
         x: &Tensor3,
-        coded_filters: &[Arc<Vec<Tensor4>>],
+        coded_filters: &[ResidentFilters],
         straggler: &StragglerModel,
         rng: &mut Rng,
     ) -> Result<JobHandle> {
@@ -184,13 +184,14 @@ impl Cluster {
     /// job in the in-flight table — non-blocking. Each worker convolves
     /// its slab pairs once per sample; the whole batch completes (or
     /// times out) as one unit. `coded_filters` are the per-worker
-    /// resident filter slabs from `plan.encode_filters` (encoded once at
-    /// model load, per the paper's steady-state model).
+    /// resident filter slabs (plus their prepacked GEMM operands) from
+    /// `plan.encode_filters` (encoded once at model load, per the
+    /// paper's steady-state model).
     pub fn submit_batch(
         &mut self,
         plan: &FcdccPlan,
         xs: &[&Tensor3],
-        coded_filters: &[Arc<Vec<Tensor4>>],
+        coded_filters: &[ResidentFilters],
         straggler: &StragglerModel,
         rng: &mut Rng,
     ) -> Result<JobHandle> {
@@ -278,7 +279,13 @@ impl Cluster {
             match phase {
                 JobPhase::Done { .. } => break,
                 JobPhase::TimedOut => {
-                    let batch = self.remove_job(job_id).batch;
+                    let job = self.remove_job(job_id);
+                    // The partial replies are useless now; return their
+                    // block buffers before failing the batch.
+                    for r in job.replies {
+                        r.result.recycle();
+                    }
+                    let batch = job.batch;
                     bail!(
                         "job {job_id}: timed out with {got}/{delta} results \
                          (>{} workers failed?); all {batch} member sample(s) fail",
@@ -309,7 +316,13 @@ impl Cluster {
         );
         // First-δ semantics: the δ earliest arrivals were kept; order them
         // by worker id so decoding is deterministic for a fixed reply set.
-        job.replies.truncate(job.delta);
+        // Any replies past δ (impossible today — routing stops at δ —
+        // but kept defensive) are recycled, not silently dropped.
+        if job.replies.len() > job.delta {
+            for r in job.replies.drain(job.delta..) {
+                r.result.recycle();
+            }
+        }
         job.replies.sort_by_key(|r| r.worker_id);
 
         // --- Decode phase (master): one recovery inversion (cached),
@@ -317,10 +330,11 @@ impl Cluster {
         let t2 = Instant::now();
         let results: Vec<&crate::fcdcc::WorkerResult> =
             job.replies.iter().map(|r| &r.result).collect();
-        let outputs = plan.decode_batch_refs(&results)?;
+        let outputs = plan.decode_batch_refs(&results);
         let decode_secs = t2.elapsed().as_secs_f64();
 
         let download_entries = results.iter().map(|r| r.download_entries()).sum();
+        drop(results);
         let used_workers: Vec<usize> = job.replies.iter().map(|r| r.worker_id).collect();
         let sim_makespan_secs = job
             .replies
@@ -329,6 +343,12 @@ impl Cluster {
             .fold(0.0, f64::max);
         let mean_compute_secs =
             job.replies.iter().map(|r| r.compute_secs).sum::<f64>() / job.replies.len() as f64;
+        // Decoded (or failed): either way the coded blocks are spent —
+        // return their buffers to the plan arena before reporting.
+        for r in job.replies {
+            r.result.recycle();
+        }
+        let outputs = outputs?;
 
         Ok((
             outputs,
@@ -367,7 +387,7 @@ impl Cluster {
         &mut self,
         plan: &FcdccPlan,
         x: &Tensor3,
-        coded_filters: &[Arc<Vec<Tensor4>>],
+        coded_filters: &[ResidentFilters],
         straggler: &StragglerModel,
         rng: &mut Rng,
     ) -> Result<(Tensor3, JobReport)> {
@@ -375,9 +395,12 @@ impl Cluster {
         self.wait(plan, handle)
     }
 
-    /// Route one reply into the in-flight table. Replies for unknown jobs
-    /// (already decoded, timed out, or superseded) are dropped — that is
-    /// the demultiplexer's stale-result filter.
+    /// Route one reply into the in-flight table. Replies for settled jobs
+    /// (already decoded, timed out, or superseded) are **recycled** —
+    /// their block buffers return to the plan arena — and then dropped;
+    /// that is the demultiplexer's stale-result filter. Under
+    /// `StragglerModel::None` this is the common fate of n−δ replies per
+    /// job, so without the recycle the arena would leak every job.
     fn route(&mut self, reply: WorkerReply) {
         let job_id = reply.job_id;
         // Collection ends when the δ-th reply was *sent*, not when the
@@ -385,9 +408,10 @@ impl Cluster {
         // two differ by arbitrary scheduler work.
         let sent_at = reply.sent_at;
         let mut finished = false;
+        let mut stale = Some(reply);
         if let Some(job) = self.jobs.get_mut(&job_id) {
             if matches!(job.phase, JobPhase::Collecting) {
-                job.replies.push(reply);
+                job.replies.push(stale.take().expect("reply routed once"));
                 if job.replies.len() >= job.delta {
                     job.phase = JobPhase::Done {
                         collect_secs: sent_at
@@ -397,6 +421,9 @@ impl Cluster {
                     finished = true;
                 }
             }
+        }
+        if let Some(r) = stale {
+            r.result.recycle();
         }
         if finished {
             // Cancel the stragglers' superseded subtasks so their injected
@@ -471,7 +498,7 @@ mod tests {
     use super::*;
     use crate::engine::DirectEngine;
     use crate::model::ConvLayer;
-    use crate::tensor::conv2d;
+    use crate::tensor::{conv2d, Tensor4};
     use crate::util::mse;
 
     fn small_setup() -> (ConvLayer, Tensor3, Tensor4) {

@@ -126,11 +126,19 @@ pub fn worker_loop(
                 fate,
             } => {
                 if canceled.contains(job_id) {
-                    continue; // superseded before we even started
+                    // Superseded before we even started. Recycling the
+                    // undropped payload keeps the plan arena warm.
+                    payload.recycle();
+                    continue;
                 }
                 let delay = match fate.delay() {
                     Some(d) => d,
-                    None => continue, // failed worker: silently drop the task
+                    None => {
+                        // Failed worker: silently drop the task (but
+                        // still return its slab buffers to the arena).
+                        payload.recycle();
+                        continue;
+                    }
                 };
                 if !delay.is_zero() {
                     // Interruptible straggler sleep: cancellations take
@@ -155,7 +163,9 @@ pub fn worker_loop(
                         }
                     }
                     if canceled.contains(job_id) {
-                        continue; // the job was decoded (or abandoned) without us
+                        // The job was decoded (or abandoned) without us.
+                        payload.recycle();
+                        continue;
                     }
                 }
                 let t0 = Instant::now();
@@ -165,10 +175,14 @@ pub fn worker_loop(
                         // An engine error behaves like a worker failure:
                         // the coded redundancy absorbs it.
                         eprintln!("worker {worker_id}: task failed: {e:#}");
+                        payload.recycle();
                         continue;
                     }
                 };
                 let compute_secs = t0.elapsed().as_secs_f64();
+                // The subtask is done with its coded inputs; return the
+                // slab buffers before the reply even ships.
+                payload.recycle();
                 // The master may have moved on (enough results already);
                 // a send error is normal shutdown noise.
                 let _ = tx.send(WorkerReply {

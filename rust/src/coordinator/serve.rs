@@ -21,7 +21,7 @@
 
 use crate::cluster::{Cluster, JobHandle, StragglerModel};
 use crate::engine::{Im2colEngine, TaskEngine};
-use crate::fcdcc::NetworkPlan;
+use crate::fcdcc::{NetworkPlan, PlanOptions};
 use crate::metrics::{CacheStats, Stats};
 use crate::model::network::softmax;
 use crate::model::{Activation, Network};
@@ -53,6 +53,10 @@ pub struct ServeConfig {
     /// reference forward pass. 0 disables verification entirely, so
     /// throughput numbers aren't dominated by the uncoded reference.
     pub verify_every: usize,
+    /// Pack coded filter slabs into GEMM panels once at plan build (the
+    /// default). `false` (the CLI's `--no-prepack`) re-packs per job on
+    /// the workers — the A/B baseline for the prepack speedup.
+    pub prepack: bool,
 }
 
 impl ServeConfig {
@@ -70,6 +74,7 @@ impl ServeConfig {
             max_in_flight: 1,
             batch_window: 1,
             verify_every: 1,
+            prepack: true,
         }
     }
 }
@@ -112,10 +117,15 @@ pub struct ServeStats {
     /// Recovery-inverse cache counters: `misses` is exactly the number
     /// of recovery-matrix inversions performed across the whole run.
     pub inverse_cache: CacheStats,
-    /// Decode scratch-pool counters: `misses` is exactly the number of
-    /// staging-buffer heap allocations the decode hot path performed
-    /// (steady-state serving should allocate only during warm-up).
-    pub scratch: CacheStats,
+    /// Slab-arena counters: `misses` is exactly the number of hot-path
+    /// heap allocations (encode slabs, worker reply blocks, decode
+    /// staging) across the whole run — steady-state serving should
+    /// allocate only during warm-up.
+    pub arena: CacheStats,
+    /// Worker-side filter-slab GEMM packs across the run. With
+    /// prepacking on (the default) this is **zero**: panels were packed
+    /// once at plan build and stayed plan-resident.
+    pub pack_count: u64,
     /// The dispatched compute-kernel backend the run executed on
     /// (`linalg::kernel::active()`): "scalar", "avx2", "neon", or the
     /// opt-in "fused-ma".
@@ -173,7 +183,11 @@ pub fn serve_lenet(cfg: ServeConfig) -> Result<ServeStats> {
         cfg.max_in_flight
     );
     let net = Network::lenet5_random(42);
-    let plan = NetworkPlan::new(net, &cfg.partitions, cfg.n_workers)?;
+    let opts = PlanOptions {
+        prepack: cfg.prepack,
+        ..PlanOptions::default()
+    };
+    let plan = NetworkPlan::with_options(net, &cfg.partitions, cfg.n_workers, opts)?;
     let mut cluster = Cluster::new(cfg.n_workers, Arc::clone(&cfg.engine));
     let stats = run_pipeline(&plan, &mut cluster, &cfg);
     cluster.shutdown();
@@ -366,7 +380,8 @@ fn run_pipeline(
             batch_sizes.iter().sum::<usize>() as f64 / coded_jobs as f64
         },
         inverse_cache: plan.inverse_cache_stats(),
-        scratch: plan.scratch_stats(),
+        arena: plan.arena_stats(),
+        pack_count: plan.filter_packs(),
         kernel: crate::linalg::kernel::active().name(),
         logits,
     })
@@ -538,19 +553,34 @@ mod tests {
             stats.coded_jobs as u64,
             "one cache lookup per decode"
         );
-        // Steady-state decode staging is pooled: one take per decode,
-        // and at most a couple of warm-up allocations across both conv
-        // stages — everything else reuses a buffer.
-        assert_eq!(
-            stats.scratch.lookups(),
-            stats.coded_jobs as u64,
-            "one staging-buffer take per decode"
+        // The unified slab arena backs encode slabs, reply blocks, AND
+        // decode staging, so lookups far exceed one-per-decode; what
+        // matters is that steady state mostly reuses buffers and — with
+        // prepacking on by default — workers never packed a filter.
+        assert!(
+            stats.arena.lookups() > stats.coded_jobs as u64,
+            "slab takes should dominate decode-staging takes"
         );
         assert!(
-            stats.scratch.misses <= 2,
-            "{} staging allocations for {} decodes",
-            stats.scratch.misses,
-            stats.coded_jobs
+            stats.arena.hits > stats.arena.misses,
+            "steady state should reuse pooled buffers (hits {} vs misses {})",
+            stats.arena.hits,
+            stats.arena.misses
+        );
+        assert_eq!(stats.pack_count, 0, "plan-resident panels: no job-time packs");
+    }
+
+    #[test]
+    fn no_prepack_config_counts_worker_side_packs() {
+        let mut cfg = ServeConfig::default_with_engine(Arc::new(Im2colEngine));
+        cfg.requests = 2;
+        cfg.prepack = false;
+        let stats = serve_lenet(cfg).unwrap();
+        assert_eq!(stats.class_mismatches, 0);
+        assert!(stats.mean_logit_mse < 1e-16, "mse={:e}", stats.mean_logit_mse);
+        assert!(
+            stats.pack_count > 0,
+            "per-job packing path must count its packs"
         );
     }
 

@@ -13,21 +13,44 @@
 
 use crate::cluster::{Cluster, JobHandle, JobReport, StragglerModel};
 use crate::fcdcc::inverse_cache::{InverseCache, DEFAULT_INVERSE_CACHE_CAP};
-use crate::fcdcc::scratch::{ScratchPool, DEFAULT_SCRATCH_POOL_CAP};
-use crate::fcdcc::FcdccPlan;
+use crate::fcdcc::scratch::{SlabArena, DEFAULT_ARENA_CAP};
+use crate::fcdcc::{FcdccPlan, ResidentFilters};
 use crate::metrics::CacheStats;
 use crate::model::network::add_bias;
 use crate::model::{Activation, Layer, Network};
-use crate::tensor::{Tensor3, Tensor4};
+use crate::tensor::Tensor3;
 use crate::util::rng::Rng;
 use anyhow::{ensure, Result};
 use std::sync::Arc;
 
+/// Build-time knobs for [`NetworkPlan`]. The defaults are the paper's
+/// steady-state serving model: filters prepacked into GEMM panels at
+/// plan-build time, slab buffers pooled in a shared arena.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanOptions {
+    /// Pack every coded filter slab into GEMM-ready panels once at plan
+    /// build; workers then contract resident packed panels directly
+    /// (`--no-prepack` in the CLI flips this off for A/B measurement).
+    pub prepack: bool,
+    /// Capacity (buffer count) of the shared slab arena.
+    pub arena_capacity: usize,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        Self {
+            prepack: true,
+            arena_capacity: DEFAULT_ARENA_CAP,
+        }
+    }
+}
+
 /// One planned conv layer: code/geometry plan, resident coded filters
-/// (encoded once at model load, shared across every request), bias.
+/// (encoded once at model load — slabs plus, when prepacking is on,
+/// their GEMM-ready packed panels — shared across every request), bias.
 pub struct ConvStage {
     pub plan: FcdccPlan,
-    pub coded_filters: Vec<Arc<Vec<Tensor4>>>,
+    pub coded_filters: Vec<ResidentFilters>,
     pub bias: Vec<f64>,
     /// Index of this conv in the network's layer sequence.
     pub layer_idx: usize,
@@ -65,19 +88,32 @@ pub struct NetworkPlan {
     net: Network,
     stages: Vec<ConvStage>,
     inverse_cache: Arc<InverseCache>,
-    /// Decode staging buffers, shared by every stage (stages at the same
-    /// geometry reuse each other's buffers; differing sizes coexist).
-    scratch: Arc<ScratchPool>,
+    /// Slab arena shared by every stage: encode slabs, worker reply
+    /// blocks, and decode staging buffers all draw from (and return to)
+    /// this one pool, so stages at the same geometry reuse each other's
+    /// buffers and differing sizes coexist.
+    arena: Arc<SlabArena>,
 }
 
 impl NetworkPlan {
     /// Plan every conv layer of `net` with the given per-conv `(k_A,
     /// k_B)` partitions on an `n_workers` cluster, encoding each filter
     /// bank once (the paper's steady-state model: coded filter slabs are
-    /// resident on the workers across requests).
+    /// resident on the workers across requests). Uses the default
+    /// [`PlanOptions`]: filters prepacked, arena-pooled buffers.
     pub fn new(net: Network, partitions: &[(usize, usize)], n_workers: usize) -> Result<Self> {
+        Self::with_options(net, partitions, n_workers, PlanOptions::default())
+    }
+
+    /// [`Self::new`] with explicit build-time knobs.
+    pub fn with_options(
+        net: Network,
+        partitions: &[(usize, usize)],
+        n_workers: usize,
+        opts: PlanOptions,
+    ) -> Result<Self> {
         let inverse_cache = Arc::new(InverseCache::new(DEFAULT_INVERSE_CACHE_CAP));
-        let scratch = Arc::new(ScratchPool::new(DEFAULT_SCRATCH_POOL_CAP));
+        let arena = Arc::new(SlabArena::new(opts.arena_capacity));
         let mut stages = Vec::new();
         for (layer_idx, layer) in net.layers.iter().enumerate() {
             if let Layer::Conv {
@@ -94,7 +130,8 @@ impl NetworkPlan {
                 let stage_idx = stages.len();
                 let plan = FcdccPlan::new_crme(shape, k_a, k_b, n_workers)?
                     .with_inverse_cache(Arc::clone(&inverse_cache), stage_idx)
-                    .with_scratch_pool(Arc::clone(&scratch));
+                    .with_arena(Arc::clone(&arena))
+                    .with_prepack(opts.prepack);
                 let coded_filters = plan.encode_filters(weights);
                 stages.push(ConvStage {
                     plan,
@@ -114,7 +151,7 @@ impl NetworkPlan {
             net,
             stages,
             inverse_cache,
-            scratch,
+            arena,
         })
     }
 
@@ -133,12 +170,24 @@ impl NetworkPlan {
         self.inverse_cache.stats()
     }
 
-    /// Hit/miss counters of the shared decode scratch-buffer pool.
-    /// `misses` is exactly the number of staging-buffer heap allocations
-    /// the decode hot path performed; in steady-state serving everything
-    /// after warm-up should be a hit.
-    pub fn scratch_stats(&self) -> CacheStats {
-        self.scratch.stats()
+    /// Hit/miss counters of the shared slab arena. `misses` is exactly
+    /// the number of hot-path heap allocations (encode slabs, reply
+    /// blocks, decode staging) across every stage; in steady-state
+    /// serving everything after warm-up should be a hit.
+    pub fn arena_stats(&self) -> CacheStats {
+        self.arena.stats()
+    }
+
+    /// Total filter-slab GEMM packs performed by workers across every
+    /// stage. With prepacking on (the default) this stays **zero**: the
+    /// panels were packed once at plan build and are plan-resident.
+    pub fn filter_packs(&self) -> u64 {
+        self.arena.filter_packs()
+    }
+
+    /// The slab arena shared by every stage of this plan.
+    pub fn arena(&self) -> &Arc<SlabArena> {
+        &self.arena
     }
 
     /// Advance `a` through master-side (non-conv) layers starting at
@@ -279,6 +328,33 @@ mod tests {
         // Both conv stages decoded through the shared inverse cache.
         let cs = plan.inverse_cache_stats();
         assert_eq!(cs.lookups(), 2, "one decode per conv stage");
+        // Prepacking is on by default: workers never packed a filter.
+        assert_eq!(plan.filter_packs(), 0);
+    }
+
+    #[test]
+    fn no_prepack_option_falls_back_to_worker_side_packing() {
+        let net = Network::lenet5_random(33);
+        let opts = PlanOptions {
+            prepack: false,
+            ..PlanOptions::default()
+        };
+        let plan = NetworkPlan::with_options(net, &[(4, 2), (2, 2)], 4, opts).unwrap();
+        for stage in plan.stages() {
+            for rf in &stage.coded_filters {
+                assert!(rf.packs.is_none(), "prepack=false must skip packing");
+            }
+        }
+        let mut cluster = Cluster::new(4, Arc::new(Im2colEngine));
+        let mut rng = Rng::new(2);
+        let x = Tensor3::random(1, 32, 32, &mut rng);
+        let want = plan.forward_reference(&x);
+        let (got, _) = plan
+            .forward_distributed(&mut cluster, &x, &StragglerModel::None, &mut rng)
+            .unwrap();
+        cluster.shutdown();
+        assert!(mse(&got, &want) < 1e-16);
+        assert!(plan.filter_packs() > 0, "fallback path packs per job");
     }
 
     #[test]

@@ -36,11 +36,14 @@
 
 use crate::coding::{self, Code, CrmeCode};
 use crate::fcdcc::inverse_cache::{InverseCache, DEFAULT_INVERSE_CACHE_CAP};
-use crate::fcdcc::scratch::{ScratchPool, DEFAULT_SCRATCH_POOL_CAP};
+use crate::fcdcc::scratch::{SlabArena, DEFAULT_ARENA_CAP};
+use crate::linalg::gemm::{self, PackedA};
 use crate::linalg::Mat;
 use crate::model::ConvLayer;
 use crate::partition::{merge_output_rows, ApcpPlan, KccpPlan};
-use crate::tensor::im2col::{conv2d_from_patch_multi, im2col_into};
+use crate::tensor::im2col::{
+    conv2d_from_patch_multi_prepacked, conv2d_from_patch_multi_with, im2col_into,
+};
 use crate::tensor::{conv2d, conv2d_shape, ConvParams, Tensor3, Tensor4};
 use crate::util::pool;
 use anyhow::{ensure, Context, Result};
@@ -55,12 +58,73 @@ thread_local! {
     static PATCH_BUF: std::cell::Cell<Vec<f64>> = const { std::cell::Cell::new(Vec::new()) };
 }
 
+/// One worker's **plan-resident** coded filters: the ℓ_B coded slabs
+/// (paper: filters are encoded once at model load) plus, when
+/// prepacking is on, each slab's GEMM-ready packed-A operand
+/// (`linalg::gemm::PackedA`), packed once at plan build. Jobs share both
+/// by `Arc`, so the steady-state worker conv path never runs `pack_a` —
+/// the packed bytes are backend-agnostic, and the contraction over them
+/// is bit-identical to packing per call.
+#[derive(Clone)]
+pub struct ResidentFilters {
+    /// ℓ_B coded filter slabs (the V_store payload).
+    pub slabs: Arc<Vec<Tensor4>>,
+    /// Per-slab prepacked GEMM operands; `None` when the plan was built
+    /// with prepacking disabled (`--no-prepack`).
+    pub packs: Option<Arc<Vec<PackedA>>>,
+}
+
+impl ResidentFilters {
+    /// Wrap one worker's coded slabs, packing each into the microkernel
+    /// layout when `prepack` is set.
+    pub fn new(slabs: Vec<Tensor4>, prepack: bool) -> Self {
+        let packs = prepack.then(|| {
+            Arc::new(
+                slabs
+                    .iter()
+                    .map(|kb| {
+                        let rows = kb.c * kb.kh * kb.kw;
+                        PackedA::pack(
+                            &gemm::RowMajor {
+                                data: &kb.data,
+                                ld: rows.max(1),
+                            },
+                            kb.n,
+                            rows,
+                        )
+                    })
+                    .collect::<Vec<_>>(),
+            )
+        });
+        ResidentFilters {
+            slabs: Arc::new(slabs),
+            packs,
+        }
+    }
+
+    /// Tensor entries resident on the worker (coded slabs only — the
+    /// V_store accounting; packed panels are a local layout copy, not
+    /// extra communicated state).
+    pub fn store_entries(&self) -> usize {
+        self.slabs.iter().map(|t| t.len()).sum()
+    }
+
+    /// Packed-panel elements held alongside the slabs (zero-padding
+    /// included; 0 when prepacking is off).
+    pub fn packed_entries(&self) -> usize {
+        self.packs
+            .as_ref()
+            .map_or(0, |ps| ps.iter().map(PackedA::packed_len).sum())
+    }
+}
+
 /// Everything worker `worker_id` needs for one coded subtask.
 #[derive(Clone)]
 pub struct WorkerPayload {
     pub worker_id: usize,
     /// `batch · ℓ_A` coded input slabs, sample-major: slab `j` of sample
-    /// `s` is `inputs[s·ℓ_A + j]`.
+    /// `s` is `inputs[s·ℓ_A + j]`. Slab buffers are drawn from the
+    /// plan's arena and returned via [`Self::recycle`].
     pub inputs: Vec<Tensor3>,
     /// Samples in this job (1 = the paper's single-inference pipeline).
     pub batch: usize,
@@ -68,9 +132,16 @@ pub struct WorkerPayload {
     /// filters are encoded once at model load), so every job sharing the
     /// resident slabs clones an `Arc`, never the tensors themselves.
     pub filters: Arc<Vec<Tensor4>>,
+    /// The resident slabs' prepacked GEMM operands (shared with
+    /// [`ResidentFilters::packs`]); `None` falls back to per-call
+    /// packing (counted in the arena's `filter_packs`).
+    pub packs: Option<Arc<Vec<PackedA>>>,
     /// Convolution parameters for the slab-level conv (stride s, pad 0 —
     /// APCP already materialized the padding).
     pub conv: ConvParams,
+    /// The plan's slab arena: input slabs return here on recycle, and
+    /// the im2col path draws its output-block buffers from it.
+    pub arena: Arc<SlabArena>,
 }
 
 impl WorkerPayload {
@@ -117,6 +188,18 @@ impl WorkerPayload {
             worker_id: self.worker_id,
             batch: self.batch,
             blocks,
+            arena: Arc::clone(&self.arena),
+        }
+    }
+
+    /// Return the payload's input-slab buffers to the plan arena. Call
+    /// once the subtask (or its cancellation) is finished with the
+    /// payload — dropping instead merely leaks pooled reuse, never
+    /// correctness.
+    pub fn recycle(self) {
+        let arena = self.arena;
+        for t in self.inputs {
+            arena.put(t.data);
         }
     }
 
@@ -130,13 +213,19 @@ impl WorkerPayload {
     /// disjoint, contiguous region of the block list — through exactly
     /// the serial per-pair arithmetic. Bit-identical to
     /// `run_with(conv2d_im2col)` at any pool size: same patch fill, same
-    /// GEMM, same block order.
+    /// GEMM, same block order. When the payload carries resident
+    /// prepacked filters, the filter operand of every GEMM is the
+    /// plan-packed panel — the same bytes per-call packing would
+    /// produce, so the result stays bit-identical while the steady
+    /// state performs **zero** `pack_a` calls and zero block
+    /// allocations (buffers come from the plan arena).
     pub fn run_im2col(&self) -> WorkerResult {
         let Some(first) = self.filters.first() else {
             return WorkerResult {
                 worker_id: self.worker_id,
                 batch: self.batch,
                 blocks: Vec::new(),
+                arena: Arc::clone(&self.arena),
             };
         };
         let ell_b = self.filters.len();
@@ -147,6 +236,10 @@ impl WorkerPayload {
                 "run_im2col: filter slab shape mismatch"
             );
         }
+        let packs = self.packs.as_deref().map(|ps| {
+            assert_eq!(ps.len(), ell_b, "run_im2col: pack/slab count mismatch");
+            ps.as_slice()
+        });
         let filter_refs: Vec<&Tensor4> = self.filters.iter().collect();
         let mut blocks: Vec<Option<Tensor3>> =
             (0..self.inputs.len() * ell_b).map(|_| None).collect();
@@ -166,11 +259,37 @@ impl WorkerPayload {
             // at pool size 1 this is exactly PR 3's single reused
             // allocation, and im2col_into overwrites every element, so
             // reuse is bit-invisible. The ℓ_B GEMMs then share one
-            // packing of the patch operand (conv2d_from_patch_multi).
+            // packing of the patch operand; with resident packs the
+            // filter operand is never packed at all
+            // (conv2d_from_patch_multi_prepacked), otherwise each slab
+            // pays ℓ_B per-call packs, counted in the arena. Output
+            // blocks draw their buffers from the plan arena either way.
             PATCH_BUF.with(|cell| {
                 let mut patch = cell.take();
                 let (rows, cols) = im2col_into(xa, first.kh, first.kw, self.conv, &mut patch);
-                let ys = conv2d_from_patch_multi(&patch, rows, cols, &filter_refs, oh, ow);
+                let ys = match packs {
+                    Some(ps) => conv2d_from_patch_multi_prepacked(
+                        &patch,
+                        rows,
+                        cols,
+                        ps,
+                        oh,
+                        ow,
+                        |len| self.arena.take(len),
+                    ),
+                    None => {
+                        self.arena.note_filter_packs(ell_b as u64);
+                        conv2d_from_patch_multi_with(
+                            &patch,
+                            rows,
+                            cols,
+                            &filter_refs,
+                            oh,
+                            ow,
+                            |len| self.arena.take(len),
+                        )
+                    }
+                };
                 for (slot, y) in out.iter_mut().zip(ys) {
                     *slot = Some(y);
                 }
@@ -184,6 +303,7 @@ impl WorkerPayload {
                 .into_iter()
                 .map(|b| b.expect("every slab chunk ran"))
                 .collect(),
+            arena: Arc::clone(&self.arena),
         }
     }
 }
@@ -196,6 +316,10 @@ pub struct WorkerResult {
     /// Samples in the job this result belongs to.
     pub batch: usize,
     pub blocks: Vec<Tensor3>,
+    /// The arena the block buffers came from (and return to on
+    /// recycle). Carried by the result so late/stale replies can be
+    /// recycled wherever they surface — the demux loop has no plan.
+    pub arena: Arc<SlabArena>,
 }
 
 impl WorkerResult {
@@ -208,6 +332,15 @@ impl WorkerResult {
     pub fn sample_blocks(&self, sample: usize) -> &[Tensor3] {
         let bpw = self.blocks.len() / self.batch;
         &self.blocks[sample * bpw..(sample + 1) * bpw]
+    }
+
+    /// Return the block buffers to the plan arena (after decode, or for
+    /// replies that arrive past δ / past a deadline and are dropped).
+    pub fn recycle(self) {
+        let arena = self.arena;
+        for t in self.blocks {
+            arena.put(t.data);
+        }
     }
 }
 
@@ -223,9 +356,15 @@ pub struct FcdccPlan {
     inverse_cache: Arc<InverseCache>,
     /// This plan's stage index within the shared cache's key space.
     cache_stage: usize,
-    /// Decode staging-buffer pool (see `fcdcc::scratch`). Standalone
-    /// plans own a private one; `NetworkPlan` shares one across stages.
-    scratch: Arc<ScratchPool>,
+    /// The plan's slab arena (see `fcdcc::scratch`): encoded input
+    /// slabs, worker reply blocks, and decode staging all draw from and
+    /// return to it. Standalone plans own a private one; `NetworkPlan`
+    /// shares one across stages.
+    arena: Arc<SlabArena>,
+    /// Pack coded filter slabs into resident GEMM operands at encode
+    /// time (on by default; `--no-prepack` / `FCDCC_NO_PREPACK` turn it
+    /// off for A/B measurement).
+    prepack: bool,
 }
 
 impl FcdccPlan {
@@ -253,7 +392,8 @@ impl FcdccPlan {
             code,
             inverse_cache: Arc::new(InverseCache::new(DEFAULT_INVERSE_CACHE_CAP)),
             cache_stage: 0,
-            scratch: Arc::new(ScratchPool::new(DEFAULT_SCRATCH_POOL_CAP)),
+            arena: Arc::new(SlabArena::new(DEFAULT_ARENA_CAP)),
+            prepack: true,
         })
     }
 
@@ -270,16 +410,28 @@ impl FcdccPlan {
         &self.inverse_cache
     }
 
-    /// Attach a shared decode scratch-buffer pool (one per
-    /// `NetworkPlan`, shared by every stage).
-    pub fn with_scratch_pool(mut self, pool: Arc<ScratchPool>) -> Self {
-        self.scratch = pool;
+    /// Attach a shared slab arena (one per `NetworkPlan`, shared by
+    /// every stage).
+    pub fn with_arena(mut self, arena: Arc<SlabArena>) -> Self {
+        self.arena = arena;
         self
     }
 
-    /// The decode staging-buffer pool this plan draws from.
-    pub fn scratch_pool(&self) -> &Arc<ScratchPool> {
-        &self.scratch
+    /// The slab arena this plan's hot path draws from.
+    pub fn arena(&self) -> &Arc<SlabArena> {
+        &self.arena
+    }
+
+    /// Enable/disable resident filter prepacking for subsequently
+    /// encoded filters (on by default).
+    pub fn with_prepack(mut self, prepack: bool) -> Self {
+        self.prepack = prepack;
+        self
+    }
+
+    /// Whether [`Self::encode_filters`] packs resident GEMM operands.
+    pub fn prepack(&self) -> bool {
+        self.prepack
     }
 
     pub fn spec(&self) -> coding::CodeSpec {
@@ -293,12 +445,14 @@ impl FcdccPlan {
 
     /// Encode the filter bank once (model initialization): per-worker
     /// resident coded filter slabs, `Arc`-shared so that every subsequent
-    /// job reuses them without deep-cloning.
-    pub fn encode_filters(&self, k: &Tensor4) -> Vec<Arc<Vec<Tensor4>>> {
+    /// job reuses them without deep-cloning — and, unless prepacking is
+    /// disabled, each slab's packed GEMM operand, so steady-state jobs
+    /// never pack the filter side again.
+    pub fn encode_filters(&self, k: &Tensor4) -> Vec<ResidentFilters> {
         let parts = self.kccp.partition(k);
         coding::encode_filters(self.code.as_ref(), &parts)
             .into_iter()
-            .map(Arc::new)
+            .map(|slabs| ResidentFilters::new(slabs, self.prepack))
             .collect()
     }
 
@@ -323,10 +477,11 @@ impl FcdccPlan {
     /// directly into preallocated per-worker slab buffers. Spatial
     /// padding, APCP's overlapping-slab geometry, and the bottom
     /// height-padding are all index arithmetic — no padded intermediate
-    /// tensor, no k_A partition copies, no per-slab axpy sweeps. (The
-    /// coded slab buffers themselves are still allocated per job — their
-    /// ownership transfers into the workers' payloads; the fusion
-    /// removes every *intermediate* allocation and pass.) The fill fans
+    /// tensor, no k_A partition copies, no per-slab axpy sweeps. The
+    /// coded slab buffers themselves come from the plan's slab arena
+    /// (ownership transfers into the workers' payloads and returns on
+    /// `WorkerPayload::recycle`), so steady-state encodes allocate
+    /// nothing at all. The fill fans
     /// out over the persistent compute pool (`util::pool`), one coded
     /// worker per chunk — chunk boundaries depend only on n, and every
     /// element is written through the identical per-element fold
@@ -354,8 +509,9 @@ impl FcdccPlan {
         // Total coded output entries — the pool's dispatch gate keeps
         // LeNet-sized encodes inline on the caller.
         let work = xs.len() * ell_a * self.layer.c * apcp.h_hat * wp * s.n;
+        let arena = &self.arena;
         pool::global().parallel_chunks_mut(work, &mut per_worker, 1, |worker, slabs| {
-            fill_worker_slabs(worker, &mut slabs[0], xs, a, &apcp, pad, ell_a, wp);
+            fill_worker_slabs(worker, &mut slabs[0], xs, a, &apcp, pad, ell_a, wp, arena);
         });
         per_worker
     }
@@ -367,7 +523,7 @@ impl FcdccPlan {
     pub fn make_payloads(
         &self,
         coded_inputs: Vec<Vec<Tensor3>>,
-        coded_filters: &[Arc<Vec<Tensor4>>],
+        coded_filters: &[ResidentFilters],
     ) -> Vec<WorkerPayload> {
         let conv = ConvParams::new(self.layer.stride, 0);
         let ell_a = self.spec().ell_a;
@@ -375,14 +531,16 @@ impl FcdccPlan {
             .into_iter()
             .zip(coded_filters)
             .enumerate()
-            .map(|(worker_id, (inputs, filters))| {
+            .map(|(worker_id, (inputs, rf))| {
                 debug_assert_eq!(inputs.len() % ell_a, 0);
                 WorkerPayload {
                     worker_id,
                     batch: inputs.len() / ell_a,
                     inputs,
-                    filters: Arc::clone(filters),
+                    filters: Arc::clone(&rf.slabs),
+                    packs: rf.packs.clone(),
                     conv,
+                    arena: Arc::clone(&self.arena),
                 }
             })
             .collect()
@@ -413,7 +571,7 @@ impl FcdccPlan {
     /// sample's δ·ℓ_A·ℓ_B coded blocks are the rows of a matrix Ỹ and
     /// the true blocks are `Y = Dᵀ·Ỹ` ([`Mat::gemm_t_rows_into`]),
     /// accumulated into that sample's disjoint region of a staging
-    /// buffer drawn from the plan's scratch pool and merged straight
+    /// buffer drawn from the plan's slab arena and merged straight
     /// into the layer output. The per-element summation order matches
     /// the scalar reference (`coding::decode_outputs_with` +
     /// `merge_output_blocks`) exactly, so outputs are bit-identical to
@@ -504,7 +662,7 @@ impl FcdccPlan {
                 }
             }
         }
-        let mut staging = self.scratch.take(batch * sample_len);
+        let mut staging = self.arena.take(batch * sample_len);
         let mut outputs: Vec<Option<Tensor3>> = (0..batch).map(|_| None).collect();
         pool::global().parallel_zip_chunks_mut(
             // Total decoded entries gate the dispatch (tiny decodes on
@@ -522,7 +680,7 @@ impl FcdccPlan {
                 ));
             },
         );
-        self.scratch.put(staging);
+        self.arena.put(staging);
         Ok(outputs
             .into_iter()
             .map(|y| y.expect("every sample chunk ran"))
@@ -555,13 +713,30 @@ impl FcdccPlan {
         let coded_filters = self.encode_filters(k);
         let coded_inputs = self.encode_input_batch(xs);
         let payloads = self.make_payloads(coded_inputs, &coded_filters);
-        let ids: Vec<usize> = match survivors {
-            Some(s) => s.to_vec(),
-            None => (0..self.delta()).collect(),
+        // Borrow the survivor subset instead of copying it; the default
+        // first-δ range is materialized locally only when needed.
+        let first_delta: Vec<usize>;
+        let ids: &[usize] = match survivors {
+            Some(s) => s,
+            None => {
+                first_delta = (0..self.delta()).collect();
+                &first_delta
+            }
         };
         let results: Vec<WorkerResult> = ids.iter().map(|&i| payloads[i].run_local()).collect();
         let refs: Vec<&WorkerResult> = results.iter().collect();
-        self.decode_batch_refs(&refs)
+        let outputs = self.decode_batch_refs(&refs);
+        drop(refs);
+        // Inline jobs recycle like the cluster runtime: coded slabs and
+        // output blocks return to the plan arena, so repeated inline
+        // runs go allocation-free after the first.
+        for r in results {
+            r.recycle();
+        }
+        for p in payloads {
+            p.recycle();
+        }
+        outputs
     }
 }
 
@@ -590,6 +765,7 @@ fn fill_worker_slabs(
     pad: usize,
     ell_a: usize,
     wp: usize,
+    arena: &SlabArena,
 ) {
     // Resolve the dispatched backend once per fill, not once per row —
     // rows are only W doubles wide, so the per-row cost must stay at
@@ -598,7 +774,11 @@ fn fill_worker_slabs(
     for x in xs {
         for j in 0..ell_a {
             let col = worker * ell_a + j;
-            let mut slab = Tensor3::zeros(x.c, apcp.h_hat, wp);
+            // The slab buffer is a zeroed arena draw (same contents as
+            // `Tensor3::zeros`): steady-state encodes recycle the very
+            // buffers earlier jobs returned.
+            let mut slab =
+                Tensor3::from_vec(x.c, apcp.h_hat, wp, arena.take(x.c * apcp.h_hat * wp));
             for alpha in 0..apcp.k_a {
                 let coef = a.get(alpha, col);
                 if coef == 0.0 {
@@ -790,28 +970,48 @@ mod tests {
     fn run_im2col_bit_identical_to_per_pair_im2col() {
         use crate::tensor::im2col::conv2d_im2col;
         let layer = ConvLayer::new("t", 3, 12, 10, 8, 3, 3, 1, 1);
-        let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap();
         let mut rng = Rng::new(62);
         let xs: Vec<Tensor3> =
             (0..2).map(|_| Tensor3::random(3, 12, 10, &mut rng)).collect();
         let k = Tensor4::random(8, 3, 3, 3, &mut rng);
-        let cf = plan.encode_filters(&k);
-        let refs: Vec<&Tensor3> = xs.iter().collect();
-        let payloads = plan.make_payloads(plan.encode_input_batch(&refs), &cf);
-        for p in &payloads {
-            let fused = p.run_im2col();
-            let want = p.run_with(|a, b, c| conv2d_im2col(a, b, c));
-            assert_eq!(fused.blocks.len(), want.blocks.len());
-            for (f, w) in fused.blocks.iter().zip(&want.blocks) {
-                assert_eq!(f.data, w.data, "worker {} block diverged", p.worker_id);
+        // Both filter regimes — resident prepacked operands and per-call
+        // packing — must reproduce the per-pair reference bit for bit.
+        for prepack in [true, false] {
+            let plan = FcdccPlan::new_crme(&layer, 4, 2, 4)
+                .unwrap()
+                .with_prepack(prepack);
+            let cf = plan.encode_filters(&k);
+            for rf in &cf {
+                assert_eq!(rf.packs.is_some(), prepack);
+            }
+            let refs: Vec<&Tensor3> = xs.iter().collect();
+            let payloads = plan.make_payloads(plan.encode_input_batch(&refs), &cf);
+            for p in &payloads {
+                let fused = p.run_im2col();
+                let want = p.run_with(|a, b, c| conv2d_im2col(a, b, c));
+                assert_eq!(fused.blocks.len(), want.blocks.len());
+                for (f, w) in fused.blocks.iter().zip(&want.blocks) {
+                    assert_eq!(
+                        f.data, w.data,
+                        "worker {} block diverged (prepack {prepack})",
+                        p.worker_id
+                    );
+                }
+            }
+            // Per-call filter packs happen only on the fallback path.
+            if prepack {
+                assert_eq!(plan.arena().filter_packs(), 0, "prepacked path packed");
+            } else {
+                assert!(plan.arena().filter_packs() > 0, "fallback packs uncounted");
             }
         }
     }
 
     #[test]
     fn payloads_share_resident_filters() {
-        // Steady-state model: coded filter slabs are encoded once and
-        // shared across jobs — payload construction must not deep-clone.
+        // Steady-state model: coded filter slabs (and their prepacked
+        // GEMM operands) are encoded once and shared across jobs —
+        // payload construction must not deep-clone either.
         let layer = ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0);
         let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap();
         let mut rng = Rng::new(55);
@@ -820,8 +1020,36 @@ mod tests {
         let cf = plan.encode_filters(&k);
         let payloads = plan.make_payloads(plan.encode_input(&x), &cf);
         for (p, f) in payloads.iter().zip(&cf) {
-            assert!(Arc::ptr_eq(&p.filters, f), "filter slabs were copied");
+            assert!(Arc::ptr_eq(&p.filters, &f.slabs), "filter slabs were copied");
+            let (pp, fp) = (p.packs.as_ref().unwrap(), f.packs.as_ref().unwrap());
+            assert!(Arc::ptr_eq(pp, fp), "prepacked operands were copied");
+            assert!(f.packed_entries() > 0);
         }
+    }
+
+    #[test]
+    fn inline_batch_reaches_zero_arena_misses() {
+        // The allocation-free steady state at the plan level: after the
+        // first (warmup) job, every slab/block/staging take hits.
+        let layer = ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0);
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap();
+        let mut rng = Rng::new(63);
+        let k = Tensor4::random(8, 2, 3, 3, &mut rng);
+        let xs: Vec<Tensor3> =
+            (0..2).map(|_| Tensor3::random(2, 12, 10, &mut rng)).collect();
+        let refs: Vec<&Tensor3> = xs.iter().collect();
+        plan.run_inline_batch(&refs, &k, None).unwrap();
+        let warm_misses = plan.arena().misses();
+        assert!(warm_misses > 0, "warmup must populate the arena");
+        for _ in 0..3 {
+            plan.run_inline_batch(&refs, &k, None).unwrap();
+        }
+        assert_eq!(
+            plan.arena().misses(),
+            warm_misses,
+            "steady-state inline jobs must not allocate"
+        );
+        assert_eq!(plan.arena().outstanding(), 0, "buffers leaked");
     }
 
     #[test]

@@ -1,58 +1,93 @@
-//! Scratch-buffer pool for the decode hot path.
+//! The plan-owned slab arena — pooled `f64` buffers for **every**
+//! steady-state allocation on the coded hot path.
 //!
-//! Every batched decode needs one flat staging buffer holding the
-//! batch's `batch·k_A·k_B` output blocks while the per-sample GEMMs
-//! accumulate into their disjoint regions (one take/put per decode,
-//! split across samples by the compute pool). Allocating that buffer
-//! fresh per job (the pre-fusion path allocated one `Tensor3::zeros`
-//! per block per sample) churns the allocator exactly where latency
-//! matters; under steady-state serving the same few buffer sizes recur
-//! job after job, so a small pool turns every decode after the first
-//! into an allocation-free `memset`.
+//! PR 4 introduced a small scratch pool for the decode staging buffer;
+//! this generalizes it into one arena per plan that also backs the
+//! encoded input slabs (`encode_input_batch` writes coded slabs into
+//! pooled buffers), the worker reply blocks (drawn on compute, returned
+//! on decode), and the decode staging buffer. Under steady-state
+//! serving the same few buffer sizes recur job after job, so after a
+//! short warmup every take is a zero-allocation `memset` of a recycled
+//! buffer — `misses()` is exactly the number of heap allocations the
+//! hot path performed through the arena, and the steady-state
+//! regression test asserts it goes flat.
 //!
-//! The pool is shared per `NetworkPlan` (one pool across all conv
+//! Buffers are bucketed by capacity in a `BTreeMap`, so `take(len)`
+//! picks the **best fit** (smallest retained capacity `>= len`) instead
+//! of the first fit: slab, block, and staging sizes differ per conv
+//! stage, and best-fit keeps a large staging buffer from being burned
+//! on a small slab request. A full arena retains the largest
+//! capacities, for the same reason the old pool did: a retained large
+//! buffer serves every smaller request, the converse never holds.
+//!
+//! The arena is shared per `NetworkPlan` (one arena across all conv
 //! stages, like the recovery-inverse cache); standalone `FcdccPlan`s own
-//! a private one. Hit/miss counters make buffer reuse observable:
-//! `misses()` is exactly the number of heap allocations the decode path
-//! performed through the pool.
+//! a private one. It also hosts the plan's `filter_packs` counter — the
+//! number of per-call filter `pack_a` operations the worker conv path
+//! performed because no plan-resident prepacked operand was available
+//! (zero when prepacking is on; see `linalg::gemm::PackedA`).
 
 use crate::metrics::CacheStats;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-/// Default number of idle buffers retained. Serving keeps at most a few
-/// decodes in flight per plan, so a handful of buffers suffices; excess
-/// returns are dropped rather than hoarded.
-pub const DEFAULT_SCRATCH_POOL_CAP: usize = 8;
+/// Default number of idle buffers retained. The arena now backs every
+/// per-worker input slab and reply block of every in-flight job — for
+/// LeNet-scale serving (n·batch·blocks-per-worker buffers per job, a
+/// few jobs in flight) a couple hundred idle buffers cover the whole
+/// steady state without hoarding unbounded memory.
+pub const DEFAULT_ARENA_CAP: usize = 256;
 
-/// A shared, thread-safe pool of reusable `f64` scratch buffers.
-pub struct ScratchPool {
+/// A shared, thread-safe arena of reusable `f64` slab buffers.
+pub struct SlabArena {
     capacity: usize,
-    buffers: Mutex<Vec<Vec<f64>>>,
+    /// Idle buffers bucketed by `Vec::capacity()`.
+    buckets: Mutex<BTreeMap<usize, Vec<Vec<f64>>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    takes: AtomicU64,
+    puts: AtomicU64,
+    filter_packs: AtomicU64,
 }
 
-impl ScratchPool {
+impl SlabArena {
     pub fn new(capacity: usize) -> Self {
-        assert!(capacity > 0, "scratch pool needs capacity >= 1");
+        assert!(capacity > 0, "slab arena needs capacity >= 1");
         Self {
             capacity,
-            buffers: Mutex::new(Vec::new()),
+            buckets: Mutex::new(BTreeMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            takes: AtomicU64::new(0),
+            puts: AtomicU64::new(0),
+            filter_packs: AtomicU64::new(0),
         }
     }
 
-    /// Take a zeroed buffer of exactly `len` entries, reusing a pooled
-    /// allocation when one is large enough (a hit); otherwise allocate
-    /// fresh (a miss). Return it with [`Self::put`] when done.
+    /// Take a zeroed buffer of exactly `len` entries, reusing the
+    /// best-fitting pooled allocation when one is large enough (a hit);
+    /// otherwise allocate fresh (a miss). Return it with [`Self::put`]
+    /// when done. Zero-length requests are served without touching the
+    /// arena (and without counting): an empty `Vec` never allocates.
     pub fn take(&self, len: usize) -> Vec<f64> {
+        if len == 0 {
+            return Vec::new();
+        }
+        self.takes.fetch_add(1, Ordering::Relaxed);
         let reused = {
-            let mut bufs = self.buffers.lock().expect("scratch pool poisoned");
-            bufs.iter()
-                .position(|b| b.capacity() >= len)
-                .map(|p| bufs.swap_remove(p))
+            let mut buckets = self.buckets.lock().expect("slab arena poisoned");
+            match buckets.range(len..).next().map(|(&cap, _)| cap) {
+                Some(cap) => {
+                    let bucket = buckets.get_mut(&cap).expect("bucket vanished");
+                    let buf = bucket.pop().expect("empty bucket retained");
+                    if bucket.is_empty() {
+                        buckets.remove(&cap);
+                    }
+                    Some(buf)
+                }
+                None => None,
+            }
         };
         match reused {
             Some(mut b) => {
@@ -68,36 +103,42 @@ impl ScratchPool {
         }
     }
 
-    /// Return a buffer to the pool. A full pool retains the *largest*
-    /// capacities: staging sizes scale with the decode batch, and a
+    /// Return a buffer to the arena. A full arena retains the *largest*
+    /// capacities: buffer sizes scale with the serve batch, and a
     /// retained small buffer can never serve a larger request while a
     /// large one serves every smaller request — so an incoming buffer
     /// bigger than the smallest retained one replaces it (the smaller
     /// is dropped), and steady-state serving converges to all-hits even
     /// when small-batch warmup/stall flushes came first.
     pub fn put(&self, buf: Vec<f64>) {
-        let mut bufs = self.buffers.lock().expect("scratch pool poisoned");
-        if bufs.len() < self.capacity {
-            bufs.push(buf);
+        let cap = buf.capacity();
+        if cap == 0 {
+            // The counterpart of the uncounted zero-length take: not a
+            // real buffer, so it neither counts nor retains.
             return;
         }
-        if let Some((idx, min_cap)) = bufs
-            .iter()
-            .enumerate()
-            .map(|(i, b)| (i, b.capacity()))
-            .min_by_key(|&(_, cap)| cap)
-        {
-            if buf.capacity() > min_cap {
-                bufs[idx] = buf;
+        self.puts.fetch_add(1, Ordering::Relaxed);
+        let mut buckets = self.buckets.lock().expect("slab arena poisoned");
+        let retained: usize = buckets.values().map(Vec::len).sum();
+        if retained >= self.capacity {
+            let smallest = *buckets.keys().next().expect("full arena has buffers");
+            if smallest >= cap {
+                return; // incoming is no improvement; drop it
+            }
+            let bucket = buckets.get_mut(&smallest).expect("bucket vanished");
+            bucket.pop();
+            if bucket.is_empty() {
+                buckets.remove(&smallest);
             }
         }
+        buckets.entry(cap).or_default().push(buf);
     }
 
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }
 
-    /// Misses == heap allocations performed through the pool.
+    /// Misses == heap allocations performed through the arena.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
@@ -109,9 +150,36 @@ impl ScratchPool {
         }
     }
 
+    /// Buffers taken and not yet returned (saturating: pre-seeding the
+    /// arena with foreign `put`s cannot drive it negative). Steady-state
+    /// tests poll this for quiescence between serve waves.
+    pub fn outstanding(&self) -> u64 {
+        let takes = self.takes.load(Ordering::Relaxed);
+        let puts = self.puts.load(Ordering::Relaxed);
+        takes.saturating_sub(puts)
+    }
+
+    /// Record `n` per-call filter `pack_a` operations on the worker conv
+    /// path (the fallback when a payload carries no resident prepacked
+    /// filters). Zero growth after plan build is the prepacking
+    /// acceptance bar.
+    pub fn note_filter_packs(&self, n: u64) {
+        self.filter_packs.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Total per-call filter packs recorded via [`Self::note_filter_packs`].
+    pub fn filter_packs(&self) -> u64 {
+        self.filter_packs.load(Ordering::Relaxed)
+    }
+
     /// Idle buffers currently retained.
     pub fn idle(&self) -> usize {
-        self.buffers.lock().expect("scratch pool poisoned").len()
+        self.buckets
+            .lock()
+            .expect("slab arena poisoned")
+            .values()
+            .map(Vec::len)
+            .sum()
     }
 }
 
@@ -121,7 +189,7 @@ mod tests {
 
     #[test]
     fn reuses_returned_buffers() {
-        let p = ScratchPool::new(4);
+        let p = SlabArena::new(4);
         let b = p.take(16);
         assert_eq!(b.len(), 16);
         assert!(b.iter().all(|&v| v == 0.0));
@@ -144,7 +212,7 @@ mod tests {
 
     #[test]
     fn reused_buffers_come_back_zeroed() {
-        let p = ScratchPool::new(2);
+        let p = SlabArena::new(2);
         let mut b = p.take(4);
         b.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
         p.put(b);
@@ -154,20 +222,20 @@ mod tests {
 
     #[test]
     fn capacity_bounds_retention() {
-        let p = ScratchPool::new(1);
+        let p = SlabArena::new(1);
         p.put(vec![0.0; 4]);
         p.put(vec![0.0; 4]);
         assert_eq!(p.idle(), 1);
     }
 
     #[test]
-    fn full_pool_prefers_larger_buffers() {
+    fn full_arena_prefers_larger_buffers() {
         // Batch-scaled staging: small warmup buffers must not pin the
-        // pool into allocating for every later large-batch decode.
-        let p = ScratchPool::new(2);
+        // arena into allocating for every later large-batch decode.
+        let p = SlabArena::new(2);
         p.put(vec![0.0; 4]);
         p.put(vec![0.0; 4]);
-        p.put(vec![0.0; 64]); // full pool: evicts one small buffer
+        p.put(vec![0.0; 64]); // full arena: evicts one small buffer
         assert_eq!(p.idle(), 2);
         let b = p.take(64);
         assert_eq!(p.hits(), 1, "large request must hit the retained buffer");
@@ -177,5 +245,55 @@ mod tests {
         let b = p.take(64);
         assert_eq!(p.hits(), 2);
         p.put(b);
+    }
+
+    #[test]
+    fn take_is_best_fit_across_sizes() {
+        // With a small and a large buffer retained, a small request must
+        // take the small one, leaving the large one for a large request
+        // (first-fit would burn the large buffer and miss).
+        let p = SlabArena::new(4);
+        p.put(vec![0.0; 1024]);
+        p.put(vec![0.0; 8]);
+        let small = p.take(8);
+        assert_eq!(small.capacity(), 8, "best fit must pick the small bucket");
+        let large = p.take(1024);
+        assert_eq!(p.hits(), 2);
+        assert_eq!(p.misses(), 0);
+        p.put(small);
+        p.put(large);
+    }
+
+    #[test]
+    fn zero_length_takes_bypass_the_arena() {
+        let p = SlabArena::new(2);
+        let b = p.take(0);
+        assert!(b.is_empty() && b.capacity() == 0);
+        assert_eq!(p.hits() + p.misses(), 0);
+        assert_eq!(p.outstanding(), 0);
+    }
+
+    #[test]
+    fn outstanding_tracks_unreturned_buffers() {
+        let p = SlabArena::new(2);
+        let a = p.take(4);
+        let b = p.take(4);
+        assert_eq!(p.outstanding(), 2);
+        p.put(a);
+        assert_eq!(p.outstanding(), 1);
+        p.put(b);
+        assert_eq!(p.outstanding(), 0);
+        // Foreign puts saturate rather than underflow.
+        p.put(vec![0.0; 4]);
+        assert_eq!(p.outstanding(), 0);
+    }
+
+    #[test]
+    fn filter_pack_counter_accumulates() {
+        let p = SlabArena::new(1);
+        assert_eq!(p.filter_packs(), 0);
+        p.note_filter_packs(3);
+        p.note_filter_packs(2);
+        assert_eq!(p.filter_packs(), 5);
     }
 }

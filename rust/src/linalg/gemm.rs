@@ -354,6 +354,112 @@ pub fn with_packed_b<B: SrcB, R>(
     })
 }
 
+/// An **owned**, fully packed A operand: every `MR`-row strip in the
+/// k-major layout the microkernel streams, packed once and contracted
+/// arbitrarily many times. This is the plan-resident half of the
+/// prepacked hot path: coded filter slabs are packed at plan-build time
+/// and shipped to workers by `Arc`, so steady-state convolutions never
+/// run `pack_a` at all. Packing is pure data movement and every backend
+/// packs identical bytes (see `kernel::Backend::pack_a`), so one packed
+/// operand serves every dispatched backend with the bit-identical fold.
+#[derive(Clone, Debug)]
+pub struct PackedA {
+    data: Vec<f64>,
+    m: usize,
+    kk: usize,
+    strips: usize,
+}
+
+impl PackedA {
+    /// Pack an `m×kk` left operand into the strip layout. The buffer is
+    /// freshly and exactly sized — resident operands should not carry
+    /// scratch slack.
+    pub fn pack<A: SrcA>(a: &A, m: usize, kk: usize) -> PackedA {
+        let mut data = Vec::new();
+        // The shared scalar packing: identical bytes on every backend.
+        let strips = kernel::Scalar::pack_a(a, m, kk, &mut data);
+        PackedA { data, m, kk, strips }
+    }
+
+    /// Rows of the packed operand.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Inner (contraction) dimension of the packed operand.
+    pub fn kk(&self) -> usize {
+        self.kk
+    }
+
+    /// Packed elements held (zero-padding included).
+    pub fn packed_len(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// The backend-generic body of [`gemm_prepacked_ab_into`]: both
+/// operands already packed, so the call is pure panel contraction.
+fn gemm_prepacked_ab_into_impl<K: Backend>(
+    pa: &PackedA,
+    pb: &PackedB<'_>,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    let (m, n, kk) = (pa.m, pb.n, pa.kk);
+    assert_eq!(
+        kk, pb.kk,
+        "gemm_prepacked_ab_into: inner dims differ (A kk {kk}, B kk {})",
+        pb.kk
+    );
+    if m == 0 || n == 0 || kk == 0 {
+        return;
+    }
+    assert!(ldc >= n, "gemm_prepacked_ab_into: ldc {ldc} < n {n}");
+    assert!(
+        c.len() >= (m - 1) * ldc + n,
+        "gemm_prepacked_ab_into: C too small for {m} rows x {ldc}"
+    );
+    let mut j0 = 0;
+    while j0 < n {
+        let nw = NC.min(n - j0);
+        contract_panel::<K>(&pa.data, pa.strips, m, kk, pb.panel(j0, nw), j0, nw, c, ldc);
+        j0 += nw;
+    }
+}
+
+/// `C += A·B` with **both** operands prepacked — the zero-pack GEMM the
+/// steady-state worker path runs: the resident [`PackedA`] (packed once
+/// at plan build) against a [`PackedB`] packed once per patch matrix.
+/// Same bytes through the same panel contraction as [`gemm_into`], so
+/// the result is bit-identical to the pack-per-call path. Runs on the
+/// active dispatched backend.
+pub fn gemm_prepacked_ab_into(pa: &PackedA, pb: &PackedB<'_>, c: &mut [f64], ldc: usize) {
+    gemm_prepacked_ab_into_kind(kernel::active(), pa, pb, c, ldc);
+}
+
+/// [`gemm_prepacked_ab_into`] on an explicit backend (differential
+/// tests and bench records).
+pub fn gemm_prepacked_ab_into_kind(
+    kind: Kind,
+    pa: &PackedA,
+    pb: &PackedB<'_>,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    match kind {
+        Kind::Scalar => gemm_prepacked_ab_into_impl::<kernel::Scalar>(pa, pb, c, ldc),
+        #[cfg(target_arch = "x86_64")]
+        Kind::Avx2 => gemm_prepacked_ab_into_impl::<kernel::Avx2>(pa, pb, c, ldc),
+        #[cfg(target_arch = "aarch64")]
+        Kind::Neon => gemm_prepacked_ab_into_impl::<kernel::Neon>(pa, pb, c, ldc),
+        Kind::FusedMa => gemm_prepacked_ab_into_impl::<kernel::FusedMa>(pa, pb, c, ldc),
+        #[cfg(not(target_arch = "x86_64"))]
+        Kind::Avx2 => gemm_prepacked_ab_into_impl::<kernel::Scalar>(pa, pb, c, ldc),
+        #[cfg(not(target_arch = "aarch64"))]
+        Kind::Neon => gemm_prepacked_ab_into_impl::<kernel::Scalar>(pa, pb, c, ldc),
+    }
+}
+
 /// The backend-generic body of [`gemm_prepacked_into`].
 fn gemm_prepacked_into_impl<K: Backend, A: SrcA>(
     m: usize,
@@ -607,5 +713,75 @@ mod tests {
                 assert_eq!(got, want, "kind {kind:?}, shape {m}x{kk} · {kk}x{n}");
             }
         }
+    }
+
+    #[test]
+    fn fully_prepacked_ab_matches_one_shot_packing() {
+        // The zero-pack entry point: a resident PackedA contracted
+        // against a PackedB must reproduce gemm_into bit for bit on
+        // every available backend, including panel/strip edges and
+        // degenerate dims.
+        let mut rng = Rng::new(22);
+        for (m, n, kk) in SHAPES {
+            let adata = rng.fill_uniform(m * kk, -1.0, 1.0);
+            let bdata = rng.fill_uniform(kk * n, -1.0, 1.0);
+            let a = RowMajor {
+                data: &adata,
+                ld: kk.max(1),
+            };
+            let b = RowMajor {
+                data: &bdata,
+                ld: n.max(1),
+            };
+            let mut want = vec![0.0; m * n];
+            gemm_into(m, n, kk, &a, &b, &mut want, n.max(1));
+            let pa = PackedA::pack(&a, m, kk);
+            assert_eq!(pa.m(), m);
+            assert_eq!(pa.kk(), kk);
+            assert_eq!(pa.packed_len(), m.div_ceil(MR) * kk * MR);
+            let got = with_packed_b(&b, kk, n, |pb| {
+                let mut out = vec![0.0; m * n];
+                gemm_prepacked_ab_into(&pa, pb, &mut out, n.max(1));
+                out
+            });
+            assert_eq!(got, want, "shape {m}x{kk} · {kk}x{n}");
+            // Reuse of the *same* resident packing across backends: the
+            // packed bytes are backend-agnostic by construction.
+            for kind in kernel::available() {
+                let got = with_packed_b(&b, kk, n, |pb| {
+                    let mut out = vec![0.0; m * n];
+                    gemm_prepacked_ab_into_kind(kind, &pa, pb, &mut out, n.max(1));
+                    out
+                });
+                assert_eq!(got, want, "kind {kind:?}, shape {m}x{kk} · {kk}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims differ")]
+    fn fully_prepacked_ab_rejects_mismatched_inner_dims() {
+        let adata = vec![1.0; 4 * 3];
+        let bdata = vec![1.0; 5 * 2];
+        let pa = PackedA::pack(
+            &RowMajor {
+                data: &adata,
+                ld: 3,
+            },
+            4,
+            3,
+        );
+        with_packed_b(
+            &RowMajor {
+                data: &bdata,
+                ld: 2,
+            },
+            5,
+            2,
+            |pb| {
+                let mut out = vec![0.0; 4 * 2];
+                gemm_prepacked_ab_into(&pa, pb, &mut out, 2);
+            },
+        );
     }
 }

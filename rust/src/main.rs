@@ -31,8 +31,15 @@ USAGE:
   fcdcc stability [--samples N] [--seed S]
   fcdcc serve     [--requests R] [--n N] [--stragglers S] [--delay-ms MS]
                   [--engine direct|im2col|pjrt] [--max-in-flight D]
-                  [--batch-window B] [--verify-every K]
+                  [--batch-window B] [--verify-every K] [--no-prepack]
   fcdcc artifacts [--dir DIR]   (needs the `pjrt` feature)
+
+serve options:
+  --no-prepack  disable plan-resident filter prepacking: workers re-pack
+                every coded filter slab into GEMM panels per job instead
+                of contracting panels packed once at plan build. The A/B
+                baseline for the prepack speedup; outputs are
+                bit-identical either way. Also via FCDCC_NO_PREPACK=1.
 
 Every command also accepts:
   --threads T   size of the persistent compute pool the hot kernels
@@ -177,6 +184,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.max_in_flight = cfg.max_in_flight.max(cfg.batch_window);
     }
     cfg.verify_every = args.get_usize("verify-every", 1)?;
+    cfg.prepack = !(args.flag("no-prepack")
+        || std::env::var("FCDCC_NO_PREPACK").is_ok_and(|v| v == "1"));
     let stragglers = args.get_usize("stragglers", 0)?;
     if stragglers > 0 {
         cfg.straggler = StragglerModel::FixedCount {
@@ -214,10 +223,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.inverse_cache.hit_rate() * 100.0
     );
     println!(
-        "hot path: decode staging pool {} hits / {} allocations ({:.0}% reuse)",
-        stats.scratch.hits,
-        stats.scratch.misses,
-        stats.scratch.hit_rate() * 100.0
+        "hot path: slab arena {} hits / {} allocations ({:.0}% reuse) | \
+         filter packs {}{}",
+        stats.arena.hits,
+        stats.arena.misses,
+        stats.arena.hit_rate() * 100.0,
+        stats.pack_count,
+        if stats.pack_count == 0 {
+            " (plan-resident prepacked panels)"
+        } else {
+            " (per-job worker-side packing)"
+        }
     );
     Ok(())
 }

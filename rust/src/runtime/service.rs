@@ -142,6 +142,7 @@ impl TaskEngine for PjrtService {
             worker_id: payload.worker_id,
             batch: payload.batch,
             blocks,
+            arena: Arc::clone(&payload.arena),
         })
     }
 }

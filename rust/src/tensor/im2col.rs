@@ -126,6 +126,23 @@ pub fn conv2d_from_patch_multi(
     oh: usize,
     ow: usize,
 ) -> Vec<Tensor3> {
+    conv2d_from_patch_multi_with(patch, rows, cols, filters, oh, ow, |len| vec![0.0f64; len])
+}
+
+/// [`conv2d_from_patch_multi`] with caller-supplied output allocation:
+/// `alloc(len)` must return a **zeroed** buffer of exactly `len`
+/// entries (the GEMM accumulates into it). The coded worker path passes
+/// the plan arena's `take`, making steady-state output blocks
+/// allocation-free; `alloc` is otherwise arithmetic-invisible.
+pub fn conv2d_from_patch_multi_with(
+    patch: &[f64],
+    rows: usize,
+    cols: usize,
+    filters: &[&Tensor4],
+    oh: usize,
+    ow: usize,
+    mut alloc: impl FnMut(usize) -> Vec<f64>,
+) -> Vec<Tensor3> {
     debug_assert_eq!(cols, oh * ow);
     debug_assert_eq!(patch.len(), rows * cols);
     if filters.is_empty() {
@@ -139,24 +156,67 @@ pub fn conv2d_from_patch_multi(
         rows,
         cols,
         |pb| {
-            filters
-                .iter()
-                .map(|k| {
-                    debug_assert_eq!(rows, k.c * k.kh * k.kw);
-                    let mut out = vec![0.0f64; k.n * cols];
-                    gemm::gemm_prepacked_into(
-                        k.n,
-                        &gemm::RowMajor {
-                            data: &k.data,
-                            ld: rows.max(1),
-                        },
-                        pb,
-                        &mut out,
-                        cols.max(1),
-                    );
-                    Tensor3::from_vec(k.n, oh, ow, out)
-                })
-                .collect()
+            let mut outs = Vec::with_capacity(filters.len());
+            for k in filters {
+                debug_assert_eq!(rows, k.c * k.kh * k.kw);
+                let mut out = alloc(k.n * cols);
+                debug_assert_eq!(out.len(), k.n * cols);
+                gemm::gemm_prepacked_into(
+                    k.n,
+                    &gemm::RowMajor {
+                        data: &k.data,
+                        ld: rows.max(1),
+                    },
+                    pb,
+                    &mut out,
+                    cols.max(1),
+                );
+                outs.push(Tensor3::from_vec(k.n, oh, ow, out));
+            }
+            outs
+        },
+    )
+}
+
+/// The **zero-pack** multi-contraction: every filter bank arrives as a
+/// plan-resident [`gemm::PackedA`] (packed once at model load), the
+/// patch matrix is packed once per call, and each GEMM is pure panel
+/// contraction (`gemm::gemm_prepacked_ab_into`). The packed filter
+/// bytes are exactly what per-call packing would produce and the fold
+/// is unchanged, so outputs equal [`conv2d_from_patch_multi`] bit for
+/// bit. `alloc(len)` must return a zeroed buffer of exactly `len`
+/// entries; outputs come back in `packs` order.
+pub fn conv2d_from_patch_multi_prepacked(
+    patch: &[f64],
+    rows: usize,
+    cols: usize,
+    packs: &[gemm::PackedA],
+    oh: usize,
+    ow: usize,
+    mut alloc: impl FnMut(usize) -> Vec<f64>,
+) -> Vec<Tensor3> {
+    debug_assert_eq!(cols, oh * ow);
+    debug_assert_eq!(patch.len(), rows * cols);
+    if packs.is_empty() {
+        return Vec::new();
+    }
+    gemm::with_packed_b(
+        &gemm::RowMajor {
+            data: patch,
+            ld: cols.max(1),
+        },
+        rows,
+        cols,
+        |pb| {
+            let mut outs = Vec::with_capacity(packs.len());
+            for pa in packs {
+                debug_assert_eq!(rows, pa.kk());
+                let mut out = alloc(pa.m() * cols);
+                debug_assert_eq!(out.len(), pa.m() * cols);
+                gemm::gemm_prepacked_ab_into(pa, pb, &mut out, cols.max(1));
+                outs.push(Tensor3::from_vec(pa.m(), oh, ow, out));
+            }
+            outs
         },
     )
 }
@@ -230,6 +290,51 @@ mod tests {
             assert_eq!(y.data, want.data, "multi diverged from per-filter");
         }
         assert!(conv2d_from_patch_multi(&patch, rows, cols, &[], oh, ow).is_empty());
+    }
+
+    #[test]
+    fn prepacked_multi_contraction_matches_per_filter() {
+        // The zero-pack worker path: resident PackedA operands against a
+        // once-packed patch must equal the pack-per-call results bit for
+        // bit, and the alloc hook must be arithmetic-invisible.
+        let mut rng = Rng::new(15);
+        let p = ConvParams::new(1, 0);
+        let x = Tensor3::random(3, 9, 8, &mut rng);
+        let ks: Vec<Tensor4> = (0..3).map(|_| Tensor4::random(4, 3, 3, 3, &mut rng)).collect();
+        let (oh, ow) = conv2d_shape(x.h, x.w, 3, 3, p);
+        let (patch, rows, cols) = im2col(&x, 3, 3, p);
+        let packs: Vec<gemm::PackedA> = ks
+            .iter()
+            .map(|k| {
+                gemm::PackedA::pack(
+                    &gemm::RowMajor {
+                        data: &k.data,
+                        ld: rows,
+                    },
+                    k.n,
+                    rows,
+                )
+            })
+            .collect();
+        let mut allocs = 0usize;
+        let got = conv2d_from_patch_multi_prepacked(&patch, rows, cols, &packs, oh, ow, |len| {
+            allocs += 1;
+            vec![0.0; len]
+        });
+        assert_eq!(allocs, ks.len());
+        let refs: Vec<&Tensor4> = ks.iter().collect();
+        let want = conv2d_from_patch_multi(&patch, rows, cols, &refs, oh, ow);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.data, w.data, "prepacked diverged from per-call packing");
+        }
+        assert!(
+            conv2d_from_patch_multi_prepacked(&patch, rows, cols, &[], oh, ow, |len| vec![
+                0.0;
+                len
+            ])
+            .is_empty()
+        );
     }
 
     #[test]

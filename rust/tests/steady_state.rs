@@ -1,0 +1,243 @@
+//! Steady-state acceptance suite for plan-resident prepacked weights
+//! and the zero-alloc job pipeline (DESIGN.md §Plan-resident packing &
+//! arenas).
+//!
+//! Two contracts are asserted here:
+//!
+//! 1. **Bit identity.** The prepacked worker path (filter slabs packed
+//!    into GEMM panels once at plan build) produces byte-for-byte the
+//!    same outputs as per-job worker-side packing, over randomized
+//!    shapes, batch sizes 1..4, rotating straggler subsets, and every
+//!    bit-exact kernel backend this machine can run.
+//! 2. **Zero steady-state work.** Past warm-up, a serving loop performs
+//!    zero filter packs (the pack counter freezes at plan build) and
+//!    zero hot-path heap allocations (arena misses freeze; every coded
+//!    slab, reply block, and staging buffer is a pooled reuse), and the
+//!    arena reaches quiescence (every buffer returned) between waves.
+
+use fcdcc::cluster::{Cluster, StragglerModel};
+use fcdcc::engine::Im2colEngine;
+use fcdcc::fcdcc::{FcdccPlan, ResidentFilters, WorkerResult};
+use fcdcc::linalg::kernel;
+use fcdcc::model::ConvLayer;
+use fcdcc::tensor::{conv2d, Tensor3, Tensor4};
+use fcdcc::util::{mse, rng::Rng};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Poll the plan arena until every outstanding buffer has been returned
+/// (worker threads recycle asynchronously), failing after `deadline`.
+fn await_quiescence(plan: &FcdccPlan, deadline: Duration, what: &str) {
+    let t0 = Instant::now();
+    while plan.arena().outstanding() != 0 {
+        assert!(
+            t0.elapsed() < deadline,
+            "{what}: {} arena buffers still outstanding after {deadline:?}",
+            plan.arena().outstanding()
+        );
+        std::thread::yield_now();
+    }
+}
+
+/// Small feasible CRME configurations (layer, k_a, k_b, n) reused from
+/// the repo's correctness suites.
+fn configs() -> Vec<(ConvLayer, usize, usize, usize)> {
+    vec![
+        (ConvLayer::new("s1", 2, 12, 10, 8, 3, 3, 1, 0), 4, 2, 5),
+        (ConvLayer::new("s2", 2, 12, 10, 8, 3, 3, 1, 0), 4, 2, 4),
+        (ConvLayer::new("s3", 3, 16, 8, 4, 3, 3, 1, 1), 2, 2, 4),
+    ]
+}
+
+/// One coded job on `plan` through the **fused worker path**
+/// (`run_im2col` — the path that consumes the prepacked panels),
+/// decoding from the given survivor subset and recycling everything.
+fn run_once(
+    plan: &FcdccPlan,
+    xs: &[&Tensor3],
+    cf: &[ResidentFilters],
+    survivors: &[usize],
+) -> Vec<Tensor3> {
+    let payloads = plan.make_payloads(plan.encode_input_batch(xs), cf);
+    let results: Vec<WorkerResult> =
+        survivors.iter().map(|&i| payloads[i].run_im2col()).collect();
+    let refs: Vec<&WorkerResult> = results.iter().collect();
+    let out = plan.decode_batch_refs(&refs).unwrap();
+    drop(refs);
+    for r in results {
+        r.recycle();
+    }
+    for p in payloads {
+        p.recycle();
+    }
+    out
+}
+
+/// The tentpole's correctness bar: prepacked == per-job packing,
+/// bitwise, across shapes × batch sizes × straggler subsets × backends.
+/// All `kernel::set_active` switching for this file lives inside this
+/// one test (the backend is process-global).
+#[test]
+fn prepacked_path_bit_identical_across_shapes_batches_survivors_backends() {
+    let prev = kernel::active();
+    let mut rng = Rng::new(2026);
+    for (layer, k_a, k_b, n) in configs() {
+        let pre = FcdccPlan::new_crme(&layer, k_a, k_b, n).unwrap();
+        let per = FcdccPlan::new_crme(&layer, k_a, k_b, n)
+            .unwrap()
+            .with_prepack(false);
+        assert!(pre.prepack() && !per.prepack());
+        let k = Tensor4::random(layer.n, layer.c, layer.kh, layer.kw, &mut rng);
+        let cf_pre = pre.encode_filters(&k);
+        let cf_per = per.encode_filters(&k);
+        assert!(cf_pre.iter().all(|rf| rf.packs.is_some()));
+        assert!(cf_per.iter().all(|rf| rf.packs.is_none()));
+        let delta = pre.delta();
+        for batch in 1..=4usize {
+            // Rotate the straggler subset with the batch size so every
+            // worker appears in (and drops out of) some decode.
+            let survivors: Vec<usize> = (0..delta).map(|i| (i + batch) % n).collect();
+            let xs: Vec<Tensor3> = (0..batch)
+                .map(|_| Tensor3::random(layer.c, layer.h, layer.w, &mut rng))
+                .collect();
+            let xrefs: Vec<&Tensor3> = xs.iter().collect();
+
+            kernel::set_active(kernel::Kind::Scalar);
+            let scalar_pre = run_once(&pre, &xrefs, &cf_pre, &survivors);
+            let scalar_per = run_once(&per, &xrefs, &cf_per, &survivors);
+            for (s, (a, b)) in scalar_pre.iter().zip(&scalar_per).enumerate() {
+                assert_eq!(
+                    a.data, b.data,
+                    "{}: sample {s} diverged between prepacked and per-job \
+                     packing (batch {batch}, survivors {survivors:?})",
+                    layer.name
+                );
+                let want = conv2d(&xs[s], &k, layer.params());
+                assert!(
+                    mse(&a.data, &want.data) < 1e-16,
+                    "{}: sample {s} diverged from the conv reference",
+                    layer.name
+                );
+            }
+            for kind in kernel::available() {
+                kernel::set_active(kind);
+                let got_pre = run_once(&pre, &xrefs, &cf_pre, &survivors);
+                let got_per = run_once(&per, &xrefs, &cf_per, &survivors);
+                for (s, got) in got_pre.iter().enumerate() {
+                    assert_eq!(
+                        got.data,
+                        scalar_pre[s].data,
+                        "{}: prepacked sample {s} diverged on {} vs scalar",
+                        layer.name,
+                        kind.name()
+                    );
+                    assert_eq!(
+                        got_per[s].data, scalar_per[s].data,
+                        "{}: per-job sample {s} diverged on {} vs scalar",
+                        layer.name,
+                        kind.name()
+                    );
+                }
+            }
+        }
+        // The counters tell the two paths apart: plan-resident panels
+        // mean the prepacked plan never packed a filter at job time.
+        assert_eq!(pre.arena().filter_packs(), 0, "{}", layer.name);
+        assert!(per.arena().filter_packs() > 0, "{}", layer.name);
+    }
+    kernel::set_active(prev);
+}
+
+/// The tentpole's steady-state bar, on the live pipelined cluster:
+/// several jobs in flight at once, and past the first (warm-up) round
+/// the pack counter and the arena miss counter both freeze.
+#[test]
+fn pipelined_serving_reaches_zero_pack_zero_alloc_steady_state() {
+    let layer = ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0);
+    let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap();
+    let n = 4usize;
+    let k = Tensor4::random(8, 2, 3, 3, &mut Rng::new(5));
+    let cf = plan.encode_filters(&k);
+    let mut rng = Rng::new(17);
+    // Exactly δ workers survive each job: no stale late replies, so the
+    // arena reaches true quiescence between rounds.
+    let model = StragglerModel::Failures {
+        count: n - plan.delta(),
+    };
+    let mut cluster = Cluster::new(n, Arc::new(Im2colEngine));
+    let mut warm_misses = 0u64;
+    for round in 0..5u64 {
+        // Three jobs in flight at once (batch 2 each) — the pipelined
+        // shape, not lock-step sequential serving.
+        let waves: Vec<Vec<Tensor3>> = (0..3)
+            .map(|_| (0..2).map(|_| Tensor3::random(2, 12, 10, &mut rng)).collect())
+            .collect();
+        let handles: Vec<_> = waves
+            .iter()
+            .map(|xs| {
+                let refs: Vec<&Tensor3> = xs.iter().collect();
+                cluster.submit_batch(&plan, &refs, &cf, &model, &mut rng).unwrap()
+            })
+            .collect();
+        for (xs, h) in waves.iter().zip(handles) {
+            let (ys, _) = cluster.wait_batch(&plan, h).unwrap();
+            for (x, y) in xs.iter().zip(&ys) {
+                let want = conv2d(x, &k, layer.params());
+                assert!(mse(&y.data, &want.data) < 1e-16, "round {round}");
+            }
+        }
+        await_quiescence(&plan, Duration::from_secs(10), "pipelined round");
+        let st = plan.arena().stats();
+        if round == 0 {
+            warm_misses = st.misses;
+            assert!(warm_misses > 0, "warm-up must populate the arena");
+        } else {
+            assert_eq!(
+                st.misses, warm_misses,
+                "round {round}: hot path allocated past warm-up"
+            );
+        }
+        assert_eq!(
+            plan.arena().filter_packs(),
+            0,
+            "round {round}: plan-resident panels were re-packed"
+        );
+    }
+    let st = plan.arena().stats();
+    assert!(st.hits > st.misses, "steady state must be hit-dominated");
+    cluster.shutdown();
+}
+
+/// The `--no-prepack` escape hatch on the live cluster: same outputs,
+/// but the pack counter grows with every round — the observable the
+/// bench A/B record keys on.
+#[test]
+fn no_prepack_pipeline_counts_worker_side_packs() {
+    let layer = ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0);
+    let plan = FcdccPlan::new_crme(&layer, 4, 2, 4)
+        .unwrap()
+        .with_prepack(false);
+    let k = Tensor4::random(8, 2, 3, 3, &mut Rng::new(5));
+    let cf = plan.encode_filters(&k);
+    assert!(cf.iter().all(|rf| rf.packs.is_none()));
+    let mut rng = Rng::new(23);
+    let model = StragglerModel::Failures {
+        count: 4 - plan.delta(),
+    };
+    let mut cluster = Cluster::new(4, Arc::new(Im2colEngine));
+    let mut last_packs = 0u64;
+    for round in 0..3u64 {
+        let x = Tensor3::random(2, 12, 10, &mut rng);
+        let (y, _) = cluster.run_job(&plan, &x, &cf, &model, &mut rng).unwrap();
+        let want = conv2d(&x, &k, layer.params());
+        assert!(mse(&y.data, &want.data) < 1e-16, "round {round}");
+        await_quiescence(&plan, Duration::from_secs(10), "no-prepack round");
+        let packs = plan.arena().filter_packs();
+        assert!(
+            packs > last_packs,
+            "round {round}: per-job packing must keep counting packs"
+        );
+        last_packs = packs;
+    }
+    cluster.shutdown();
+}
