@@ -13,7 +13,7 @@
 //! `encode_decode_batch` record.
 
 use fcdcc::bench_harness::{bench, emit_json, fast_mode, report, BenchConfig};
-use fcdcc::coding::{self, Code, CrmeCode};
+use fcdcc::coding::{self, registry, Code, CrmeCode, SparseCode};
 use fcdcc::fcdcc::{FcdccPlan, WorkerResult};
 use fcdcc::linalg::{cond_2, gemm, kernel, lu, Mat};
 use fcdcc::metrics::Stats;
@@ -21,6 +21,7 @@ use fcdcc::model::ConvLayer;
 use fcdcc::partition::merge_output_blocks;
 use fcdcc::tensor::{conv2d, im2col::conv2d_im2col, ConvParams, Tensor3, Tensor4};
 use fcdcc::util::rng::Rng;
+use std::sync::Arc;
 
 /// One trajectory record: entries/second through the reference and the
 /// fused path, plus the speedup. The record carries the compute-pool
@@ -32,11 +33,13 @@ fn json_speed(op: &str, entries: usize, reference: &Stats, fused: &Stats) {
     let e = entries as f64;
     emit_json(&format!(
         "{{\"bench\":\"micro\",\"op\":\"{op}\",\"entries\":{entries},\
-         \"threads\":{},\"kernel\":\"{}\",\"ref_secs\":{:.6e},\"fused_secs\":{:.6e},\
+         \"threads\":{},\"kernel\":\"{}\",\"code\":\"{}\",\
+         \"ref_secs\":{:.6e},\"fused_secs\":{:.6e},\
          \"ref_entries_per_sec\":{:.4e},\"fused_entries_per_sec\":{:.4e},\
          \"speedup\":{:.3}}}",
         fcdcc::util::pool::global().threads(),
         kernel::active().name(),
+        registry::default_family().tag(),
         reference.mean,
         fused.mean,
         e / reference.mean,
@@ -198,6 +201,49 @@ fn main() {
     let both_ref = Stats::from(&[enc_ref.mean + dec_ref.mean]);
     let both_fused = Stats::from(&[enc_fused.mean + dec_fused.mean]);
     json_speed("encode_decode_batch", enc_entries + dec_entries, &both_ref, &both_fused);
+
+    // --- Program-compiled encode vs the dense coefficient scan: the
+    // same fused batch encoder on a weight-w sparse code, walking the
+    // plan-resident CSC program (nonzero coefficients only) vs scanning
+    // all k_A coefficient slots per coded column. Bit-identical by
+    // construction — asserted here in-bench, not just in tests.
+    println!(
+        "\n### program-compiled encode vs dense scan — weight-w sparse code, batch {batch}\n"
+    );
+    let sparse: Arc<dyn Code> = Arc::new(SparseCode::new(4, 8, 10).unwrap());
+    let splan = FcdccPlan::with_code(&layer, sparse).unwrap();
+    let got_prog = splan.encode_input_batch(&xrefs);
+    let got_dense = splan.encode_input_batch_dense(&xrefs);
+    assert_eq!(got_prog.len(), got_dense.len());
+    for (wp, wd) in got_prog.iter().zip(&got_dense) {
+        assert_eq!(wp.len(), wd.len());
+        for (pg, dn) in wp.iter().zip(wd) {
+            assert_eq!(pg.data, dn.data, "program encode diverged from dense scan");
+        }
+    }
+    let nnz_frac = splan.encode_program_a().nnz_frac();
+    let enc_dense = bench(cfg, || splan.encode_input_batch_dense(&xrefs));
+    let enc_prog = bench(cfg, || splan.encode_input_batch(&xrefs));
+    report("encode batch (dense k_A scan)", &enc_dense);
+    report(
+        &format!("encode batch (compiled program, nnz frac {nnz_frac:.2})"),
+        &enc_prog,
+    );
+    let sspec = splan.spec();
+    let sp_entries =
+        batch * sspec.n * sspec.ell_a * layer.c * splan.apcp.h_hat * (layer.w + 2 * layer.pad);
+    emit_json(&format!(
+        "{{\"bench\":\"micro\",\"op\":\"sparse_program_vs_dense_scan\",\
+         \"entries\":{sp_entries},\"threads\":{},\"kernel\":\"{}\",\
+         \"code\":\"sparse\",\"nnz_frac\":{:.4},\
+         \"ref_secs\":{:.6e},\"fused_secs\":{:.6e},\"speedup\":{:.3}}}",
+        fcdcc::util::pool::global().threads(),
+        kernel::active().name(),
+        nnz_frac,
+        enc_dense.mean,
+        enc_prog.mean,
+        enc_dense.mean / enc_prog.mean,
+    ));
 
     println!("\n### linalg (256x256 matmul / LU / transpose)\n");
     let a = Mat::random(256, 256, &mut rng);

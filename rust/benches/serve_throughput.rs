@@ -26,15 +26,17 @@ use std::time::Duration;
 fn json_line(model: &str, mode: &str, stats: &ServeStats) {
     emit_json(&format!(
         "{{\"bench\":\"serve_throughput\",\"straggler\":\"{}\",\"mode\":\"{}\",\
-         \"threads\":{},\"kernel\":\"{}\",\"pack_count\":{},\"depth\":{},\
+         \"threads\":{},\"kernel\":\"{}\",\"code\":\"{}\",\"pack_count\":{},\"depth\":{},\
          \"batch_window\":{},\"requests\":{},\"rps\":{:.3},\
          \"latency_p50_ms\":{:.3},\"latency_p95_ms\":{:.3},\"coded_jobs\":{},\
          \"mean_batch\":{:.3},\"inversions\":{},\"inverse_cache_hits\":{},\
-         \"arena_allocs\":{},\"arena_hits\":{}}}",
+         \"arena_allocs\":{},\"arena_hits\":{},\
+         \"encode_terms\":{},\"encode_dense_terms\":{}}}",
         model,
         mode,
         fcdcc::util::pool::global().threads(),
         stats.kernel,
+        stats.code,
         stats.pack_count,
         stats.max_in_flight,
         stats.batch_window,
@@ -48,6 +50,8 @@ fn json_line(model: &str, mode: &str, stats: &ServeStats) {
         stats.inverse_cache.hits,
         stats.arena.misses,
         stats.arena.hits,
+        stats.encode.terms,
+        stats.encode.dense_terms,
     ));
 }
 

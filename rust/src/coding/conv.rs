@@ -1,0 +1,235 @@
+//! Banded convolutional code (Das–Ramamoorthy–Vaswani style): each
+//! coded column combines a short sliding **band** of partitions instead
+//! of all `k`, so the compiled encode program performs O(band) axpy
+//! sweeps per coded slab where CRME pays O(k).
+//!
+//! Column `c` of a side with `k ≥ 2` partitions has support
+//! `{(c + t) mod k : t < band}` — consecutive coded columns slide the
+//! band by one, the convolutional-code picture. Coefficients are random
+//! signs times magnitudes in `[0.5, 1.5)` (bounded away from zero so a
+//! nonzero never cancels structurally), drawn deterministically from
+//! `util::rng` seeds mixed over `(k_A, k_B, n, attempt)`.
+//!
+//! A fixed band is not guaranteed to make every δ-subset recovery
+//! matrix invertible, so construction **resamples**: each attempt draws
+//! fresh coefficients and, every few failed attempts, widens the band
+//! toward dense; every candidate is validated across all rotating
+//! contiguous δ-subsets, every δ-subset when the total count is small,
+//! and seeded random subsets, with a bounded conditioning proxy (see
+//! `coding::validate_recovery_subsets`) — so accepted codes decode
+//! exactly at δ survivors under straggler rotation, like CRME.
+//!
+//! The worker geometry mirrors CRME's embedding (`ℓ = 2` per side
+//! unless `k = 1`, partition counts restricted to the paper's feasible
+//! set `S = {1} ∪ 2ℕ`), so the family is a δ-preserving drop-in for
+//! every CRME configuration.
+
+use crate::coding::crme::feasible_k;
+use crate::coding::{mix_seed, random_coef, validate_recovery_subsets, Code, CodeSpec};
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Result};
+
+/// Nonzeros per coded column before any widening (clamped to `k`).
+pub const BASE_BAND: usize = 3;
+
+/// Resampling budget before construction gives up.
+const MAX_ATTEMPTS: usize = 64;
+
+/// Widen the band by one every this many failed attempts.
+const WIDEN_EVERY: usize = 8;
+
+/// A banded convolutional code instance.
+pub struct ConvCode {
+    spec: CodeSpec,
+    a: Mat,
+    b: Mat,
+    band_a: usize,
+    band_b: usize,
+    name: String,
+}
+
+fn band_for(k: usize, attempt: usize) -> usize {
+    if k == 1 {
+        1
+    } else {
+        (BASE_BAND + attempt / WIDEN_EVERY).min(k)
+    }
+}
+
+/// `k × cols` banded matrix: column `c` holds random coefficients on
+/// rows `{(c + t) mod k : t < band}`. A `k = 1` side is the uncoded row
+/// of ones, exactly like CRME's degenerate side.
+fn banded(k: usize, cols: usize, band: usize, rng: &mut Rng) -> Mat {
+    if k == 1 {
+        return Mat::from_vec(1, cols, vec![1.0; cols]);
+    }
+    let mut m = Mat::zeros(k, cols);
+    for c in 0..cols {
+        for t in 0..band {
+            m.set((c + t) % k, c, random_coef(rng));
+        }
+    }
+    m
+}
+
+impl ConvCode {
+    /// Build a banded convolutional code for `k_a` input partitions,
+    /// `k_b` filter partitions and `n` workers (default seed).
+    pub fn new(k_a: usize, k_b: usize, n: usize) -> Result<Self> {
+        Self::with_seed(k_a, k_b, n, 0)
+    }
+
+    /// Same, with an explicit seed folded into the deterministic
+    /// coefficient draws.
+    pub fn with_seed(k_a: usize, k_b: usize, n: usize, seed: u64) -> Result<Self> {
+        ensure!(feasible_k(k_a), "k_a={k_a} not in S (must be 1 or even)");
+        ensure!(feasible_k(k_b), "k_b={k_b} not in S (must be 1 or even)");
+        ensure!(n >= 1, "need at least one worker");
+        let ell_a = if k_a == 1 { 1 } else { 2 };
+        let ell_b = if k_b == 1 { 1 } else { 2 };
+        let spec = CodeSpec {
+            k_a,
+            k_b,
+            n,
+            ell_a,
+            ell_b,
+        };
+        ensure!(
+            spec.delta() <= n,
+            "recovery threshold delta={} exceeds n={n} (k_a·k_b too large)",
+            spec.delta()
+        );
+        for attempt in 0..MAX_ATTEMPTS {
+            let band_a = band_for(k_a, attempt);
+            let band_b = band_for(k_b, attempt);
+            let draw = mix_seed(0xC0DE_BA2D ^ seed, &[k_a, k_b, n, attempt]);
+            let mut rng = Rng::new(draw);
+            let candidate = Self {
+                spec,
+                a: banded(k_a, ell_a * n, band_a, &mut rng),
+                b: banded(k_b, ell_b * n, band_b, &mut rng),
+                band_a,
+                band_b,
+                name: format!(
+                    "ConvBand(k_A={k_a},k_B={k_b},n={n},band_A={band_a},band_B={band_b})"
+                ),
+            };
+            if validate_recovery_subsets(&candidate, draw) {
+                return Ok(candidate);
+            }
+        }
+        bail!(
+            "no well-conditioned banded code after {MAX_ATTEMPTS} attempts \
+             for k_a={k_a}, k_b={k_b}, n={n}"
+        )
+    }
+
+    /// Accepted band width of the input side.
+    pub fn band_a(&self) -> usize {
+        self.band_a
+    }
+
+    /// Accepted band width of the filter side.
+    pub fn band_b(&self) -> usize {
+        self.band_b
+    }
+}
+
+impl Code for ConvCode {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> CodeSpec {
+        self.spec
+    }
+
+    fn mat_a(&self) -> &Mat {
+        &self.a
+    }
+
+    fn mat_b(&self) -> &Mat {
+        &self.b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::contiguous_subset;
+    use crate::linalg::{cond_2, lu};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn shapes_and_band_structure() {
+        let c = ConvCode::new(8, 2, 5).unwrap(); // delta = 4
+        assert_eq!(c.spec().delta(), 4);
+        assert_eq!(c.mat_a().rows, 8);
+        assert_eq!(c.mat_a().cols, 10);
+        assert_eq!(c.mat_b().rows, 2);
+        assert_eq!(c.mat_b().cols, 10);
+        // Every A column carries at most band_a nonzeros on the sliding
+        // support rows — the structure the encode program exploits.
+        let a = c.mat_a();
+        for col in 0..a.cols {
+            let nnz = (0..a.rows).filter(|&r| a.get(r, col) != 0.0).count();
+            assert!(nnz <= c.band_a(), "col {col}: {nnz} > band {}", c.band_a());
+            for t in 0..c.band_a() {
+                assert_ne!(a.get((col + t) % 8, col), 0.0, "hole in band at {col}");
+            }
+        }
+    }
+
+    #[test]
+    fn recovery_invertible_all_delta_subsets_small() {
+        let c = ConvCode::new(2, 4, 5).unwrap(); // delta = 2
+        for i in 0..5 {
+            for j in (i + 1)..5 {
+                let e = c.recovery(&[i, j]);
+                assert!(e.is_square());
+                assert!(
+                    lu::Lu::factor(&e).is_ok(),
+                    "singular recovery for subset [{i},{j}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn recovery_invertible_random_subsets_larger() {
+        let c = ConvCode::new(4, 8, 12).unwrap(); // delta = 8
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let subset = rng.choose_indices(12, 8);
+            let k = cond_2(&c.recovery(&subset));
+            assert!(k.is_finite(), "singular recovery for {subset:?}");
+        }
+    }
+
+    #[test]
+    fn degenerate_k_a_one() {
+        let c = ConvCode::new(1, 8, 6).unwrap(); // delta = 4
+        assert_eq!(c.spec().ell_a, 1);
+        assert_eq!(c.spec().delta(), 4);
+        let e = c.recovery(&contiguous_subset(6, 4, 2));
+        assert_eq!(e.rows, 8);
+        assert!(lu::Lu::factor(&e).is_ok());
+    }
+
+    #[test]
+    fn deterministic_construction() {
+        let c1 = ConvCode::new(4, 2, 5).unwrap();
+        let c2 = ConvCode::new(4, 2, 5).unwrap();
+        assert_eq!(c1.mat_a().data, c2.mat_a().data);
+        assert_eq!(c1.mat_b().data, c2.mat_b().data);
+        let seeded = ConvCode::with_seed(4, 2, 5, 99).unwrap();
+        assert_ne!(seeded.mat_a().data, c1.mat_a().data);
+    }
+
+    #[test]
+    fn rejects_bad_parameters() {
+        assert!(ConvCode::new(3, 4, 10).is_err()); // odd k_a > 1
+        assert!(ConvCode::new(4, 4, 3).is_err()); // delta=4 > n=3
+    }
+}

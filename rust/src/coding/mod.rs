@@ -27,16 +27,25 @@
 //! reference combiners stay valid correctness oracles for the fused
 //! hot paths at every dispatch level.
 
+pub mod conv;
 pub mod crme;
 pub mod fahim_cadambe;
+pub mod program;
+pub mod registry;
+pub mod sparse;
 pub mod vandermonde;
 
 use crate::linalg::{kron, lu, Mat};
 use crate::tensor::{Tensor3, Tensor4};
+use crate::util::rng::{Rng, SplitMix64};
 use anyhow::{ensure, Context, Result};
 
+pub use conv::ConvCode;
 pub use crme::CrmeCode;
 pub use fahim_cadambe::FahimCadambeCode;
+pub use program::EncodeProgram;
+pub use registry::CodeFamily;
+pub use sparse::SparseCode;
 pub use vandermonde::VandermondeCode;
 
 /// Static description of a coded-convolution scheme instance.
@@ -254,6 +263,101 @@ pub fn decode_outputs_with(
 /// the recovery matrix for the contiguous subset starting at `start`.
 pub fn contiguous_subset(n: usize, delta: usize, start: usize) -> Vec<usize> {
     (0..delta).map(|i| (start + i) % n).collect()
+}
+
+/// Fold integer parameters into one deterministic seed (SplitMix64
+/// avalanche per component) for the resampling code constructors.
+pub(crate) fn mix_seed(tag: u64, parts: &[usize]) -> u64 {
+    let mut x = tag;
+    for &v in parts {
+        x = SplitMix64::new(x ^ v as u64).next_u64();
+    }
+    x
+}
+
+/// A random encoding coefficient: random sign times a magnitude in
+/// `[0.5, 1.5)` — bounded away from zero so structural nonzeros stay
+/// numerically nonzero.
+pub(crate) fn random_coef(rng: &mut Rng) -> f64 {
+    let mag = rng.uniform(0.5, 1.5);
+    if rng.chance(0.5) {
+        mag
+    } else {
+        -mag
+    }
+}
+
+/// Conditioning proxy bound accepted by [`validate_recovery_subsets`]:
+/// `‖E‖∞·‖E⁻¹‖∞ ≤ MAX_COND_GROWTH · dim`. Tight enough that accepted
+/// codes decode LeNet-scale layers to ~1e-20 MSE, loose enough that
+/// random sparse structures can pass at sweep scale.
+pub(crate) const MAX_COND_GROWTH: f64 = 1e4;
+
+/// Enumerate all `k`-subsets of `0..n` iff there are at most `cap`.
+fn enumerate_subsets(n: usize, k: usize, cap: usize) -> Option<Vec<Vec<usize>>> {
+    let mut count = 1usize;
+    for i in 0..k {
+        count = count.checked_mul(n - i)? / (i + 1);
+        if count > cap * k {
+            return None;
+        }
+    }
+    if count > cap {
+        return None;
+    }
+    let mut out = Vec::with_capacity(count);
+    let mut idx: Vec<usize> = (0..k).collect();
+    loop {
+        out.push(idx.clone());
+        // Advance to the next combination in lexicographic order.
+        let mut i = k;
+        loop {
+            if i == 0 {
+                return Some(out);
+            }
+            i -= 1;
+            if idx[i] != i + n - k {
+                break;
+            }
+        }
+        idx[i] += 1;
+        for j in i + 1..k {
+            idx[j] = idx[j - 1] + 1;
+        }
+    }
+}
+
+/// Acceptance check for the resampling code constructors (Conv/Sparse):
+/// every rotating contiguous δ-subset, every δ-subset outright when
+/// there are few enough, and a handful of seeded random δ-subsets must
+/// all yield an invertible recovery matrix whose conditioning proxy
+/// `‖E‖∞·‖E⁻¹‖∞` stays under [`MAX_COND_GROWTH`]`· dim` — the bar that
+/// makes "decodes exactly at δ survivors under straggler rotation" hold
+/// for randomly structured families, not just CRME's closed form.
+pub(crate) fn validate_recovery_subsets(code: &dyn Code, seed: u64) -> bool {
+    let s = code.spec();
+    let delta = s.delta();
+    let dim = delta * s.blocks_per_worker();
+    let bound = MAX_COND_GROWTH * dim as f64;
+    let ok = |subset: &[usize]| -> bool {
+        let e = code.recovery(subset);
+        match lu::invert(&e) {
+            Ok(inv) => e.norm_inf() * inv.norm_inf() <= bound,
+            Err(_) => false,
+        }
+    };
+    for start in 0..s.n {
+        if !ok(&contiguous_subset(s.n, delta, start)) {
+            return false;
+        }
+    }
+    match enumerate_subsets(s.n, delta, 64) {
+        Some(all) => all.iter().all(|sub| ok(sub)),
+        None => {
+            let mut rng = Rng::new(seed);
+            (0..8).all(|_| ok(&rng.choose_indices(s.n, delta)))
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,234 @@
+//! The shared code-family registry: one constructor path for every
+//! linear code the stack can serve with, plus the process-global
+//! default family selected by `--code` / `FCDCC_CODE`.
+//!
+//! Before this module, `coordinator::stability` owned a private
+//! `build_code` and the serving path hardcoded CRME; now stability
+//! sweeps, `NetworkPlan`, pooling, and the CLI all construct families
+//! through [`CodeFamily::build`], and the session default follows the
+//! same resolve/warn/fall-back contract as `linalg::kernel`: an
+//! unknown family name warns and falls back to CRME, never fails.
+
+use super::{Code, ConvCode, CrmeCode, FahimCadambeCode, SparseCode, VandermondeCode};
+use crate::coding::vandermonde::PointSet;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+
+/// Every constructible code family, in sweep/report order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum CodeFamily {
+    /// The paper's CRME scheme (rotation-embedded circulant Vandermonde).
+    Crme = 0,
+    /// Real polynomial code on equispaced points (the Fig. 3/4 rival).
+    Vandermonde = 1,
+    /// Real polynomial code on Chebyshev points.
+    Chebyshev = 2,
+    /// Fahim–Cadambe Chebyshev-basis code.
+    FahimCadambe = 3,
+    /// Banded convolutional code (sparse encode, O(band) per column).
+    Conv = 4,
+    /// Weight-w sparse random code (sparse encode, O(w) per column).
+    Sparse = 5,
+}
+
+impl CodeFamily {
+    pub const ALL: [CodeFamily; 6] = [
+        CodeFamily::Crme,
+        CodeFamily::Vandermonde,
+        CodeFamily::Chebyshev,
+        CodeFamily::FahimCadambe,
+        CodeFamily::Conv,
+        CodeFamily::Sparse,
+    ];
+
+    /// Short machine tag: the `--code` / `FCDCC_CODE` vocabulary, also
+    /// carried in `ServeStats` and bench JSON records.
+    pub fn tag(self) -> &'static str {
+        match self {
+            CodeFamily::Crme => "crme",
+            CodeFamily::Vandermonde => "vandermonde",
+            CodeFamily::Chebyshev => "chebyshev",
+            CodeFamily::FahimCadambe => "fahim-cadambe",
+            CodeFamily::Conv => "conv",
+            CodeFamily::Sparse => "sparse",
+        }
+    }
+
+    /// Human-readable scheme name used in stability tables.
+    pub fn display_name(self) -> &'static str {
+        match self {
+            CodeFamily::Crme => "FCDCC (CRME)",
+            CodeFamily::Vandermonde => "Real polynomial",
+            CodeFamily::Chebyshev => "Chebyshev-pts poly",
+            CodeFamily::FahimCadambe => "Fahim-Cadambe",
+            CodeFamily::Conv => "Conv (banded)",
+            CodeFamily::Sparse => "Sparse (weight-w)",
+        }
+    }
+
+    /// Parse a `tag()` string.
+    pub fn parse(name: &str) -> Option<CodeFamily> {
+        CodeFamily::ALL.iter().copied().find(|f| f.tag() == name)
+    }
+
+    /// Whether the family embeds with `ℓ = 2` per coded side (CRME's
+    /// geometry, which Conv/Sparse mirror) — such families need even
+    /// partition counts and satisfy `k_A·k_B = 4δ`; the ℓ = 1 polynomial
+    /// rivals need `k_A·k_B = δ`.
+    pub fn even_partitions(self) -> bool {
+        matches!(
+            self,
+            CodeFamily::Crme | CodeFamily::Conv | CodeFamily::Sparse
+        )
+    }
+
+    /// The partition product `k_A·k_B` realizing recovery threshold
+    /// `delta` under this family's embedding.
+    pub fn partition_product(self, delta: usize) -> usize {
+        if self.even_partitions() {
+            4 * delta
+        } else {
+            delta
+        }
+    }
+
+    /// Construct a code instance — the single shared constructor behind
+    /// stability sweeps, `NetworkPlan`, pooling, and the CLI.
+    pub fn build(self, k_a: usize, k_b: usize, n: usize) -> Result<Arc<dyn Code>> {
+        Ok(match self {
+            CodeFamily::Crme => Arc::new(CrmeCode::new(k_a, k_b, n)?),
+            CodeFamily::Vandermonde => {
+                Arc::new(VandermondeCode::new(k_a, k_b, n, PointSet::Equispaced)?)
+            }
+            CodeFamily::Chebyshev => {
+                Arc::new(VandermondeCode::new(k_a, k_b, n, PointSet::Chebyshev)?)
+            }
+            CodeFamily::FahimCadambe => Arc::new(FahimCadambeCode::new(k_a, k_b, n)?),
+            CodeFamily::Conv => Arc::new(ConvCode::new(k_a, k_b, n)?),
+            CodeFamily::Sparse => Arc::new(SparseCode::new(k_a, k_b, n)?),
+        })
+    }
+
+    fn from_u8(v: u8) -> Option<CodeFamily> {
+        CodeFamily::ALL.iter().copied().find(|&f| f as u8 == v)
+    }
+}
+
+/// Resolve a family request: `None` or `"auto"` selects CRME (the
+/// paper's scheme); an unknown name warns and falls back rather than
+/// failing — same contract as `linalg::kernel::resolve`.
+pub fn resolve(request: Option<&str>) -> (CodeFamily, Option<String>) {
+    match request {
+        None | Some("auto") => (CodeFamily::Crme, None),
+        Some(name) => match CodeFamily::parse(name) {
+            Some(f) => (f, None),
+            None => (
+                CodeFamily::Crme,
+                Some(format!(
+                    "unknown code family {name:?} (expected \
+                     auto|crme|vandermonde|chebyshev|fahim-cadambe|conv|sparse); \
+                     using crme"
+                )),
+            ),
+        },
+    }
+}
+
+const FAMILY_UNSET: u8 = u8::MAX;
+
+/// Process-global default family, initialized lazily from `FCDCC_CODE`
+/// (the CLI's `--code` overrides it via [`set_default`]).
+static DEFAULT: AtomicU8 = AtomicU8::new(FAMILY_UNSET);
+
+/// The session's default code family: `--code` if installed, else
+/// `FCDCC_CODE`, else CRME.
+pub fn default_family() -> CodeFamily {
+    match CodeFamily::from_u8(DEFAULT.load(Ordering::Relaxed)) {
+        Some(f) => f,
+        None => init_from_env(),
+    }
+}
+
+#[cold]
+fn init_from_env() -> CodeFamily {
+    let req = std::env::var("FCDCC_CODE").ok();
+    let (family, warning) = resolve(req.as_deref());
+    if DEFAULT
+        .compare_exchange(
+            FAMILY_UNSET,
+            family as u8,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        )
+        .is_ok()
+    {
+        if let Some(w) = warning {
+            eprintln!("fcdcc: {w}");
+        }
+        family
+    } else {
+        default_family()
+    }
+}
+
+/// Install `family` as the process default, returning the previous
+/// default (for scoped save/restore in tests).
+pub fn set_default(family: CodeFamily) -> CodeFamily {
+    let prev = default_family();
+    DEFAULT.store(family as u8, Ordering::Relaxed);
+    prev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_round_trip() {
+        for f in CodeFamily::ALL {
+            assert_eq!(CodeFamily::parse(f.tag()), Some(f), "{}", f.tag());
+            assert_eq!(CodeFamily::from_u8(f as u8), Some(f));
+        }
+        assert_eq!(CodeFamily::parse("pallas"), None);
+    }
+
+    #[test]
+    fn resolve_warns_and_falls_back() {
+        assert_eq!(resolve(None), (CodeFamily::Crme, None));
+        assert_eq!(resolve(Some("auto")), (CodeFamily::Crme, None));
+        assert_eq!(resolve(Some("sparse")), (CodeFamily::Sparse, None));
+        let (f, warn) = resolve(Some("nope"));
+        assert_eq!(f, CodeFamily::Crme);
+        assert!(warn.unwrap().contains("nope"));
+    }
+
+    #[test]
+    fn partition_products_match_embeddings() {
+        assert_eq!(CodeFamily::Crme.partition_product(8), 32);
+        assert_eq!(CodeFamily::Conv.partition_product(8), 32);
+        assert_eq!(CodeFamily::Sparse.partition_product(8), 32);
+        assert_eq!(CodeFamily::Vandermonde.partition_product(8), 8);
+        assert_eq!(CodeFamily::FahimCadambe.partition_product(8), 8);
+    }
+
+    #[test]
+    fn every_family_builds_a_feasible_instance() {
+        for f in CodeFamily::ALL {
+            let p = f.partition_product(2);
+            let (k_a, k_b) = if f.even_partitions() { (4, 2) } else { (2, 1) };
+            assert_eq!(k_a * k_b, p);
+            let code = f.build(k_a, k_b, 4).unwrap();
+            assert_eq!(code.spec().delta(), 2, "{}", f.tag());
+        }
+    }
+
+    #[test]
+    fn set_default_returns_previous() {
+        // Keep the observable default unchanged: other tests in this
+        // binary may construct plans through it concurrently.
+        let prev = set_default(default_family());
+        assert_eq!(set_default(prev), prev);
+    }
+}

@@ -1,0 +1,242 @@
+//! Weight-w sparse random code (Ramamoorthy–Das–Tang style): every
+//! coded column combines exactly `w` randomly chosen partitions, so
+//! encode cost per coded slab is O(w) axpy sweeps independent of `k` —
+//! the family that makes the compiled encode programs pay off at large
+//! partition counts.
+//!
+//! Column `c` of a side with `k ≥ 2` partitions always contains its
+//! **anchor** partition `c mod k` (guaranteeing every partition appears
+//! in some column of every worker window) plus `w − 1` further distinct
+//! partitions drawn uniformly; coefficients are random signs times
+//! magnitudes in `[0.5, 1.5)`. All draws come from `util::rng` seeded
+//! over `(k_A, k_B, n, attempt)`, so construction is deterministic.
+//!
+//! Random sparse supports are only invertible with high probability,
+//! not surely — construction **resamples** the whole structure until
+//! every rotating contiguous δ-subset (plus every δ-subset when the
+//! count is small, plus seeded random subsets) yields an invertible
+//! recovery matrix with a bounded conditioning proxy
+//! (`coding::validate_recovery_subsets`); after repeated failures the
+//! effective weight grows toward dense. Accepted codes therefore decode
+//! exactly at δ survivors under straggler rotation, like CRME.
+//!
+//! Worker geometry mirrors CRME's embedding (`ℓ = 2` per side unless
+//! `k = 1`, partition counts in the feasible set `S = {1} ∪ 2ℕ`), so
+//! the family is a δ-preserving drop-in for every CRME configuration.
+
+use crate::coding::crme::feasible_k;
+use crate::coding::{mix_seed, random_coef, validate_recovery_subsets, Code, CodeSpec};
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Result};
+
+/// Default nonzeros per coded column (clamped to `[2, k]` per side).
+pub const DEFAULT_WEIGHT: usize = 3;
+
+/// Resampling budget before construction gives up.
+const MAX_ATTEMPTS: usize = 64;
+
+/// Grow the effective weight by one every this many failed attempts.
+const GROW_EVERY: usize = 8;
+
+/// A weight-w sparse random code instance.
+pub struct SparseCode {
+    spec: CodeSpec,
+    a: Mat,
+    b: Mat,
+    weight_a: usize,
+    weight_b: usize,
+    name: String,
+}
+
+fn weight_for(k: usize, w: usize, attempt: usize) -> usize {
+    if k == 1 {
+        1
+    } else {
+        // A single-entry column is a scaled unit vector; two workers
+        // hitting the same anchor would be trivially singular, so the
+        // effective weight never drops below 2 on a coded side.
+        (w + attempt / GROW_EVERY).clamp(2, k)
+    }
+}
+
+/// `k × cols` weight-w matrix: column `c` holds random coefficients on
+/// its anchor row `c mod k` plus `w − 1` further random distinct rows.
+/// A `k = 1` side is the uncoded row of ones, like CRME's degenerate
+/// side.
+fn weighted(k: usize, cols: usize, w: usize, rng: &mut Rng) -> Mat {
+    if k == 1 {
+        return Mat::from_vec(1, cols, vec![1.0; cols]);
+    }
+    let mut m = Mat::zeros(k, cols);
+    for c in 0..cols {
+        let anchor = c % k;
+        let mut rows = vec![anchor];
+        // Draw w−1 distinct rows from 0..k−1, skipping the anchor.
+        for idx in rng.choose_indices(k - 1, w - 1) {
+            rows.push(if idx >= anchor { idx + 1 } else { idx });
+        }
+        rows.sort_unstable();
+        for r in rows {
+            m.set(r, c, random_coef(rng));
+        }
+    }
+    m
+}
+
+impl SparseCode {
+    /// Build a weight-w sparse random code with the default weight.
+    pub fn new(k_a: usize, k_b: usize, n: usize) -> Result<Self> {
+        Self::with_weight(k_a, k_b, n, DEFAULT_WEIGHT)
+    }
+
+    /// Build with an explicit requested per-column weight (clamped to
+    /// `[2, k]` on each coded side; grows on repeated validation
+    /// failures).
+    pub fn with_weight(k_a: usize, k_b: usize, n: usize, w: usize) -> Result<Self> {
+        ensure!(feasible_k(k_a), "k_a={k_a} not in S (must be 1 or even)");
+        ensure!(feasible_k(k_b), "k_b={k_b} not in S (must be 1 or even)");
+        ensure!(n >= 1, "need at least one worker");
+        ensure!(w >= 1, "weight must be >= 1");
+        let ell_a = if k_a == 1 { 1 } else { 2 };
+        let ell_b = if k_b == 1 { 1 } else { 2 };
+        let spec = CodeSpec {
+            k_a,
+            k_b,
+            n,
+            ell_a,
+            ell_b,
+        };
+        ensure!(
+            spec.delta() <= n,
+            "recovery threshold delta={} exceeds n={n} (k_a·k_b too large)",
+            spec.delta()
+        );
+        for attempt in 0..MAX_ATTEMPTS {
+            let weight_a = weight_for(k_a, w, attempt);
+            let weight_b = weight_for(k_b, w, attempt);
+            let draw = mix_seed(0x5BA2_5E17 ^ (w as u64), &[k_a, k_b, n, attempt]);
+            let mut rng = Rng::new(draw);
+            let candidate = Self {
+                spec,
+                a: weighted(k_a, ell_a * n, weight_a, &mut rng),
+                b: weighted(k_b, ell_b * n, weight_b, &mut rng),
+                weight_a,
+                weight_b,
+                name: format!(
+                    "SparseW(k_A={k_a},k_B={k_b},n={n},w_A={weight_a},w_B={weight_b})"
+                ),
+            };
+            if validate_recovery_subsets(&candidate, draw) {
+                return Ok(candidate);
+            }
+        }
+        bail!(
+            "no well-conditioned weight-{w} sparse code after {MAX_ATTEMPTS} \
+             attempts for k_a={k_a}, k_b={k_b}, n={n}"
+        )
+    }
+
+    /// Accepted per-column weight of the input side.
+    pub fn weight_a(&self) -> usize {
+        self.weight_a
+    }
+
+    /// Accepted per-column weight of the filter side.
+    pub fn weight_b(&self) -> usize {
+        self.weight_b
+    }
+}
+
+impl Code for SparseCode {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn spec(&self) -> CodeSpec {
+        self.spec
+    }
+
+    fn mat_a(&self) -> &Mat {
+        &self.a
+    }
+
+    fn mat_b(&self) -> &Mat {
+        &self.b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::contiguous_subset;
+    use crate::linalg::{cond_2, lu};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn shapes_and_weight_structure() {
+        let c = SparseCode::new(8, 2, 5).unwrap(); // delta = 4
+        assert_eq!(c.spec().delta(), 4);
+        assert_eq!(c.mat_a().rows, 8);
+        assert_eq!(c.mat_a().cols, 10);
+        let a = c.mat_a();
+        for col in 0..a.cols {
+            let nnz = (0..a.rows).filter(|&r| a.get(r, col) != 0.0).count();
+            assert_eq!(nnz, c.weight_a(), "col {col} weight");
+            assert_ne!(a.get(col % 8, col), 0.0, "anchor missing in col {col}");
+        }
+        // The point of the family: per-column work is w, not k.
+        assert!(c.weight_a() < 8);
+    }
+
+    #[test]
+    fn recovery_invertible_all_delta_subsets_small() {
+        let c = SparseCode::new(2, 4, 5).unwrap(); // delta = 2
+        for i in 0..5 {
+            for j in (i + 1)..5 {
+                let e = c.recovery(&[i, j]);
+                assert!(e.is_square());
+                assert!(
+                    lu::Lu::factor(&e).is_ok(),
+                    "singular recovery for subset [{i},{j}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn recovery_invertible_random_subsets_larger() {
+        let c = SparseCode::new(4, 8, 12).unwrap(); // delta = 8
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let subset = rng.choose_indices(12, 8);
+            let k = cond_2(&c.recovery(&subset));
+            assert!(k.is_finite(), "singular recovery for {subset:?}");
+        }
+    }
+
+    #[test]
+    fn degenerate_k_a_one() {
+        let c = SparseCode::new(1, 8, 6).unwrap(); // delta = 4
+        assert_eq!(c.spec().ell_a, 1);
+        assert_eq!(c.spec().delta(), 4);
+        let e = c.recovery(&contiguous_subset(6, 4, 1));
+        assert_eq!(e.rows, 8);
+        assert!(lu::Lu::factor(&e).is_ok());
+    }
+
+    #[test]
+    fn deterministic_construction() {
+        let c1 = SparseCode::new(4, 2, 5).unwrap();
+        let c2 = SparseCode::new(4, 2, 5).unwrap();
+        assert_eq!(c1.mat_a().data, c2.mat_a().data);
+        assert_eq!(c1.mat_b().data, c2.mat_b().data);
+    }
+
+    #[test]
+    fn rejects_bad_parameters() {
+        assert!(SparseCode::new(3, 4, 10).is_err()); // odd k_a > 1
+        assert!(SparseCode::new(4, 4, 3).is_err()); // delta=4 > n=3
+        assert!(SparseCode::with_weight(4, 4, 4, 0).is_err()); // zero weight
+    }
+}

@@ -8,6 +8,7 @@ pub mod serve;
 pub mod stability;
 
 use crate::cluster::{Cluster, StragglerModel};
+use crate::coding::CodeFamily;
 use crate::engine::{DirectEngine, Im2colEngine, TaskEngine};
 use crate::fcdcc::{cost, FcdccPlan};
 use crate::metrics::{fmt_secs, fmt_sci, Table};
@@ -70,6 +71,8 @@ pub struct RunConfig {
     pub delay: Duration,
     pub engine: Arc<dyn TaskEngine>,
     pub seed: u64,
+    /// Code family the layer is planned with (`--code` / `FCDCC_CODE`).
+    pub code: CodeFamily,
 }
 
 /// Run one convolutional layer through the full FCDCC stack and print a
@@ -80,9 +83,11 @@ pub fn run_layer(cfg: RunConfig) -> Result<f64> {
         "layer {}: C={} H={} W={} N={} K={}x{} s={} p={}",
         layer.name, layer.c, layer.h, layer.w, layer.n, layer.kh, layer.kw, layer.stride, layer.pad
     );
-    let plan = FcdccPlan::new_crme(layer, cfg.k_a, cfg.k_b, cfg.n)?;
+    let code = cfg.code.build(cfg.k_a, cfg.k_b, cfg.n)?;
+    let plan = FcdccPlan::with_code(layer, code)?;
     println!(
-        "plan: k_A={} k_B={} n={} delta={} gamma={}",
+        "plan: code={} k_A={} k_B={} n={} delta={} gamma={}",
+        cfg.code.tag(),
         cfg.k_a,
         cfg.k_b,
         cfg.n,
@@ -168,6 +173,8 @@ mod tests {
             delay: Duration::from_millis(50),
             engine: Arc::new(DirectEngine),
             seed: 7,
+            // Pin CRME: the 1e-20 bar below is the CRME pipeline's.
+            code: CodeFamily::Crme,
         };
         let err = run_layer(cfg).unwrap();
         assert!(err < 1e-20, "mse={err:e}");

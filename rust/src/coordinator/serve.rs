@@ -20,9 +20,10 @@
 //! loop — same code path, no overlap.
 
 use crate::cluster::{Cluster, JobHandle, StragglerModel};
+use crate::coding::{registry, CodeFamily};
 use crate::engine::{Im2colEngine, TaskEngine};
 use crate::fcdcc::{NetworkPlan, PlanOptions};
-use crate::metrics::{CacheStats, Stats};
+use crate::metrics::{CacheStats, EncodeStats, Stats};
 use crate::model::network::softmax;
 use crate::model::{Activation, Network};
 use crate::tensor::Tensor3;
@@ -57,6 +58,9 @@ pub struct ServeConfig {
     /// default). `false` (the CLI's `--no-prepack`) re-packs per job on
     /// the workers — the A/B baseline for the prepack speedup.
     pub prepack: bool,
+    /// Code family every conv stage is planned with (`--code` /
+    /// `FCDCC_CODE`, defaulting to the session's selected family).
+    pub code: CodeFamily,
 }
 
 impl ServeConfig {
@@ -75,6 +79,7 @@ impl ServeConfig {
             batch_window: 1,
             verify_every: 1,
             prepack: true,
+            code: registry::default_family(),
         }
     }
 }
@@ -130,6 +135,14 @@ pub struct ServeStats {
     /// (`linalg::kernel::active()`): "scalar", "avx2", "neon", or the
     /// opt-in "fused-ma".
     pub kernel: &'static str,
+    /// The code family every conv stage was planned with
+    /// (`CodeFamily::tag()`): "crme", "conv", "sparse", ….
+    pub code: &'static str,
+    /// Encode-pass accounting of the program-compiled input encoder,
+    /// accumulated across every stage and request: `terms` coefficient
+    /// applications performed where a dense scan of all `k_A`
+    /// coefficients would have visited `dense_terms` slots.
+    pub encode: EncodeStats,
     /// Final logits of every request, in request order.
     pub logits: Vec<Vec<f64>>,
 }
@@ -185,6 +198,7 @@ pub fn serve_lenet(cfg: ServeConfig) -> Result<ServeStats> {
     let net = Network::lenet5_random(42);
     let opts = PlanOptions {
         prepack: cfg.prepack,
+        code: cfg.code,
         ..PlanOptions::default()
     };
     let plan = NetworkPlan::with_options(net, &cfg.partitions, cfg.n_workers, opts)?;
@@ -383,6 +397,8 @@ fn run_pipeline(
         arena: plan.arena_stats(),
         pack_count: plan.filter_packs(),
         kernel: crate::linalg::kernel::active().name(),
+        code: cfg.code.tag(),
+        encode: plan.encode_stats(),
         logits,
     })
 }
@@ -502,6 +518,18 @@ mod tests {
         // Sequential unbatched serving: one coded job per request per conv.
         assert_eq!(stats.coded_jobs, 6);
         assert_eq!(stats.mean_batch, 1.0);
+        // The run reports the family it was planned with, and the
+        // program-walked encoder did strictly less coefficient work than
+        // a dense k_A-scan (CRME's structural zeros; the sparse family's
+        // weight-w columns — both strict at the LeNet partitions).
+        assert_eq!(stats.code, registry::default_family().tag());
+        assert!(stats.encode.cols > 0, "encode passes must be counted");
+        assert!(
+            stats.encode.terms < stats.encode.dense_terms,
+            "program encode must skip slots ({} vs {})",
+            stats.encode.terms,
+            stats.encode.dense_terms
+        );
     }
 
     #[test]

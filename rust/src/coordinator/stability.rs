@@ -3,11 +3,7 @@
 //! CRME/FCDCC vs real-Vandermonde polynomial codes vs Fahim–Cadambe, over
 //! the paper's (n, δ, γ) grid.
 
-use crate::coding::{
-    fahim_cadambe::FahimCadambeCode,
-    vandermonde::{PointSet, VandermondeCode},
-    Code, CrmeCode,
-};
+use crate::coding::CodeFamily;
 use crate::fcdcc::FcdccPlan;
 use crate::linalg::cond_2;
 use crate::model::ConvLayer;
@@ -20,6 +16,8 @@ use std::sync::Arc;
 #[derive(Clone, Debug)]
 pub struct StabilityPoint {
     pub scheme: &'static str,
+    /// Machine tag of the family (`CodeFamily::tag()`) for JSON records.
+    pub code: &'static str,
     pub n: usize,
     pub delta: usize,
     pub gamma: usize,
@@ -31,42 +29,6 @@ pub struct StabilityPoint {
     /// Decode MSE vs the single-node reference over the same subsets.
     pub mse_mean: f64,
     pub mse_worst: f64,
-}
-
-/// The scheme family of Fig. 3/4.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SchemeKind {
-    Crme,
-    RealVandermonde,
-    ChebPointsVandermonde,
-    FahimCadambe,
-}
-
-impl SchemeKind {
-    pub const ALL: [SchemeKind; 4] = [
-        SchemeKind::Crme,
-        SchemeKind::RealVandermonde,
-        SchemeKind::ChebPointsVandermonde,
-        SchemeKind::FahimCadambe,
-    ];
-
-    pub fn name(self) -> &'static str {
-        match self {
-            SchemeKind::Crme => "FCDCC (CRME)",
-            SchemeKind::RealVandermonde => "Real polynomial",
-            SchemeKind::ChebPointsVandermonde => "Chebyshev-pts poly",
-            SchemeKind::FahimCadambe => "Fahim-Cadambe",
-        }
-    }
-
-    /// Partition product k_A·k_B for a target recovery threshold δ:
-    /// 4δ for the ℓ=2 CRME embedding, δ for the ℓ=1 rivals.
-    pub fn partition_product(self, delta: usize) -> usize {
-        match self {
-            SchemeKind::Crme => 4 * delta,
-            _ => delta,
-        }
-    }
 }
 
 /// Pick a balanced feasible (k_A, k_B) with k_A·k_B = p, k_B | n_out,
@@ -96,36 +58,25 @@ pub fn factor_pair(p: usize, n_out: usize, h_out: usize, even: bool) -> Result<(
     best.ok_or_else(|| anyhow!("no feasible (k_A,k_B) for product {p} (N={n_out}, H'={h_out})"))
 }
 
-fn build_code(kind: SchemeKind, k_a: usize, k_b: usize, n: usize) -> Result<Arc<dyn Code>> {
-    Ok(match kind {
-        SchemeKind::Crme => Arc::new(CrmeCode::new(k_a, k_b, n)?),
-        SchemeKind::RealVandermonde => {
-            Arc::new(VandermondeCode::new(k_a, k_b, n, PointSet::Equispaced)?)
-        }
-        SchemeKind::ChebPointsVandermonde => {
-            Arc::new(VandermondeCode::new(k_a, k_b, n, PointSet::Chebyshev)?)
-        }
-        SchemeKind::FahimCadambe => Arc::new(FahimCadambeCode::new(k_a, k_b, n)?),
-    })
-}
-
 /// Evaluate one scheme on one (n, δ) configuration of a layer.
 /// `subset_samples` random δ-subsets are drawn (plus the adversarial
 /// "first δ workers" subset); condition numbers use the recovery matrix,
-/// MSE uses the full inline pipeline on random tensors.
+/// MSE uses the full inline pipeline on random tensors. Codes come from
+/// the shared registry ([`CodeFamily::build`]) — the same constructor
+/// path `NetworkPlan`, pooling, and the CLI use.
 pub fn evaluate(
-    kind: SchemeKind,
+    family: CodeFamily,
     layer: &ConvLayer,
     n: usize,
     delta: usize,
     subset_samples: usize,
     seed: u64,
 ) -> Result<StabilityPoint> {
-    let p = kind.partition_product(delta);
-    let (k_a, k_b) = factor_pair(p, layer.n, layer.h_out(), kind == SchemeKind::Crme)?;
-    let code = build_code(kind, k_a, k_b, n)?;
+    let p = family.partition_product(delta);
+    let (k_a, k_b) = factor_pair(p, layer.n, layer.h_out(), family.even_partitions())?;
+    let code = family.build(k_a, k_b, n)?;
     let plan = FcdccPlan::with_code(layer, Arc::clone(&code))?;
-    assert_eq!(plan.delta(), delta, "{:?}: delta mismatch", kind);
+    assert_eq!(plan.delta(), delta, "{:?}: delta mismatch", family);
 
     let mut rng = Rng::new(seed);
     let x = Tensor3::random(layer.c, layer.h, layer.w, &mut rng);
@@ -159,7 +110,8 @@ pub fn evaluate(
     let mse_worst = mses.iter().cloned().fold(0.0, f64::max);
 
     Ok(StabilityPoint {
-        scheme: kind.name(),
+        scheme: family.display_name(),
+        code: family.tag(),
         n,
         delta,
         gamma: n - delta,
@@ -181,10 +133,13 @@ pub fn stability_sweep(
 ) -> Vec<StabilityPoint> {
     let mut out = Vec::new();
     for &(n, delta) in configs {
-        for kind in SchemeKind::ALL {
-            match evaluate(kind, layer, n, delta, subset_samples, seed) {
+        for family in CodeFamily::ALL {
+            match evaluate(family, layer, n, delta, subset_samples, seed) {
                 Ok(p) => out.push(p),
-                Err(e) => eprintln!("skip {} at (n={n}, delta={delta}): {e:#}", kind.name()),
+                Err(e) => eprintln!(
+                    "skip {} at (n={n}, delta={delta}): {e:#}",
+                    family.display_name()
+                ),
             }
         }
     }
@@ -214,8 +169,8 @@ mod tests {
     fn crme_beats_real_vandermonde_at_scale() {
         let layer = small_layer();
         // (n, delta) = (20, 16): the regime where real Vandermonde degrades.
-        let crme = evaluate(SchemeKind::Crme, &layer, 20, 16, 4, 1).unwrap();
-        let real = evaluate(SchemeKind::RealVandermonde, &layer, 20, 16, 4, 1).unwrap();
+        let crme = evaluate(CodeFamily::Crme, &layer, 20, 16, 4, 1).unwrap();
+        let real = evaluate(CodeFamily::Vandermonde, &layer, 20, 16, 4, 1).unwrap();
         assert!(
             crme.cond_worst < real.cond_worst,
             "CRME {:.3e} should beat real Vandermonde {:.3e}",
@@ -230,10 +185,11 @@ mod tests {
     fn sweep_produces_all_schemes() {
         let layer = small_layer();
         let pts = stability_sweep(&layer, &[(5, 4)], 2, 3);
-        assert_eq!(pts.len(), 4);
+        assert_eq!(pts.len(), CodeFamily::ALL.len());
         for p in &pts {
             assert_eq!(p.gamma, 1);
             assert!(p.cond_worst >= 1.0);
+            assert!(CodeFamily::parse(p.code).is_some(), "tag {:?}", p.code);
         }
     }
 }

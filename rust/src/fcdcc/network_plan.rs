@@ -12,10 +12,11 @@
 //! pre-runtime code carried.
 
 use crate::cluster::{Cluster, JobHandle, JobReport, StragglerModel};
+use crate::coding::{registry, CodeFamily};
 use crate::fcdcc::inverse_cache::{InverseCache, DEFAULT_INVERSE_CACHE_CAP};
 use crate::fcdcc::scratch::{SlabArena, DEFAULT_ARENA_CAP};
 use crate::fcdcc::{FcdccPlan, ResidentFilters};
-use crate::metrics::CacheStats;
+use crate::metrics::{CacheStats, EncodeStats};
 use crate::model::network::add_bias;
 use crate::model::{Activation, Layer, Network};
 use crate::tensor::Tensor3;
@@ -34,6 +35,9 @@ pub struct PlanOptions {
     pub prepack: bool,
     /// Capacity (buffer count) of the shared slab arena.
     pub arena_capacity: usize,
+    /// Code family every conv stage is planned with. Defaults to the
+    /// session's selected family (`--code` / `FCDCC_CODE`, else CRME).
+    pub code: CodeFamily,
 }
 
 impl Default for PlanOptions {
@@ -41,6 +45,7 @@ impl Default for PlanOptions {
         Self {
             prepack: true,
             arena_capacity: DEFAULT_ARENA_CAP,
+            code: registry::default_family(),
         }
     }
 }
@@ -128,7 +133,8 @@ impl NetworkPlan {
                 );
                 let (k_a, k_b) = partitions[stages.len()];
                 let stage_idx = stages.len();
-                let plan = FcdccPlan::new_crme(shape, k_a, k_b, n_workers)?
+                let code = opts.code.build(k_a, k_b, n_workers)?;
+                let plan = FcdccPlan::with_code(shape, code)?
                     .with_inverse_cache(Arc::clone(&inverse_cache), stage_idx)
                     .with_arena(Arc::clone(&arena))
                     .with_prepack(opts.prepack);
@@ -183,6 +189,14 @@ impl NetworkPlan {
     /// panels were packed once at plan build and are plan-resident.
     pub fn filter_packs(&self) -> u64 {
         self.arena.filter_packs()
+    }
+
+    /// Encode-pass accounting of the program-compiled input encoder,
+    /// accumulated across every stage: coded slabs built, coefficient
+    /// terms applied, and the dense-scan slot count the compiled
+    /// programs avoided visiting.
+    pub fn encode_stats(&self) -> EncodeStats {
+        self.arena.encode_stats()
     }
 
     /// The slab arena shared by every stage of this plan.
@@ -330,6 +344,10 @@ mod tests {
         assert_eq!(cs.lookups(), 2, "one decode per conv stage");
         // Prepacking is on by default: workers never packed a filter.
         assert_eq!(plan.filter_packs(), 0);
+        // One program-walked encode pass per conv stage was counted.
+        let es = plan.encode_stats();
+        assert!(es.cols > 0, "encode passes must be counted");
+        assert!(es.terms <= es.dense_terms);
     }
 
     #[test]

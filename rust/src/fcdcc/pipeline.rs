@@ -34,7 +34,7 @@
 //! The pipeline is transport-agnostic: the `cluster` module runs payloads
 //! on simulated workers; tests run them inline.
 
-use crate::coding::{self, Code, CrmeCode};
+use crate::coding::{self, Code, CrmeCode, EncodeProgram};
 use crate::fcdcc::inverse_cache::{InverseCache, DEFAULT_INVERSE_CACHE_CAP};
 use crate::fcdcc::scratch::{SlabArena, DEFAULT_ARENA_CAP};
 use crate::linalg::gemm::{self, PackedA};
@@ -351,6 +351,13 @@ pub struct FcdccPlan {
     pub apcp: ApcpPlan,
     pub kccp: KccpPlan,
     pub code: Arc<dyn Code>,
+    /// `mat_a`'s sparsity, compiled once at plan build: per coded slab
+    /// column, the ascending-ordered `(partition, coef)` nonzeros. The
+    /// fused batch encoder iterates this instead of scanning all k_A
+    /// coefficients per column (see `coding::EncodeProgram`).
+    program_a: EncodeProgram,
+    /// `mat_b`'s compiled sparsity, driving the filter encode.
+    program_b: EncodeProgram,
     /// Recovery-inverse cache. Standalone plans own a private one;
     /// `NetworkPlan` shares a single cache across all of its stages.
     inverse_cache: Arc<InverseCache>,
@@ -385,11 +392,15 @@ impl FcdccPlan {
             .with_context(|| format!("APCP plan for {}", layer.name))?;
         let kccp = KccpPlan::new(layer.n, s.k_b)
             .with_context(|| format!("KCCP plan for {}", layer.name))?;
+        let program_a = EncodeProgram::compile(code.mat_a());
+        let program_b = EncodeProgram::compile(code.mat_b());
         Ok(Self {
             layer: layer.clone(),
             apcp,
             kccp,
             code,
+            program_a,
+            program_b,
             inverse_cache: Arc::new(InverseCache::new(DEFAULT_INVERSE_CACHE_CAP)),
             cache_stage: 0,
             arena: Arc::new(SlabArena::new(DEFAULT_ARENA_CAP)),
@@ -438,6 +449,16 @@ impl FcdccPlan {
         self.code.spec()
     }
 
+    /// The compiled input-side encode program (`mat_a`'s sparsity).
+    pub fn encode_program_a(&self) -> &EncodeProgram {
+        &self.program_a
+    }
+
+    /// The compiled filter-side encode program (`mat_b`'s sparsity).
+    pub fn encode_program_b(&self) -> &EncodeProgram {
+        &self.program_b
+    }
+
     /// Recovery threshold δ.
     pub fn delta(&self) -> usize {
         self.spec().delta()
@@ -448,11 +469,20 @@ impl FcdccPlan {
     /// job reuses them without deep-cloning — and, unless prepacking is
     /// disabled, each slab's packed GEMM operand, so steady-state jobs
     /// never pack the filter side again.
+    ///
+    /// The combine iterates the compiled `mat_b` program — only the
+    /// nonzero coefficients, in the ascending-partition order of the
+    /// reference `coding::encode_filters`, hence bit-identical slabs.
     pub fn encode_filters(&self, k: &Tensor4) -> Vec<ResidentFilters> {
         let parts = self.kccp.partition(k);
-        coding::encode_filters(self.code.as_ref(), &parts)
-            .into_iter()
-            .map(|slabs| ResidentFilters::new(slabs, self.prepack))
+        let s = self.spec();
+        (0..s.n)
+            .map(|i| {
+                let slabs: Vec<Tensor4> = (0..s.ell_b)
+                    .map(|j| self.program_b.combine4(i * s.ell_b + j, &parts))
+                    .collect();
+                ResidentFilters::new(slabs, self.prepack)
+            })
             .collect()
     }
 
@@ -488,7 +518,45 @@ impl FcdccPlan {
     /// (coefficients in ascending-partition order, zero coefficients
     /// skipped — the exact order of `coding::encode_inputs`), so the
     /// result is bit-identical to the reference path at any pool size.
+    ///
+    /// The per-slab coefficient walk iterates the plan's compiled
+    /// **encode program** (`mat_a`'s nonzeros, compiled at plan build)
+    /// instead of scanning all k_A coefficients per column: the skipped
+    /// zeros are exactly the ones the dense scan's `coef == 0.0` test
+    /// skipped, so the fold — and hence the output — is unchanged bit
+    /// for bit while the work becomes nnz-proportional (the encode-pass
+    /// counters on the plan arena record both sides of that ledger).
     pub fn encode_input_batch(&self, xs: &[&Tensor3]) -> Vec<Vec<Tensor3>> {
+        self.note_encode_pass(xs.len(), self.program_a.nnz());
+        self.encode_input_batch_inner(xs, EncodeScan::Program)
+    }
+
+    /// Dense-scan baseline of [`Self::encode_input_batch`]: identical
+    /// output (the dense loop tests `coef == 0.0` per column, which
+    /// skips exactly the entries the program dropped at compile time),
+    /// but visits all `k_A · cols` coefficient slots. Kept callable for
+    /// the `sparse_program_vs_dense_scan` A/B bench and the bit-equality
+    /// suite — serving always takes the program path.
+    pub fn encode_input_batch_dense(&self, xs: &[&Tensor3]) -> Vec<Vec<Tensor3>> {
+        let dense = self.program_a.dense_terms();
+        self.note_encode_pass(xs.len(), dense);
+        self.encode_input_batch_inner(xs, EncodeScan::Dense)
+    }
+
+    /// One encode-pass ledger bump, computed analytically: `batch·ℓ_A·n`
+    /// coded columns, `terms` coefficient visits actually performed,
+    /// against the `k_A·cols` slots a dense scan walks.
+    fn note_encode_pass(&self, batch: usize, terms_per_sample: usize) {
+        let s = self.spec();
+        let cols = (batch * s.ell_a * s.n) as u64;
+        self.arena.note_encode(
+            cols,
+            (batch * terms_per_sample) as u64,
+            (batch * self.program_a.dense_terms()) as u64,
+        );
+    }
+
+    fn encode_input_batch_inner(&self, xs: &[&Tensor3], scan: EncodeScan) -> Vec<Vec<Tensor3>> {
         let s = self.spec();
         for x in xs {
             assert_eq!(
@@ -500,7 +568,6 @@ impl FcdccPlan {
         }
         let pad = self.layer.pad;
         let wp = self.layer.w + 2 * pad;
-        let a = self.code.mat_a();
         let apcp = self.apcp;
         let ell_a = s.ell_a;
         let mut per_worker: Vec<Vec<Tensor3>> = (0..s.n)
@@ -510,8 +577,17 @@ impl FcdccPlan {
         // LeNet-sized encodes inline on the caller.
         let work = xs.len() * ell_a * self.layer.c * apcp.h_hat * wp * s.n;
         let arena = &self.arena;
+        let a = self.code.mat_a();
+        let program = &self.program_a;
         pool::global().parallel_chunks_mut(work, &mut per_worker, 1, |worker, slabs| {
-            fill_worker_slabs(worker, &mut slabs[0], xs, a, &apcp, pad, ell_a, wp, arena);
+            match scan {
+                EncodeScan::Program => fill_worker_slabs(
+                    worker, &mut slabs[0], xs, program, &apcp, pad, ell_a, wp, arena,
+                ),
+                EncodeScan::Dense => fill_worker_slabs_dense(
+                    worker, &mut slabs[0], xs, a, &apcp, pad, ell_a, wp, arena,
+                ),
+            }
         });
         per_worker
     }
@@ -740,6 +816,15 @@ impl FcdccPlan {
     }
 }
 
+/// Which coefficient walk [`FcdccPlan::encode_input_batch_inner`] runs:
+/// the compiled program (serving default) or the dense all-k_A scan
+/// (the A/B baseline). Both produce bit-identical slabs.
+#[derive(Clone, Copy)]
+enum EncodeScan {
+    Program,
+    Dense,
+}
+
 /// Fill one worker's `batch·ℓ_A` coded slabs in a single pass over the
 /// unpadded inputs — the per-worker unit of the fused batch encoder.
 ///
@@ -749,18 +834,20 @@ impl FcdccPlan {
 /// `[0, H)`; every other row (top padding, bottom padding, APCP bottom
 /// extension) is zero and contributes nothing, so the slab buffer starts
 /// zeroed and only real input rows are streamed in, into destination
-/// columns `[pad, pad + W)`. Per element, coefficients accumulate in
-/// ascending-α order with zero coefficients skipped — exactly the fold
-/// of the reference `coding::encode_inputs`, hence bit-identical output.
-/// The per-row combination runs on the runtime-dispatched SIMD axpy
-/// (`linalg::kernel::axpy`) — lane-parallel across the row, per element
-/// the same mul-then-add sequence, so dispatch cannot change the fold.
+/// columns `[pad, pad + W)`. Per element, the column's compiled program
+/// terms accumulate in ascending-α order — the program holds exactly
+/// the coefficients the reference `coding::encode_inputs` would not
+/// have skipped as zero, in the same order, hence bit-identical output
+/// from nnz-proportional work. The per-row combination runs on the
+/// runtime-dispatched SIMD axpy (`linalg::kernel::axpy`) —
+/// lane-parallel across the row, per element the same mul-then-add
+/// sequence, so dispatch cannot change the fold.
 #[allow(clippy::too_many_arguments)]
 fn fill_worker_slabs(
     worker: usize,
     slabs: &mut Vec<Tensor3>,
     xs: &[&Tensor3],
-    a: &Mat,
+    program: &EncodeProgram,
     apcp: &ApcpPlan,
     pad: usize,
     ell_a: usize,
@@ -777,6 +864,52 @@ fn fill_worker_slabs(
             // The slab buffer is a zeroed arena draw (same contents as
             // `Tensor3::zeros`): steady-state encodes recycle the very
             // buffers earlier jobs returned.
+            let mut slab =
+                Tensor3::from_vec(x.c, apcp.h_hat, wp, arena.take(x.c * apcp.h_hat * wp));
+            for &(alpha, coef) in program.col(col) {
+                let pr_base = alpha * apcp.s_hat;
+                for c in 0..x.c {
+                    for r in 0..apcp.h_hat {
+                        let pr = pr_base + r;
+                        if pr < pad {
+                            continue;
+                        }
+                        let ur = pr - pad;
+                        if ur >= x.h {
+                            break; // rows below are padding too
+                        }
+                        let src = x.row(c, ur);
+                        let dst = &mut slab.row_mut(c, r)[pad..pad + x.w];
+                        crate::linalg::kernel::axpy_kind(kind, coef, src, dst);
+                    }
+                }
+            }
+            slabs.push(slab);
+        }
+    }
+}
+
+/// The pre-program dense fill: scan all k_A coefficients per column,
+/// testing each for zero. Retained verbatim as the A/B baseline behind
+/// [`FcdccPlan::encode_input_batch_dense`]; the zero test skips exactly
+/// the entries [`EncodeProgram::compile`] dropped, so this and
+/// [`fill_worker_slabs`] write identical bytes.
+#[allow(clippy::too_many_arguments)]
+fn fill_worker_slabs_dense(
+    worker: usize,
+    slabs: &mut Vec<Tensor3>,
+    xs: &[&Tensor3],
+    a: &Mat,
+    apcp: &ApcpPlan,
+    pad: usize,
+    ell_a: usize,
+    wp: usize,
+    arena: &SlabArena,
+) {
+    let kind = crate::linalg::kernel::active();
+    for x in xs {
+        for j in 0..ell_a {
+            let col = worker * ell_a + j;
             let mut slab =
                 Tensor3::from_vec(x.c, apcp.h_hat, wp, arena.take(x.c * apcp.h_hat * wp));
             for alpha in 0..apcp.k_a {

@@ -10,7 +10,7 @@
 //! (Max pooling is *not* linear and cannot be coded this way — the same
 //! boundary the paper draws.)
 
-use crate::coding::{self, Code, CrmeCode};
+use crate::coding::{registry, Code, EncodeProgram};
 use crate::model::network::pool;
 use crate::partition::ApcpPlan;
 use crate::tensor::Tensor3;
@@ -23,23 +23,48 @@ pub struct CodedAvgPool {
     pub stride: usize,
     pub apcp: ApcpPlan,
     pub code: Arc<dyn Code>,
+    /// Compiled CSC walk of `mat_a` — the pooling encoder iterates this
+    /// instead of scanning all `k_A` coefficients per coded slab.
+    program_a: EncodeProgram,
     h_in: usize,
 }
 
 impl CodedAvgPool {
     /// Plan pooling of an H×W input with square window `size`, stride
-    /// `stride`, split into `k_a` coded partitions over `n` workers.
+    /// `stride`, split into `k_a` coded partitions over `n` workers,
+    /// using the session's selected code family (`--code`/`FCDCC_CODE`).
     pub fn new(h_in: usize, size: usize, stride: usize, k_a: usize, n: usize) -> Result<Self> {
-        ensure!(size >= 1 && stride >= 1);
-        let apcp = ApcpPlan::new(h_in, size, stride, k_a)
-            .context("coded avg-pool partitioning")?;
         // k_B = 1: single "filter side" partition, ℓ_B = 1.
-        let code: Arc<dyn Code> = Arc::new(CrmeCode::new(k_a, 1, n)?);
+        let code = registry::default_family().build(k_a, 1, n)?;
+        Self::with_code(h_in, size, stride, code)
+    }
+
+    /// Like [`CodedAvgPool::new`], but with an explicitly constructed
+    /// code (mirrors `FcdccPlan::with_code`). The code must have
+    /// `k_B = 1`: pooling has no filter tensor to partition.
+    pub fn with_code(
+        h_in: usize,
+        size: usize,
+        stride: usize,
+        code: Arc<dyn Code>,
+    ) -> Result<Self> {
+        ensure!(size >= 1 && stride >= 1);
+        let s = code.spec();
+        ensure!(
+            s.k_b == 1 && s.ell_b == 1,
+            "pooling codes must have k_B = ℓ_B = 1 (got k_B={}, ℓ_B={})",
+            s.k_b,
+            s.ell_b
+        );
+        let apcp = ApcpPlan::new(h_in, size, stride, s.k_a)
+            .context("coded avg-pool partitioning")?;
+        let program_a = EncodeProgram::compile(code.mat_a());
         Ok(Self {
             size,
             stride,
             apcp,
             code,
+            program_a,
             h_in,
         })
     }
@@ -48,11 +73,20 @@ impl CodedAvgPool {
         self.code.spec().delta()
     }
 
-    /// Encode the input into per-worker coded slabs (ℓ_A each).
+    /// Encode the input into per-worker coded slabs (ℓ_A each), walking
+    /// the compiled program columns — bit-identical to the reference
+    /// `coding::encode_inputs` fold, in nnz-proportional work.
     pub fn encode(&self, x: &Tensor3) -> Vec<Vec<Tensor3>> {
         assert_eq!(x.h, self.h_in, "planned for H={}, got {}", self.h_in, x.h);
         let parts = self.apcp.partition(x);
-        coding::encode_inputs(self.code.as_ref(), &parts)
+        let s = self.code.spec();
+        (0..s.n)
+            .map(|i| {
+                (0..s.ell_a)
+                    .map(|j| self.program_a.combine3(i * s.ell_a + j, &parts))
+                    .collect()
+            })
+            .collect()
     }
 
     /// The worker-side computation: average-pool each coded slab.
@@ -90,7 +124,15 @@ impl CodedAvgPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coding::{self, CrmeCode, SparseCode};
     use crate::util::{mse, rng::Rng};
+
+    /// Pin the family to CRME so the tight 1e-25 thresholds below hold
+    /// regardless of the session default (`FCDCC_CODE` CI legs).
+    fn crme_pool(h_in: usize, size: usize, stride: usize, k_a: usize, n: usize) -> CodedAvgPool {
+        let code = Arc::new(CrmeCode::new(k_a, 1, n).unwrap());
+        CodedAvgPool::with_code(h_in, size, stride, code).unwrap()
+    }
 
     #[test]
     fn coded_avg_pool_matches_local() {
@@ -101,7 +143,7 @@ mod tests {
             (20, 12, 2, 2, 8, 4), // delta = 2
         ] {
             let x = Tensor3::random(3, h, w, &mut rng);
-            let plan = CodedAvgPool::new(h, size, stride, k_a, n).unwrap();
+            let plan = crme_pool(h, size, stride, k_a, n);
             let want = pool(&x, size, stride, false);
             let survivors = rng.choose_indices(n, plan.delta());
             let got = plan.run_inline(&x, &survivors).unwrap();
@@ -115,7 +157,7 @@ mod tests {
     fn survives_stragglers() {
         let mut rng = Rng::new(102);
         let x = Tensor3::random(2, 16, 6, &mut rng);
-        let plan = CodedAvgPool::new(16, 2, 2, 4, 5).unwrap(); // delta=2, gamma=3
+        let plan = crme_pool(16, 2, 2, 4, 5); // delta=2, gamma=3
         let want = pool(&x, 2, 2, false);
         // Any 2 of the 5 workers suffice.
         for pair in [[0usize, 4], [1, 3], [2, 4]] {
@@ -125,7 +167,43 @@ mod tests {
     }
 
     #[test]
+    fn program_encode_bit_identical_to_reference() {
+        let mut rng = Rng::new(103);
+        let x = Tensor3::random(3, 16, 10, &mut rng);
+        let plan = crme_pool(16, 2, 2, 4, 6);
+        let parts = plan.apcp.partition(&x);
+        let want = coding::encode_inputs(plan.code.as_ref(), &parts);
+        let got = plan.encode(&x);
+        assert_eq!(got.len(), want.len());
+        for (gw, ww) in got.iter().zip(&want) {
+            for (g, w) in gw.iter().zip(ww) {
+                assert_eq!(g.shape(), w.shape());
+                assert_eq!(g.data, w.data, "program encode diverged from reference");
+            }
+        }
+    }
+
+    #[test]
+    fn alternate_family_pools_exactly() {
+        let mut rng = Rng::new(104);
+        let x = Tensor3::random(2, 16, 8, &mut rng);
+        let code = Arc::new(SparseCode::new(4, 1, 5).unwrap());
+        let plan = CodedAvgPool::with_code(16, 2, 2, code).unwrap();
+        let want = pool(&x, 2, 2, false);
+        for pair in [[0usize, 4], [1, 3], [2, 4]] {
+            let got = plan.run_inline(&x, &pair).unwrap();
+            assert!(mse(&got.data, &want.data) < 1e-18, "pair {pair:?}");
+        }
+    }
+
+    #[test]
     fn rejects_oversplit() {
         assert!(CodedAvgPool::new(6, 2, 2, 8, 10).is_err());
+    }
+
+    #[test]
+    fn rejects_filter_side_partitioning() {
+        let code = Arc::new(CrmeCode::new(4, 2, 6).unwrap());
+        assert!(CodedAvgPool::with_code(16, 2, 2, code).is_err());
     }
 }

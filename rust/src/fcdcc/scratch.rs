@@ -27,7 +27,7 @@
 //! performed because no plan-resident prepacked operand was available
 //! (zero when prepacking is on; see `linalg::gemm::PackedA`).
 
-use crate::metrics::CacheStats;
+use crate::metrics::{CacheStats, EncodeStats};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -49,6 +49,9 @@ pub struct SlabArena {
     takes: AtomicU64,
     puts: AtomicU64,
     filter_packs: AtomicU64,
+    encode_cols: AtomicU64,
+    encode_terms: AtomicU64,
+    encode_dense_terms: AtomicU64,
 }
 
 impl SlabArena {
@@ -62,6 +65,9 @@ impl SlabArena {
             takes: AtomicU64::new(0),
             puts: AtomicU64::new(0),
             filter_packs: AtomicU64::new(0),
+            encode_cols: AtomicU64::new(0),
+            encode_terms: AtomicU64::new(0),
+            encode_dense_terms: AtomicU64::new(0),
         }
     }
 
@@ -170,6 +176,27 @@ impl SlabArena {
     /// Total per-call filter packs recorded via [`Self::note_filter_packs`].
     pub fn filter_packs(&self) -> u64 {
         self.filter_packs.load(Ordering::Relaxed)
+    }
+
+    /// Record one input-encode pass: `cols` coded slabs built via
+    /// `terms` nonzero coefficient applications, where a dense
+    /// scan-all-`k_A` sweep would have visited `dense` coefficient
+    /// slots. The plan computes these analytically from its compiled
+    /// encode program — one counter bump per encode call, nothing on
+    /// the per-row fill itself.
+    pub fn note_encode(&self, cols: u64, terms: u64, dense: u64) {
+        self.encode_cols.fetch_add(cols, Ordering::Relaxed);
+        self.encode_terms.fetch_add(terms, Ordering::Relaxed);
+        self.encode_dense_terms.fetch_add(dense, Ordering::Relaxed);
+    }
+
+    /// Accumulated encode-pass accounting (see [`Self::note_encode`]).
+    pub fn encode_stats(&self) -> EncodeStats {
+        EncodeStats {
+            cols: self.encode_cols.load(Ordering::Relaxed),
+            terms: self.encode_terms.load(Ordering::Relaxed),
+            dense_terms: self.encode_dense_terms.load(Ordering::Relaxed),
+        }
     }
 
     /// Idle buffers currently retained.
@@ -295,5 +322,16 @@ mod tests {
         p.note_filter_packs(3);
         p.note_filter_packs(2);
         assert_eq!(p.filter_packs(), 5);
+    }
+
+    #[test]
+    fn encode_counters_accumulate() {
+        let p = SlabArena::new(1);
+        assert_eq!(p.encode_stats(), Default::default());
+        p.note_encode(4, 6, 16);
+        p.note_encode(4, 6, 16);
+        let e = p.encode_stats();
+        assert_eq!((e.cols, e.terms, e.dense_terms), (8, 12, 32));
+        assert!((e.nnz_frac() - 0.375).abs() < 1e-12);
     }
 }

@@ -52,6 +52,14 @@ Every command also accepts:
                 not bit identity). Also via FCDCC_KERNEL; requesting a
                 backend this machine cannot run warns and falls back.
                 Default-path outputs are bit-identical across backends.
+  --code C      linear code family planned for every coded layer: auto
+                (default: crme, the paper's scheme), crme, vandermonde,
+                chebyshev, fahim-cadambe, conv (banded convolutional),
+                or sparse (weight-w random, nnz-proportional encode).
+                Also via FCDCC_CODE; an unknown name warns and falls
+                back to crme. All families decode exactly from any
+                delta survivors; they differ in conditioning and
+                encode cost.
 
 The worker --engine defaults to im2col (fused patch-matrix reuse);
 direct is the naive correctness oracle.
@@ -104,6 +112,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         delay: Duration::from_millis(args.get_usize("delay-ms", 100)? as u64),
         engine,
         seed: args.get_usize("seed", 7)? as u64,
+        code: fcdcc::coding::registry::default_family(),
     })?;
     Ok(())
 }
@@ -195,12 +204,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let stats = coordinator::serve_lenet(cfg)?;
     println!(
-        "served {} requests (depth {}, window {}, kernel {}): \
+        "served {} requests (depth {}, window {}, kernel {}, code {}): \
          mean latency {:.2}ms (p95 {:.2}ms), {:.1} req/s",
         stats.requests,
         stats.max_in_flight,
         stats.batch_window,
         stats.kernel,
+        stats.code,
         stats.latency.mean * 1e3,
         stats.latency.p95 * 1e3,
         stats.throughput_rps
@@ -234,6 +244,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         } else {
             " (per-job worker-side packing)"
         }
+    );
+    println!(
+        "encode programs: {} coded slabs via {} coefficient terms \
+         (dense scan would visit {}; nnz fraction {:.2})",
+        stats.encode.cols,
+        stats.encode.terms,
+        stats.encode.dense_terms,
+        stats.encode.nnz_frac()
     );
     Ok(())
 }
@@ -280,10 +298,24 @@ fn main() -> Result<()> {
         }
         fcdcc::linalg::kernel::set_active(kind);
     }
-    // Logged once at startup so every run records which backend it ran.
+    // Install the code family before any command builds a plan: --code
+    // overrides FCDCC_CODE; unknown names warn and fall back to crme.
+    if let Some(name) = args.get("code") {
+        let (family, warning) = fcdcc::coding::registry::resolve(Some(name));
+        if let Some(w) = warning {
+            eprintln!("fcdcc: {w}");
+        }
+        fcdcc::coding::registry::set_default(family);
+    }
+    // Logged once at startup so every run records which backend and
+    // code family it ran.
     eprintln!(
         "fcdcc: compute kernel = {}",
         fcdcc::linalg::kernel::active().name()
+    );
+    eprintln!(
+        "fcdcc: code family = {}",
+        fcdcc::coding::registry::default_family().tag()
     );
     match args.command.as_deref() {
         Some("run") => cmd_run(&args),

@@ -77,6 +77,34 @@ impl CacheStats {
     }
 }
 
+/// Encode-pass accounting of the program-compiled input encoder
+/// (`coding::EncodeProgram`): `cols` coded slabs built, via `terms`
+/// coefficient applications (axpy sweeps) where a dense scan would
+/// have visited `dense_terms = k_A · cols` coefficient slots. The
+/// nnz-proportionality acceptance observable: `terms < dense_terms`
+/// under CRME's structural zeros, and `terms ≈ w · cols` (not
+/// `k_A · cols`) under the weight-w sparse family.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EncodeStats {
+    /// Coded input slabs built (columns applied).
+    pub cols: u64,
+    /// Nonzero coefficient applications actually performed.
+    pub terms: u64,
+    /// Coefficient slots a dense k_A-scan would have visited.
+    pub dense_terms: u64,
+}
+
+impl EncodeStats {
+    /// `terms / dense_terms` — 1.0 means the program saved nothing.
+    pub fn nnz_frac(&self) -> f64 {
+        if self.dense_terms == 0 {
+            0.0
+        } else {
+            self.terms as f64 / self.dense_terms as f64
+        }
+    }
+}
+
 /// A simple aligned-markdown table builder.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
@@ -195,6 +223,17 @@ mod tests {
         assert_eq!(c.lookups(), 4);
         assert!((c.hit_rate() - 0.75).abs() < 1e-12);
         assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn encode_stats_nnz_frac() {
+        let e = EncodeStats {
+            cols: 10,
+            terms: 25,
+            dense_terms: 100,
+        };
+        assert!((e.nnz_frac() - 0.25).abs() < 1e-12);
+        assert_eq!(EncodeStats::default().nnz_frac(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Cross-family correctness: the banded convolutional and weight-w
+//! sparse codes must decode **exactly** (to CRME-grade fidelity) from
+//! any δ survivors, across shapes, batch sizes, straggler rotations,
+//! and every bit-exact kernel backend — and the plan-compiled encode
+//! programs must be bit-identical to the reference dense combiners for
+//! every family in the registry (the oracle pattern of
+//! `tests/fused_hot_path.rs`, extended to code families).
+
+use fcdcc::coding::{self, Code, CodeFamily, ConvCode, CrmeCode, SparseCode};
+use fcdcc::fcdcc::{FcdccPlan, WorkerResult};
+use fcdcc::linalg::kernel;
+use fcdcc::model::ConvLayer;
+use fcdcc::tensor::{conv2d, Tensor3, Tensor4};
+use fcdcc::util::{mse, rng::Rng};
+use std::sync::Arc;
+
+/// Inline batched run: encode the batch, compute the chosen survivors'
+/// subtasks, decode — the same path the cluster drives, minus threads.
+fn run_batch(
+    plan: &FcdccPlan,
+    xs: &[&Tensor3],
+    kk: &Tensor4,
+    survivors: &[usize],
+) -> Vec<Tensor3> {
+    let cf = plan.encode_filters(kk);
+    let payloads = plan.make_payloads(plan.encode_input_batch(xs), &cf);
+    let results: Vec<WorkerResult> = survivors.iter().map(|&i| payloads[i].run_im2col()).collect();
+    let refs: Vec<&WorkerResult> = results.iter().collect();
+    plan.decode_batch_refs(&refs).unwrap()
+}
+
+fn shapes() -> Vec<(ConvLayer, usize, usize, usize)> {
+    vec![
+        // (layer, k_A, k_B, n) — mixed pad/no-pad, δ of 2, 1, 2.
+        (ConvLayer::new("s1", 2, 12, 10, 8, 3, 3, 1, 0), 4, 2, 5),
+        (ConvLayer::new("s2", 3, 16, 8, 4, 3, 3, 1, 1), 2, 2, 4),
+        (ConvLayer::new("s3", 2, 14, 9, 8, 3, 3, 1, 1), 2, 4, 4),
+    ]
+}
+
+#[test]
+fn conv_and_sparse_decode_exactly_under_rotation() {
+    let mut rng = Rng::new(7);
+    for (layer, k_a, k_b, n) in shapes() {
+        let codes: Vec<Arc<dyn Code>> = vec![
+            Arc::new(ConvCode::new(k_a, k_b, n).unwrap()),
+            Arc::new(SparseCode::new(k_a, k_b, n).unwrap()),
+        ];
+        for code in codes {
+            let name = code.name().to_string();
+            let plan = FcdccPlan::with_code(&layer, code).unwrap();
+            let delta = plan.delta();
+            let kk = Tensor4::random(layer.n, layer.c, layer.kh, layer.kw, &mut rng);
+            for batch in 1..=4usize {
+                let xs: Vec<Tensor3> = (0..batch)
+                    .map(|_| Tensor3::random(layer.c, layer.h, layer.w, &mut rng))
+                    .collect();
+                let xrefs: Vec<&Tensor3> = xs.iter().collect();
+                // Rotate the survivor window with the batch size so every
+                // worker ends up both used and dropped across the sweep.
+                let survivors: Vec<usize> = (0..delta).map(|i| (i + batch) % n).collect();
+                let ys = run_batch(&plan, &xrefs, &kk, &survivors);
+                assert_eq!(ys.len(), batch);
+                for (x, y) in xs.iter().zip(&ys) {
+                    let want = conv2d(x, &kk, layer.params());
+                    assert_eq!(y.shape(), want.shape());
+                    let e = mse(&y.data, &want.data);
+                    assert!(
+                        e < 1e-16,
+                        "{name} batch {batch} survivors {survivors:?}: mse={e:e}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn new_families_exact_on_every_bit_exact_backend() {
+    let mut rng = Rng::new(11);
+    let layer = ConvLayer::new("kb", 2, 12, 10, 8, 3, 3, 1, 0);
+    let codes: Vec<Arc<dyn Code>> = vec![
+        Arc::new(ConvCode::new(4, 2, 5).unwrap()),
+        Arc::new(SparseCode::new(4, 2, 5).unwrap()),
+    ];
+    let kk = Tensor4::random(layer.n, layer.c, layer.kh, layer.kw, &mut rng);
+    let xs: Vec<Tensor3> = (0..2)
+        .map(|_| Tensor3::random(layer.c, layer.h, layer.w, &mut rng))
+        .collect();
+    let xrefs: Vec<&Tensor3> = xs.iter().collect();
+    let wants: Vec<Tensor3> = xs.iter().map(|x| conv2d(x, &kk, layer.params())).collect();
+    let prev = kernel::active();
+    for code in codes {
+        let name = code.name().to_string();
+        let plan = FcdccPlan::with_code(&layer, code).unwrap();
+        let survivors = vec![1usize, 3];
+        let mut baseline: Option<Vec<Tensor3>> = None;
+        for kind in kernel::available() {
+            if !kind.bit_exact() {
+                continue;
+            }
+            kernel::set_active(kind);
+            let ys = run_batch(&plan, &xrefs, &kk, &survivors);
+            for (y, want) in ys.iter().zip(&wants) {
+                let e = mse(&y.data, &want.data);
+                assert!(e < 1e-16, "{name} on {}: mse={e:e}", kind.name());
+            }
+            match &baseline {
+                None => baseline = Some(ys),
+                Some(b) => {
+                    for (a, y) in b.iter().zip(&ys) {
+                        assert_eq!(
+                            a.data,
+                            y.data,
+                            "{name}: backend {} diverged bitwise",
+                            kind.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+    kernel::set_active(prev);
+}
+
+#[test]
+fn program_encode_bit_identical_to_reference_for_every_family() {
+    let mut rng = Rng::new(21);
+    let layer = ConvLayer::new("fam", 2, 12, 10, 8, 3, 3, 1, 0);
+    for family in CodeFamily::ALL {
+        // Smallest feasible partition pair per embedding (ℓ=2 families
+        // need even factors; the ℓ=1 polynomial rivals take k_B=1).
+        let (k_a, k_b) = if family.even_partitions() {
+            (2, 2)
+        } else {
+            (2, 1)
+        };
+        let code = family.build(k_a, k_b, 5).unwrap();
+        let plan = FcdccPlan::with_code(&layer, Arc::clone(&code)).unwrap();
+        let xs: Vec<Tensor3> = (0..3)
+            .map(|_| Tensor3::random(layer.c, layer.h, layer.w, &mut rng))
+            .collect();
+        let xrefs: Vec<&Tensor3> = xs.iter().collect();
+
+        // Inputs: program walk == dense scan == per-sample reference.
+        let got = plan.encode_input_batch(&xrefs);
+        let dense = plan.encode_input_batch_dense(&xrefs);
+        let per_sample: Vec<Vec<Vec<Tensor3>>> = xs.iter().map(|x| plan.encode_input(x)).collect();
+        let s = plan.spec();
+        for (worker, (gw, dw)) in got.iter().zip(&dense).enumerate() {
+            assert_eq!(gw.len(), xs.len() * s.ell_a);
+            assert_eq!(gw.len(), dw.len());
+            for (g, d) in gw.iter().zip(dw) {
+                assert_eq!(g.data, d.data, "{}: program != dense scan", family.tag());
+            }
+            // Batch layout: sample-major, ℓ_A slabs per sample.
+            for (si, sample) in per_sample.iter().enumerate() {
+                for j in 0..s.ell_a {
+                    assert_eq!(
+                        gw[si * s.ell_a + j].data,
+                        sample[worker][j].data,
+                        "{}: program != reference encode_inputs",
+                        family.tag()
+                    );
+                }
+            }
+        }
+
+        // Filters: program-walked prepack == reference dense combiner.
+        let kk = Tensor4::random(layer.n, layer.c, layer.kh, layer.kw, &mut rng);
+        let got_f = plan.encode_filters(&kk);
+        let parts = plan.kccp.partition(&kk);
+        let want_f = coding::encode_filters(code.as_ref(), &parts);
+        assert_eq!(got_f.len(), want_f.len());
+        for (rf, ww) in got_f.iter().zip(&want_f) {
+            assert_eq!(rf.slabs.len(), ww.len());
+            for (g, w) in rf.slabs.iter().zip(ww) {
+                assert_eq!(g.data, w.data, "{}: filter program != reference", family.tag());
+            }
+        }
+    }
+}
+
+#[test]
+fn encode_counters_are_nnz_proportional() {
+    let mut rng = Rng::new(31);
+    let layer = ConvLayer::new("cnt", 2, 12, 10, 8, 3, 3, 1, 0);
+    let x = Tensor3::random(layer.c, layer.h, layer.w, &mut rng);
+
+    // CRME's rotation structure has exact zeros: the program must do
+    // strictly less coefficient work than the dense k_A-scan.
+    let plan = FcdccPlan::with_code(&layer, Arc::new(CrmeCode::new(4, 2, 5).unwrap())).unwrap();
+    plan.encode_input_batch(&[&x]);
+    let es = plan.arena().encode_stats();
+    assert!(es.cols > 0);
+    assert!(
+        es.terms < es.dense_terms,
+        "CRME: {} terms vs {} dense slots",
+        es.terms,
+        es.dense_terms
+    );
+
+    // Sparse: encode work scales with the column weight w, not k_A.
+    let sc = SparseCode::new(4, 2, 5).unwrap();
+    let w = sc.weight_a() as u64;
+    assert!(w < 4, "weight must undercut k_A for the scaling claim");
+    let plan = FcdccPlan::with_code(&layer, Arc::new(sc)).unwrap();
+    plan.encode_input_batch(&[&x]);
+    let es = plan.arena().encode_stats();
+    assert!(es.cols > 0);
+    assert!(
+        es.terms <= w * es.cols,
+        "sparse: {} terms exceeds w·cols = {}",
+        es.terms,
+        w * es.cols
+    );
+    assert!(es.terms < es.dense_terms);
+
+    // The dense-scan baseline books its full slot count.
+    let plan = FcdccPlan::with_code(&layer, Arc::new(CrmeCode::new(4, 2, 5).unwrap())).unwrap();
+    plan.encode_input_batch_dense(&[&x]);
+    let es = plan.arena().encode_stats();
+    assert_eq!(es.terms, es.dense_terms);
+}
