@@ -31,7 +31,9 @@ fn json_line(model: &str, mode: &str, stats: &ServeStats) {
          \"latency_p50_ms\":{:.3},\"latency_p95_ms\":{:.3},\"coded_jobs\":{},\
          \"mean_batch\":{:.3},\"inversions\":{},\"inverse_cache_hits\":{},\
          \"arena_allocs\":{},\"arena_hits\":{},\
-         \"encode_terms\":{},\"encode_dense_terms\":{}}}",
+         \"encode_terms\":{},\"encode_dense_terms\":{},\
+         \"failed_requests\":{},\"retries\":{},\"degraded_requests\":{},\
+         \"quarantine_events\":{}}}",
         model,
         mode,
         fcdcc::util::pool::global().threads(),
@@ -52,6 +54,10 @@ fn json_line(model: &str, mode: &str, stats: &ServeStats) {
         stats.arena.hits,
         stats.encode.terms,
         stats.encode.dense_terms,
+        stats.failed_requests,
+        stats.retries,
+        stats.degraded_requests,
+        stats.quarantine_events,
     ));
 }
 

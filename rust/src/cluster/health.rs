@@ -1,0 +1,316 @@
+//! Worker-health tracking: a per-worker state machine the master feeds
+//! with reply/timeout observations and the serving layer reads to pick
+//! its dispatch set.
+//!
+//! ```text
+//!            strikes >= suspect_after        strikes >= quarantine_after
+//!  Healthy ───────────────────────▶ Suspect ───────────────────────▶ Quarantined
+//!     ▲                               │  ok                              │
+//!     │◀──────────────────────────────┘                    cooldown jobs │
+//!     │                                                    elapse        ▼
+//!     │◀────────────────────────── Probation ◀──────────────────── (probe due)
+//!     │        probe task ok           │
+//!     └────────────────────────────────┘ bad → Quarantined, backoff ×2
+//! ```
+//!
+//! Observations are **job-count based**, never wall-clock: a strike is
+//! one bad observation (explicit error reply, corrupt reply, or a
+//! missed deadline on a timed-out job), and quarantine cooldowns are
+//! measured in jobs dispatched — so a fault-injection replay produces
+//! the identical health trajectory every run. Workers that merely lose
+//! the first-δ race are *not* observed at all: with first-δ semantics
+//! the n−δ cancelled stragglers per job are normal, so absence from a
+//! completed job is no evidence of ill health. Redundancy absorbs those
+//! silently; the tracker only reacts to faults that actually cost a job
+//! (timeout) or announce themselves (error / corrupt replies).
+//!
+//! Readmission is probing-by-readmission: once a quarantined worker's
+//! cooldown expires it moves to `Probation` and re-enters the dispatch
+//! set, so its next task *is* the probe — the coded redundancy of that
+//! job shields the cluster if the probe fails. A valid reply readmits
+//! it (Healthy); another bad observation re-quarantines it with the
+//! cooldown doubled (capped).
+
+use crate::metrics::HealthCounters;
+
+/// Where one worker currently stands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerState {
+    /// In the dispatch set, no recent strikes.
+    Healthy,
+    /// In the dispatch set, but accumulating strikes.
+    Suspect,
+    /// Out of the dispatch set, cooling down until the next probe.
+    Quarantined,
+    /// Back in the dispatch set tentatively; the next observation
+    /// decides between readmission and re-quarantine.
+    Probation,
+}
+
+/// Thresholds and backoff of the health state machine.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthPolicy {
+    /// Consecutive strikes before Healthy → Suspect.
+    pub suspect_after: u32,
+    /// Consecutive strikes before → Quarantined.
+    pub quarantine_after: u32,
+    /// Initial quarantine cooldown, in dispatched jobs.
+    pub probe_backoff: u64,
+    /// Cap for the exponential cooldown growth.
+    pub max_backoff: u64,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        Self {
+            suspect_after: 1,
+            quarantine_after: 3,
+            probe_backoff: 2,
+            max_backoff: 32,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct WorkerHealth {
+    state: WorkerState,
+    /// Consecutive bad observations (reset by any valid reply).
+    strikes: u32,
+    /// Current cooldown length (jobs); doubles per failed probe.
+    backoff: u64,
+    /// Jobs remaining until the next probe (only while Quarantined).
+    cooldown: u64,
+}
+
+/// The master-resident tracker: one [`WorkerHealth`] per physical
+/// worker plus the transition counters surfaced in `ServeStats`.
+#[derive(Clone, Debug)]
+pub struct HealthTracker {
+    policy: HealthPolicy,
+    workers: Vec<WorkerHealth>,
+    counters: HealthCounters,
+}
+
+impl HealthTracker {
+    pub fn new(n: usize, policy: HealthPolicy) -> Self {
+        Self {
+            policy,
+            workers: vec![
+                WorkerHealth {
+                    state: WorkerState::Healthy,
+                    strikes: 0,
+                    backoff: policy.probe_backoff.max(1),
+                    cooldown: 0,
+                };
+                n
+            ],
+            counters: HealthCounters::default(),
+        }
+    }
+
+    pub fn policy(&self) -> HealthPolicy {
+        self.policy
+    }
+
+    pub fn state(&self, worker: usize) -> WorkerState {
+        self.workers[worker].state
+    }
+
+    pub fn counters(&self) -> HealthCounters {
+        self.counters
+    }
+
+    /// Workers currently in the dispatch set (everything but
+    /// `Quarantined`), ascending — the live set serving plans against.
+    pub fn live_set(&self) -> Vec<usize> {
+        (0..self.workers.len())
+            .filter(|&i| self.workers[i].state != WorkerState::Quarantined)
+            .collect()
+    }
+
+    /// A valid (decodable) reply arrived from `worker`.
+    pub fn observe_ok(&mut self, worker: usize) {
+        let w = &mut self.workers[worker];
+        if w.state == WorkerState::Probation {
+            self.counters.readmissions += 1;
+            w.backoff = self.policy.probe_backoff.max(1);
+        }
+        w.state = WorkerState::Healthy;
+        w.strikes = 0;
+    }
+
+    /// `worker` answered with an explicit error reply.
+    pub fn observe_error(&mut self, worker: usize) {
+        self.counters.errors += 1;
+        self.strike(worker);
+    }
+
+    /// `worker`'s reply failed the master's integrity check.
+    pub fn observe_corrupt(&mut self, worker: usize) {
+        self.counters.corruptions += 1;
+        self.strike(worker);
+    }
+
+    /// `worker` had not replied when its job's deadline expired.
+    pub fn observe_timeout(&mut self, worker: usize) {
+        self.counters.timeouts += 1;
+        self.strike(worker);
+    }
+
+    /// One job was dispatched: advance quarantine cooldowns, promoting
+    /// workers whose cooldown expired to `Probation` (their next task is
+    /// the probe).
+    pub fn tick_job(&mut self) {
+        for w in self.workers.iter_mut() {
+            if w.state == WorkerState::Quarantined {
+                w.cooldown = w.cooldown.saturating_sub(1);
+                if w.cooldown == 0 {
+                    w.state = WorkerState::Probation;
+                    self.counters.probes += 1;
+                }
+            }
+        }
+    }
+
+    fn strike(&mut self, worker: usize) {
+        let policy = self.policy;
+        let w = &mut self.workers[worker];
+        match w.state {
+            WorkerState::Quarantined => {
+                // Late evidence against an already-quarantined worker
+                // (e.g. a second timed-out job observed after the
+                // quarantining one): keep it down, no backoff change.
+            }
+            WorkerState::Probation => {
+                // Failed probe: back off exponentially before retrying.
+                w.backoff = (w.backoff * 2).min(policy.max_backoff.max(1));
+                w.cooldown = w.backoff;
+                w.state = WorkerState::Quarantined;
+                self.counters.quarantines += 1;
+            }
+            WorkerState::Healthy | WorkerState::Suspect => {
+                w.strikes += 1;
+                if w.strikes >= policy.quarantine_after {
+                    w.state = WorkerState::Quarantined;
+                    w.cooldown = w.backoff;
+                    self.counters.quarantines += 1;
+                } else if w.strikes >= policy.suspect_after && w.state == WorkerState::Healthy {
+                    w.state = WorkerState::Suspect;
+                    self.counters.suspects += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> HealthPolicy {
+        HealthPolicy {
+            suspect_after: 1,
+            quarantine_after: 2,
+            probe_backoff: 2,
+            max_backoff: 8,
+        }
+    }
+
+    #[test]
+    fn strikes_walk_healthy_suspect_quarantined() {
+        let mut t = HealthTracker::new(3, policy());
+        assert_eq!(t.state(1), WorkerState::Healthy);
+        t.observe_timeout(1);
+        assert_eq!(t.state(1), WorkerState::Suspect);
+        assert_eq!(t.live_set(), vec![0, 1, 2], "suspects stay dispatchable");
+        t.observe_error(1);
+        assert_eq!(t.state(1), WorkerState::Quarantined);
+        assert_eq!(t.live_set(), vec![0, 2]);
+        let c = t.counters();
+        assert_eq!(c.suspects, 1);
+        assert_eq!(c.quarantines, 1);
+        assert_eq!(c.timeouts, 1);
+        assert_eq!(c.errors, 1);
+    }
+
+    #[test]
+    fn ok_reply_resets_strikes() {
+        let mut t = HealthTracker::new(2, policy());
+        t.observe_corrupt(0);
+        assert_eq!(t.state(0), WorkerState::Suspect);
+        t.observe_ok(0);
+        assert_eq!(t.state(0), WorkerState::Healthy);
+        // The streak restarts: one more strike is Suspect again, not
+        // Quarantined.
+        t.observe_timeout(0);
+        assert_eq!(t.state(0), WorkerState::Suspect);
+    }
+
+    #[test]
+    fn cooldown_probes_then_readmits() {
+        let mut t = HealthTracker::new(2, policy());
+        t.observe_timeout(0);
+        t.observe_timeout(0);
+        assert_eq!(t.state(0), WorkerState::Quarantined);
+        // Two jobs dispatch while it cools down.
+        t.tick_job();
+        assert_eq!(t.state(0), WorkerState::Quarantined);
+        t.tick_job();
+        assert_eq!(t.state(0), WorkerState::Probation);
+        assert_eq!(t.live_set(), vec![0, 1], "probation rejoins dispatch");
+        t.observe_ok(0);
+        assert_eq!(t.state(0), WorkerState::Healthy);
+        assert_eq!(t.counters().probes, 1);
+        assert_eq!(t.counters().readmissions, 1);
+    }
+
+    #[test]
+    fn failed_probe_doubles_backoff_up_to_cap() {
+        let mut t = HealthTracker::new(1, policy());
+        t.observe_timeout(0);
+        t.observe_timeout(0);
+        let mut seen = Vec::new();
+        for _ in 0..4 {
+            // Tick through the cooldown until probation, then fail the
+            // probe.
+            let mut ticks = 0u64;
+            while t.state(0) == WorkerState::Quarantined {
+                t.tick_job();
+                ticks += 1;
+                assert!(ticks <= 64, "cooldown never expired");
+            }
+            seen.push(ticks);
+            assert_eq!(t.state(0), WorkerState::Probation);
+            t.observe_timeout(0);
+            assert_eq!(t.state(0), WorkerState::Quarantined);
+        }
+        assert_eq!(seen, vec![2, 4, 8, 8], "exponential backoff, capped");
+        // A successful probe resets the backoff to the initial value.
+        while t.state(0) == WorkerState::Quarantined {
+            t.tick_job();
+        }
+        t.observe_ok(0);
+        t.observe_timeout(0);
+        t.observe_timeout(0);
+        assert_eq!(t.state(0), WorkerState::Quarantined);
+        let mut ticks = 0u64;
+        while t.state(0) == WorkerState::Quarantined {
+            t.tick_job();
+            ticks += 1;
+        }
+        assert_eq!(ticks, 2, "readmission resets the probe backoff");
+    }
+
+    #[test]
+    fn late_evidence_against_quarantined_worker_is_inert() {
+        let mut t = HealthTracker::new(1, policy());
+        t.observe_timeout(0);
+        t.observe_timeout(0);
+        let q = t.counters().quarantines;
+        t.observe_timeout(0);
+        assert_eq!(t.counters().quarantines, q, "no double-quarantine");
+        t.tick_job();
+        t.tick_job();
+        assert_eq!(t.state(0), WorkerState::Probation, "cooldown unchanged");
+    }
+}

@@ -12,14 +12,28 @@
 //! other jobs' replies while it waits) and returns its per-sample
 //! outputs + [`JobReport`]; a timed-out job fails **all** of its member
 //! samples in one error without touching the other in-flight jobs.
+//! [`Cluster::try_wait_batch`] is the non-bailing variant: it reports a
+//! failed job as a [`BatchOutcome::Failed`] value instead of an error,
+//! which is what the serving layer's retry/degradation logic consumes.
 //! [`Cluster::submit`]/[`Cluster::wait`] are the batch-1 conveniences,
 //! and [`Cluster::run_job`] is submit+wait for single-job callers. Every
 //! phase is accounted (paper §II-C phases and §VI metrics).
+//!
+//! Fault tolerance lives here too: the cluster owns a deterministic
+//! [`FaultPlan`] overlaid on every dispatch, validates each reply's
+//! integrity checksum (rejecting corrupt blocks before they reach the
+//! decoder), fails a job fast once error replies make δ unreachable,
+//! and feeds every observation — valid reply, error reply, corrupt
+//! reply, missed deadline — into a [`HealthTracker`] whose live set the
+//! serving layer re-plans against. Re-planned jobs dispatch through
+//! [`Cluster::submit_batch_mapped`], which maps the plan's coded
+//! columns onto an arbitrary subset of physical workers.
 
-use crate::cluster::straggler::StragglerModel;
-use crate::cluster::worker::{worker_loop, WorkerMsg, WorkerReply};
+use crate::cluster::health::{HealthPolicy, HealthTracker};
+use crate::cluster::straggler::{FaultPlan, StragglerModel};
+use crate::cluster::worker::{result_checksum, worker_loop, ReplyBody, WorkerMsg, WorkerReply};
 use crate::engine::{Im2colEngine, TaskEngine};
-use crate::fcdcc::{FcdccPlan, ResidentFilters};
+use crate::fcdcc::{FcdccPlan, ResidentFilters, WorkerResult};
 use crate::tensor::Tensor3;
 use crate::util::rng::Rng;
 use anyhow::{bail, ensure, Context, Result};
@@ -35,9 +49,9 @@ pub struct JobReport {
     pub job_id: u64,
     pub n: usize,
     pub delta: usize,
-    /// Worker ids whose results were used for decoding: the first δ to
-    /// arrive, ordered by worker id (so decoding is deterministic for a
-    /// fixed reply set).
+    /// Physical worker ids whose results were used for decoding: the
+    /// first δ to arrive, ordered by coded column (so decoding is
+    /// deterministic for a fixed reply set).
     pub used_workers: Vec<usize>,
     /// Master-side input encoding time (APCP partition + CRME combine).
     pub encode_secs: f64,
@@ -62,6 +76,9 @@ pub struct JobReport {
     pub concurrent_jobs: usize,
     /// Samples carried by this job (1 = unbatched).
     pub batch: usize,
+    /// Error replies (explicit failures + rejected corrupt replies)
+    /// observed on this job before it completed.
+    pub errors: usize,
 }
 
 /// Handle to a submitted job. Consume it with [`Cluster::wait`]; every
@@ -87,13 +104,40 @@ enum JobPhase {
     Done { collect_secs: f64 },
     /// The per-job deadline passed before δ replies arrived.
     TimedOut,
+    /// Enough workers replied with errors (or corrupt blocks) that δ
+    /// valid results can no longer arrive — failed fast, ahead of the
+    /// deadline.
+    Undecodable,
+}
+
+/// How a waited-on job ended: decoded output, or a failure the caller
+/// can retry / degrade on without unwinding through an `Err`.
+pub enum BatchOutcome {
+    Decoded {
+        outputs: Vec<Tensor3>,
+        report: JobReport,
+    },
+    /// δ valid replies never arrived (deadline, or too many errors).
+    /// The job is out of the in-flight table and every buffer it held
+    /// has been recycled.
+    Failed {
+        got: usize,
+        needed: usize,
+        batch: usize,
+        reason: String,
+    },
 }
 
 /// One row of the in-flight table.
 struct InFlight {
     delta: usize,
     batch: usize,
+    /// Valid (checksum-passing) replies only.
     replies: Vec<WorkerReply>,
+    /// Physical ids that answered with an error or a corrupt reply.
+    errors: Vec<usize>,
+    /// Physical worker id per coded column, as dispatched.
+    dispatched_to: Vec<usize>,
     phase: JobPhase,
     deadline: Instant,
     dispatched_at: Instant,
@@ -116,6 +160,10 @@ pub struct Cluster {
     /// smallest outstanding id (the workers' prune watermark) is cheap.
     jobs: BTreeMap<u64, InFlight>,
     watermark_sent: u64,
+    /// Deterministic fault injection overlaid on every dispatch.
+    fault_plan: FaultPlan,
+    /// Per-worker health fed by reply/timeout observations.
+    health: HealthTracker,
 }
 
 impl Cluster {
@@ -145,6 +193,8 @@ impl Cluster {
             collect_timeout: Duration::from_secs(60),
             jobs: BTreeMap::new(),
             watermark_sent: 0,
+            fault_plan: FaultPlan::none(),
+            health: HealthTracker::new(n, HealthPolicy::default()),
         }
     }
 
@@ -157,6 +207,30 @@ impl Cluster {
 
     pub fn n(&self) -> usize {
         self.n
+    }
+
+    /// Install a deterministic fault-injection plan. Applies to
+    /// subsequently dispatched tasks; per-worker dispatch counters start
+    /// at the plan's own state (fresh plans start at zero).
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault_plan = plan;
+    }
+
+    /// Replace the health tracker with a fresh one under `policy`
+    /// (forgetting all prior observations).
+    pub fn set_health_policy(&mut self, policy: HealthPolicy) {
+        self.health = HealthTracker::new(self.n, policy);
+    }
+
+    /// The worker-health tracker (read side: states, live set, counters).
+    pub fn health(&self) -> &HealthTracker {
+        &self.health
+    }
+
+    /// Physical worker ids currently in the dispatch set (everything not
+    /// quarantined), ascending.
+    pub fn live_workers(&self) -> Vec<usize> {
+        self.health.live_set()
     }
 
     /// Number of jobs currently collecting replies.
@@ -195,8 +269,37 @@ impl Cluster {
         straggler: &StragglerModel,
         rng: &mut Rng,
     ) -> Result<JobHandle> {
-        assert_eq!(coded_filters.len(), self.n, "filters for every worker");
-        assert_eq!(plan.spec().n, self.n, "plan/cluster n mismatch");
+        self.submit_batch_mapped(plan, xs, coded_filters, straggler, rng, None)
+    }
+
+    /// [`Self::submit_batch`] with an explicit coded-column → physical
+    /// worker mapping — the re-planning dispatch path. `worker_map[i]`
+    /// is the physical worker that computes coded column `i` of a plan
+    /// built for `worker_map.len()` (≤ n) workers; `None` is the
+    /// identity full-cluster mapping. Decode is untouched: result
+    /// blocks keep their coded column index, only the wire address
+    /// changes.
+    pub fn submit_batch_mapped(
+        &mut self,
+        plan: &FcdccPlan,
+        xs: &[&Tensor3],
+        coded_filters: &[ResidentFilters],
+        straggler: &StragglerModel,
+        rng: &mut Rng,
+        worker_map: Option<&[usize]>,
+    ) -> Result<JobHandle> {
+        let n_coded = plan.spec().n;
+        assert_eq!(coded_filters.len(), n_coded, "filters for every coded column");
+        match worker_map {
+            None => assert_eq!(n_coded, self.n, "plan/cluster n mismatch"),
+            Some(map) => {
+                assert_eq!(map.len(), n_coded, "one physical worker per coded column");
+                assert!(
+                    map.iter().all(|&w| w < self.n),
+                    "worker map targets a worker outside the pool"
+                );
+            }
+        }
         ensure!(!xs.is_empty(), "submit_batch: empty batch");
         let batch = xs.len();
         let job_id = self.next_job;
@@ -211,19 +314,25 @@ impl Cluster {
         let encode_secs = t0.elapsed().as_secs_f64();
         let upload_entries: usize = payloads.iter().map(|p| p.upload_entries()).sum();
 
-        // --- Dispatch with straggler fates.
-        let fates = straggler.draw(self.n, rng);
+        // --- Dispatch with straggler fates (per-job draw) overlaid by
+        // the persistent fault plan (keyed by physical worker id).
+        let fates = straggler.draw(n_coded, rng);
         let dispatched_at = Instant::now();
+        let mut dispatched_to = Vec::with_capacity(n_coded);
         for (payload, fate) in payloads.into_iter().zip(fates.iter()) {
-            let wid = payload.worker_id;
+            let coded = payload.worker_id;
+            let wid = worker_map.map_or(coded, |m| m[coded]);
+            let fate = self.fault_plan.fate_for_dispatch(wid, *fate);
+            dispatched_to.push(wid);
             self.senders[wid]
                 .send(WorkerMsg::Task {
                     job_id,
                     payload: Box::new(payload),
-                    fate: *fate,
+                    fate,
                 })
                 .with_context(|| format!("worker {wid} channel closed"))?;
         }
+        self.health.tick_job();
 
         let concurrent_jobs = 1 + self.in_flight();
         self.jobs.insert(
@@ -232,6 +341,8 @@ impl Cluster {
                 delta: plan.delta(),
                 batch,
                 replies: Vec::with_capacity(plan.delta()),
+                errors: Vec::new(),
+                dispatched_to,
                 phase: JobPhase::Collecting,
                 deadline: dispatched_at + self.collect_timeout,
                 dispatched_at,
@@ -268,6 +379,27 @@ impl Cluster {
         handle: JobHandle,
     ) -> Result<(Vec<Tensor3>, JobReport)> {
         let job_id = handle.job_id;
+        match self.try_wait_batch(plan, handle)? {
+            BatchOutcome::Decoded { outputs, report } => Ok((outputs, report)),
+            BatchOutcome::Failed {
+                got,
+                needed,
+                batch,
+                reason,
+            } => bail!(
+                "job {job_id}: {reason} — {got}/{needed} usable results; \
+                 all {batch} member sample(s) fail"
+            ),
+        }
+    }
+
+    /// [`Self::wait_batch`] that reports job failure as a value instead
+    /// of an error: the retry/degradation layer treats a timed-out or
+    /// undecodable job as a scheduling outcome, not a crash. Real
+    /// runtime errors (worker pool gone, decode failure on valid
+    /// replies, unknown job) still surface as `Err`.
+    pub fn try_wait_batch(&mut self, plan: &FcdccPlan, handle: JobHandle) -> Result<BatchOutcome> {
+        let job_id = handle.job_id;
         loop {
             self.drain_ready()?;
             self.expire_deadlines();
@@ -278,19 +410,30 @@ impl Cluster {
                 (job.phase, job.replies.len(), job.delta, job.deadline);
             match phase {
                 JobPhase::Done { .. } => break,
-                JobPhase::TimedOut => {
+                JobPhase::TimedOut | JobPhase::Undecodable => {
                     let job = self.remove_job(job_id);
                     // The partial replies are useless now; return their
                     // block buffers before failing the batch.
                     for r in job.replies {
-                        r.result.recycle();
+                        r.body.recycle();
                     }
-                    let batch = job.batch;
-                    bail!(
-                        "job {job_id}: timed out with {got}/{delta} results \
-                         (>{} workers failed?); all {batch} member sample(s) fail",
-                        self.n - delta
-                    );
+                    let reason = match phase {
+                        JobPhase::TimedOut => format!(
+                            "timed out with {got}/{delta} results (>{} workers failed?)",
+                            job.dispatched_to.len().saturating_sub(delta)
+                        ),
+                        _ => format!(
+                            "undecodable: {} of {} workers replied with errors",
+                            job.errors.len(),
+                            job.dispatched_to.len()
+                        ),
+                    };
+                    return Ok(BatchOutcome::Failed {
+                        got,
+                        needed: delta,
+                        batch: job.batch,
+                        reason,
+                    });
                 }
                 JobPhase::Collecting => {
                     let wait_for = deadline.saturating_duration_since(Instant::now());
@@ -314,22 +457,32 @@ impl Cluster {
             plan.delta(),
             job.delta
         );
-        // First-δ semantics: the δ earliest arrivals were kept; order them
-        // by worker id so decoding is deterministic for a fixed reply set.
-        // Any replies past δ (impossible today — routing stops at δ —
-        // but kept defensive) are recycled, not silently dropped.
+        // First-δ semantics: the δ earliest arrivals were kept; order
+        // them by coded column so decoding is deterministic for a fixed
+        // reply set (physical and coded order coincide for identity
+        // maps and ascending worker maps, but coded order is the one
+        // decode actually keys on). Any replies past δ (impossible
+        // today — routing stops at δ — but kept defensive) are
+        // recycled, not silently dropped.
         if job.replies.len() > job.delta {
             for r in job.replies.drain(job.delta..) {
-                r.result.recycle();
+                r.body.recycle();
             }
         }
-        job.replies.sort_by_key(|r| r.worker_id);
+        job.replies
+            .sort_by_key(|r| r.body.coded_id().unwrap_or(usize::MAX));
 
         // --- Decode phase (master): one recovery inversion (cached),
         // reused across every sample of the batch.
         let t2 = Instant::now();
-        let results: Vec<&crate::fcdcc::WorkerResult> =
-            job.replies.iter().map(|r| &r.result).collect();
+        let results: Vec<&WorkerResult> = job
+            .replies
+            .iter()
+            .map(|r| match &r.body {
+                ReplyBody::Ok { result, .. } => result,
+                ReplyBody::Err(_) => unreachable!("only valid replies are kept"),
+            })
+            .collect();
         let outputs = plan.decode_batch_refs(&results);
         let decode_secs = t2.elapsed().as_secs_f64();
 
@@ -346,13 +499,13 @@ impl Cluster {
         // Decoded (or failed): either way the coded blocks are spent —
         // return their buffers to the plan arena before reporting.
         for r in job.replies {
-            r.result.recycle();
+            r.body.recycle();
         }
         let outputs = outputs?;
 
-        Ok((
+        Ok(BatchOutcome::Decoded {
             outputs,
-            JobReport {
+            report: JobReport {
                 job_id,
                 n: self.n,
                 delta: job.delta,
@@ -366,12 +519,14 @@ impl Cluster {
                 download_entries,
                 concurrent_jobs: job.concurrent_jobs,
                 batch: job.batch,
+                errors: job.errors.len(),
             },
-        ))
+        })
     }
 
     /// Non-blocking poll: true once the job has either collected its δ
-    /// replies or timed out, i.e. once `wait` would return immediately.
+    /// replies or failed (timeout / undecodable), i.e. once `wait` would
+    /// return immediately.
     pub fn job_ready(&mut self, handle: &JobHandle) -> Result<bool> {
         self.drain_ready()?;
         self.expire_deadlines();
@@ -395,14 +550,41 @@ impl Cluster {
         self.wait(plan, handle)
     }
 
-    /// Route one reply into the in-flight table. Replies for settled jobs
-    /// (already decoded, timed out, or superseded) are **recycled** —
-    /// their block buffers return to the plan arena — and then dropped;
-    /// that is the demultiplexer's stale-result filter. Under
-    /// `StragglerModel::None` this is the common fate of n−δ replies per
-    /// job, so without the recycle the arena would leak every job.
+    /// Route one reply into the in-flight table. Every reply — live,
+    /// stale, error, corrupt — first feeds the health tracker; error
+    /// replies and checksum-failing replies are counted against their
+    /// job (failing it fast once δ valid results become unreachable),
+    /// and replies for settled jobs are **recycled** — their block
+    /// buffers return to the plan arena — and then dropped; that is the
+    /// demultiplexer's stale-result filter. Under `StragglerModel::None`
+    /// this is the common fate of n−δ replies per job, so without the
+    /// recycle the arena would leak every job.
     fn route(&mut self, reply: WorkerReply) {
         let job_id = reply.job_id;
+        let phys = reply.worker_id;
+        let valid = match &reply.body {
+            ReplyBody::Err(_) => {
+                self.health.observe_error(phys);
+                false
+            }
+            ReplyBody::Ok { result, checksum } => {
+                // Integrity gate: a perturbed reply must never reach the
+                // decoder. The checksum was computed worker-side before
+                // the (injected) corruption.
+                let intact = result_checksum(result) == *checksum;
+                if intact {
+                    self.health.observe_ok(phys);
+                } else {
+                    self.health.observe_corrupt(phys);
+                }
+                intact
+            }
+        };
+        if !valid {
+            reply.body.recycle();
+            self.note_job_error(job_id, phys);
+            return;
+        }
         // Collection ends when the δ-th reply was *sent*, not when the
         // master got around to draining it — under pipelined serving the
         // two differ by arbitrary scheduler work.
@@ -423,11 +605,30 @@ impl Cluster {
             }
         }
         if let Some(r) = stale {
-            r.result.recycle();
+            r.body.recycle();
         }
         if finished {
             // Cancel the stragglers' superseded subtasks so their injected
             // delays don't cascade into the other in-flight jobs.
+            self.broadcast_cancel(job_id);
+        }
+    }
+
+    /// Count one failed (error / corrupt) reply against its job, and
+    /// fail the job fast once the remaining silent workers cannot bring
+    /// the valid-reply count up to δ.
+    fn note_job_error(&mut self, job_id: u64, phys: usize) {
+        let mut undecodable = false;
+        if let Some(job) = self.jobs.get_mut(&job_id) {
+            if matches!(job.phase, JobPhase::Collecting) {
+                job.errors.push(phys);
+                if job.dispatched_to.len() - job.errors.len() < job.delta {
+                    job.phase = JobPhase::Undecodable;
+                    undecodable = true;
+                }
+            }
+        }
+        if undecodable {
             self.broadcast_cancel(job_id);
         }
     }
@@ -446,6 +647,8 @@ impl Cluster {
     /// Mark jobs whose per-job deadline has passed as timed out and tell
     /// the workers to drop their subtasks. Other in-flight jobs are
     /// untouched — one job blowing its deadline never poisons the rest.
+    /// Every dispatched worker that neither replied nor errored is
+    /// charged a missed-deadline observation in the health tracker.
     fn expire_deadlines(&mut self) {
         let now = Instant::now();
         let expired: Vec<u64> = self
@@ -455,8 +658,20 @@ impl Cluster {
             .map(|(&id, _)| id)
             .collect();
         for id in expired {
+            let mut missing: Vec<usize> = Vec::new();
             if let Some(j) = self.jobs.get_mut(&id) {
                 j.phase = JobPhase::TimedOut;
+                missing = j
+                    .dispatched_to
+                    .iter()
+                    .copied()
+                    .filter(|w| {
+                        !j.errors.contains(w) && !j.replies.iter().any(|r| r.worker_id == *w)
+                    })
+                    .collect();
+            }
+            for w in missing {
+                self.health.observe_timeout(w);
             }
             self.broadcast_cancel(id);
         }
@@ -482,13 +697,27 @@ impl Cluster {
         }
     }
 
-    /// Graceful shutdown: tell every worker to exit and join the threads.
+    /// Graceful shutdown: tell every worker to exit, join the threads,
+    /// then recycle every reply still buffered in the result channel or
+    /// parked in the in-flight table — after this, the plan arena's
+    /// outstanding count is exactly zero (the buffer-hygiene invariant
+    /// the failure tests assert).
     pub fn shutdown(self) {
         for tx in &self.senders {
             let _ = tx.send(WorkerMsg::Shutdown);
         }
         for h in self.handles {
             let _ = h.join();
+        }
+        // The workers drained their queues before exiting, so every
+        // reply they ever sent is now buffered here.
+        while let Ok(r) = self.results.try_recv() {
+            r.body.recycle();
+        }
+        for (_, j) in self.jobs {
+            for r in j.replies {
+                r.body.recycle();
+            }
         }
     }
 }
@@ -525,6 +754,7 @@ mod tests {
         assert_eq!(report.delta, 2);
         assert_eq!(report.used_workers.len(), 2);
         assert_eq!(report.concurrent_jobs, 1);
+        assert_eq!(report.errors, 0);
         assert!(report.upload_entries > 0);
         assert!(report.download_entries > 0);
     }
@@ -681,6 +911,95 @@ mod tests {
             assert!(report.concurrent_jobs >= 1);
         }
         assert_eq!(cluster.in_flight(), 0);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn mapped_dispatch_decodes_on_a_live_subset() {
+        // A plan built for 3 workers dispatched onto physical workers
+        // {0, 2, 3} of a 4-worker pool: coded columns keep their index,
+        // only the wire addresses change — decode must be exact.
+        let (layer, x, k) = small_setup();
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 3).unwrap(); // delta=2
+        let coded_filters = plan.encode_filters(&k);
+        let mut cluster = Cluster::new(4, Arc::new(DirectEngine));
+        let mut rng = Rng::new(13);
+        let map = [0usize, 2, 3];
+        let handle = cluster
+            .submit_batch_mapped(
+                &plan,
+                &[&x],
+                &coded_filters,
+                &StragglerModel::None,
+                &mut rng,
+                Some(&map),
+            )
+            .unwrap();
+        let (ys, report) = cluster.wait_batch(&plan, handle).unwrap();
+        cluster.shutdown();
+        let want = conv2d(&x, &k, layer.params());
+        assert!(mse(&ys[0].data, &want.data) < 1e-18);
+        // Used workers are reported by physical id, all from the map.
+        assert!(report.used_workers.iter().all(|w| map.contains(w)));
+    }
+
+    #[test]
+    fn all_error_replies_fail_fast_without_timeout() {
+        let (layer, x, k) = small_setup();
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap(); // delta=2
+        let coded_filters = plan.encode_filters(&k);
+        let mut cluster = Cluster::new(4, Arc::new(DirectEngine));
+        // Long timeout: only the error fail-fast can end the job quickly.
+        cluster.collect_timeout = Duration::from_secs(30);
+        cluster.set_fault_plan(
+            (0..4).fold(FaultPlan::none(), |fp, w| {
+                fp.with_fault(w, crate::cluster::straggler::FaultKind::ErrorReply { jobs: 1 })
+            }),
+        );
+        let mut rng = Rng::new(14);
+        let t0 = Instant::now();
+        let err = cluster
+            .run_job(&plan, &x, &coded_filters, &StragglerModel::None, &mut rng)
+            .unwrap_err();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "fail-fast should beat the 30s deadline"
+        );
+        assert!(err.to_string().contains("undecodable"), "err: {err:#}");
+        // The workers are alive (error replies, not crashes): the same
+        // cluster completes the next job, whose tasks are fault-free.
+        let want = conv2d(&x, &k, layer.params());
+        let (y, report) = cluster
+            .run_job(&plan, &x, &coded_filters, &StragglerModel::None, &mut rng)
+            .unwrap();
+        assert!(mse(&y.data, &want.data) < 1e-18);
+        assert_eq!(report.errors, 0);
+        assert_eq!(cluster.health().counters().errors, 4);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn corrupt_replies_are_rejected_not_decoded() {
+        let (layer, x, k) = small_setup();
+        let plan = FcdccPlan::new_crme(&layer, 4, 2, 4).unwrap(); // delta=2
+        let coded_filters = plan.encode_filters(&k);
+        let mut cluster = Cluster::new(4, Arc::new(DirectEngine));
+        cluster.set_fault_plan(FaultPlan::none().with_fault(
+            0,
+            crate::cluster::straggler::FaultKind::CorruptReply { jobs: u64::MAX },
+        ));
+        let mut rng = Rng::new(15);
+        let want = conv2d(&x, &k, layer.params());
+        for _ in 0..3 {
+            let (y, _) = cluster
+                .run_job(&plan, &x, &coded_filters, &StragglerModel::None, &mut rng)
+                .unwrap();
+            assert!(
+                mse(&y.data, &want.data) < 1e-18,
+                "a corrupt block must never reach the decoder"
+            );
+        }
+        assert_eq!(cluster.health().counters().corruptions, 3);
         cluster.shutdown();
     }
 }

@@ -16,11 +16,13 @@
 //! time; job completion = δ-th order statistic), which is the quantity
 //! the paper's Figs. 5–6 plot.
 
+pub mod health;
 pub mod master;
 pub mod sim;
 pub mod straggler;
 pub mod worker;
 
-pub use master::{Cluster, JobHandle, JobReport};
+pub use health::{HealthPolicy, HealthTracker, WorkerState};
+pub use master::{BatchOutcome, Cluster, JobHandle, JobReport};
 pub use sim::{simulate_job, SimJob};
-pub use straggler::StragglerModel;
+pub use straggler::{FaultKind, FaultPlan, StragglerModel};

@@ -1,9 +1,25 @@
-//! Straggler injection — the paper simulates stragglers with `sleep()`
-//! and randomized worker availability (§VI-A); this module reproduces
-//! that, plus exponential-latency and hard-failure models from the CDC
-//! literature.
+//! Straggler and fault injection — the paper simulates stragglers with
+//! `sleep()` and randomized worker availability (§VI-A); this module
+//! reproduces that, plus exponential-latency and hard-failure models
+//! from the CDC literature.
+//!
+//! Two layers of injection compose here:
+//!
+//! * [`StragglerModel`] draws a fresh, memoryless fate vector **per
+//!   job** — the paper's per-round availability model.
+//! * [`FaultPlan`] overlays **persistent per-worker fault states** on
+//!   top of those draws: a crashed worker stays crashed across jobs
+//!   (optionally restarting after a fixed number of dispatches), an
+//!   erroring worker answers with explicit failures, a corrupting
+//!   worker perturbs its reply blocks (caught by the master's reply
+//!   checksum), a slow worker adds fixed latency to every task. The
+//!   plan is deterministic: fault activation is keyed by the per-worker
+//!   dispatch count, never by wall clock or a shared RNG, so the same
+//!   plan replayed over the same job sequence yields the same fates.
+//!   `FaultPlan::chaos` derives a randomized single-worker plan from a
+//!   seed (`FCDCC_CHAOS_SEED` in the CI chaos leg).
 
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, SplitMix64};
 use std::time::Duration;
 
 /// What happens to a worker on a given job.
@@ -15,6 +31,27 @@ pub enum WorkerFate {
     Prompt,
     /// Never responds (crash / upload failure / download failure).
     Failed,
+    /// Responds immediately with an **explicit error** instead of a
+    /// result — the "worker process alive, compute broken" failure mode
+    /// (injected, or the real fate of an engine error / panic).
+    ErrorReply,
+    /// Computes honestly, then its reply blocks are perturbed in
+    /// transit. The worker checksums the blocks *before* the
+    /// perturbation, so the master's integrity check rejects the reply.
+    CorruptReply,
+}
+
+impl WorkerFate {
+    /// Injected latency before the worker acts, or `None` when it never
+    /// replies at all. Error replies are immediate but carry no result,
+    /// so for makespan purposes (`cluster::sim`) they count as failures.
+    pub fn delay(&self) -> Option<Duration> {
+        match self {
+            WorkerFate::Prompt | WorkerFate::CorruptReply => Some(Duration::ZERO),
+            WorkerFate::Delayed(d) => Some(*d),
+            WorkerFate::Failed | WorkerFate::ErrorReply => None,
+        }
+    }
 }
 
 /// Straggler model applied per (job, worker) pair.
@@ -74,12 +111,135 @@ impl StragglerModel {
     }
 }
 
-impl WorkerFate {
-    pub fn delay(&self) -> Option<Duration> {
-        match self {
-            WorkerFate::Prompt => Some(Duration::ZERO),
-            WorkerFate::Delayed(d) => Some(*d),
-            WorkerFate::Failed => None,
+/// A persistent per-worker fault. Activation is keyed by `t`, the
+/// number of tasks previously dispatched to that worker — job counts,
+/// not wall clock, so the same plan over the same job sequence is
+/// exactly reproducible.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Dead (never replies) from its `after`-th task on. With
+    /// `restart_after = Some(r)` the worker "restarts" and is healthy
+    /// again once `r` tasks have been dispatched at it while down.
+    Crash {
+        after: u64,
+        restart_after: Option<u64>,
+    },
+    /// Answers its first `jobs` tasks with an explicit error reply,
+    /// healthy afterwards (`u64::MAX` = errors forever).
+    ErrorReply { jobs: u64 },
+    /// Perturbs the reply blocks of its first `jobs` tasks (caught by
+    /// the master's checksum), honest afterwards.
+    CorruptReply { jobs: u64 },
+    /// Fixed extra latency on **every** task — a deterministic pin for
+    /// tests that need a reproducible first-δ reply subset.
+    Slow { delay: Duration },
+}
+
+impl FaultKind {
+    /// The fate this fault forces on the worker's `t`-th task (0-based),
+    /// or `None` when the fault is not active for that task.
+    fn fate_at(&self, t: u64) -> Option<WorkerFate> {
+        match *self {
+            FaultKind::Crash {
+                after,
+                restart_after,
+            } => {
+                let down = t >= after
+                    && match restart_after {
+                        Some(r) => t < after.saturating_add(r),
+                        None => true,
+                    };
+                down.then_some(WorkerFate::Failed)
+            }
+            FaultKind::ErrorReply { jobs } => (t < jobs).then_some(WorkerFate::ErrorReply),
+            FaultKind::CorruptReply { jobs } => (t < jobs).then_some(WorkerFate::CorruptReply),
+            FaultKind::Slow { delay } => Some(WorkerFate::Delayed(delay)),
+        }
+    }
+}
+
+/// Deterministic, seeded fault-injection plan: persistent per-worker
+/// [`FaultKind`]s overlaid on the per-job [`StragglerModel`] draws at
+/// dispatch time. Owned by the `Cluster`; `--fault-*` CLI flags and
+/// `FCDCC_CHAOS_SEED` build one.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// (physical worker id, fault) pairs; at most one fault per worker
+    /// applies (first match wins).
+    faults: Vec<(usize, FaultKind)>,
+    /// Per-worker dispatch counters, grown on demand.
+    tasks_seen: Vec<u64>,
+}
+
+impl FaultPlan {
+    /// A plan with no faults (the default).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Attach a persistent fault to a physical worker id (builder).
+    pub fn with_fault(mut self, worker: usize, kind: FaultKind) -> Self {
+        self.faults.push((worker, kind));
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Derive a randomized single-worker fault plan from a seed: the
+    /// victim and the fault kind (transient crash / error burst /
+    /// corrupt burst / slow) are both seed-determined. Every kind it
+    /// can produce is absorbable by a cluster with γ ≥ 1, so chaos
+    /// tests can assert full completion for *any* seed.
+    pub fn chaos(n: usize, seed: u64) -> Self {
+        let mut s = SplitMix64::new(seed);
+        let worker = (s.next_u64() % n.max(1) as u64) as usize;
+        let kind = match s.next_u64() % 4 {
+            0 => FaultKind::Crash {
+                after: 0,
+                restart_after: Some(2 + s.next_u64() % 3),
+            },
+            1 => FaultKind::ErrorReply {
+                jobs: 1 + s.next_u64() % 3,
+            },
+            2 => FaultKind::CorruptReply {
+                jobs: 1 + s.next_u64() % 3,
+            },
+            _ => FaultKind::Slow {
+                delay: Duration::from_millis(5 + s.next_u64() % 20),
+            },
+        };
+        Self::none().with_fault(worker, kind)
+    }
+
+    /// The chaos seed from `FCDCC_CHAOS_SEED`, if set and parseable.
+    pub fn chaos_seed_from_env() -> Option<u64> {
+        std::env::var("FCDCC_CHAOS_SEED").ok()?.trim().parse().ok()
+    }
+
+    /// The fate of one task dispatched at physical worker `worker`,
+    /// given the straggler model already drew `base` for it. Advances
+    /// the worker's dispatch counter. An active fault overrides the
+    /// draw, except `Slow`, which combines with an existing delay by
+    /// taking the larger of the two.
+    pub fn fate_for_dispatch(&mut self, worker: usize, base: WorkerFate) -> WorkerFate {
+        if worker >= self.tasks_seen.len() {
+            self.tasks_seen.resize(worker + 1, 0);
+        }
+        let t = self.tasks_seen[worker];
+        self.tasks_seen[worker] += 1;
+        let Some((_, kind)) = self.faults.iter().find(|(w, _)| *w == worker) else {
+            return base;
+        };
+        match kind.fate_at(t) {
+            Some(WorkerFate::Delayed(d)) => match base {
+                WorkerFate::Delayed(d0) => WorkerFate::Delayed(d0.max(d)),
+                WorkerFate::Failed => WorkerFate::Failed,
+                _ => WorkerFate::Delayed(d),
+            },
+            Some(forced) => forced,
+            None => base,
         }
     }
 }
@@ -136,5 +296,80 @@ mod tests {
         }
         let rate = total as f64 / 2000.0;
         assert!((rate - 0.3).abs() < 0.05, "rate={rate}");
+    }
+
+    #[test]
+    fn error_and_corrupt_fates_have_expected_delays() {
+        assert_eq!(WorkerFate::ErrorReply.delay(), None);
+        assert_eq!(WorkerFate::CorruptReply.delay(), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn crash_with_restart_counts_dispatches() {
+        let mut fp = FaultPlan::none().with_fault(
+            1,
+            FaultKind::Crash {
+                after: 1,
+                restart_after: Some(2),
+            },
+        );
+        // Worker 1: healthy, down, down, healthy again.
+        assert_eq!(fp.fate_for_dispatch(1, WorkerFate::Prompt), WorkerFate::Prompt);
+        assert_eq!(fp.fate_for_dispatch(1, WorkerFate::Prompt), WorkerFate::Failed);
+        assert_eq!(fp.fate_for_dispatch(1, WorkerFate::Prompt), WorkerFate::Failed);
+        assert_eq!(fp.fate_for_dispatch(1, WorkerFate::Prompt), WorkerFate::Prompt);
+        // Other workers are never touched.
+        assert_eq!(fp.fate_for_dispatch(0, WorkerFate::Prompt), WorkerFate::Prompt);
+    }
+
+    #[test]
+    fn error_burst_is_bounded_and_crash_forever_is_not() {
+        let mut fp = FaultPlan::none()
+            .with_fault(0, FaultKind::ErrorReply { jobs: 2 })
+            .with_fault(
+                2,
+                FaultKind::Crash {
+                    after: 0,
+                    restart_after: None,
+                },
+            );
+        assert_eq!(fp.fate_for_dispatch(0, WorkerFate::Prompt), WorkerFate::ErrorReply);
+        assert_eq!(fp.fate_for_dispatch(0, WorkerFate::Prompt), WorkerFate::ErrorReply);
+        assert_eq!(fp.fate_for_dispatch(0, WorkerFate::Prompt), WorkerFate::Prompt);
+        for _ in 0..10 {
+            assert_eq!(fp.fate_for_dispatch(2, WorkerFate::Prompt), WorkerFate::Failed);
+        }
+    }
+
+    #[test]
+    fn slow_fault_combines_with_drawn_delay() {
+        let slow = Duration::from_millis(50);
+        let mut fp = FaultPlan::none().with_fault(0, FaultKind::Slow { delay: slow });
+        assert_eq!(
+            fp.fate_for_dispatch(0, WorkerFate::Prompt),
+            WorkerFate::Delayed(slow)
+        );
+        assert_eq!(
+            fp.fate_for_dispatch(0, WorkerFate::Delayed(Duration::from_millis(200))),
+            WorkerFate::Delayed(Duration::from_millis(200)),
+            "the larger of the two delays wins"
+        );
+        assert_eq!(
+            fp.fate_for_dispatch(0, WorkerFate::Failed),
+            WorkerFate::Failed,
+            "a drawn hard failure is not resurrected by a slow fault"
+        );
+    }
+
+    #[test]
+    fn chaos_plans_are_seed_deterministic() {
+        let a = FaultPlan::chaos(4, 2024);
+        let b = FaultPlan::chaos(4, 2024);
+        assert_eq!(a.faults, b.faults);
+        assert_eq!(a.faults.len(), 1);
+        assert!(a.faults[0].0 < 4);
+        // Different seeds eventually pick different faults.
+        let any_different = (0..16).any(|s| FaultPlan::chaos(4, s).faults != a.faults);
+        assert!(any_different);
     }
 }

@@ -18,6 +18,16 @@
 //! late reply is dropped by the master's stale-reply filter exactly like
 //! an unbatched one.
 //!
+//! Replies carry an explicit **body**: a successful result ships with a
+//! checksum over its block payload computed *before* the reply leaves
+//! the worker, so the master can reject corrupted replies (injected via
+//! [`WorkerFate::CorruptReply`], or real wire/memory damage in a future
+//! remote transport) instead of decoding garbage. Engine errors — and,
+//! via `catch_unwind`, engine **panics** — produce an error-reply body
+//! rather than a silent drop or a dead thread, so the master can account
+//! the failure and feed its health tracker while the coded redundancy
+//! absorbs the missing block.
+//!
 //! Under the concurrent job runtime any number of jobs are in flight at
 //! once and they complete **out of order**, so cancellation is per-job:
 //! the master sends `Cancel(job_id)` as soon as a job has its δ results
@@ -32,9 +42,10 @@ use crate::cluster::straggler::WorkerFate;
 use crate::engine::TaskEngine;
 use crate::fcdcc::{WorkerPayload, WorkerResult};
 use std::collections::{HashSet, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Master → worker messages.
 pub enum WorkerMsg {
@@ -50,11 +61,44 @@ pub enum WorkerMsg {
     Shutdown,
 }
 
+/// What a reply carries: a result with its integrity checksum, or an
+/// explicit failure.
+pub enum ReplyBody {
+    /// Coded result blocks plus [`result_checksum`] over them, computed
+    /// before the reply left the worker — the master rejects replies
+    /// whose blocks no longer match.
+    Ok { result: WorkerResult, checksum: u64 },
+    /// The worker is alive but could not produce a result: an injected
+    /// error fate, an engine error, or an engine panic.
+    Err(String),
+}
+
+impl ReplyBody {
+    /// Return any carried block buffers to the plan arena.
+    pub fn recycle(self) {
+        if let ReplyBody::Ok { result, .. } = self {
+            result.recycle();
+        }
+    }
+
+    /// The coded column index this body decodes as (`None` for errors).
+    pub fn coded_id(&self) -> Option<usize> {
+        match self {
+            ReplyBody::Ok { result, .. } => Some(result.worker_id),
+            ReplyBody::Err(_) => None,
+        }
+    }
+}
+
 /// Worker → master replies.
 pub struct WorkerReply {
     pub job_id: u64,
+    /// Physical worker id (the thread that sent this reply) — feeds the
+    /// master's health tracker. The *coded* column index lives in the
+    /// result body; the two differ when a re-planned job maps coded
+    /// columns onto a live-worker subset.
     pub worker_id: usize,
-    pub result: WorkerResult,
+    pub body: ReplyBody,
     /// Pure compute time (excludes the injected straggler delay).
     pub compute_secs: f64,
     /// The injected delay actually slept.
@@ -63,6 +107,20 @@ pub struct WorkerReply {
     /// account collection time up to arrival rather than up to whenever
     /// it next drains the channel (they differ under pipelined serving).
     pub sent_at: Instant,
+}
+
+/// Order-sensitive FNV-1a-style hash over a result's block payload
+/// (f64 bit patterns). Cheap relative to the convolutions that produced
+/// the blocks, and any single-bit perturbation flips it.
+pub fn result_checksum(result: &WorkerResult) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for blk in &result.blocks {
+        for &v in &blk.data {
+            h ^= v.to_bits();
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
 }
 
 /// The set of jobs this worker must not compute: a low watermark (all
@@ -131,10 +189,24 @@ pub fn worker_loop(
                     payload.recycle();
                     continue;
                 }
+                if matches!(fate, WorkerFate::ErrorReply) {
+                    // Alive-but-broken: answer immediately with an
+                    // explicit failure the master can account.
+                    payload.recycle();
+                    let _ = tx.send(WorkerReply {
+                        job_id,
+                        worker_id,
+                        body: ReplyBody::Err("injected error-reply fault".to_string()),
+                        compute_secs: 0.0,
+                        delay_secs: 0.0,
+                        sent_at: Instant::now(),
+                    });
+                    continue;
+                }
                 let delay = match fate.delay() {
                     Some(d) => d,
                     None => {
-                        // Failed worker: silently drop the task (but
+                        // Crashed worker: silently drop the task (but
                         // still return its slab buffers to the arena).
                         payload.recycle();
                         continue;
@@ -169,26 +241,49 @@ pub fn worker_loop(
                     }
                 }
                 let t0 = Instant::now();
-                let result = match engine.run(&payload) {
-                    Ok(r) => r,
-                    Err(e) => {
-                        // An engine error behaves like a worker failure:
-                        // the coded redundancy absorbs it.
+                // A panicking engine must cost this worker one error
+                // reply, not the thread (a dead thread would eventually
+                // disconnect the whole cluster). The payload is only
+                // read by the engine, so unwinding past the borrow is
+                // benign and it can still be recycled afterwards.
+                let ran = catch_unwind(AssertUnwindSafe(|| engine.run(&payload)));
+                let compute_secs = t0.elapsed().as_secs_f64();
+                payload.recycle();
+                let body = match ran {
+                    Ok(Ok(mut result)) => {
+                        let checksum = result_checksum(&result);
+                        if matches!(fate, WorkerFate::CorruptReply) {
+                            // Perturb one block entry *after* the
+                            // checksum: models damage in transit, which
+                            // the master's integrity check must catch.
+                            if let Some(v) =
+                                result.blocks.first_mut().and_then(|b| b.data.first_mut())
+                            {
+                                *v += 1.0;
+                            }
+                        }
+                        ReplyBody::Ok { result, checksum }
+                    }
+                    Ok(Err(e)) => {
                         eprintln!("worker {worker_id}: task failed: {e:#}");
-                        payload.recycle();
-                        continue;
+                        ReplyBody::Err(format!("engine error: {e:#}"))
+                    }
+                    Err(panic) => {
+                        let msg = panic
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| panic.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "<non-string panic>".to_string());
+                        eprintln!("worker {worker_id}: engine panicked: {msg}");
+                        ReplyBody::Err(format!("engine panic: {msg}"))
                     }
                 };
-                let compute_secs = t0.elapsed().as_secs_f64();
-                // The subtask is done with its coded inputs; return the
-                // slab buffers before the reply even ships.
-                payload.recycle();
                 // The master may have moved on (enough results already);
                 // a send error is normal shutdown noise.
                 let _ = tx.send(WorkerReply {
                     job_id,
                     worker_id,
-                    result,
+                    body,
                     compute_secs,
                     delay_secs: delay.as_secs_f64(),
                     sent_at: Instant::now(),
@@ -196,11 +291,22 @@ pub fn worker_loop(
             }
         }
     }
+    // Drain the channel's unprocessed backlog so queued task payloads
+    // return to the arena instead of being dropped with the receiver —
+    // shutdown must leave the arena's outstanding counter at zero.
+    while let Ok(msg) = rx.recv_timeout(Duration::ZERO) {
+        if let WorkerMsg::Task { payload, .. } = msg {
+            payload.recycle();
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fcdcc::scratch::SlabArena;
+    use crate::tensor::Tensor3;
+    use crate::util::rng::Rng;
 
     #[test]
     fn cancel_set_tracks_out_of_order_completions() {
@@ -229,5 +335,21 @@ mod tests {
         // Watermarks never move backwards.
         c.raise_watermark(3);
         assert_eq!(c.up_to, 4);
+    }
+
+    #[test]
+    fn checksum_flips_on_any_perturbation() {
+        let mut rng = Rng::new(41);
+        let blocks = vec![Tensor3::random(2, 3, 3, &mut rng), Tensor3::random(2, 3, 3, &mut rng)];
+        let mut result = WorkerResult {
+            worker_id: 0,
+            batch: 1,
+            blocks,
+            arena: Arc::new(SlabArena::new(8)),
+        };
+        let h0 = result_checksum(&result);
+        assert_eq!(h0, result_checksum(&result), "checksum is deterministic");
+        result.blocks[1].data[4] += 1e-9;
+        assert_ne!(h0, result_checksum(&result), "tiny perturbation detected");
     }
 }

@@ -18,11 +18,24 @@
 //! stall, so no request waits forever. `batch_window = 1` degenerates to
 //! pure pipelined serving, and depth 1 to the old strictly-sequential
 //! loop — same code path, no overlap.
+//!
+//! The scheduler is **fault tolerant** (DESIGN.md §Fault tolerance): a
+//! job that times out or becomes undecodable is re-dispatched to the
+//! current live set with a bounded retry budget and exponential backoff;
+//! when quarantine (fed by the cluster's health tracker) shrinks the
+//! live set below full strength, stages are re-planned for the smaller n
+//! (the paper's flexibility property — n is a code parameter, not a
+//! partition parameter) and restored when workers are readmitted; and
+//! when even the live set cannot reach a stage's recovery threshold δ,
+//! the stage **degrades** to master-local execution — bitwise identical
+//! to the reference conv — so requests complete with `degraded`
+//! accounting instead of failing. Under any single-worker fault the loop
+//! completes 100% of requests.
 
-use crate::cluster::{Cluster, JobHandle, StragglerModel};
+use crate::cluster::{BatchOutcome, Cluster, FaultPlan, HealthPolicy, JobHandle, StragglerModel};
 use crate::coding::{registry, CodeFamily};
 use crate::engine::{Im2colEngine, TaskEngine};
-use crate::fcdcc::{NetworkPlan, PlanOptions};
+use crate::fcdcc::{NetworkPlan, PlanOptions, StageVariant};
 use crate::metrics::{CacheStats, EncodeStats, Stats};
 use crate::model::network::softmax;
 use crate::model::{Activation, Network};
@@ -31,7 +44,7 @@ use crate::util::{mse, rng::Rng};
 use anyhow::{ensure, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Serving-loop configuration.
 pub struct ServeConfig {
@@ -61,6 +74,20 @@ pub struct ServeConfig {
     /// Code family every conv stage is planned with (`--code` /
     /// `FCDCC_CODE`, defaulting to the session's selected family).
     pub code: CodeFamily,
+    /// Deterministic fault injection installed on the cluster
+    /// (`--fault-*` / `FCDCC_CHAOS_SEED`; [`FaultPlan::none`] = clean).
+    pub fault_plan: FaultPlan,
+    /// Re-dispatches allowed per coded job before its members degrade to
+    /// master-local execution (`--retry-budget`).
+    pub retry_budget: usize,
+    /// Thresholds of the worker-health state machine.
+    pub health: HealthPolicy,
+    /// Re-plan stages for the shrunken live set when quarantine bites
+    /// (`false` keeps dispatching the full-n plan and leans on
+    /// retry + degradation alone).
+    pub replan: bool,
+    /// Per-job collection deadline (`--collect-timeout-ms`).
+    pub collect_timeout: Duration,
 }
 
 impl ServeConfig {
@@ -80,6 +107,11 @@ impl ServeConfig {
             verify_every: 1,
             prepack: true,
             code: registry::default_family(),
+            fault_plan: FaultPlan::none(),
+            retry_budget: 2,
+            health: HealthPolicy::default(),
+            replan: true,
+            collect_timeout: Duration::from_secs(60),
         }
     }
 }
@@ -115,7 +147,8 @@ pub struct ServeStats {
     pub batch_window: usize,
     /// Coded jobs dispatched (= decodes performed). With coalescing
     /// (`2 <= batch_window <= max_in_flight`) this lands strictly below
-    /// `requests · conv_stages`.
+    /// `requests · conv_stages`. Retries of a failed job are counted in
+    /// `retries`, not here.
     pub coded_jobs: usize,
     /// Mean samples per coded job.
     pub mean_batch: f64,
@@ -143,6 +176,24 @@ pub struct ServeStats {
     /// applications performed where a dense scan of all `k_A`
     /// coefficients would have visited `dense_terms` slots.
     pub encode: EncodeStats,
+    /// Requests that hard-failed (no logits). Retry + degradation make
+    /// this **zero by construction**: a job past its retry budget
+    /// degrades its members to master-local execution instead of
+    /// erroring.
+    pub failed_requests: usize,
+    /// Coded jobs re-dispatched after a timeout / undecodable failure.
+    pub retries: usize,
+    /// Requests that completed with at least one conv stage degraded to
+    /// master-local execution (still bit-exact vs the reference conv).
+    pub degraded_requests: usize,
+    /// Worker quarantine transitions observed by the health tracker.
+    pub quarantine_events: u64,
+    /// Quarantined workers probed and readmitted to the dispatch set.
+    pub readmissions: u64,
+    /// Slab-arena buffers still checked out after cluster shutdown —
+    /// the buffer-hygiene invariant; **zero** on every path (decoded,
+    /// retried, timed out, degraded).
+    pub arena_outstanding: u64,
     /// Final logits of every request, in request order.
     pub logits: Vec<Vec<f64>>,
 }
@@ -178,6 +229,65 @@ struct BatchJob {
     /// Member request ids, in batch (submission) order.
     members: Vec<usize>,
     handle: JobHandle,
+    /// Dispatches so far (1 = first attempt).
+    attempts: usize,
+    /// The re-planned variant this attempt was dispatched with
+    /// (`None` = the base full-cluster stage plan).
+    variant: Option<Arc<StageVariant>>,
+}
+
+/// How the scheduler currently runs one conv stage, derived from the
+/// cluster's live set before every dispatch.
+enum StageMode {
+    /// Full-cluster plan (the live set is complete, or re-planning is
+    /// disabled).
+    Full,
+    /// Re-planned for the shrunken live set, dispatched via
+    /// `submit_batch_mapped`.
+    Variant(Arc<StageVariant>),
+    /// The live set cannot reach this stage's δ: run the conv on the
+    /// master (graceful degradation).
+    Degraded,
+}
+
+/// Mutable fault-handling state threaded through the scheduler.
+struct FaultCtx<'a> {
+    cfg: &'a ServeConfig,
+    /// Re-planned variants, keyed by (stage, live set) — built once per
+    /// distinct shrink and reused until readmission restores the full
+    /// plan.
+    variants: BTreeMap<(usize, Vec<usize>), Arc<StageVariant>>,
+    retries: usize,
+    /// Per-request: completed with ≥1 degraded stage.
+    degraded: Vec<bool>,
+}
+
+impl FaultCtx<'_> {
+    /// Pick the dispatch mode for `stage` against the current live set.
+    fn stage_mode(&mut self, plan: &NetworkPlan, cluster: &Cluster, stage: usize) -> StageMode {
+        let live = cluster.live_workers();
+        if live.len() == self.cfg.n_workers || !self.cfg.replan {
+            return StageMode::Full;
+        }
+        let delta = plan.stages()[stage].plan.delta();
+        if live.len() < delta {
+            return StageMode::Degraded;
+        }
+        let key = (stage, live);
+        if let Some(v) = self.variants.get(&key) {
+            return StageMode::Variant(Arc::clone(v));
+        }
+        match plan.replan_stage(stage, &key.1) {
+            Ok(v) => {
+                let v = Arc::new(v);
+                self.variants.insert(key, Arc::clone(&v));
+                StageMode::Variant(v)
+            }
+            // The code family rejected the shrunken n: degrade rather
+            // than keep dispatching to quarantined workers.
+            Err(_) => StageMode::Degraded,
+        }
+    }
 }
 
 /// Run the distributed LeNet-5 serving loop; returns latency/throughput
@@ -203,9 +313,17 @@ pub fn serve_lenet(cfg: ServeConfig) -> Result<ServeStats> {
     };
     let plan = NetworkPlan::with_options(net, &cfg.partitions, cfg.n_workers, opts)?;
     let mut cluster = Cluster::new(cfg.n_workers, Arc::clone(&cfg.engine));
+    cluster.collect_timeout = cfg.collect_timeout;
+    cluster.set_fault_plan(cfg.fault_plan.clone());
+    cluster.set_health_policy(cfg.health);
     let stats = run_pipeline(&plan, &mut cluster, &cfg);
     cluster.shutdown();
-    stats
+    // Only after shutdown is the hygiene invariant decidable: the
+    // workers have drained their queues and every reply was recycled.
+    stats.map(|mut s| {
+        s.arena_outstanding = plan.arena().outstanding();
+        s
+    })
 }
 
 fn run_pipeline(
@@ -234,6 +352,12 @@ fn run_pipeline(
     let mut logits: Vec<Vec<f64>> = vec![Vec::new(); cfg.requests];
     let mut mses = Vec::new();
     let mut mismatches = 0usize;
+    let mut ctx = FaultCtx {
+        cfg,
+        variants: BTreeMap::new(),
+        retries: 0,
+        degraded: vec![false; cfg.requests],
+    };
     let t_all = Instant::now();
 
     while completed < cfg.requests {
@@ -324,7 +448,7 @@ fn run_pipeline(
             while queues[stage].len() >= cfg.batch_window {
                 let count = cfg.batch_window;
                 flush_batch(
-                    plan, cluster, cfg, &mut active, &mut queues[stage], stage, count,
+                    plan, cluster, &mut ctx, &mut active, &mut queues[stage], stage, count,
                     &mut fate_rng, &mut jobs, &mut batch_sizes,
                 )?;
                 progressed = true;
@@ -342,7 +466,10 @@ fn run_pipeline(
         while j < jobs.len() {
             if cluster.job_ready(&jobs[j].handle)? {
                 let job = jobs.remove(j).expect("index in bounds");
-                absorb_job(plan, cluster, &mut active, &mut decodes, job)?;
+                absorb_job(
+                    plan, cluster, &mut ctx, &mut active, &mut decodes, &mut fate_rng,
+                    &mut jobs, job,
+                )?;
                 absorbed = true;
             } else {
                 j += 1;
@@ -356,7 +483,10 @@ fn run_pipeline(
         // or — with no job in flight — flush the most senior partial
         // window so the pipeline never stalls on a short queue.
         if let Some(job) = jobs.pop_front() {
-            absorb_job(plan, cluster, &mut active, &mut decodes, job)?;
+            absorb_job(
+                plan, cluster, &mut ctx, &mut active, &mut decodes, &mut fate_rng, &mut jobs,
+                job,
+            )?;
         } else {
             let stage = (0..n_stages)
                 .filter(|&s| !queues[s].is_empty())
@@ -364,7 +494,7 @@ fn run_pipeline(
                 .expect("an active request is runnable, queued, or in a job");
             let count = queues[stage].len();
             flush_batch(
-                plan, cluster, cfg, &mut active, &mut queues[stage], stage, count,
+                plan, cluster, &mut ctx, &mut active, &mut queues[stage], stage, count,
                 &mut fate_rng, &mut jobs, &mut batch_sizes,
             )?;
         }
@@ -373,6 +503,7 @@ fn run_pipeline(
 
     let verified = mses.len();
     let coded_jobs = batch_sizes.len();
+    let health = cluster.health().counters();
     Ok(ServeStats {
         latency: Stats::from_or_zero(&latencies),
         throughput_rps: cfg.requests as f64 / total,
@@ -399,17 +530,26 @@ fn run_pipeline(
         kernel: crate::linalg::kernel::active().name(),
         code: cfg.code.tag(),
         encode: plan.encode_stats(),
+        failed_requests: logits.iter().filter(|l| l.is_empty()).count(),
+        retries: ctx.retries,
+        degraded_requests: ctx.degraded.iter().filter(|&&d| d).count(),
+        quarantine_events: health.quarantines,
+        readmissions: health.readmissions,
+        // Filled in by `serve_lenet` after cluster shutdown.
+        arena_outstanding: 0,
         logits,
     })
 }
 
 /// Fuse the first `count` requests of `queue` into one coded job at
-/// `stage` and dispatch it (non-blocking).
+/// `stage` and dispatch it (non-blocking) — or, when the live set cannot
+/// reach the stage's δ, run the conv for each member on the master
+/// (graceful degradation; the members return to `Runnable` directly).
 #[allow(clippy::too_many_arguments)]
 fn flush_batch(
     plan: &NetworkPlan,
     cluster: &mut Cluster,
-    cfg: &ServeConfig,
+    ctx: &mut FaultCtx<'_>,
     active: &mut [Request],
     queue: &mut VecDeque<usize>,
     stage: usize,
@@ -419,20 +559,16 @@ fn flush_batch(
     batch_sizes: &mut Vec<usize>,
 ) -> Result<()> {
     let members: Vec<usize> = queue.drain(..count).collect();
-    let handle = {
-        let xs: Vec<&Tensor3> = members
-            .iter()
-            .map(|&id| {
-                active
-                    .iter()
-                    .find(|r| r.id == id)
-                    .expect("queued member is active")
-                    .a
-                    .spatial()
-            })
-            .collect();
-        plan.submit_batch(stage, cluster, &xs, &cfg.straggler, fate_rng)?
+    let mode = ctx.stage_mode(plan, cluster, stage);
+    if matches!(mode, StageMode::Degraded) {
+        degrade_members(plan, ctx, active, stage, &members);
+        return Ok(());
+    }
+    let variant = match mode {
+        StageMode::Variant(v) => Some(v),
+        _ => None,
     };
+    let handle = submit_members(plan, cluster, ctx.cfg, active, stage, &members, &variant, fate_rng)?;
     for req in active.iter_mut() {
         if members.contains(&req.id) {
             req.state = ReqState::InJob;
@@ -443,21 +579,134 @@ fn flush_batch(
         stage,
         members,
         handle,
+        attempts: 1,
+        variant,
     });
     Ok(())
 }
 
+/// Dispatch one coded job for `members` at `stage`, through the base
+/// full-cluster plan or a re-planned live-subset variant.
+#[allow(clippy::too_many_arguments)]
+fn submit_members(
+    plan: &NetworkPlan,
+    cluster: &mut Cluster,
+    cfg: &ServeConfig,
+    active: &[Request],
+    stage: usize,
+    members: &[usize],
+    variant: &Option<Arc<StageVariant>>,
+    fate_rng: &mut Rng,
+) -> Result<JobHandle> {
+    let xs: Vec<&Tensor3> = members
+        .iter()
+        .map(|&id| {
+            active
+                .iter()
+                .find(|r| r.id == id)
+                .expect("queued member is active")
+                .a
+                .spatial()
+        })
+        .collect();
+    match variant {
+        None => plan.submit_batch(stage, cluster, &xs, &cfg.straggler, fate_rng),
+        Some(v) => cluster.submit_batch_mapped(
+            &v.plan,
+            &xs,
+            &v.coded_filters,
+            &cfg.straggler,
+            fate_rng,
+            Some(&v.worker_map),
+        ),
+    }
+}
+
+/// Graceful degradation: run `stage`'s conv on the master for each
+/// member (bitwise identical to the reference conv — the same
+/// `conv2d` + bias epilogue the verification oracle uses) and un-park
+/// them. Requests never fail; they just lose the distributed speedup for
+/// this stage.
+fn degrade_members(
+    plan: &NetworkPlan,
+    ctx: &mut FaultCtx<'_>,
+    active: &mut [Request],
+    stage: usize,
+    members: &[usize],
+) {
+    for req in active.iter_mut() {
+        if !members.contains(&req.id) {
+            continue;
+        }
+        let y = plan.run_stage_local(stage, req.a.spatial());
+        plan.absorb_conv_output(stage, y, &mut req.a, &mut req.layer_idx);
+        req.state = ReqState::Runnable;
+        ctx.degraded[req.id] = true;
+    }
+}
+
 /// Wait for one coded job (blocking if its δ-th reply is still on the
 /// wire), decode the batch with a single (cached) recovery inversion,
-/// and split the per-sample outputs back into the member requests.
+/// and split the per-sample outputs back into the member requests. A
+/// failed job (timeout / undecodable) is **re-dispatched** to the
+/// current live set while the retry budget lasts — with exponential
+/// backoff, against a freshly chosen stage mode, its stale replies
+/// recycled by the runtime's stale-reply filter — and past the budget
+/// its members degrade to master-local execution. Either way every
+/// member request completes.
+#[allow(clippy::too_many_arguments)]
 fn absorb_job(
     plan: &NetworkPlan,
     cluster: &mut Cluster,
+    ctx: &mut FaultCtx<'_>,
     active: &mut [Request],
     decodes: &mut Vec<f64>,
+    fate_rng: &mut Rng,
+    jobs: &mut VecDeque<BatchJob>,
     job: BatchJob,
 ) -> Result<()> {
-    let (ys, report) = cluster.wait_batch(&plan.stages()[job.stage].plan, job.handle)?;
+    let stage_plan = match &job.variant {
+        Some(v) => &v.plan,
+        None => &plan.stages()[job.stage].plan,
+    };
+    let outcome = cluster.try_wait_batch(stage_plan, job.handle)?;
+    let (ys, report) = match outcome {
+        BatchOutcome::Decoded { outputs, report } => (outputs, report),
+        BatchOutcome::Failed { .. } => {
+            if job.attempts <= ctx.cfg.retry_budget {
+                // Exponential backoff: transient congestion gets a
+                // breather; crashed workers get observed (and possibly
+                // quarantined) by the failure that brought us here, so
+                // the re-pick below sees the shrunken live set.
+                let backoff = Duration::from_millis(2u64 << (job.attempts - 1).min(5));
+                std::thread::sleep(backoff);
+                let mode = ctx.stage_mode(plan, cluster, job.stage);
+                if !matches!(mode, StageMode::Degraded) {
+                    let variant = match mode {
+                        StageMode::Variant(v) => Some(v),
+                        _ => None,
+                    };
+                    let handle = submit_members(
+                        plan, cluster, ctx.cfg, active, job.stage, &job.members, &variant,
+                        fate_rng,
+                    )?;
+                    ctx.retries += 1;
+                    jobs.push_back(BatchJob {
+                        stage: job.stage,
+                        members: job.members,
+                        handle,
+                        attempts: job.attempts + 1,
+                        variant,
+                    });
+                    return Ok(());
+                }
+            }
+            // Budget exhausted (or the live set fell below δ): complete
+            // the members on the master instead of failing them.
+            degrade_members(plan, ctx, active, job.stage, &job.members);
+            return Ok(());
+        }
+    };
     decodes.push(report.decode_secs);
     // Pair decoded samples with member ids and sort ascending so the
     // targets (gathered in `active` order, which is ascending by id)
@@ -489,8 +738,8 @@ fn argmax(v: &[f64]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::FaultKind;
     use crate::engine::Im2colEngine;
-    use std::time::Duration;
 
     #[test]
     fn serve_matches_single_node() {
@@ -518,6 +767,13 @@ mod tests {
         // Sequential unbatched serving: one coded job per request per conv.
         assert_eq!(stats.coded_jobs, 6);
         assert_eq!(stats.mean_batch, 1.0);
+        // Clean run: the fault-tolerance path never engaged, and every
+        // buffer came home.
+        assert_eq!(stats.failed_requests, 0);
+        assert_eq!(stats.retries, 0);
+        assert_eq!(stats.degraded_requests, 0);
+        assert_eq!(stats.quarantine_events, 0);
+        assert_eq!(stats.arena_outstanding, 0);
         // The run reports the family it was planned with, and the
         // program-walked encoder did strictly less coefficient work than
         // a dense k_A-scan (CRME's structural zeros; the sparse family's
@@ -636,5 +892,51 @@ mod tests {
         assert_eq!(stats.verified, 0);
         assert_eq!(stats.mean_logit_mse, 0.0);
         assert_eq!(stats.logits.len(), 2);
+    }
+
+    #[test]
+    fn error_burst_is_retried_not_failed() {
+        // Worker 0 error-replies on its first two tasks: with δ=2 on 4
+        // workers the first conv1 job stays decodable (3 valid replies
+        // suffice), but an all-workers burst would not — pin a fault
+        // plan that makes the *first job* undecodable and watch the
+        // retry path complete every request regardless.
+        let mut cfg = ServeConfig::default_with_engine(Arc::new(Im2colEngine));
+        cfg.requests = 3;
+        cfg.collect_timeout = Duration::from_millis(500);
+        cfg.fault_plan = (0..4).fold(FaultPlan::none(), |fp, w| {
+            fp.with_fault(w, FaultKind::ErrorReply { jobs: 1 })
+        });
+        let stats = serve_lenet(cfg).unwrap();
+        assert_eq!(stats.failed_requests, 0, "retry must absorb the burst");
+        assert!(stats.retries >= 1, "the undecodable first job re-dispatched");
+        assert_eq!(stats.degraded_requests, 0, "live set never fell below δ");
+        assert_eq!(stats.class_mismatches, 0);
+        assert!(stats.mean_logit_mse < 1e-16, "mse={:e}", stats.mean_logit_mse);
+        assert_eq!(stats.arena_outstanding, 0, "no leaked buffers on retry");
+    }
+
+    #[test]
+    fn single_worker_crash_never_fails_requests() {
+        // Acceptance: under a single-worker crash-forever fault,
+        // pipelined serving completes 100% of requests with exact
+        // logits (γ ≥ 1 at both stages absorbs one silent worker
+        // without even needing a retry).
+        let mut cfg = ServeConfig::default_with_engine(Arc::new(Im2colEngine));
+        cfg.requests = 4;
+        cfg.max_in_flight = 2;
+        cfg.collect_timeout = Duration::from_millis(500);
+        cfg.fault_plan = FaultPlan::none().with_fault(
+            2,
+            FaultKind::Crash {
+                after: 0,
+                restart_after: None,
+            },
+        );
+        let stats = serve_lenet(cfg).unwrap();
+        assert_eq!(stats.failed_requests, 0);
+        assert_eq!(stats.class_mismatches, 0);
+        assert!(stats.mean_logit_mse < 1e-16, "mse={:e}", stats.mean_logit_mse);
+        assert_eq!(stats.arena_outstanding, 0);
     }
 }

@@ -12,7 +12,7 @@ pub mod scratch;
 
 pub use cost::{CostModel, CostBreakdown, PlanChoice};
 pub use inverse_cache::{InverseCache, DEFAULT_INVERSE_CACHE_CAP};
-pub use network_plan::{ConvStage, NetworkPlan, PlanOptions};
+pub use network_plan::{ConvStage, NetworkPlan, PlanOptions, StageVariant};
 pub use pipeline::{FcdccPlan, ResidentFilters, WorkerPayload, WorkerResult};
 pub use pooling::CodedAvgPool;
 pub use scratch::{SlabArena, DEFAULT_ARENA_CAP};

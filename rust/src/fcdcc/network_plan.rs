@@ -19,9 +19,9 @@ use crate::fcdcc::{FcdccPlan, ResidentFilters};
 use crate::metrics::{CacheStats, EncodeStats};
 use crate::model::network::add_bias;
 use crate::model::{Activation, Layer, Network};
-use crate::tensor::Tensor3;
+use crate::tensor::{conv2d, Tensor3};
 use crate::util::rng::Rng;
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 use std::sync::Arc;
 
 /// Build-time knobs for [`NetworkPlan`]. The defaults are the paper's
@@ -86,6 +86,27 @@ impl ConvStage {
     }
 }
 
+/// A re-planned conv stage for a **shrunken live set**: the same layer
+/// and `(k_A, k_B)` partition re-coded for `worker_map.len()` workers,
+/// with `worker_map[i]` naming the physical worker that computes coded
+/// column `i` (dispatch goes through `Cluster::submit_batch_mapped`).
+/// Built by [`NetworkPlan::replan_stage`] when quarantine shrinks the
+/// cluster, cached by the serving layer, and dropped when the original
+/// full-cluster stage is restored on readmission. The variant shares
+/// the base plan's slab arena (buffer hygiene stays global) but owns a
+/// **private** recovery-inverse cache: the shared cache is keyed by
+/// `(stage, worker subset)` where worker ids are coded columns of the
+/// *full-n* code, and a variant's columns index a different code
+/// entirely.
+pub struct StageVariant {
+    pub plan: FcdccPlan,
+    pub coded_filters: Vec<ResidentFilters>,
+    /// Coded column → physical worker id, ascending (so physical arrival
+    /// order and coded order coincide, keeping decode subsets — and
+    /// therefore bits — deterministic for a fixed reply set).
+    pub worker_map: Vec<usize>,
+}
+
 /// A network compiled against a coded cluster: per-conv [`ConvStage`]s
 /// plus the shared forward-pass walk. All stages decode through one
 /// shared recovery-inverse cache, keyed by `(stage_idx, worker subset)`.
@@ -98,6 +119,9 @@ pub struct NetworkPlan {
     /// this one pool, so stages at the same geometry reuse each other's
     /// buffers and differing sizes coexist.
     arena: Arc<SlabArena>,
+    /// The knobs this plan was built with — re-used verbatim when a
+    /// stage is re-planned for a shrunken live set.
+    opts: PlanOptions,
 }
 
 impl NetworkPlan {
@@ -158,7 +182,60 @@ impl NetworkPlan {
             stages,
             inverse_cache,
             arena,
+            opts,
         })
+    }
+
+    /// Re-plan one conv stage for a shrunken live set: the same layer
+    /// and `(k_A, k_B)` partition, re-coded for `live.len()` workers and
+    /// dispatched onto the physical ids in `live` (ascending). The
+    /// filters are re-encoded against the new code (model weights are
+    /// master-resident, so this is a master-local operation — the
+    /// paper's flexibility property: n is a free parameter of the code,
+    /// not of the partition). Errors if the shrunken cluster cannot
+    /// reach the stage's recovery threshold or the code family rejects
+    /// the new n; the caller degrades to local execution in that case.
+    pub fn replan_stage(&self, stage: usize, live: &[usize]) -> Result<StageVariant> {
+        ensure!(!live.is_empty(), "replan: empty live set");
+        ensure!(
+            live.windows(2).all(|w| w[0] < w[1]),
+            "replan: live set must be strictly ascending"
+        );
+        let s = &self.stages[stage];
+        let spec = s.plan.spec();
+        ensure!(
+            live.len() >= spec.delta(),
+            "replan: {} live workers cannot reach delta={}",
+            live.len(),
+            spec.delta()
+        );
+        let Layer::Conv { shape, weights, .. } = &self.net.layers[s.layer_idx] else {
+            bail!("stage {stage} does not point at a conv layer");
+        };
+        let code = self.opts.code.build(spec.k_a, spec.k_b, live.len())?;
+        // Deliberately NOT with_inverse_cache: see [`StageVariant`].
+        let plan = FcdccPlan::with_code(shape, code)?
+            .with_arena(Arc::clone(&self.arena))
+            .with_prepack(self.opts.prepack);
+        let coded_filters = plan.encode_filters(weights);
+        Ok(StageVariant {
+            plan,
+            coded_filters,
+            worker_map: live.to_vec(),
+        })
+    }
+
+    /// Run one conv stage on the master — the graceful-degradation
+    /// fallback when the live set cannot reach the stage's recovery
+    /// threshold. Plain uncoded convolution of the full layer, bitwise
+    /// identical to the reference forward pass (the bias epilogue is
+    /// applied by `absorb_conv_output`, exactly as for decoded outputs).
+    pub fn run_stage_local(&self, stage: usize, x: &Tensor3) -> Tensor3 {
+        let s = &self.stages[stage];
+        let Layer::Conv { shape, weights, .. } = &self.net.layers[s.layer_idx] else {
+            unreachable!("every stage points at a conv layer");
+        };
+        conv2d(x, weights, shape.params())
     }
 
     pub fn network(&self) -> &Network {
@@ -373,6 +450,71 @@ mod tests {
         cluster.shutdown();
         assert!(mse(&got, &want) < 1e-16);
         assert!(plan.filter_packs() > 0, "fallback path packs per job");
+    }
+
+    #[test]
+    fn replanned_stage_decodes_on_a_live_subset() {
+        let net = Network::lenet5_random(34);
+        let plan = NetworkPlan::new(net, &[(4, 2), (2, 2)], 4).unwrap();
+        let mut cluster = Cluster::new(4, Arc::new(Im2colEngine));
+        let mut rng = Rng::new(3);
+        let x = Tensor3::random(1, 32, 32, &mut rng);
+
+        // Walk to the first conv, then run it on a re-planned 2-worker
+        // variant (delta for (4,2) at n=2 is still 2 — zero resilience,
+        // but decodable) mapped onto physical workers {1, 3}.
+        let mut a = Activation::new(&x);
+        let mut layer_idx = 0usize;
+        let stage = plan.run_local(&mut a, &mut layer_idx).unwrap();
+        let variant = plan.replan_stage(stage, &[1, 3]).unwrap();
+        assert_eq!(variant.plan.spec().n, 2);
+        let xs = [a.spatial()];
+        let handle = cluster
+            .submit_batch_mapped(
+                &variant.plan,
+                &xs,
+                &variant.coded_filters,
+                &StragglerModel::None,
+                &mut rng,
+                Some(&variant.worker_map),
+            )
+            .unwrap();
+        let (mut ys, report) = cluster.wait_batch(&variant.plan, handle).unwrap();
+        assert!(report.used_workers.iter().all(|w| [1, 3].contains(w)));
+
+        // The decoded conv must match the uncoded local fallback bitwise
+        // (both equal the reference conv of this stage).
+        assert_eq!(ys.len(), 1);
+        let want = plan.run_stage_local(stage, a.spatial());
+        let got = ys.pop().unwrap();
+        assert!(mse(&got.data, &want.data) < 1e-18);
+
+        // Finishing the pass through the degraded (local) path for the
+        // remaining conv gives the reference logits exactly.
+        plan.absorb_conv_output(stage, want, &mut a, &mut layer_idx);
+        while let Some(s) = plan.run_local(&mut a, &mut layer_idx) {
+            let y = plan.run_stage_local(s, a.spatial());
+            plan.absorb_conv_output(s, y, &mut a, &mut layer_idx);
+        }
+        let logits = a.into_logits();
+        let want_logits = plan.forward_reference(&x);
+        assert_eq!(logits, want_logits, "degraded path must be bitwise exact");
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn replan_below_delta_is_rejected() {
+        let net = Network::lenet5_random(35);
+        let plan = NetworkPlan::new(net, &[(4, 2), (2, 2)], 4).unwrap();
+        // Stage 0 has delta=2: one live worker cannot reach it.
+        assert!(plan.replan_stage(0, &[2]).is_err());
+        // Stage 1 has delta=1: a single-worker re-plan is legal.
+        let v = plan.replan_stage(1, &[2]).unwrap();
+        assert_eq!(v.plan.spec().n, 1);
+        assert_eq!(v.worker_map, vec![2]);
+        // Live sets must be ascending physical ids.
+        assert!(plan.replan_stage(1, &[3, 1]).is_err());
+        assert!(plan.replan_stage(1, &[]).is_err());
     }
 
     #[test]

@@ -12,7 +12,7 @@
 
 use anyhow::{anyhow, bail, Result};
 use fcdcc::cli::Args;
-use fcdcc::cluster::StragglerModel;
+use fcdcc::cluster::{FaultKind, FaultPlan, StragglerModel};
 use fcdcc::coordinator::{self, stability, RunConfig, ServeConfig};
 use fcdcc::engine::TaskEngine;
 use fcdcc::metrics::{fmt_sci, Table};
@@ -32,6 +32,9 @@ USAGE:
   fcdcc serve     [--requests R] [--n N] [--stragglers S] [--delay-ms MS]
                   [--engine direct|im2col|pjrt] [--max-in-flight D]
                   [--batch-window B] [--verify-every K] [--no-prepack]
+                  [--fault-worker W --fault-kind KIND] [--fault-jobs J]
+                  [--fault-delay-ms MS] [--chaos-seed S]
+                  [--retry-budget R] [--collect-timeout-ms MS] [--no-replan]
   fcdcc artifacts [--dir DIR]   (needs the `pjrt` feature)
 
 serve options:
@@ -40,6 +43,32 @@ serve options:
                 of contracting panels packed once at plan build. The A/B
                 baseline for the prepack speedup; outputs are
                 bit-identical either way. Also via FCDCC_NO_PREPACK=1.
+
+fault injection (deterministic, job-count keyed — see DESIGN.md §Fault
+tolerance):
+  --fault-worker W       physical worker the injected fault targets
+  --fault-kind KIND      crash (dead from its --fault-jobs'th task on),
+                         crash-restart (dead for --fault-jobs tasks,
+                         then healthy), error (error-replies its first
+                         --fault-jobs tasks), corrupt (perturbs the
+                         blocks of its first --fault-jobs replies;
+                         caught by the master's checksum), slow (adds
+                         --fault-delay-ms to every task)
+  --fault-jobs J         burst length / restart delay, in per-worker
+                         dispatched tasks (default 1)
+  --fault-delay-ms MS    injected delay for --fault-kind slow
+                         (default 20)
+  --chaos-seed S         derive a randomized single-worker fault plan
+                         from seed S instead of the --fault-* flags
+                         (also via FCDCC_CHAOS_SEED)
+  --retry-budget R       re-dispatches per failed coded job before its
+                         requests degrade to master-local execution
+                         (default 2)
+  --collect-timeout-ms MS  per-job collection deadline (default 60000)
+  --no-replan            keep dispatching full-cluster plans while
+                         workers are quarantined (retry + degradation
+                         only); default is to re-plan stages for the
+                         live set and restore on readmission
 
 Every command also accepts:
   --threads T   size of the persistent compute pool the hot kernels
@@ -202,6 +231,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             delay: Duration::from_millis(args.get_usize("delay-ms", 100)? as u64),
         };
     }
+    cfg.fault_plan = fault_plan_from_args(args, cfg.n_workers)?;
+    cfg.retry_budget = args.get_usize("retry-budget", 2)?;
+    cfg.collect_timeout =
+        Duration::from_millis(args.get_usize("collect-timeout-ms", 60_000)? as u64);
+    cfg.replan = !args.flag("no-replan");
     let stats = coordinator::serve_lenet(cfg)?;
     println!(
         "served {} requests (depth {}, window {}, kernel {}, code {}): \
@@ -253,7 +287,58 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.encode.dense_terms,
         stats.encode.nnz_frac()
     );
+    println!(
+        "fault tolerance: {} failed | {} retries | {} degraded | \
+         {} quarantines / {} readmissions | {} arena buffers outstanding",
+        stats.failed_requests,
+        stats.retries,
+        stats.degraded_requests,
+        stats.quarantine_events,
+        stats.readmissions,
+        stats.arena_outstanding
+    );
     Ok(())
+}
+
+/// Assemble the serve command's fault-injection plan: `--chaos-seed` /
+/// `FCDCC_CHAOS_SEED` derive a randomized single-worker plan; otherwise
+/// `--fault-worker` + `--fault-kind` pin an explicit one; otherwise the
+/// plan is empty (clean run).
+fn fault_plan_from_args(args: &Args, n_workers: usize) -> Result<FaultPlan> {
+    if let Some(seed) = args.get("chaos-seed") {
+        let seed: u64 = seed.parse().map_err(|_| anyhow!("bad --chaos-seed"))?;
+        return Ok(FaultPlan::chaos(n_workers, seed));
+    }
+    if args.get("chaos-seed").is_none() && args.get("fault-worker").is_none() {
+        if let Some(seed) = FaultPlan::chaos_seed_from_env() {
+            return Ok(FaultPlan::chaos(n_workers, seed));
+        }
+        return Ok(FaultPlan::none());
+    }
+    let worker = args.get_usize("fault-worker", 0)?;
+    if worker >= n_workers {
+        bail!("--fault-worker {worker} is outside the {n_workers}-worker pool");
+    }
+    let jobs = args.get_usize("fault-jobs", 1)? as u64;
+    let kind = match args.get_str("fault-kind", "crash") {
+        "crash" => FaultKind::Crash {
+            after: 0,
+            restart_after: None,
+        },
+        "crash-restart" => FaultKind::Crash {
+            after: 0,
+            restart_after: Some(jobs),
+        },
+        "error" => FaultKind::ErrorReply { jobs },
+        "corrupt" => FaultKind::CorruptReply { jobs },
+        "slow" => FaultKind::Slow {
+            delay: Duration::from_millis(args.get_usize("fault-delay-ms", 20)? as u64),
+        },
+        other => bail!(
+            "unknown --fault-kind {other:?} (crash, crash-restart, error, corrupt, slow)"
+        ),
+    };
+    Ok(FaultPlan::none().with_fault(worker, kind))
 }
 
 #[cfg(feature = "pjrt")]

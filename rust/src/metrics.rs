@@ -105,6 +105,28 @@ impl EncodeStats {
     }
 }
 
+/// Counters of the worker-health state machine (`cluster::health`):
+/// how often workers were demoted, quarantined, probed, and readmitted,
+/// plus the raw bad-observation tallies feeding those transitions.
+/// Surfaced through `ServeStats` and the serve summary line.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HealthCounters {
+    /// Healthy → Suspect transitions.
+    pub suspects: u64,
+    /// → Quarantined transitions (the serve-level `quarantine_events`).
+    pub quarantines: u64,
+    /// Quarantined → Probation transitions (tentative readmissions).
+    pub probes: u64,
+    /// Probation → Healthy transitions (a probe task succeeded).
+    pub readmissions: u64,
+    /// Explicit error replies observed.
+    pub errors: u64,
+    /// Corrupt replies observed (checksum mismatch at the master).
+    pub corruptions: u64,
+    /// Missed-deadline observations (no reply when a job timed out).
+    pub timeouts: u64,
+}
+
 /// A simple aligned-markdown table builder.
 #[derive(Clone, Debug, Default)]
 pub struct Table {

@@ -1,10 +1,101 @@
 //! Minimal JSON parser (no serde in the offline environment) — enough for
 //! the artifact manifest and config files: objects, arrays, strings,
 //! numbers, booleans, null; UTF-8 input; `\uXXXX` escapes supported for
-//! the BMP.
+//! the BMP. Plus [`JsonObj`], a tiny single-object writer the benches
+//! use to emit machine-readable result lines (`FCDCC_BENCH_OUT`)
+//! without hand-formatting (and hand-escaping) format strings.
 
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Incremental writer for one flat JSON object: fields appear in
+/// insertion order, strings are escaped, numbers render with Rust's
+/// default `Display` (round-trippable for the counters and rates the
+/// benches emit). Output of [`JsonObj::finish`] parses back with
+/// [`Json::parse`].
+#[derive(Clone, Debug)]
+pub struct JsonObj {
+    buf: String,
+    first: bool,
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        Self {
+            buf: String::from("{"),
+            first: true,
+        }
+    }
+
+    fn key(&mut self, name: &str) {
+        if !self.first {
+            self.buf.push(',');
+        }
+        self.first = false;
+        self.buf.push('"');
+        escape_into(&mut self.buf, name);
+        self.buf.push_str("\":");
+    }
+
+    pub fn field_str(mut self, name: &str, value: &str) -> Self {
+        self.key(name);
+        self.buf.push('"');
+        escape_into(&mut self.buf, value);
+        self.buf.push('"');
+        self
+    }
+
+    pub fn field_u64(mut self, name: &str, value: u64) -> Self {
+        self.key(name);
+        let _ = write!(self.buf, "{value}");
+        self
+    }
+
+    pub fn field_f64(mut self, name: &str, value: f64) -> Self {
+        self.key(name);
+        // JSON has no NaN/Inf; clamp to null like serde_json does.
+        if value.is_finite() {
+            let _ = write!(self.buf, "{value}");
+        } else {
+            self.buf.push_str("null");
+        }
+        self
+    }
+
+    pub fn field_bool(mut self, name: &str, value: bool) -> Self {
+        self.key(name);
+        self.buf.push_str(if value { "true" } else { "false" });
+        self
+    }
+
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+impl Default for JsonObj {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn escape_into(buf: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => buf.push_str("\\\""),
+            '\\' => buf.push_str("\\\\"),
+            '\n' => buf.push_str("\\n"),
+            '\r' => buf.push_str("\\r"),
+            '\t' => buf.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(buf, "\\u{:04x}", c as u32);
+            }
+            c => buf.push(c),
+        }
+    }
+}
 
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -303,5 +394,25 @@ mod tests {
     fn unicode_passthrough() {
         let j = Json::parse(r#""héllo → ∞""#).unwrap();
         assert_eq!(j.as_str(), Some("héllo → ∞"));
+    }
+
+    #[test]
+    fn writer_output_parses_back() {
+        let line = JsonObj::new()
+            .field_str("bench", "fig6_faults")
+            .field_str("model", "crash\"q\"")
+            .field_u64("retries", 3)
+            .field_f64("completion_rate", 1.0)
+            .field_f64("nan_is_null", f64::NAN)
+            .field_bool("ok", true)
+            .finish();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("fig6_faults"));
+        assert_eq!(j.get("model").unwrap().as_str(), Some("crash\"q\""));
+        assert_eq!(j.get("retries").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("completion_rate").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("nan_is_null"), Some(&Json::Null));
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(JsonObj::new().finish(), "{}");
     }
 }

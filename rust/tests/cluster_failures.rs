@@ -1,7 +1,8 @@
 //! Failure-injection integration tests over the threaded cluster: crash
 //! fates, flaky engines, repeated jobs, and recovery-threshold edges.
 
-use fcdcc::cluster::{Cluster, StragglerModel};
+use fcdcc::cluster::{Cluster, FaultKind, FaultPlan, HealthPolicy, StragglerModel};
+use fcdcc::coordinator::{serve_lenet, ServeConfig};
 use fcdcc::engine::{DirectEngine, TaskEngine};
 use fcdcc::fcdcc::{FcdccPlan, WorkerPayload, WorkerResult};
 use fcdcc::model::ConvLayer;
@@ -9,7 +10,7 @@ use fcdcc::tensor::{conv2d, Tensor3, Tensor4};
 use fcdcc::util::{mse, rng::Rng};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn setup() -> (ConvLayer, Tensor3, Tensor4) {
     let layer = ConvLayer::new("t", 2, 12, 10, 8, 3, 3, 1, 0);
@@ -145,4 +146,234 @@ fn exponential_latency_model_runs() {
     cluster.shutdown();
     assert!(mse(&y.data, &want.data) < 1e-18);
     assert_eq!(report.used_workers.len(), 1);
+}
+
+/// An engine that panics on every task — the worst-case worker bug.
+/// `worker_loop` must convert the unwinds into error replies, not die.
+struct PanicEngine;
+
+impl TaskEngine for PanicEngine {
+    fn name(&self) -> &str {
+        "panic"
+    }
+
+    fn run(&self, _payload: &WorkerPayload) -> anyhow::Result<WorkerResult> {
+        panic!("injected task panic");
+    }
+}
+
+#[test]
+fn timed_out_job_recycles_buffers_and_next_job_decodes() {
+    let (layer, x, k) = setup();
+    let plan = FcdccPlan::new_crme(&layer, 4, 2, 6).unwrap(); // delta=2
+    let cf = plan.encode_filters(&k);
+    let want = conv2d(&x, &k, layer.params());
+    let mut cluster = Cluster::new(6, Arc::new(DirectEngine));
+    cluster.collect_timeout = Duration::from_millis(100);
+    let mut rng = Rng::new(11);
+
+    // Every worker sleeps past the deadline: the job must time out...
+    let slow = StragglerModel::FixedCount {
+        count: 6,
+        delay: Duration::from_millis(300),
+    };
+    let err = cluster
+        .run_job(&plan, &x, &cf, &slow, &mut rng)
+        .expect_err("all-slow job must blow its deadline");
+    assert!(
+        err.to_string().contains("timed out"),
+        "unexpected failure: {err}"
+    );
+    assert_eq!(cluster.health().counters().timeouts, 6);
+
+    // ...its cancelled straggler tasks must be abandoned (buffers
+    // recycled, no stale decode), and the same cluster must serve the
+    // clean retry bit-exactly.
+    let (y, _) = cluster
+        .run_job(&plan, &x, &cf, &StragglerModel::None, &mut rng)
+        .unwrap();
+    assert!(mse(&y.data, &want.data) < 1e-18);
+    cluster.shutdown();
+    assert_eq!(
+        plan.arena().outstanding(),
+        0,
+        "timeout/retry path leaked arena buffers"
+    );
+}
+
+#[test]
+fn panicking_engine_fails_fast_and_workers_survive() {
+    let (layer, x, k) = setup();
+    let plan = FcdccPlan::new_crme(&layer, 4, 2, 6).unwrap(); // delta=2
+    let cf = plan.encode_filters(&k);
+    let mut cluster = Cluster::new(6, Arc::new(PanicEngine));
+    // A huge deadline proves the failure is the undecodable fast path,
+    // not a timeout.
+    cluster.collect_timeout = Duration::from_secs(30);
+    let mut rng = Rng::new(12);
+
+    let t0 = Instant::now();
+    let err = cluster
+        .run_job(&plan, &x, &cf, &StragglerModel::None, &mut rng)
+        .expect_err("every reply is a caught panic");
+    assert!(
+        err.to_string().contains("undecodable"),
+        "unexpected failure: {err}"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "undecodable job waited for the deadline"
+    );
+
+    // The panics unwound inside catch_unwind: the worker threads are
+    // still alive and answer the next job (with errors again).
+    let err = cluster
+        .run_job(&plan, &x, &cf, &StragglerModel::None, &mut rng)
+        .expect_err("workers still reply with errors");
+    assert!(err.to_string().contains("undecodable"), "got: {err}");
+    assert_eq!(cluster.health().counters().errors, 12);
+    cluster.shutdown();
+    assert_eq!(plan.arena().outstanding(), 0);
+}
+
+#[test]
+fn quarantine_replan_readmission_round_trip() {
+    // Workers 1..3 crash from their first task and restart after three
+    // dispatches at them: the serve loop must quarantine all three,
+    // degrade conv1 (live=1 < delta=2), re-plan conv2 onto worker 0
+    // alone (delta=1), then probe, readmit, and restore the full plan —
+    // completing every request and leaking nothing.
+    let crash = FaultKind::Crash {
+        after: 0,
+        restart_after: Some(3),
+    };
+    let mut cfg = ServeConfig::default_with_engine(Arc::new(DirectEngine));
+    cfg.requests = 10;
+    cfg.max_in_flight = 1;
+    cfg.collect_timeout = Duration::from_millis(150);
+    cfg.retry_budget = 2;
+    cfg.health = HealthPolicy {
+        suspect_after: 1,
+        quarantine_after: 2,
+        probe_backoff: 1,
+        max_backoff: 8,
+    };
+    cfg.fault_plan = FaultPlan::none()
+        .with_fault(1, crash)
+        .with_fault(2, crash)
+        .with_fault(3, crash);
+    let stats = serve_lenet(cfg).unwrap();
+
+    assert_eq!(stats.requests, 10);
+    assert_eq!(stats.failed_requests, 0, "requests must never hard-fail");
+    assert!(
+        stats.quarantine_events >= 3,
+        "all three crashers must be quarantined (got {})",
+        stats.quarantine_events
+    );
+    assert!(
+        stats.readmissions >= 1,
+        "restarted workers must be probed back in (got {})",
+        stats.readmissions
+    );
+    assert!(
+        stats.degraded_requests >= 1,
+        "conv1 below delta must degrade, not fail"
+    );
+    assert_eq!(stats.class_mismatches, 0);
+    assert!(stats.mean_logit_mse < 1e-12, "mse {}", stats.mean_logit_mse);
+    assert_eq!(
+        stats.arena_outstanding, 0,
+        "quarantine/replan/readmit round trip leaked arena buffers"
+    );
+}
+
+#[test]
+fn retried_job_reproduces_bitwise_logits() {
+    // Deterministic first-δ subset: worker 0 prompt, worker 1 pinned
+    // 25ms slow, workers 2 and 3 dead. conv1 (delta=2) always decodes
+    // from {0,1}; conv2 (delta=1) from {0}.
+    let pin = FaultPlan::none()
+        .with_fault(
+            1,
+            FaultKind::Slow {
+                delay: Duration::from_millis(25),
+            },
+        )
+        .with_fault(
+            2,
+            FaultKind::Crash {
+                after: 0,
+                restart_after: None,
+            },
+        )
+        .with_fault(
+            3,
+            FaultKind::Crash {
+                after: 0,
+                restart_after: None,
+            },
+        );
+    let cfg = |fault_plan: FaultPlan| {
+        let mut cfg = ServeConfig::default_with_engine(Arc::new(DirectEngine));
+        cfg.requests = 3;
+        cfg.max_in_flight = 1;
+        cfg.collect_timeout = Duration::from_millis(150);
+        cfg.retry_budget = 2;
+        // Thresholds high enough that the dead workers never leave the
+        // dispatch set: both runs keep the full plan, so the retried
+        // job re-dispatches over the exact same code.
+        cfg.health = HealthPolicy {
+            suspect_after: 1,
+            quarantine_after: 100,
+            probe_backoff: 2,
+            max_backoff: 32,
+        };
+        cfg.fault_plan = fault_plan;
+        cfg
+    };
+
+    let a = serve_lenet(cfg(pin.clone())).unwrap();
+    // Run B: worker 0 additionally errors its first task, so request 1's
+    // conv1 job stalls at 1/2 usable replies, times out, and is retried.
+    let b = serve_lenet(cfg(pin.with_fault(0, FaultKind::ErrorReply { jobs: 1 }))).unwrap();
+
+    assert_eq!(a.retries, 0);
+    assert!(b.retries >= 1, "run B must retry the poisoned first job");
+    assert_eq!(a.degraded_requests, 0);
+    assert_eq!(b.degraded_requests, 0, "retry must succeed before degrading");
+    assert_eq!(a.failed_requests, 0);
+    assert_eq!(b.failed_requests, 0);
+    assert_eq!(
+        a.logits, b.logits,
+        "retried requests must reproduce bit-identical logits"
+    );
+    assert_eq!(a.arena_outstanding, 0);
+    assert_eq!(b.arena_outstanding, 0);
+}
+
+#[test]
+fn chaos_seeded_fault_plan_preserves_invariants() {
+    // Any chaos seed draws a single-worker absorbable fault; the serving
+    // invariants (full completion, correct logits, zero leaks) must hold
+    // for every seed. CI re-runs this with FCDCC_CHAOS_SEED=2024.
+    let seed = FaultPlan::chaos_seed_from_env().unwrap_or(7);
+    let mut cfg = ServeConfig::default_with_engine(Arc::new(DirectEngine));
+    cfg.requests = 6;
+    cfg.max_in_flight = 2;
+    cfg.collect_timeout = Duration::from_millis(300);
+    cfg.fault_plan = FaultPlan::chaos(cfg.n_workers, seed);
+    let stats = serve_lenet(cfg).unwrap();
+
+    assert_eq!(stats.failed_requests, 0, "chaos seed {seed}: requests failed");
+    assert_eq!(stats.class_mismatches, 0, "chaos seed {seed}");
+    assert!(
+        stats.mean_logit_mse < 1e-12,
+        "chaos seed {seed}: mse {}",
+        stats.mean_logit_mse
+    );
+    assert_eq!(
+        stats.arena_outstanding, 0,
+        "chaos seed {seed}: leaked arena buffers"
+    );
 }
