@@ -18,7 +18,7 @@ use fcdcc::coordinator::stability::factor_pair;
 use fcdcc::coordinator::ServeConfig;
 use fcdcc::engine::Im2colEngine;
 use fcdcc::fcdcc::FcdccPlan;
-use fcdcc::metrics::Table;
+use fcdcc::metrics::{MembershipCounters, Table};
 use fcdcc::model::zoo;
 use fcdcc::tensor::{Tensor3, Tensor4};
 use fcdcc::util::json::JsonObj;
@@ -78,17 +78,18 @@ fn straggler_sweep() {
         // simulated first-δ collection is the whole story. The JSON
         // record carries that explicitly so downstream tooling reads a
         // uniform schema across this sweep and the fault sweep below.
-        emit_json(
-            &JsonObj::new()
-                .field_str("bench", "fig6_stragglers")
-                .field_u64("stragglers", s as u64)
-                .field_f64("avg_ms_100", cols[0].parse().unwrap_or(f64::NAN))
-                .field_f64("avg_ms_200", cols[1].parse().unwrap_or(f64::NAN))
-                .field_bool("within_gamma", s <= n - delta)
-                .field_f64("completion_rate", 1.0)
-                .field_u64("retries", 0)
-                .finish(),
-        );
+        // The membership block keeps the schema uniform with the serving
+        // benches; the simulated sweep has no transport, so it is all
+        // zeros here.
+        let obj = JsonObj::new()
+            .field_str("bench", "fig6_stragglers")
+            .field_u64("stragglers", s as u64)
+            .field_f64("avg_ms_100", cols[0].parse().unwrap_or(f64::NAN))
+            .field_f64("avg_ms_200", cols[1].parse().unwrap_or(f64::NAN))
+            .field_bool("within_gamma", s <= n - delta)
+            .field_f64("completion_rate", 1.0)
+            .field_u64("retries", 0);
+        emit_json(&MembershipCounters::default().append_json(obj).finish());
         t.row(&[
             s.to_string(),
             cols[0].clone(),
@@ -156,21 +157,19 @@ fn fault_sweep() {
         let done = stats.requests - stats.failed_requests;
         let completion_rate = done as f64 / stats.requests as f64;
         let mse_ok = stats.class_mismatches == 0 && stats.mean_logit_mse < 1e-12;
-        emit_json(
-            &JsonObj::new()
-                .field_str("bench", "fig6_faults")
-                .field_str("model", name)
-                .field_u64("requests", stats.requests as u64)
-                .field_f64("completion_rate", completion_rate)
-                .field_u64("retries", stats.retries as u64)
-                .field_u64("degraded_requests", stats.degraded_requests as u64)
-                .field_u64("failed_requests", stats.failed_requests as u64)
-                .field_u64("quarantine_events", stats.quarantine_events)
-                .field_u64("readmissions", stats.readmissions)
-                .field_u64("arena_outstanding", stats.arena_outstanding)
-                .field_bool("mse_ok", mse_ok)
-                .finish(),
-        );
+        let obj = JsonObj::new()
+            .field_str("bench", "fig6_faults")
+            .field_str("model", name)
+            .field_u64("requests", stats.requests as u64)
+            .field_f64("completion_rate", completion_rate)
+            .field_u64("retries", stats.retries as u64)
+            .field_u64("degraded_requests", stats.degraded_requests as u64)
+            .field_u64("failed_requests", stats.failed_requests as u64)
+            .field_u64("quarantine_events", stats.quarantine_events)
+            .field_u64("readmissions", stats.readmissions)
+            .field_u64("arena_outstanding", stats.arena_outstanding)
+            .field_bool("mse_ok", mse_ok);
+        emit_json(&stats.membership.append_json(obj).finish());
         assert_eq!(
             stats.failed_requests, 0,
             "fault model {name:?} hard-failed requests"

@@ -20,45 +20,38 @@ use fcdcc::cluster::StragglerModel;
 use fcdcc::coordinator::{serve_lenet, ServeConfig, ServeStats};
 use fcdcc::engine::Im2colEngine;
 use fcdcc::metrics::Table;
+use fcdcc::util::json::JsonObj;
 use std::sync::Arc;
 use std::time::Duration;
 
 fn json_line(model: &str, mode: &str, stats: &ServeStats) {
-    emit_json(&format!(
-        "{{\"bench\":\"serve_throughput\",\"straggler\":\"{}\",\"mode\":\"{}\",\
-         \"threads\":{},\"kernel\":\"{}\",\"code\":\"{}\",\"pack_count\":{},\"depth\":{},\
-         \"batch_window\":{},\"requests\":{},\"rps\":{:.3},\
-         \"latency_p50_ms\":{:.3},\"latency_p95_ms\":{:.3},\"coded_jobs\":{},\
-         \"mean_batch\":{:.3},\"inversions\":{},\"inverse_cache_hits\":{},\
-         \"arena_allocs\":{},\"arena_hits\":{},\
-         \"encode_terms\":{},\"encode_dense_terms\":{},\
-         \"failed_requests\":{},\"retries\":{},\"degraded_requests\":{},\
-         \"quarantine_events\":{}}}",
-        model,
-        mode,
-        fcdcc::util::pool::global().threads(),
-        stats.kernel,
-        stats.code,
-        stats.pack_count,
-        stats.max_in_flight,
-        stats.batch_window,
-        stats.requests,
-        stats.throughput_rps,
-        stats.latency.p50 * 1e3,
-        stats.latency.p95 * 1e3,
-        stats.coded_jobs,
-        stats.mean_batch,
-        stats.inverse_cache.misses,
-        stats.inverse_cache.hits,
-        stats.arena.misses,
-        stats.arena.hits,
-        stats.encode.terms,
-        stats.encode.dense_terms,
-        stats.failed_requests,
-        stats.retries,
-        stats.degraded_requests,
-        stats.quarantine_events,
-    ));
+    let obj = JsonObj::new()
+        .field_str("bench", "serve_throughput")
+        .field_str("straggler", model)
+        .field_str("mode", mode)
+        .field_u64("threads", fcdcc::util::pool::global().threads() as u64)
+        .field_str("kernel", stats.kernel)
+        .field_str("code", stats.code)
+        .field_u64("pack_count", stats.pack_count)
+        .field_u64("depth", stats.max_in_flight as u64)
+        .field_u64("batch_window", stats.batch_window as u64)
+        .field_u64("requests", stats.requests as u64)
+        .field_f64("rps", stats.throughput_rps)
+        .field_f64("latency_p50_ms", stats.latency.p50 * 1e3)
+        .field_f64("latency_p95_ms", stats.latency.p95 * 1e3)
+        .field_u64("coded_jobs", stats.coded_jobs as u64)
+        .field_f64("mean_batch", stats.mean_batch)
+        .field_u64("inversions", stats.inverse_cache.misses)
+        .field_u64("inverse_cache_hits", stats.inverse_cache.hits)
+        .field_u64("arena_allocs", stats.arena.misses)
+        .field_u64("arena_hits", stats.arena.hits)
+        .field_u64("encode_terms", stats.encode.terms)
+        .field_u64("encode_dense_terms", stats.encode.dense_terms)
+        .field_u64("failed_requests", stats.failed_requests as u64)
+        .field_u64("retries", stats.retries as u64)
+        .field_u64("degraded_requests", stats.degraded_requests as u64)
+        .field_u64("quarantine_events", stats.quarantine_events);
+    emit_json(&stats.membership.append_json(obj).finish());
 }
 
 fn main() {

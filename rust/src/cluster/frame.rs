@@ -1,0 +1,894 @@
+//! Length-prefixed binary frame codec for the TCP transport — the wire
+//! format `WorkerMsg`/`WorkerReply` travel over between a coordinator
+//! and remote worker processes (DESIGN.md §Transport & membership).
+//!
+//! No serde: every payload is explicit little-endian encode/decode over
+//! `std::io`. Each frame is
+//!
+//! ```text
+//! [magic u32 LE]["FCDC"] [version u8] [tag u8] [reserved u16 = 0]
+//! [len u32 LE] [payload: len bytes] [checksum u64 LE]
+//! ```
+//!
+//! where the checksum is FNV-1a over `(version, tag, reserved, len,
+//! payload)` — the whole frame minus the magic and the checksum itself —
+//! so any bit flip in transit (header or body) is caught at the frame
+//! layer before a byte of payload is interpreted. `read_frame`
+//! distinguishes a **clean EOF** (the peer closed between frames:
+//! [`ReadOutcome::Eof`], normal connection teardown) from a mid-frame
+//! truncation (an error: the peer died with a frame on the wire).
+//! Oversized length prefixes are rejected against [`MAX_FRAME`] before
+//! any allocation, so a corrupted header cannot OOM the reader.
+//!
+//! Decode errors are always **clean**: tensor slab buffers drawn from
+//! the arena while decoding a task or reply are returned to it before
+//! the error surfaces, so a poisoned frame costs the peer a strike —
+//! never a panic, a partial slab, or a leaked buffer.
+
+use crate::cluster::straggler::WorkerFate;
+use crate::cluster::worker::{ReplyBody, WorkerReply};
+use crate::fcdcc::{SlabArena, WorkerPayload, WorkerResult};
+use crate::tensor::{ConvParams, Tensor3, Tensor4};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Frame magic: ASCII "FCDC", little-endian.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"FCDC");
+/// Wire-protocol version; bumped on any incompatible layout change.
+pub const VERSION: u8 = 1;
+/// Hard cap on a frame's payload length. A corrupted length prefix is
+/// rejected against this before any buffer is allocated.
+pub const MAX_FRAME: usize = 1 << 28; // 256 MiB
+
+const HEADER_LEN: usize = 12;
+
+/// What a frame carries — the message kinds of the coordinator/worker
+/// duplex plus the membership handshake and heartbeats.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameTag {
+    /// Worker → coordinator: rendezvous (capacity + engine name).
+    Announce = 1,
+    /// Coordinator → worker: admitted (slot + session epoch).
+    Accept = 2,
+    /// Coordinator → worker: not now; retry after the carried delay.
+    Later = 3,
+    /// Coordinator → worker: heartbeat probe.
+    Ping = 4,
+    /// Worker → coordinator: heartbeat answer.
+    Pong = 5,
+    /// Coordinator → worker: one coded subtask (`WorkerMsg::Task`).
+    Task = 6,
+    /// Coordinator → worker: `WorkerMsg::Cancel`.
+    Cancel = 7,
+    /// Coordinator → worker: `WorkerMsg::CancelUpTo`.
+    CancelUpTo = 8,
+    /// Coordinator → worker: `WorkerMsg::Shutdown`.
+    Shutdown = 9,
+    /// Worker → coordinator: one `WorkerReply`.
+    Reply = 10,
+}
+
+impl FrameTag {
+    pub fn from_u8(v: u8) -> Option<FrameTag> {
+        Some(match v {
+            1 => FrameTag::Announce,
+            2 => FrameTag::Accept,
+            3 => FrameTag::Later,
+            4 => FrameTag::Ping,
+            5 => FrameTag::Pong,
+            6 => FrameTag::Task,
+            7 => FrameTag::Cancel,
+            8 => FrameTag::CancelUpTo,
+            9 => FrameTag::Shutdown,
+            10 => FrameTag::Reply,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded frame: its tag and raw payload bytes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub tag: FrameTag,
+    pub payload: Vec<u8>,
+}
+
+/// How one `read_frame` call ended.
+pub enum ReadOutcome {
+    Frame(Frame),
+    /// The peer closed the connection **between** frames — normal
+    /// teardown, not an error.
+    Eof,
+}
+
+/// Incremental FNV-1a (the same constants as the reply checksum).
+#[derive(Clone, Copy)]
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+fn frame_checksum(tag: u8, payload: &[u8]) -> u64 {
+    let mut h = Fnv::new();
+    h.update(&[VERSION, tag, 0, 0]);
+    h.update(&(payload.len() as u32).to_le_bytes());
+    h.update(payload);
+    h.finish()
+}
+
+/// Serialize one frame onto `w` (header + payload + checksum trailer).
+pub fn write_frame(w: &mut impl Write, tag: FrameTag, payload: &[u8]) -> std::io::Result<()> {
+    debug_assert!(payload.len() <= MAX_FRAME, "frame payload over MAX_FRAME");
+    let mut header = [0u8; HEADER_LEN];
+    header[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    header[4] = VERSION;
+    header[5] = tag as u8;
+    // header[6..8] reserved, zero.
+    header[8..12].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.write_all(&frame_checksum(tag as u8, payload).to_le_bytes())?;
+    w.flush()
+}
+
+fn read_full(r: &mut impl Read, buf: &mut [u8], what: &str) -> Result<()> {
+    r.read_exact(buf)
+        .with_context(|| format!("connection closed mid-frame ({what})"))
+}
+
+/// Read one frame off `r`, verifying magic, version, length cap, and
+/// the trailing checksum. EOF **at a frame boundary** is reported as
+/// [`ReadOutcome::Eof`]; every other irregularity is an error.
+pub fn read_frame(r: &mut impl Read) -> Result<ReadOutcome> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(ReadOutcome::Eof),
+            Ok(0) => bail!("connection closed mid-header ({got}/{HEADER_LEN} bytes)"),
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("reading frame header"),
+        }
+    }
+    let magic = u32::from_le_bytes(header[0..4].try_into().expect("4 bytes"));
+    ensure!(magic == MAGIC, "bad frame magic {magic:#010x}");
+    ensure!(
+        header[4] == VERSION,
+        "frame version {} (this build speaks {VERSION})",
+        header[4]
+    );
+    let Some(tag) = FrameTag::from_u8(header[5]) else {
+        bail!("unknown frame tag {}", header[5]);
+    };
+    ensure!(
+        header[6] == 0 && header[7] == 0,
+        "nonzero reserved header bytes"
+    );
+    let len = u32::from_le_bytes(header[8..12].try_into().expect("4 bytes")) as usize;
+    ensure!(len <= MAX_FRAME, "frame length {len} exceeds cap {MAX_FRAME}");
+    let mut payload = vec![0u8; len];
+    read_full(r, &mut payload, "payload")?;
+    let mut trailer = [0u8; 8];
+    read_full(r, &mut trailer, "checksum")?;
+    let want = u64::from_le_bytes(trailer);
+    let have = frame_checksum(tag as u8, &payload);
+    ensure!(
+        have == want,
+        "frame checksum mismatch (tag {tag:?}, len {len})"
+    );
+    Ok(ReadOutcome::Frame(Frame { tag, payload }))
+}
+
+// ---------------------------------------------------------------------
+// Payload byte writer / reader (explicit little-endian, bounds-checked).
+
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Length-prefixed f64 slab: `u32` element count + raw LE bit patterns
+/// (bit-exact round trip; NaN payloads included).
+pub fn put_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
+    put_u32(buf, xs.len() as u32);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader over one frame's payload. Every
+/// accessor fails cleanly on truncation instead of panicking.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.buf.len() - self.pos,
+            "payload truncated: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4")))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8")))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| anyhow::anyhow!("invalid UTF-8 string"))
+    }
+
+    /// Read a length-prefixed f64 slab into a buffer drawn from `arena`
+    /// (zeroed by `take`, fully overwritten here). The element count is
+    /// validated against the remaining payload **before** the arena
+    /// buffer is taken, so a lying prefix never checks out a buffer.
+    pub fn f64s(&mut self, arena: &SlabArena) -> Result<Vec<f64>> {
+        let count = self.u32()? as usize;
+        let bytes = self.take(count * 8)?;
+        let mut out = arena.take(count);
+        for (slot, chunk) in out.iter_mut().zip(bytes.chunks_exact(8)) {
+            *slot = f64::from_bits(u64::from_le_bytes(chunk.try_into().expect("8")));
+        }
+        Ok(out)
+    }
+
+    /// Every payload byte must be consumed — trailing garbage means the
+    /// two sides disagree on the layout.
+    pub fn done(&self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "{} unread bytes trail the payload",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Control messages.
+
+/// Worker → coordinator rendezvous announcement.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Announce {
+    /// Advertised compute capacity (threads).
+    pub threads: u32,
+    /// The engine the worker runs (`TaskEngine::name`).
+    pub engine: String,
+}
+
+pub fn encode_announce(a: &Announce) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16 + a.engine.len());
+    put_u32(&mut buf, a.threads);
+    put_str(&mut buf, &a.engine);
+    buf
+}
+
+pub fn decode_announce(payload: &[u8]) -> Result<Announce> {
+    let mut r = ByteReader::new(payload);
+    let threads = r.u32()?;
+    let engine = r.str()?;
+    r.done()?;
+    Ok(Announce { threads, engine })
+}
+
+/// Coordinator → worker admission: the slot the worker fills and the
+/// membership session epoch its replies must be stamped with.
+pub fn encode_accept(worker_id: usize, epoch: u64) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(12);
+    put_u32(&mut buf, worker_id as u32);
+    put_u64(&mut buf, epoch);
+    buf
+}
+
+pub fn decode_accept(payload: &[u8]) -> Result<(usize, u64)> {
+    let mut r = ByteReader::new(payload);
+    let worker_id = r.u32()? as usize;
+    let epoch = r.u64()?;
+    r.done()?;
+    Ok((worker_id, epoch))
+}
+
+pub fn encode_later(retry_ms: u64) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8);
+    put_u64(&mut buf, retry_ms);
+    buf
+}
+
+pub fn decode_later(payload: &[u8]) -> Result<u64> {
+    let mut r = ByteReader::new(payload);
+    let retry_ms = r.u64()?;
+    r.done()?;
+    Ok(retry_ms)
+}
+
+/// Ping/Pong/Cancel/CancelUpTo all carry one u64 (heartbeat sequence
+/// number, or job id / watermark).
+pub fn encode_u64(v: u64) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8);
+    put_u64(&mut buf, v);
+    buf
+}
+
+pub fn decode_u64(payload: &[u8]) -> Result<u64> {
+    let mut r = ByteReader::new(payload);
+    let v = r.u64()?;
+    r.done()?;
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------
+// Task frames.
+
+const FATE_PROMPT: u8 = 0;
+const FATE_DELAYED: u8 = 1;
+const FATE_FAILED: u8 = 2;
+const FATE_ERROR: u8 = 3;
+const FATE_CORRUPT: u8 = 4;
+
+fn put_fate(buf: &mut Vec<u8>, fate: WorkerFate) {
+    match fate {
+        WorkerFate::Prompt => buf.push(FATE_PROMPT),
+        WorkerFate::Delayed(d) => {
+            buf.push(FATE_DELAYED);
+            put_u64(buf, d.as_nanos() as u64);
+        }
+        WorkerFate::Failed => buf.push(FATE_FAILED),
+        WorkerFate::ErrorReply => buf.push(FATE_ERROR),
+        WorkerFate::CorruptReply => buf.push(FATE_CORRUPT),
+    }
+}
+
+fn read_fate(r: &mut ByteReader<'_>) -> Result<WorkerFate> {
+    Ok(match r.u8()? {
+        FATE_PROMPT => WorkerFate::Prompt,
+        FATE_DELAYED => WorkerFate::Delayed(Duration::from_nanos(r.u64()?)),
+        FATE_FAILED => WorkerFate::Failed,
+        FATE_ERROR => WorkerFate::ErrorReply,
+        FATE_CORRUPT => WorkerFate::CorruptReply,
+        other => bail!("unknown fate tag {other}"),
+    })
+}
+
+fn put_tensor3(buf: &mut Vec<u8>, t: &Tensor3) {
+    put_u32(buf, t.c as u32);
+    put_u32(buf, t.h as u32);
+    put_u32(buf, t.w as u32);
+    put_f64s(buf, &t.data);
+}
+
+fn read_tensor3(r: &mut ByteReader<'_>, arena: &SlabArena) -> Result<Tensor3> {
+    let (c, h, w) = (r.u32()? as usize, r.u32()? as usize, r.u32()? as usize);
+    let data = r.f64s(arena)?;
+    if data.len() != c * h * w {
+        // Return the mis-sized buffer before surfacing the error: no
+        // partial slab may leak out of a poisoned frame.
+        arena.put(data);
+        bail!("tensor3 slab carries {c}x{h}x{w} shape with the wrong element count");
+    }
+    Ok(Tensor3::from_vec(c, h, w, data))
+}
+
+fn put_tensor4(buf: &mut Vec<u8>, t: &Tensor4) {
+    put_u32(buf, t.n as u32);
+    put_u32(buf, t.c as u32);
+    put_u32(buf, t.kh as u32);
+    put_u32(buf, t.kw as u32);
+    put_f64s(buf, &t.data);
+}
+
+fn read_tensor4(r: &mut ByteReader<'_>) -> Result<Tensor4> {
+    let (n, c, kh, kw) = (
+        r.u32()? as usize,
+        r.u32()? as usize,
+        r.u32()? as usize,
+        r.u32()? as usize,
+    );
+    let count = r.u32()? as usize;
+    ensure!(
+        count == n * c * kh * kw,
+        "tensor4 slab carries {n}x{c}x{kh}x{kw} shape with {count} elements"
+    );
+    let bytes = r.take(count * 8)?;
+    let data: Vec<f64> = bytes
+        .chunks_exact(8)
+        .map(|ch| f64::from_bits(u64::from_le_bytes(ch.try_into().expect("8"))))
+        .collect();
+    Ok(Tensor4::from_vec(n, c, kh, kw, data))
+}
+
+/// Serialize one `WorkerMsg::Task` as a [`FrameTag::Task`] payload. The
+/// payload's prepacked GEMM operands are **not** shipped — the remote
+/// worker re-derives nothing and runs the per-call packing path, which
+/// is bit-identical to contracting resident panels.
+pub fn encode_task(job_id: u64, fate: WorkerFate, payload: &WorkerPayload) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + 8 * payload.upload_entries());
+    put_u64(&mut buf, job_id);
+    put_fate(&mut buf, fate);
+    put_u32(&mut buf, payload.worker_id as u32);
+    put_u32(&mut buf, payload.batch as u32);
+    put_u32(&mut buf, payload.conv.stride as u32);
+    put_u32(&mut buf, payload.conv.pad as u32);
+    put_u32(&mut buf, payload.filters.len() as u32);
+    for kb in payload.filters.iter() {
+        put_tensor4(&mut buf, kb);
+    }
+    put_u32(&mut buf, payload.inputs.len() as u32);
+    for xa in &payload.inputs {
+        put_tensor3(&mut buf, xa);
+    }
+    buf
+}
+
+/// Decode a [`FrameTag::Task`] payload against the **receiving side's**
+/// arena (input slab buffers are drawn from it and return to it on
+/// `WorkerPayload::recycle`). On any decode error every already-taken
+/// slab is recycled before the error surfaces.
+pub fn decode_task(
+    payload: &[u8],
+    arena: &Arc<SlabArena>,
+) -> Result<(u64, WorkerFate, WorkerPayload)> {
+    let mut inputs: Vec<Tensor3> = Vec::new();
+    match decode_task_inner(payload, arena, &mut inputs) {
+        Ok(v) => Ok(v),
+        Err(e) => {
+            for t in inputs {
+                arena.put(t.data);
+            }
+            Err(e)
+        }
+    }
+}
+
+fn decode_task_inner(
+    payload: &[u8],
+    arena: &Arc<SlabArena>,
+    inputs: &mut Vec<Tensor3>,
+) -> Result<(u64, WorkerFate, WorkerPayload)> {
+    let mut r = ByteReader::new(payload);
+    let job_id = r.u64()?;
+    let fate = read_fate(&mut r)?;
+    let worker_id = r.u32()? as usize;
+    let batch = r.u32()? as usize;
+    let conv = ConvParams::new(r.u32()?.max(1) as usize, r.u32()? as usize);
+    let n_filters = r.u32()? as usize;
+    ensure!(n_filters <= payload.len(), "absurd filter count {n_filters}");
+    let mut filters = Vec::with_capacity(n_filters);
+    for _ in 0..n_filters {
+        filters.push(read_tensor4(&mut r)?);
+    }
+    let n_inputs = r.u32()? as usize;
+    ensure!(n_inputs <= payload.len(), "absurd input count {n_inputs}");
+    ensure!(
+        batch > 0 && n_inputs % batch == 0,
+        "input count {n_inputs} not divisible by batch {batch}"
+    );
+    for _ in 0..n_inputs {
+        inputs.push(read_tensor3(&mut r, arena)?);
+    }
+    r.done()?;
+    let inputs = std::mem::take(inputs);
+    Ok((
+        job_id,
+        fate,
+        WorkerPayload {
+            worker_id,
+            inputs,
+            batch,
+            filters: Arc::new(filters),
+            packs: None,
+            conv,
+            arena: Arc::clone(arena),
+        },
+    ))
+}
+
+// ---------------------------------------------------------------------
+// Reply frames.
+
+const BODY_ERR: u8 = 0;
+const BODY_OK: u8 = 1;
+
+/// Serialize one `WorkerReply` as a [`FrameTag::Reply`] payload,
+/// stamped with the session `epoch` the worker was accepted under (the
+/// coordinator recycles — never decodes — replies from a stale epoch).
+pub fn encode_reply(reply: &WorkerReply, epoch: u64) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64);
+    put_u64(&mut buf, reply.job_id);
+    put_u32(&mut buf, reply.worker_id as u32);
+    put_u64(&mut buf, epoch);
+    put_f64(&mut buf, reply.compute_secs);
+    put_f64(&mut buf, reply.delay_secs);
+    match &reply.body {
+        ReplyBody::Err(msg) => {
+            buf.push(BODY_ERR);
+            put_str(&mut buf, msg);
+        }
+        ReplyBody::Ok { result, checksum } => {
+            buf.push(BODY_OK);
+            put_u64(&mut buf, *checksum);
+            put_u32(&mut buf, result.worker_id as u32);
+            put_u32(&mut buf, result.batch as u32);
+            put_u32(&mut buf, result.blocks.len() as u32);
+            for blk in &result.blocks {
+                put_tensor3(&mut buf, blk);
+            }
+        }
+    }
+    buf
+}
+
+/// Decode a [`FrameTag::Reply`] payload against the coordinator's plan
+/// arena; returns the reply plus the epoch it was stamped with.
+/// `sent_at` is stamped at decode time (the wire does not carry
+/// `Instant`s), which is within one socket hop of the true send time.
+/// On any decode error every already-taken block buffer is recycled.
+pub fn decode_reply(payload: &[u8], arena: &Arc<SlabArena>) -> Result<(WorkerReply, u64)> {
+    let mut blocks: Vec<Tensor3> = Vec::new();
+    match decode_reply_inner(payload, arena, &mut blocks) {
+        Ok(v) => Ok(v),
+        Err(e) => {
+            for t in blocks {
+                arena.put(t.data);
+            }
+            Err(e)
+        }
+    }
+}
+
+fn decode_reply_inner(
+    payload: &[u8],
+    arena: &Arc<SlabArena>,
+    blocks: &mut Vec<Tensor3>,
+) -> Result<(WorkerReply, u64)> {
+    let mut r = ByteReader::new(payload);
+    let job_id = r.u64()?;
+    let worker_id = r.u32()? as usize;
+    let epoch = r.u64()?;
+    let compute_secs = r.f64()?;
+    let delay_secs = r.f64()?;
+    let body = match r.u8()? {
+        BODY_ERR => {
+            let msg = r.str()?;
+            r.done()?;
+            ReplyBody::Err(msg)
+        }
+        BODY_OK => {
+            let checksum = r.u64()?;
+            let coded_id = r.u32()? as usize;
+            let batch = r.u32()? as usize;
+            let n_blocks = r.u32()? as usize;
+            ensure!(n_blocks <= payload.len(), "absurd block count {n_blocks}");
+            ensure!(
+                batch > 0 && n_blocks % batch == 0,
+                "block count {n_blocks} not divisible by batch {batch}"
+            );
+            for _ in 0..n_blocks {
+                blocks.push(read_tensor3(&mut r, arena)?);
+            }
+            r.done()?;
+            ReplyBody::Ok {
+                result: WorkerResult {
+                    worker_id: coded_id,
+                    batch,
+                    blocks: std::mem::take(blocks),
+                    arena: Arc::clone(arena),
+                },
+                checksum,
+            }
+        }
+        other => bail!("unknown reply body tag {other}"),
+    };
+    Ok((
+        WorkerReply {
+            job_id,
+            worker_id,
+            body,
+            compute_secs,
+            delay_secs,
+            sent_at: Instant::now(),
+        },
+        epoch,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::worker::result_checksum;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(tag: FrameTag, payload: &[u8]) -> Vec<u8> {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, tag, payload).unwrap();
+        wire
+    }
+
+    fn read_one(wire: &[u8]) -> Result<ReadOutcome> {
+        let mut cursor = wire;
+        read_frame(&mut cursor)
+    }
+
+    #[test]
+    fn frame_roundtrip_and_clean_eof() {
+        let wire = roundtrip(FrameTag::Ping, &encode_u64(42));
+        let mut cursor = &wire[..];
+        let ReadOutcome::Frame(f) = read_frame(&mut cursor).unwrap() else {
+            panic!("expected a frame");
+        };
+        assert_eq!(f.tag, FrameTag::Ping);
+        assert_eq!(decode_u64(&f.payload).unwrap(), 42);
+        // The stream is now exactly at a frame boundary: clean EOF.
+        assert!(matches!(read_frame(&mut cursor).unwrap(), ReadOutcome::Eof));
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_is_a_clean_error() {
+        let wire = roundtrip(FrameTag::Task, b"some payload bytes");
+        // Cut the wire at every possible length except 0 (clean EOF)
+        // and full (valid frame): header-truncated, payload-truncated,
+        // and checksum-truncated prefixes must all error — never panic,
+        // never return a frame.
+        for cut in 1..wire.len() {
+            let err = read_one(&wire[..cut]);
+            assert!(err.is_err(), "cut at {cut} bytes decoded a frame");
+        }
+        assert!(matches!(read_one(&wire).unwrap(), ReadOutcome::Frame(_)));
+    }
+
+    #[test]
+    fn any_single_bit_flip_is_rejected() {
+        let wire = roundtrip(FrameTag::Reply, b"payload under test");
+        let mut rng = Rng::new(2026);
+        // Every header/trailer byte plus a sample of payload bytes.
+        for trial in 0..wire.len().min(64) {
+            let byte = if trial < HEADER_LEN + 8 {
+                trial
+            } else {
+                rng.below(wire.len())
+            };
+            let mut flipped = wire.clone();
+            flipped[byte] ^= 1 << rng.below(8);
+            if flipped == wire {
+                continue;
+            }
+            assert!(
+                read_one(&flipped).is_err(),
+                "bit flip in byte {byte} went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_before_allocating() {
+        let mut wire = roundtrip(FrameTag::Task, b"x");
+        // Forge a length prefix far over the cap; the reader must
+        // reject it from the header alone (a buffer that size would
+        // OOM the test if it tried).
+        wire[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_one(&wire).unwrap_err();
+        assert!(err.to_string().contains("exceeds cap"), "err: {err:#}");
+    }
+
+    #[test]
+    fn bad_magic_version_and_tag_are_rejected() {
+        let wire = roundtrip(FrameTag::Ping, &encode_u64(1));
+        let mut bad = wire.clone();
+        bad[0] ^= 0xFF;
+        assert!(read_one(&bad).unwrap_err().to_string().contains("magic"));
+        let mut bad = wire.clone();
+        bad[4] = VERSION + 1;
+        assert!(read_one(&bad).unwrap_err().to_string().contains("version"));
+        let mut bad = wire;
+        bad[5] = 200;
+        assert!(read_one(&bad).is_err());
+    }
+
+    #[test]
+    fn control_payloads_roundtrip() {
+        let a = Announce {
+            threads: 8,
+            engine: "im2col".to_string(),
+        };
+        assert_eq!(decode_announce(&encode_announce(&a)).unwrap(), a);
+        assert_eq!(decode_accept(&encode_accept(3, 17)).unwrap(), (3, 17));
+        assert_eq!(decode_later(&encode_later(250)).unwrap(), 250);
+        assert_eq!(decode_u64(&encode_u64(u64::MAX)).unwrap(), u64::MAX);
+        // Trailing garbage is rejected (layout disagreement).
+        let mut long = encode_u64(5);
+        long.push(0);
+        assert!(decode_u64(&long).is_err());
+    }
+
+    #[test]
+    fn task_roundtrips_over_random_payload_shapes() {
+        let mut rng = Rng::new(99);
+        let arena = Arc::new(SlabArena::new(64));
+        for trial in 0..12 {
+            let batch = 1 + rng.below(3);
+            let ell_a = 1 + rng.below(3);
+            let ell_b = 1 + rng.below(3);
+            let (c, h, w) = (1 + rng.below(3), 2 + rng.below(5), 2 + rng.below(5));
+            let (kn, kh, kw) = (1 + rng.below(4), 1 + rng.below(2), 1 + rng.below(2));
+            let inputs: Vec<Tensor3> = (0..batch * ell_a)
+                .map(|_| Tensor3::random(c, h, w, &mut rng))
+                .collect();
+            let filters: Vec<Tensor4> = (0..ell_b)
+                .map(|_| Tensor4::random(kn, c, kh, kw, &mut rng))
+                .collect();
+            let payload = WorkerPayload {
+                worker_id: trial,
+                inputs,
+                batch,
+                filters: Arc::new(filters),
+                packs: None,
+                conv: ConvParams::new(1, 0),
+                arena: Arc::clone(&arena),
+            };
+            let fate = match trial % 5 {
+                0 => WorkerFate::Prompt,
+                1 => WorkerFate::Delayed(Duration::from_millis(7)),
+                2 => WorkerFate::Failed,
+                3 => WorkerFate::ErrorReply,
+                _ => WorkerFate::CorruptReply,
+            };
+            let bytes = encode_task(trial as u64, fate, &payload);
+            let (job_id, got_fate, got) = decode_task(&bytes, &arena).unwrap();
+            assert_eq!(job_id, trial as u64);
+            assert_eq!(got_fate, fate);
+            assert_eq!(got.worker_id, payload.worker_id);
+            assert_eq!(got.batch, payload.batch);
+            assert_eq!(got.conv, payload.conv);
+            assert_eq!(got.filters.len(), payload.filters.len());
+            for (a, b) in got.filters.iter().zip(payload.filters.iter()) {
+                assert_eq!((a.n, a.c, a.kh, a.kw), (b.n, b.c, b.kh, b.kw));
+                assert_eq!(a.data, b.data, "filter slab must round-trip bit-exactly");
+            }
+            assert_eq!(got.inputs.len(), payload.inputs.len());
+            for (a, b) in got.inputs.iter().zip(payload.inputs.iter()) {
+                assert_eq!((a.c, a.h, a.w), (b.c, b.h, b.w));
+                assert_eq!(a.data, b.data, "input slab must round-trip bit-exactly");
+            }
+            assert!(got.packs.is_none(), "packs never travel the wire");
+            got.recycle();
+            payload.recycle();
+        }
+        assert_eq!(arena.outstanding(), 0, "decode must balance the arena");
+    }
+
+    #[test]
+    fn reply_roundtrips_and_checksum_survives_the_wire() {
+        let mut rng = Rng::new(7);
+        let arena = Arc::new(SlabArena::new(32));
+        let blocks: Vec<Tensor3> = (0..4).map(|_| Tensor3::random(2, 3, 3, &mut rng)).collect();
+        let result = WorkerResult {
+            worker_id: 2,
+            batch: 2,
+            blocks,
+            arena: Arc::clone(&arena),
+        };
+        let checksum = result_checksum(&result);
+        let reply = WorkerReply {
+            job_id: 9,
+            worker_id: 1,
+            body: ReplyBody::Ok { result, checksum },
+            compute_secs: 0.25,
+            delay_secs: 0.5,
+            sent_at: Instant::now(),
+        };
+        let bytes = encode_reply(&reply, 11);
+        let (got, epoch) = decode_reply(&bytes, &arena).unwrap();
+        assert_eq!(epoch, 11);
+        assert_eq!(got.job_id, 9);
+        assert_eq!(got.worker_id, 1);
+        assert_eq!(got.compute_secs, 0.25);
+        assert_eq!(got.delay_secs, 0.5);
+        let ReplyBody::Ok { result, checksum: c } = &got.body else {
+            panic!("ok body expected");
+        };
+        assert_eq!(*c, checksum);
+        assert_eq!(
+            result_checksum(result),
+            checksum,
+            "blocks must survive the wire bit-exactly"
+        );
+        got.body.recycle();
+        reply.body.recycle();
+
+        // Error bodies round-trip too.
+        let err_reply = WorkerReply {
+            job_id: 10,
+            worker_id: 3,
+            body: ReplyBody::Err("engine panic: boom".to_string()),
+            compute_secs: 0.0,
+            delay_secs: 0.0,
+            sent_at: Instant::now(),
+        };
+        let bytes = encode_reply(&err_reply, 12);
+        let (got, epoch) = decode_reply(&bytes, &arena).unwrap();
+        assert_eq!(epoch, 12);
+        assert!(matches!(&got.body, ReplyBody::Err(m) if m.contains("boom")));
+        assert_eq!(arena.outstanding(), 0);
+    }
+
+    #[test]
+    fn corrupt_task_payload_never_leaks_a_slab() {
+        let mut rng = Rng::new(3);
+        let arena = Arc::new(SlabArena::new(32));
+        let payload = WorkerPayload {
+            worker_id: 0,
+            inputs: (0..4).map(|_| Tensor3::random(2, 4, 4, &mut rng)).collect(),
+            batch: 2,
+            filters: Arc::new(vec![Tensor4::random(2, 2, 2, 2, &mut rng)]),
+            packs: None,
+            conv: ConvParams::new(1, 0),
+            arena: Arc::clone(&arena),
+        };
+        let bytes = encode_task(1, WorkerFate::Prompt, &payload);
+        payload.recycle();
+        let baseline = arena.outstanding();
+        // Truncate the payload at every prefix: each must fail cleanly
+        // with the arena balanced (taken slabs recycled on error).
+        for cut in 0..bytes.len() {
+            assert!(decode_task(&bytes[..cut], &arena).is_err());
+            assert_eq!(arena.outstanding(), baseline, "leak at cut {cut}");
+        }
+        // And a shape/count lie inside an otherwise-intact payload.
+        let (job_id, fate, ok) = decode_task(&bytes, &arena).unwrap();
+        assert_eq!((job_id, fate), (1, WorkerFate::Prompt));
+        ok.recycle();
+        assert_eq!(arena.outstanding(), baseline);
+    }
+}

@@ -172,6 +172,35 @@ impl HealthTracker {
         }
     }
 
+    /// The transport declared `worker` dead (socket error or missed
+    /// heartbeats): quarantine it immediately and **pin** the cooldown
+    /// open — a dead peer must not auto-probe its way back on a job
+    /// counter; only the transport's readmission ([`Self::readmit`])
+    /// reopens it. Idempotent: a second eviction of an already-pinned
+    /// worker changes nothing (no double-strike, no double-count).
+    pub fn evict(&mut self, worker: usize) {
+        let w = &mut self.workers[worker];
+        if w.state != WorkerState::Quarantined {
+            w.state = WorkerState::Quarantined;
+            w.strikes = 0;
+            self.counters.quarantines += 1;
+        }
+        w.cooldown = u64::MAX;
+    }
+
+    /// The transport readmitted `worker` (it reconnected and the
+    /// membership accepted it back): move it to `Probation` so its next
+    /// dispatch is the probe, exactly like a cooldown expiry. Only
+    /// meaningful on a quarantined worker; otherwise a no-op.
+    pub fn readmit(&mut self, worker: usize) {
+        let w = &mut self.workers[worker];
+        if w.state == WorkerState::Quarantined {
+            w.state = WorkerState::Probation;
+            w.cooldown = 0;
+            self.counters.probes += 1;
+        }
+    }
+
     fn strike(&mut self, worker: usize) {
         let policy = self.policy;
         let w = &mut self.workers[worker];
@@ -299,6 +328,33 @@ mod tests {
             ticks += 1;
         }
         assert_eq!(ticks, 2, "readmission resets the probe backoff");
+    }
+
+    #[test]
+    fn eviction_pins_quarantine_until_transport_readmission() {
+        let mut t = HealthTracker::new(2, policy());
+        t.evict(0);
+        assert_eq!(t.state(0), WorkerState::Quarantined);
+        assert_eq!(t.live_set(), vec![1]);
+        // A second eviction report is idempotent.
+        let q = t.counters().quarantines;
+        t.evict(0);
+        assert_eq!(t.counters().quarantines, q, "no double-count");
+        // No number of dispatched jobs auto-probes a dead peer.
+        for _ in 0..100 {
+            t.tick_job();
+        }
+        assert_eq!(t.state(0), WorkerState::Quarantined);
+        // Transport readmission makes the next dispatch the probe.
+        t.readmit(0);
+        assert_eq!(t.state(0), WorkerState::Probation);
+        assert_eq!(t.live_set(), vec![0, 1]);
+        t.observe_ok(0);
+        assert_eq!(t.state(0), WorkerState::Healthy);
+        assert_eq!(t.counters().readmissions, 1);
+        // Readmitting a healthy worker is a no-op.
+        t.readmit(1);
+        assert_eq!(t.state(1), WorkerState::Healthy);
     }
 
     #[test]

@@ -31,16 +31,16 @@
 
 use crate::cluster::health::{HealthPolicy, HealthTracker};
 use crate::cluster::straggler::{FaultPlan, StragglerModel};
-use crate::cluster::worker::{result_checksum, worker_loop, ReplyBody, WorkerMsg, WorkerReply};
+use crate::cluster::transport::{ChannelTransport, Transport, TransportEvent};
+use crate::cluster::worker::{result_checksum, ReplyBody, WorkerMsg, WorkerReply};
 use crate::engine::{Im2colEngine, TaskEngine};
 use crate::fcdcc::{FcdccPlan, ResidentFilters, WorkerResult};
+use crate::metrics::MembershipCounters;
 use crate::tensor::Tensor3;
 use crate::util::rng::Rng;
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{bail, ensure, Result};
 use std::collections::BTreeMap;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Per-job metrics (the rows of Table III and the points of Figs. 5–6).
@@ -146,12 +146,11 @@ struct InFlight {
     concurrent_jobs: usize,
 }
 
-/// A pool of worker threads plus the demultiplexing collector.
+/// A pool of workers behind a [`Transport`] plus the demultiplexing
+/// collector.
 pub struct Cluster {
     n: usize,
-    senders: Vec<Sender<WorkerMsg>>,
-    results: Receiver<WorkerReply>,
-    handles: Vec<JoinHandle<()>>,
+    transport: Box<dyn Transport>,
     next_job: u64,
     /// Per-job collection timeout (guards against >γ failures). Applied
     /// at submit time: changing it affects subsequently submitted jobs.
@@ -167,28 +166,20 @@ pub struct Cluster {
 }
 
 impl Cluster {
-    /// Spawn `n` workers all running the same conv engine.
+    /// Spawn `n` in-process workers all running the same conv engine —
+    /// the default [`ChannelTransport`] pool.
     pub fn new(n: usize, engine: Arc<dyn TaskEngine>) -> Self {
-        let (reply_tx, results) = channel::<WorkerReply>();
-        let mut senders = Vec::with_capacity(n);
-        let mut handles = Vec::with_capacity(n);
-        for worker_id in 0..n {
-            let (tx, rx) = channel::<WorkerMsg>();
-            let engine = Arc::clone(&engine);
-            let reply_tx = reply_tx.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("fcdcc-worker-{worker_id}"))
-                    .spawn(move || worker_loop(worker_id, engine, rx, reply_tx))
-                    .expect("spawn worker"),
-            );
-            senders.push(tx);
-        }
+        Self::with_transport(Box::new(ChannelTransport::spawn(n, engine)))
+    }
+
+    /// Build a cluster over an already-connected transport (e.g. a
+    /// [`TcpTransport`](crate::cluster::tcp::TcpTransport) driving real
+    /// remote worker processes).
+    pub fn with_transport(transport: Box<dyn Transport>) -> Self {
+        let n = transport.n();
         Self {
             n,
-            senders,
-            results,
-            handles,
+            transport,
             next_job: 1,
             collect_timeout: Duration::from_secs(60),
             jobs: BTreeMap::new(),
@@ -225,6 +216,12 @@ impl Cluster {
     /// The worker-health tracker (read side: states, live set, counters).
     pub fn health(&self) -> &HealthTracker {
         &self.health
+    }
+
+    /// Membership/transport counters (all-zero on the in-process
+    /// channel transport, which has no membership protocol).
+    pub fn membership_counters(&self) -> MembershipCounters {
+        self.transport.counters()
     }
 
     /// Physical worker ids currently in the dispatch set (everything not
@@ -319,18 +316,31 @@ impl Cluster {
         let fates = straggler.draw(n_coded, rng);
         let dispatched_at = Instant::now();
         let mut dispatched_to = Vec::with_capacity(n_coded);
+        let mut failed_sends = Vec::new();
         for (payload, fate) in payloads.into_iter().zip(fates.iter()) {
             let coded = payload.worker_id;
             let wid = worker_map.map_or(coded, |m| m[coded]);
             let fate = self.fault_plan.fate_for_dispatch(wid, *fate);
             dispatched_to.push(wid);
-            self.senders[wid]
-                .send(WorkerMsg::Task {
-                    job_id,
-                    payload: Box::new(payload),
-                    fate,
-                })
-                .with_context(|| format!("worker {wid} channel closed"))?;
+            // A dead peer fails *this column*, not the whole submit:
+            // the transport recycled the payload, and the failure is
+            // charged to the job below (an unreachable worker is an
+            // error reply that arrived instantly). The coded scheme
+            // absorbs up to γ of these like any other fault.
+            if self
+                .transport
+                .send(
+                    wid,
+                    WorkerMsg::Task {
+                        job_id,
+                        payload: Box::new(payload),
+                        fate,
+                    },
+                )
+                .is_err()
+            {
+                failed_sends.push(wid);
+            }
         }
         self.health.tick_job();
 
@@ -351,6 +361,9 @@ impl Cluster {
                 concurrent_jobs,
             },
         );
+        for wid in failed_sends {
+            self.note_job_error(job_id, wid);
+        }
         Ok(JobHandle { job_id })
     }
 
@@ -437,11 +450,10 @@ impl Cluster {
                 }
                 JobPhase::Collecting => {
                     let wait_for = deadline.saturating_duration_since(Instant::now());
-                    match self.results.recv_timeout(wait_for) {
-                        Ok(r) => self.route(r),
-                        // The loop re-checks this job's deadline.
-                        Err(RecvTimeoutError::Timeout) => {}
-                        Err(RecvTimeoutError::Disconnected) => bail!("all workers gone"),
+                    // `None` = nothing arrived: the loop re-checks this
+                    // job's deadline.
+                    if let Some(ev) = self.transport.recv_timeout(wait_for)? {
+                        self.on_event(ev);
                     }
                 }
             }
@@ -550,6 +562,42 @@ impl Cluster {
         self.wait(plan, handle)
     }
 
+    /// Apply one transport event: replies are routed into the in-flight
+    /// table; membership transitions feed the health tracker and the
+    /// in-flight jobs (a dead peer's silent dispatches fail fast,
+    /// within one heartbeat interval, instead of running out their
+    /// deadlines).
+    fn on_event(&mut self, ev: TransportEvent) {
+        match ev {
+            TransportEvent::Reply(r) => self.route(r),
+            TransportEvent::PeerDown { worker } => {
+                self.health.evict(worker);
+                self.note_peer_down(worker);
+            }
+            TransportEvent::PeerUp { worker } => self.health.readmit(worker),
+        }
+    }
+
+    /// Charge a dead peer to every collecting job that dispatched to it
+    /// and has heard nothing back from it: each such column can never
+    /// arrive now, which is exactly an error reply's effect.
+    fn note_peer_down(&mut self, worker: usize) {
+        let affected: Vec<u64> = self
+            .jobs
+            .iter()
+            .filter(|(_, j)| {
+                matches!(j.phase, JobPhase::Collecting)
+                    && j.dispatched_to.contains(&worker)
+                    && !j.errors.contains(&worker)
+                    && !j.replies.iter().any(|r| r.worker_id == worker)
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        for id in affected {
+            self.note_job_error(id, worker);
+        }
+    }
+
     /// Route one reply into the in-flight table. Every reply — live,
     /// stale, error, corrupt — first feeds the health tracker; error
     /// replies and checksum-failing replies are counted against their
@@ -633,15 +681,12 @@ impl Cluster {
         }
     }
 
-    /// Drain every reply that is already buffered, without blocking.
+    /// Drain every event that is already buffered, without blocking.
     fn drain_ready(&mut self) -> Result<()> {
-        loop {
-            match self.results.try_recv() {
-                Ok(r) => self.route(r),
-                Err(TryRecvError::Empty) => return Ok(()),
-                Err(TryRecvError::Disconnected) => bail!("all workers gone"),
-            }
+        while let Some(ev) = self.transport.try_recv()? {
+            self.on_event(ev);
         }
+        Ok(())
     }
 
     /// Mark jobs whose per-job deadline has passed as timed out and tell
@@ -679,42 +724,42 @@ impl Cluster {
 
     /// Remove a settled job from the table and, if the smallest
     /// outstanding id advanced, raise the workers' prune watermark.
+    /// The sends are best-effort: an already-disconnected worker has
+    /// nothing to prune, so a failure here is not a new fault — it is
+    /// neither charged to any job nor struck against `health` (the
+    /// PeerDown event already did both, exactly once).
     fn remove_job(&mut self, job_id: u64) -> InFlight {
         let job = self.jobs.remove(&job_id).expect("job in table");
         let watermark = self.jobs.keys().next().map_or(self.next_job - 1, |&m| m - 1);
         if watermark > self.watermark_sent {
             self.watermark_sent = watermark;
-            for tx in &self.senders {
-                let _ = tx.send(WorkerMsg::CancelUpTo(watermark));
+            for w in 0..self.n {
+                let _ = self.transport.send(w, WorkerMsg::CancelUpTo(watermark));
             }
         }
         job
     }
 
-    fn broadcast_cancel(&self, job_id: u64) {
-        for tx in &self.senders {
-            let _ = tx.send(WorkerMsg::Cancel(job_id));
+    /// Best-effort, like the watermark in [`Self::remove_job`]: a
+    /// cancel that cannot be delivered is moot.
+    fn broadcast_cancel(&mut self, job_id: u64) {
+        for w in 0..self.n {
+            let _ = self.transport.send(w, WorkerMsg::Cancel(job_id));
         }
     }
 
-    /// Graceful shutdown: tell every worker to exit, join the threads,
-    /// then recycle every reply still buffered in the result channel or
-    /// parked in the in-flight table — after this, the plan arena's
-    /// outstanding count is exactly zero (the buffer-hygiene invariant
-    /// the failure tests assert).
+    /// Graceful shutdown: tear the transport down (it stops its
+    /// workers, joins its threads, and recycles every reply still
+    /// buffered inside it), then recycle the replies parked in the
+    /// in-flight table — after this, the plan arena's outstanding count
+    /// is exactly zero (the buffer-hygiene invariant the failure tests
+    /// assert).
     pub fn shutdown(self) {
-        for tx in &self.senders {
-            let _ = tx.send(WorkerMsg::Shutdown);
-        }
-        for h in self.handles {
-            let _ = h.join();
-        }
-        // The workers drained their queues before exiting, so every
-        // reply they ever sent is now buffered here.
-        while let Ok(r) = self.results.try_recv() {
-            r.body.recycle();
-        }
-        for (_, j) in self.jobs {
+        let Cluster {
+            transport, jobs, ..
+        } = self;
+        transport.shutdown();
+        for (_, j) in jobs {
             for r in j.replies {
                 r.body.recycle();
             }

@@ -1,0 +1,371 @@
+//! Coordinator-side membership state machine (DESIGN.md §Transport &
+//! membership).
+//!
+//! Pure and deterministic: no sockets, no threads, no clocks of its
+//! own. The TCP supervisor feeds it events (`on_announce`, `on_pong`,
+//! `on_conn_lost`) and polls `tick(now)` for the actions to take
+//! (pings to send, slots to evict), passing every timestamp in — which
+//! makes the whole admission / heartbeat / eviction protocol testable
+//! with synthetic time, exactly like the fault plan and health tracker.
+//!
+//! Per slot the machine is a three-state automaton:
+//!
+//! ```text
+//!            Announce → Accept{session = epoch++}
+//!   Joining ───────────────────────────────────────▶ Live
+//!      ▲                                              │
+//!      │  re-dial + Announce (readmission,            │ miss_threshold
+//!      │  epoch++, readmissions++)                    │ heartbeats missed,
+//!      │                                              │ or socket error
+//!      │                                              ▼ (epoch++, evictions++)
+//!      └─────────────────────────────────────────── Down
+//! ```
+//!
+//! The **epoch** bumps on every membership change (admit, evict,
+//! readmit). Sessions are epoch values at accept time, so they are
+//! unique and monotone — a reply stamped with a session older than the
+//! slot's current one is from before a reconnect and must be recycled,
+//! never decoded.
+
+use std::time::{Duration, Instant};
+
+use crate::metrics::MembershipCounters;
+
+/// Heartbeat cadence and tolerance.
+#[derive(Clone, Copy, Debug)]
+pub struct MembershipConfig {
+    /// Interval between coordinator-initiated pings.
+    pub heartbeat: Duration,
+    /// Consecutive missed beats before a Live slot is evicted.
+    pub miss_threshold: u32,
+}
+
+impl Default for MembershipConfig {
+    fn default() -> Self {
+        MembershipConfig {
+            heartbeat: Duration::from_millis(200),
+            miss_threshold: 3,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SlotState {
+    /// Never admitted, or between eviction and readmission.
+    Joining,
+    Live,
+    /// Evicted; a successful re-announce moves it back to Live.
+    Down,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Slot {
+    state: SlotState,
+    /// Session epoch granted at the most recent accept.
+    session: u64,
+    /// Last pong (or accept) time; meaningless unless Live.
+    last_pong: Instant,
+    /// Consecutive heartbeat intervals with no pong.
+    missed: u32,
+    /// Whether this slot has ever been Live (readmission vs admission).
+    ever_live: bool,
+}
+
+/// Outcome of a worker's rendezvous announce.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Admitted into the slot under this session epoch.
+    Accept { session: u64 },
+    /// Slot not admissible right now; retry after this many ms.
+    Later { retry_ms: u64 },
+}
+
+/// Actions `tick` tells the supervisor to take.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TickActions {
+    /// Send a heartbeat ping to each of these slots.
+    pub pings: Vec<usize>,
+    /// These slots crossed the missed-beat threshold: evict them
+    /// (close the socket, emit PeerDown).
+    pub evict: Vec<usize>,
+}
+
+pub struct Membership {
+    cfg: MembershipConfig,
+    slots: Vec<Slot>,
+    epoch: u64,
+    last_ping: Instant,
+    counters: MembershipCounters,
+}
+
+impl Membership {
+    pub fn new(n: usize, cfg: MembershipConfig, now: Instant) -> Membership {
+        Membership {
+            cfg,
+            slots: vec![
+                Slot {
+                    state: SlotState::Joining,
+                    session: 0,
+                    last_pong: now,
+                    missed: 0,
+                    ever_live: false,
+                };
+                n
+            ],
+            epoch: 0,
+            last_ping: now,
+            counters: MembershipCounters::default(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Current membership epoch (bumped on admit / evict / readmit).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn counters(&self) -> MembershipCounters {
+        let mut c = self.counters;
+        c.epoch = self.epoch;
+        c
+    }
+
+    /// The slot's current session epoch (replies stamped with an older
+    /// session are stale). Returns `None` unless the slot is Live.
+    pub fn session(&self, slot: usize) -> Option<u64> {
+        let s = &self.slots[slot];
+        (s.state == SlotState::Live).then_some(s.session)
+    }
+
+    pub fn is_live(&self, slot: usize) -> bool {
+        self.slots[slot].state == SlotState::Live
+    }
+
+    /// Indices of all Live slots.
+    pub fn live(&self) -> Vec<usize> {
+        (0..self.slots.len())
+            .filter(|&i| self.is_live(i))
+            .collect()
+    }
+
+    /// A worker dialed in and announced itself for `slot`. Returns
+    /// whether it was admitted (`Accept` carries the session epoch the
+    /// worker must stamp its replies with) and whether this was a
+    /// readmission of a previously-evicted worker.
+    pub fn on_announce(&mut self, slot: usize, now: Instant) -> Admission {
+        let readmit = {
+            let s = &self.slots[slot];
+            match s.state {
+                // Defensive: a Live slot already has a connection — a
+                // second announce is a duplicate dial, told to retry
+                // after one heartbeat (by then the stale connection
+                // has been noticed and torn down).
+                SlotState::Live => {
+                    return Admission::Later {
+                        retry_ms: self.cfg.heartbeat.as_millis() as u64,
+                    }
+                }
+                SlotState::Down => true,
+                SlotState::Joining => self.slots[slot].ever_live,
+            }
+        };
+        self.epoch += 1;
+        if readmit {
+            self.counters.readmissions += 1;
+        }
+        let s = &mut self.slots[slot];
+        s.state = SlotState::Live;
+        s.session = self.epoch;
+        s.last_pong = now; // admission grace: a fresh peer owes no pong yet
+        s.missed = 0;
+        s.ever_live = true;
+        Admission::Accept { session: self.epoch }
+    }
+
+    /// Heartbeat answer from a Live slot.
+    pub fn on_pong(&mut self, slot: usize, now: Instant) {
+        let s = &mut self.slots[slot];
+        if s.state == SlotState::Live {
+            s.last_pong = now;
+            s.missed = 0;
+        }
+    }
+
+    /// The slot's connection died (EOF, write error, corrupt frame).
+    /// Returns true if this was a Live→Down transition — the caller
+    /// emits exactly one PeerDown per true return, so racing reader
+    /// and supervisor threads cannot double-evict.
+    pub fn on_conn_lost(&mut self, slot: usize) -> bool {
+        let s = &mut self.slots[slot];
+        if s.state != SlotState::Live {
+            return false;
+        }
+        s.state = SlotState::Down;
+        self.epoch += 1;
+        self.counters.evictions += 1;
+        true
+    }
+
+    /// Advance the protocol to `now`: decide which slots to ping and
+    /// which have missed enough beats to evict. Eviction here marks
+    /// the slot Down (epoch bump + counter) — the caller still closes
+    /// the socket and emits PeerDown for each returned index.
+    pub fn tick(&mut self, now: Instant) -> TickActions {
+        let mut actions = TickActions::default();
+        let due = now.duration_since(self.last_ping) >= self.cfg.heartbeat;
+        if due {
+            self.last_ping = now;
+        }
+        for i in 0..self.slots.len() {
+            if self.slots[i].state != SlotState::Live {
+                continue;
+            }
+            // Count whole heartbeat intervals elapsed since the last
+            // pong beyond those already charged.
+            let silent = now.duration_since(self.slots[i].last_pong);
+            let owed = (silent.as_nanos() / self.cfg.heartbeat.as_nanos().max(1)) as u32;
+            if owed > self.slots[i].missed {
+                self.counters.heartbeats_missed += u64::from(owed - self.slots[i].missed);
+                self.slots[i].missed = owed;
+            }
+            if self.slots[i].missed >= self.cfg.miss_threshold {
+                self.slots[i].state = SlotState::Down;
+                self.epoch += 1;
+                self.counters.evictions += 1;
+                actions.evict.push(i);
+            } else if due {
+                self.counters.heartbeats_sent += 1;
+                actions.pings.push(i);
+            }
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn at(base: Instant, ms: u64) -> Instant {
+        base + Duration::from_millis(ms)
+    }
+
+    fn cfg() -> MembershipConfig {
+        MembershipConfig {
+            heartbeat: Duration::from_millis(100),
+            miss_threshold: 3,
+        }
+    }
+
+    #[test]
+    fn admission_grants_monotone_sessions_and_bumps_epoch() {
+        let base = Instant::now();
+        let mut m = Membership::new(3, cfg(), base);
+        assert_eq!(m.epoch(), 0);
+        assert!(m.live().is_empty());
+        let mut sessions = Vec::new();
+        for i in 0..3 {
+            match m.on_announce(i, base) {
+                Admission::Accept { session } => sessions.push(session),
+                other => panic!("expected accept, got {other:?}"),
+            }
+        }
+        assert_eq!(sessions, vec![1, 2, 3]);
+        assert_eq!(m.epoch(), 3, "epoch = n after initial admission");
+        assert_eq!(m.live(), vec![0, 1, 2]);
+        assert_eq!(m.counters().readmissions, 0, "first admits are not readmits");
+    }
+
+    #[test]
+    fn duplicate_announce_on_a_live_slot_gets_later() {
+        let base = Instant::now();
+        let mut m = Membership::new(1, cfg(), base);
+        m.on_announce(0, base);
+        assert_eq!(
+            m.on_announce(0, at(base, 10)),
+            Admission::Later { retry_ms: 100 }
+        );
+        assert_eq!(m.epoch(), 1, "a rejected announce must not move the epoch");
+    }
+
+    #[test]
+    fn missed_beats_accumulate_and_cross_the_threshold() {
+        let base = Instant::now();
+        let mut m = Membership::new(2, cfg(), base);
+        m.on_announce(0, base);
+        m.on_announce(1, base);
+        // Worker 1 pongs on every beat; worker 0 goes silent.
+        for beat in 1..=2u64 {
+            let t = at(base, beat * 100);
+            let a = m.tick(t);
+            assert!(a.evict.is_empty(), "no eviction before the threshold");
+            assert!(a.pings.contains(&0) && a.pings.contains(&1));
+            m.on_pong(1, t);
+        }
+        // Third silent interval crosses miss_threshold = 3.
+        let a = m.tick(at(base, 300));
+        assert_eq!(a.evict, vec![0]);
+        assert!(a.pings.contains(&1), "survivor still gets pinged");
+        assert_eq!(m.live(), vec![1]);
+        assert_eq!(m.epoch(), 3, "2 admits + 1 eviction");
+        let c = m.counters();
+        assert_eq!(c.evictions, 1);
+        assert!(c.heartbeats_missed >= 3);
+        assert!(c.heartbeats_sent >= 5, "2 slots x 2 beats + survivor");
+        assert_eq!(c.epoch, 3);
+    }
+
+    #[test]
+    fn pongs_keep_a_slot_alive_indefinitely() {
+        let base = Instant::now();
+        let mut m = Membership::new(1, cfg(), base);
+        m.on_announce(0, base);
+        for beat in 1..50u64 {
+            let t = at(base, beat * 100);
+            let a = m.tick(t);
+            assert!(a.evict.is_empty(), "ponging slot evicted at beat {beat}");
+            m.on_pong(0, t);
+        }
+        assert_eq!(m.counters().heartbeats_missed, 0);
+    }
+
+    #[test]
+    fn conn_lost_evicts_once_and_readmission_grants_a_fresh_session() {
+        let base = Instant::now();
+        let mut m = Membership::new(2, cfg(), base);
+        m.on_announce(0, base);
+        m.on_announce(1, base);
+        let old = m.session(0).unwrap();
+        assert!(m.on_conn_lost(0), "live slot loses its connection");
+        assert!(!m.on_conn_lost(0), "second report must be a no-op");
+        assert_eq!(m.live(), vec![1]);
+        assert_eq!(m.session(0), None);
+        // Worker re-dials: readmitted under a strictly newer session.
+        let Admission::Accept { session } = m.on_announce(0, at(base, 500)) else {
+            panic!("readmission expected");
+        };
+        assert!(session > old, "sessions are monotone across reconnects");
+        let c = m.counters();
+        assert_eq!((c.evictions, c.readmissions), (1, 1));
+        assert_eq!(m.epoch(), 4, "2 admits + evict + readmit");
+        // The readmitted slot starts with admission grace, not instant
+        // eviction from its pre-eviction silence.
+        let a = m.tick(at(base, 550));
+        assert!(a.evict.is_empty());
+    }
+
+    #[test]
+    fn eviction_timing_is_within_one_beat_past_the_threshold() {
+        // The acceptance bar: eviction must land within one heartbeat
+        // interval of the threshold being crossed.
+        let base = Instant::now();
+        let mut m = Membership::new(1, cfg(), base);
+        m.on_announce(0, base);
+        // Just under the threshold: 3 beats = 300ms.
+        assert!(m.tick(at(base, 299)).evict.is_empty());
+        assert_eq!(m.tick(at(base, 300)).evict, vec![0]);
+    }
+}

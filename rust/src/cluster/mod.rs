@@ -1,8 +1,11 @@
-//! The simulated heterogeneous cluster (DESIGN.md §Hardware adaptation):
-//! one OS thread per worker, mpsc channels as the network, straggler
-//! injection in the worker loop, and a master that decodes as soon as any
-//! δ results arrive — the same semantics as the paper's EC2/mpi4py
-//! testbed with the wire replaced by channels.
+//! The heterogeneous cluster (DESIGN.md §Hardware adaptation): workers
+//! behind a pluggable [`Transport`], straggler injection in the worker
+//! loop, and a master that decodes as soon as any δ results arrive —
+//! the same semantics as the paper's EC2/mpi4py testbed. The default
+//! wire is in-process mpsc channels ([`ChannelTransport`]:
+//! deterministic, offline); [`TcpTransport`] drives real remote worker
+//! processes over framed TCP with membership, heartbeats, and eviction
+//! (DESIGN.md §Transport & membership).
 //!
 //! The master is a **job runtime**: `Cluster::submit` is non-blocking and
 //! any number of jobs (e.g. conv layers of different serving requests)
@@ -16,13 +19,20 @@
 //! time; job completion = δ-th order statistic), which is the quantity
 //! the paper's Figs. 5–6 plot.
 
+pub mod frame;
 pub mod health;
 pub mod master;
+pub mod membership;
 pub mod sim;
 pub mod straggler;
+pub mod tcp;
+pub mod transport;
 pub mod worker;
 
 pub use health::{HealthPolicy, HealthTracker, WorkerState};
 pub use master::{BatchOutcome, Cluster, JobHandle, JobReport};
+pub use membership::{Admission, Membership, MembershipConfig};
 pub use sim::{simulate_job, SimJob};
 pub use straggler::{FaultKind, FaultPlan, StragglerModel};
+pub use tcp::{spawn_worker_node, TcpConfig, TcpTransport, WorkerNodeConfig, WorkerNodeHandle};
+pub use transport::{ChannelTransport, Transport, TransportEvent};

@@ -1,0 +1,841 @@
+//! Real TCP transport: remote worker processes over the frame codec
+//! (`cluster::frame`), governed by the membership state machine
+//! (`cluster::membership`) — DESIGN.md §Transport & membership.
+//!
+//! **Roles.** A *worker node* ([`spawn_worker_node`], or `--role worker`
+//! on the CLI) listens on an address and serves one coordinator
+//! connection at a time: it announces itself on accept, runs the exact
+//! same [`worker_loop`] as the in-process pool behind the socket, and
+//! goes back to accepting when the connection ends — reconnection is
+//! just the next accept. The *coordinator* side ([`TcpTransport`],
+//! `--role coordinator --workers <addrs>`) dials every worker address,
+//! performs the rendezvous handshake (Announce → Accept/Later), sends
+//! periodic heartbeat pings, and turns missed-beat thresholds and
+//! socket errors into [`TransportEvent::PeerDown`] — which the master
+//! converts into health quarantine and fast job failure, and the
+//! serving layer into (n, k) re-planning onto the live set. A
+//! supervisor thread keeps re-dialing down peers with exponential
+//! backoff; a successful re-dial readmits the worker under a **fresh
+//! session epoch**, and replies stamped with a stale session are
+//! recycled, never decoded.
+//!
+//! **Fault injection over the wire.** Dispatch fates travel inside task
+//! frames. Four of the five act exactly as on the channel transport
+//! (the compute side is the shared [`worker_loop`]); `Failed` — the
+//! crash fate — is acted out by the *node*, which drops the connection
+//! instead of silently eating the task. Over TCP a crash is a dead
+//! socket, so the same seeded fault plans that drive the chaos tests
+//! drive real membership churn: crash → evict → re-dial → readmit.
+
+use crate::cluster::frame::{self, Frame, FrameTag, ReadOutcome};
+use crate::cluster::membership::{Admission, Membership, MembershipConfig};
+use crate::cluster::straggler::WorkerFate;
+use crate::cluster::transport::{Transport, TransportEvent};
+use crate::cluster::worker::{worker_loop, WorkerMsg, WorkerReply};
+use crate::engine::TaskEngine;
+use crate::fcdcc::SlabArena;
+use crate::metrics::MembershipCounters;
+use anyhow::{bail, Context, Result};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+// =====================================================================
+// Worker node (the listening side).
+
+/// Configuration of one worker-node process/thread.
+pub struct WorkerNodeConfig {
+    /// Listen address, e.g. `127.0.0.1:0` (0 = ephemeral port).
+    pub listen: String,
+    /// The conv engine tasks run on.
+    pub engine: Arc<dyn TaskEngine>,
+    /// Advertised compute capacity (informational, sent in Announce).
+    pub threads: usize,
+}
+
+struct NodeShared {
+    stop: AtomicBool,
+    /// Tasks decoded off the wire (tests use this to time a mid-batch
+    /// kill).
+    tasks_seen: AtomicU64,
+    /// Write half of the active connection, if any — `kill` shuts it
+    /// down to break a blocked reader.
+    conn: Mutex<Option<TcpStream>>,
+}
+
+/// Handle to a spawned worker node.
+pub struct WorkerNodeHandle {
+    addr: SocketAddr,
+    shared: Arc<NodeShared>,
+    thread: JoinHandle<()>,
+}
+
+impl WorkerNodeHandle {
+    /// The bound listen address (resolves the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Tasks this node has decoded off the wire so far.
+    pub fn tasks_seen(&self) -> u64 {
+        self.shared.tasks_seen.load(Ordering::SeqCst)
+    }
+
+    /// Kill the node hard: tear down the active connection (the
+    /// coordinator sees a dead socket, not a goodbye) and stop the
+    /// accept loop. Blocks until the node thread exits.
+    pub fn kill(self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(conn) = self.shared.conn.lock().expect("node conn lock").take() {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+        // Unblock a listener parked in accept().
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.thread.join();
+    }
+
+    /// Block until the node exits on its own (a coordinator Shutdown
+    /// frame stops it gracefully).
+    pub fn wait(self) {
+        let _ = self.thread.join();
+    }
+}
+
+/// Bind `cfg.listen` and serve coordinator connections on a background
+/// thread until killed or told to shut down.
+pub fn spawn_worker_node(cfg: WorkerNodeConfig) -> Result<WorkerNodeHandle> {
+    let listener = TcpListener::bind(&cfg.listen)
+        .with_context(|| format!("worker node: bind {}", cfg.listen))?;
+    let addr = listener.local_addr().context("worker node: local_addr")?;
+    let shared = Arc::new(NodeShared {
+        stop: AtomicBool::new(false),
+        tasks_seen: AtomicU64::new(0),
+        conn: Mutex::new(None),
+    });
+    let node = Arc::clone(&shared);
+    let thread = std::thread::Builder::new()
+        .name(format!("fcdcc-node-{addr}"))
+        .spawn(move || {
+            // One worker-local arena shared across connections: task
+            // input slabs and result blocks live here, so the node's
+            // buffer hygiene mirrors the coordinator's.
+            let arena = Arc::new(SlabArena::new(64));
+            while !node.stop.load(Ordering::SeqCst) {
+                let Ok((stream, _)) = listener.accept() else {
+                    break;
+                };
+                if node.stop.load(Ordering::SeqCst) {
+                    break; // the kill() wake-up connection
+                }
+                serve_connection(stream, &node, &cfg, &arena);
+            }
+        })
+        .expect("spawn worker node");
+    Ok(WorkerNodeHandle {
+        addr,
+        shared,
+        thread,
+    })
+}
+
+/// Serve one coordinator connection: announce, await admission, then
+/// bridge frames ↔ the in-process [`worker_loop`] until the connection
+/// dies or a Shutdown frame arrives.
+fn serve_connection(
+    stream: TcpStream,
+    node: &Arc<NodeShared>,
+    cfg: &WorkerNodeConfig,
+    arena: &Arc<SlabArena>,
+) {
+    let _ = stream.set_nodelay(true);
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    // All frame writes (pongs from the reader, replies from the
+    // forwarder) serialize on this mutex — whole frames only, so two
+    // writers can never interleave mid-frame. Heartbeat pongs go out
+    // directly from the reader and never queue behind a large reply.
+    let writer = Arc::new(Mutex::new(write_half));
+    {
+        let mut conn = node.conn.lock().expect("node conn lock");
+        if let Ok(c) = stream.try_clone() {
+            *conn = Some(c);
+        }
+    }
+
+    let session = match handshake_as_worker(&stream, &writer, cfg) {
+        Ok(Some(session)) => session,
+        // Later, or a handshake error: drop the connection and let the
+        // coordinator re-dial.
+        Ok(None) | Err(_) => {
+            node.conn.lock().expect("node conn lock").take();
+            return;
+        }
+    };
+
+    // The compute side is the exact in-process worker loop, bridged by
+    // two local channels: frames in → task_tx, reply_rx → frames out.
+    let (task_tx, task_rx) = channel::<WorkerMsg>();
+    let (reply_tx, reply_rx) = channel::<WorkerReply>();
+    let engine = Arc::clone(&cfg.engine);
+    // The wire worker id is per-connection (the Accept frame names the
+    // slot); replies carry it so the coordinator routes by physical id.
+    let slot = session.worker_id;
+    let compute = std::thread::Builder::new()
+        .name(format!("fcdcc-node-compute-{slot}"))
+        .spawn(move || worker_loop(slot, engine, task_rx, reply_tx))
+        .expect("spawn node compute");
+    let forwarder = {
+        let writer = Arc::clone(&writer);
+        let epoch = session.epoch;
+        std::thread::Builder::new()
+            .name(format!("fcdcc-node-fwd-{slot}"))
+            .spawn(move || {
+                let mut wire_dead = false;
+                for reply in reply_rx {
+                    if !wire_dead {
+                        let bytes = frame::encode_reply(&reply, epoch);
+                        let mut w = writer.lock().expect("node writer lock");
+                        if frame::write_frame(&mut *w, FrameTag::Reply, &bytes).is_err() {
+                            // Keep draining (and recycling) so the
+                            // compute loop never blocks on a dead wire.
+                            let _ = w.shutdown(Shutdown::Both);
+                            wire_dead = true;
+                        }
+                    }
+                    reply.body.recycle();
+                }
+            })
+            .expect("spawn node forwarder")
+    };
+
+    // Reader: runs inline on this connection's thread.
+    let mut read_half = &stream;
+    loop {
+        let frame = match frame::read_frame(&mut read_half) {
+            Ok(ReadOutcome::Frame(f)) => f,
+            Ok(ReadOutcome::Eof) | Err(_) => break,
+        };
+        match frame.tag {
+            FrameTag::Ping => {
+                let Ok(seq) = frame::decode_u64(&frame.payload) else {
+                    break;
+                };
+                let mut w = writer.lock().expect("node writer lock");
+                if frame::write_frame(&mut *w, FrameTag::Pong, &frame::encode_u64(seq)).is_err() {
+                    break;
+                }
+            }
+            FrameTag::Task => {
+                let Ok((job_id, fate, payload)) = frame::decode_task(&frame.payload, arena) else {
+                    break;
+                };
+                node.tasks_seen.fetch_add(1, Ordering::SeqCst);
+                if fate == WorkerFate::Failed {
+                    // The crash fate, acted out for real: drop the
+                    // connection. The coordinator sees a dead socket
+                    // and runs the full evict → re-dial → readmit arc.
+                    payload.recycle();
+                    break;
+                }
+                if task_tx
+                    .send(WorkerMsg::Task {
+                        job_id,
+                        payload: Box::new(payload),
+                        fate,
+                    })
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            FrameTag::Cancel => {
+                let Ok(id) = frame::decode_u64(&frame.payload) else {
+                    break;
+                };
+                if task_tx.send(WorkerMsg::Cancel(id)).is_err() {
+                    break;
+                }
+            }
+            FrameTag::CancelUpTo => {
+                let Ok(mark) = frame::decode_u64(&frame.payload) else {
+                    break;
+                };
+                if task_tx.send(WorkerMsg::CancelUpTo(mark)).is_err() {
+                    break;
+                }
+            }
+            FrameTag::Shutdown => {
+                let _ = task_tx.send(WorkerMsg::Shutdown);
+                node.stop.store(true, Ordering::SeqCst);
+                break;
+            }
+            // Anything else is a protocol violation from the peer.
+            _ => break,
+        }
+    }
+
+    // Closing the task channel makes worker_loop drain (recycling every
+    // queued payload) and exit; the forwarder exits when the last
+    // reply sender drops.
+    drop(task_tx);
+    let _ = stream.shutdown(Shutdown::Both);
+    let _ = compute.join();
+    let _ = forwarder.join();
+    node.conn.lock().expect("node conn lock").take();
+}
+
+struct WorkerSession {
+    worker_id: usize,
+    epoch: u64,
+}
+
+/// Announce, then await Accept (→ session) or Later (→ `None`).
+fn handshake_as_worker(
+    stream: &TcpStream,
+    writer: &Arc<Mutex<TcpStream>>,
+    cfg: &WorkerNodeConfig,
+) -> Result<Option<WorkerSession>> {
+    let announce = frame::encode_announce(&frame::Announce {
+        threads: cfg.threads as u32,
+        engine: cfg.engine.name().to_string(),
+    });
+    {
+        let mut w = writer.lock().expect("node writer lock");
+        frame::write_frame(&mut *w, FrameTag::Announce, &announce)?;
+    }
+    // Bound the wait for the admission verdict; a coordinator that
+    // dialed and went silent must not wedge the accept loop.
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut read_half = stream;
+    let outcome = frame::read_frame(&mut read_half);
+    stream.set_read_timeout(None)?;
+    let ReadOutcome::Frame(f) = outcome? else {
+        bail!("coordinator closed during handshake");
+    };
+    match f.tag {
+        FrameTag::Accept => {
+            let (worker_id, epoch) = frame::decode_accept(&f.payload)?;
+            Ok(Some(WorkerSession { worker_id, epoch }))
+        }
+        FrameTag::Later => Ok(None),
+        other => bail!("expected Accept/Later, got {other:?}"),
+    }
+}
+
+// =====================================================================
+// Coordinator transport (the dialing side).
+
+/// Coordinator-side TCP configuration.
+#[derive(Clone, Debug)]
+pub struct TcpConfig {
+    /// Worker node addresses; slot i ↔ `workers[i]`.
+    pub workers: Vec<String>,
+    /// Heartbeat ping cadence.
+    pub heartbeat: Duration,
+    /// Consecutive missed beats before eviction.
+    pub miss_threshold: u32,
+    /// Startup budget: all workers must rendezvous within this window.
+    pub connect_timeout: Duration,
+    /// Initial re-dial backoff for down peers (doubles, capped).
+    pub reconnect_backoff: Duration,
+}
+
+impl TcpConfig {
+    pub fn new(workers: Vec<String>) -> TcpConfig {
+        TcpConfig {
+            workers,
+            heartbeat: Duration::from_millis(200),
+            miss_threshold: 3,
+            connect_timeout: Duration::from_secs(5),
+            reconnect_backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+struct Peer {
+    addr: String,
+    /// Write half of the live connection; `None` while down. Whole
+    /// frames only under the lock, so dispatch and heartbeats never
+    /// interleave mid-frame.
+    writer: Mutex<Option<TcpStream>>,
+    /// Whether this slot ever completed a handshake (distinguishes
+    /// reconnects from first connects, and drives the startup give-up).
+    ever_connected: AtomicBool,
+    /// Whether a PeerDown was already emitted for a slot that never
+    /// connected at all (give-up dedup).
+    gave_up: AtomicBool,
+}
+
+struct TcpShared {
+    peers: Vec<Peer>,
+    membership: Mutex<Membership>,
+    reconnects: AtomicU64,
+    frames_corrupt: AtomicU64,
+    stop: AtomicBool,
+    arena: Arc<SlabArena>,
+    events_tx: Sender<TransportEvent>,
+}
+
+impl TcpShared {
+    /// Record a dead connection exactly once: whichever thread wins the
+    /// Live→Down transition closes the socket and emits PeerDown.
+    fn conn_lost(&self, slot: usize) {
+        let lost = self
+            .membership
+            .lock()
+            .expect("membership lock")
+            .on_conn_lost(slot);
+        if lost {
+            if let Some(s) = self.peers[slot].writer.lock().expect("peer writer").take() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            let _ = self.events_tx.send(TransportEvent::PeerDown { worker: slot });
+        }
+    }
+}
+
+/// The coordinator's framed-TCP [`Transport`]: one writer mutex per
+/// peer, one reader thread per live connection, and one supervisor
+/// thread running dial/heartbeat/eviction.
+pub struct TcpTransport {
+    n: usize,
+    shared: Arc<TcpShared>,
+    events_rx: Receiver<TransportEvent>,
+    supervisor: Option<JoinHandle<()>>,
+}
+
+impl TcpTransport {
+    /// Dial every worker and block until all `n` are live (or the
+    /// startup window closes — then bail, tearing everything down).
+    /// `arena` is the plan arena reply blocks decode into.
+    pub fn connect(cfg: TcpConfig, arena: Arc<SlabArena>) -> Result<TcpTransport> {
+        let n = cfg.workers.len();
+        if n == 0 {
+            bail!("TcpTransport: no worker addresses");
+        }
+        let (events_tx, events_rx) = channel::<TransportEvent>();
+        let shared = Arc::new(TcpShared {
+            peers: cfg
+                .workers
+                .iter()
+                .map(|a| Peer {
+                    addr: a.clone(),
+                    writer: Mutex::new(None),
+                    ever_connected: AtomicBool::new(false),
+                    gave_up: AtomicBool::new(false),
+                })
+                .collect(),
+            membership: Mutex::new(Membership::new(
+                n,
+                MembershipConfig {
+                    heartbeat: cfg.heartbeat,
+                    miss_threshold: cfg.miss_threshold,
+                },
+                Instant::now(),
+            )),
+            reconnects: AtomicU64::new(0),
+            frames_corrupt: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            arena,
+            events_tx,
+        });
+        let supervisor = {
+            let shared = Arc::clone(&shared);
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("fcdcc-tcp-supervisor".to_string())
+                .spawn(move || supervise(shared, cfg))
+                .expect("spawn tcp supervisor")
+        };
+        let transport = TcpTransport {
+            n,
+            shared,
+            events_rx,
+            supervisor: Some(supervisor),
+        };
+        // Rendezvous barrier: every slot live before the first dispatch.
+        let deadline = Instant::now() + cfg.connect_timeout;
+        loop {
+            let live = transport
+                .shared
+                .membership
+                .lock()
+                .expect("membership lock")
+                .live()
+                .len();
+            if live == n {
+                return Ok(transport);
+            }
+            if Instant::now() >= deadline {
+                Box::new(transport).shutdown();
+                bail!("TcpTransport: only {live}/{n} workers rendezvoused within the startup window");
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    fn send_frame(&self, worker: usize, tag: FrameTag, bytes: &[u8]) -> Result<()> {
+        let mut guard = self.shared.peers[worker].writer.lock().expect("peer writer");
+        let Some(stream) = guard.as_mut() else {
+            bail!("worker {worker} is down");
+        };
+        if frame::write_frame(stream, tag, bytes).is_err() {
+            let _ = stream.shutdown(Shutdown::Both);
+            drop(guard);
+            self.shared.conn_lost(worker);
+            bail!("worker {worker}: write failed, peer marked down");
+        }
+        Ok(())
+    }
+}
+
+impl Transport for TcpTransport {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn send(&mut self, worker: usize, msg: WorkerMsg) -> Result<()> {
+        // Encode first, recycling a task's payload immediately — once
+        // the bytes own the data, the arena ledger is balanced no
+        // matter what the socket does.
+        let (tag, bytes) = match msg {
+            WorkerMsg::Task {
+                job_id,
+                payload,
+                fate,
+            } => {
+                let b = frame::encode_task(job_id, fate, &payload);
+                payload.recycle();
+                (FrameTag::Task, b)
+            }
+            WorkerMsg::Cancel(id) => (FrameTag::Cancel, frame::encode_u64(id)),
+            WorkerMsg::CancelUpTo(mark) => (FrameTag::CancelUpTo, frame::encode_u64(mark)),
+            WorkerMsg::Shutdown => (FrameTag::Shutdown, Vec::new()),
+        };
+        self.send_frame(worker, tag, &bytes)
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<TransportEvent>> {
+        match self.events_rx.recv_timeout(timeout) {
+            Ok(ev) => Ok(Some(ev)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => bail!("tcp transport supervisor gone"),
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<TransportEvent>> {
+        match self.events_rx.try_recv() {
+            Ok(ev) => Ok(Some(ev)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => bail!("tcp transport supervisor gone"),
+        }
+    }
+
+    fn counters(&self) -> MembershipCounters {
+        let mut c = self
+            .shared
+            .membership
+            .lock()
+            .expect("membership lock")
+            .counters();
+        c.reconnects = self.shared.reconnects.load(Ordering::SeqCst);
+        c.frames_corrupt = self.shared.frames_corrupt.load(Ordering::SeqCst);
+        c
+    }
+
+    fn epoch(&self) -> u64 {
+        self.shared.membership.lock().expect("membership lock").epoch()
+    }
+
+    fn shutdown(self: Box<Self>) {
+        // Goodbye to every live peer (best-effort), then tear down.
+        for w in 0..self.n {
+            let _ = self.send_frame(w, FrameTag::Shutdown, &[]);
+        }
+        self.shared.stop.store(true, Ordering::SeqCst);
+        for p in &self.shared.peers {
+            if let Some(s) = p.writer.lock().expect("peer writer").take() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        if let Some(h) = self.supervisor {
+            let _ = h.join(); // joins the reader threads too
+        }
+        // Only after every producer thread is gone is the event queue
+        // final: recycle the replies still parked in it.
+        while let Ok(ev) = self.events_rx.try_recv() {
+            if let TransportEvent::Reply(r) = ev {
+                r.body.recycle();
+            }
+        }
+    }
+}
+
+/// The supervisor loop: heartbeat pings, missed-beat eviction, and
+/// re-dialing down peers with exponential backoff.
+fn supervise(shared: Arc<TcpShared>, cfg: TcpConfig) {
+    let n = shared.peers.len();
+    let start = Instant::now();
+    let mut next_dial = vec![start; n];
+    let mut backoff = vec![cfg.reconnect_backoff; n];
+    let mut ping_seq = 0u64;
+    let mut readers: Vec<JoinHandle<()>> = Vec::new();
+    let pace = (cfg.heartbeat / 4).clamp(Duration::from_millis(2), Duration::from_millis(50));
+
+    while !shared.stop.load(Ordering::SeqCst) {
+        let now = Instant::now();
+        let actions = shared.membership.lock().expect("membership lock").tick(now);
+        // tick() already marked the evicted slots Down (so a racing
+        // reader can't double-report); finish the job: close + notify.
+        for &slot in &actions.evict {
+            if let Some(s) = shared.peers[slot].writer.lock().expect("peer writer").take() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            let _ = shared.events_tx.send(TransportEvent::PeerDown { worker: slot });
+            next_dial[slot] = now + backoff[slot];
+        }
+        for &slot in &actions.pings {
+            ping_seq += 1;
+            let bytes = frame::encode_u64(ping_seq);
+            let mut guard = shared.peers[slot].writer.lock().expect("peer writer");
+            if let Some(stream) = guard.as_mut() {
+                if frame::write_frame(stream, FrameTag::Ping, &bytes).is_err() {
+                    let _ = stream.shutdown(Shutdown::Both);
+                    drop(guard);
+                    shared.conn_lost(slot);
+                }
+            }
+        }
+
+        // Re-dial whatever is not live and due.
+        for slot in 0..n {
+            let live = shared.membership.lock().expect("membership lock").is_live(slot);
+            if live || now < next_dial[slot] {
+                continue;
+            }
+            match dial_worker(&shared, &cfg, slot) {
+                Ok(reader) => {
+                    readers.push(reader);
+                    backoff[slot] = cfg.reconnect_backoff;
+                }
+                Err(_) => {
+                    next_dial[slot] = Instant::now() + backoff[slot];
+                    backoff[slot] = (backoff[slot] * 2).min(Duration::from_secs(2));
+                    // A slot that never rendezvoused at all still has to
+                    // be declared dead eventually, or the master would
+                    // wait on it forever: give up once the startup
+                    // window closes.
+                    let p = &shared.peers[slot];
+                    if !p.ever_connected.load(Ordering::SeqCst)
+                        && Instant::now() >= start + cfg.connect_timeout
+                        && !p.gave_up.swap(true, Ordering::SeqCst)
+                    {
+                        let _ = shared.events_tx.send(TransportEvent::PeerDown { worker: slot });
+                    }
+                }
+            }
+        }
+        std::thread::sleep(pace);
+    }
+    for r in readers {
+        let _ = r.join();
+    }
+}
+
+/// Dial one worker and run the coordinator side of the rendezvous. On
+/// success the peer is Live, its writer is installed, and its reader
+/// thread (returned) is pumping replies.
+fn dial_worker(shared: &Arc<TcpShared>, cfg: &TcpConfig, slot: usize) -> Result<JoinHandle<()>> {
+    let addr: SocketAddr = shared.peers[slot]
+        .addr
+        .parse()
+        .with_context(|| format!("worker address {:?}", shared.peers[slot].addr))?;
+    let stream = TcpStream::connect_timeout(&addr, Duration::from_millis(250))
+        .with_context(|| format!("dial worker {slot} at {addr}"))?;
+    let _ = stream.set_nodelay(true);
+
+    // Rendezvous: the worker announces, we admit (or defer).
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    let mut read_half = &stream;
+    let outcome = frame::read_frame(&mut read_half);
+    stream.set_read_timeout(None)?;
+    let ReadOutcome::Frame(f) = outcome? else {
+        bail!("worker {slot} closed during handshake");
+    };
+    if f.tag != FrameTag::Announce {
+        bail!("worker {slot}: expected Announce, got {:?}", f.tag);
+    }
+    let _announce = frame::decode_announce(&f.payload)?;
+    let admission = shared
+        .membership
+        .lock()
+        .expect("membership lock")
+        .on_announce(slot, Instant::now());
+    let session = match admission {
+        Admission::Accept { session } => session,
+        Admission::Later { retry_ms } => {
+            let mut w = &stream;
+            let _ = frame::write_frame(&mut w, FrameTag::Later, &frame::encode_later(retry_ms));
+            bail!("worker {slot} deferred (already live)");
+        }
+    };
+    {
+        let mut w = &stream;
+        if let Err(e) = frame::write_frame(&mut w, FrameTag::Accept, &frame::encode_accept(slot, session)) {
+            shared.conn_lost(slot);
+            return Err(e).with_context(|| format!("worker {slot}: accept write"));
+        }
+    }
+
+    // Live: install the writer, count the reconnect, start the reader.
+    let write_half = stream.try_clone().context("clone write half")?;
+    *shared.peers[slot].writer.lock().expect("peer writer") = Some(write_half);
+    if shared.peers[slot].ever_connected.swap(true, Ordering::SeqCst) {
+        shared.reconnects.fetch_add(1, Ordering::SeqCst);
+    }
+    let _ = shared.events_tx.send(TransportEvent::PeerUp { worker: slot });
+
+    let shared = Arc::clone(shared);
+    let reader = std::thread::Builder::new()
+        .name(format!("fcdcc-tcp-reader-{slot}"))
+        .spawn(move || read_peer(shared, slot, stream, session))
+        .expect("spawn tcp reader");
+    Ok(reader)
+}
+
+/// Reader thread for one live connection: pongs feed the membership,
+/// replies are decoded against the plan arena (stale sessions recycled,
+/// corrupt frames strike the peer), and any wire irregularity reports
+/// the connection lost.
+fn read_peer(shared: Arc<TcpShared>, slot: usize, stream: TcpStream, session: u64) {
+    let mut read_half = &stream;
+    loop {
+        let frame: Frame = match frame::read_frame(&mut read_half) {
+            Ok(ReadOutcome::Frame(f)) => f,
+            Ok(ReadOutcome::Eof) => break,
+            Err(_) => {
+                shared.frames_corrupt.fetch_add(1, Ordering::SeqCst);
+                break;
+            }
+        };
+        match frame.tag {
+            FrameTag::Pong => {
+                if frame::decode_u64(&frame.payload).is_ok() {
+                    shared
+                        .membership
+                        .lock()
+                        .expect("membership lock")
+                        .on_pong(slot, Instant::now());
+                } else {
+                    shared.frames_corrupt.fetch_add(1, Ordering::SeqCst);
+                    break;
+                }
+            }
+            FrameTag::Reply => {
+                match frame::decode_reply(&frame.payload, &shared.arena) {
+                    Ok((reply, reply_epoch)) => {
+                        // Stale-session replies (from before a
+                        // reconnect) are recycled, never decoded into
+                        // a job — the epoch rule.
+                        let current = shared
+                            .membership
+                            .lock()
+                            .expect("membership lock")
+                            .session(slot);
+                        if current == Some(reply_epoch) && reply_epoch == session {
+                            let _ = shared.events_tx.send(TransportEvent::Reply(reply));
+                        } else {
+                            reply.body.recycle();
+                        }
+                    }
+                    Err(_) => {
+                        shared.frames_corrupt.fetch_add(1, Ordering::SeqCst);
+                        break;
+                    }
+                }
+            }
+            _ => {
+                shared.frames_corrupt.fetch_add(1, Ordering::SeqCst);
+                break;
+            }
+        }
+    }
+    // Only report the loss if this reader's session is still the
+    // current one — a reader of a superseded connection exiting must
+    // not evict the slot's fresh successor.
+    let still_current = shared
+        .membership
+        .lock()
+        .expect("membership lock")
+        .session(slot)
+        == Some(session);
+    if still_current {
+        shared.conn_lost(slot);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::DirectEngine;
+
+    #[test]
+    fn worker_node_binds_ephemeral_and_dies_on_kill() {
+        let node = spawn_worker_node(WorkerNodeConfig {
+            listen: "127.0.0.1:0".to_string(),
+            engine: Arc::new(DirectEngine),
+            threads: 1,
+        })
+        .unwrap();
+        assert_ne!(node.addr().port(), 0, "ephemeral port resolved");
+        assert_eq!(node.tasks_seen(), 0);
+        node.kill(); // joins: the accept loop must actually exit
+    }
+
+    #[test]
+    fn connect_fails_cleanly_when_no_worker_listens() {
+        // A port nobody listens on: bind-then-drop reserves one.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let mut cfg = TcpConfig::new(vec![addr.to_string()]);
+        cfg.connect_timeout = Duration::from_millis(300);
+        let arena = Arc::new(SlabArena::new(8));
+        let err = TcpTransport::connect(cfg, arena).unwrap_err();
+        assert!(err.to_string().contains("rendezvoused"), "err: {err:#}");
+    }
+
+    #[test]
+    fn rendezvous_heartbeats_and_graceful_shutdown() {
+        let nodes: Vec<WorkerNodeHandle> = (0..2)
+            .map(|_| {
+                spawn_worker_node(WorkerNodeConfig {
+                    listen: "127.0.0.1:0".to_string(),
+                    engine: Arc::new(DirectEngine),
+                    threads: 1,
+                })
+                .unwrap()
+            })
+            .collect();
+        let mut cfg = TcpConfig::new(nodes.iter().map(|n| n.addr().to_string()).collect());
+        cfg.heartbeat = Duration::from_millis(25);
+        let arena = Arc::new(SlabArena::new(8));
+        let transport = TcpTransport::connect(cfg, arena).unwrap();
+        assert_eq!(transport.epoch(), 2, "epoch = n after initial rendezvous");
+        // Let a few heartbeat rounds pass; nobody must get evicted.
+        std::thread::sleep(Duration::from_millis(120));
+        let c = transport.counters();
+        assert!(c.heartbeats_sent >= 4, "pings flowed: {c:?}");
+        assert_eq!(c.evictions, 0, "healthy peers stay live: {c:?}");
+        Box::new(transport).shutdown();
+        // The Shutdown frames stop the nodes gracefully.
+        for n in nodes {
+            n.wait();
+        }
+    }
+}

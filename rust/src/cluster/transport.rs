@@ -1,0 +1,163 @@
+//! The wire abstraction between the master and its workers.
+//!
+//! [`Cluster`](crate::cluster::Cluster) speaks one duplex — send a
+//! [`WorkerMsg`], receive a [`WorkerReply`] — and [`Transport`] is that
+//! duplex as a trait, so the same job runtime drives either
+//!
+//! * [`ChannelTransport`] — the in-process worker pool over
+//!   `std::sync::mpsc` (the default: deterministic, toolchain-offline,
+//!   what every tier-1 test runs on), or
+//! * [`TcpTransport`](crate::cluster::tcp::TcpTransport) — real remote
+//!   worker processes over framed TCP with membership, heartbeats, and
+//!   eviction (DESIGN.md §Transport & membership).
+//!
+//! Beyond replies, a transport can surface **membership events**: a
+//! peer found dead ([`TransportEvent::PeerDown`]) or readmitted
+//! ([`TransportEvent::PeerUp`]). The channel transport never emits
+//! them — an in-process worker thread cannot vanish — so the master's
+//! handling of both is exercised only by the TCP tests, while the
+//! channel path behaves exactly as before this abstraction existed.
+
+use crate::cluster::worker::{worker_loop, WorkerMsg, WorkerReply};
+use crate::engine::TaskEngine;
+use crate::metrics::MembershipCounters;
+use anyhow::{bail, Result};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Something the master pulls off its transport.
+pub enum TransportEvent {
+    /// A worker's reply (valid, error, or corrupt — routing decides).
+    Reply(WorkerReply),
+    /// The transport declared this physical worker dead (socket error,
+    /// missed heartbeats). The master quarantines it and fails its
+    /// silent in-flight dispatches fast.
+    PeerDown { worker: usize },
+    /// A previously-dead worker reconnected and was readmitted into
+    /// the membership. The master moves it back toward the live set.
+    PeerUp { worker: usize },
+}
+
+/// One master-side endpoint of the cluster duplex.
+pub trait Transport: Send {
+    /// Number of worker slots (fixed for the transport's lifetime; the
+    /// *live* subset varies underneath on membership transports).
+    fn n(&self) -> usize;
+
+    /// Send one message to a worker slot. On failure the message's
+    /// payload has already been recycled (arena hygiene is the
+    /// transport's job on the send path) — the caller only decides
+    /// what the failure means for the job.
+    fn send(&mut self, worker: usize, msg: WorkerMsg) -> Result<()>;
+
+    /// Block up to `timeout` for the next event. `Ok(None)` = nothing
+    /// arrived in time; `Err` = the transport is unusable (every
+    /// worker gone).
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<TransportEvent>>;
+
+    /// Non-blocking variant of [`Self::recv_timeout`].
+    fn try_recv(&mut self) -> Result<Option<TransportEvent>>;
+
+    /// Membership/transport counters (all-zero on transports without a
+    /// membership protocol).
+    fn counters(&self) -> MembershipCounters {
+        MembershipCounters::default()
+    }
+
+    /// Current membership epoch (0 on membership-less transports).
+    fn epoch(&self) -> u64 {
+        0
+    }
+
+    /// Tear the transport down: stop the workers it owns, join its
+    /// threads, and recycle every reply still buffered inside it. After
+    /// this returns, the transport holds no arena buffers.
+    fn shutdown(self: Box<Self>);
+}
+
+/// The in-process transport: `n` worker threads sharing one result
+/// channel — exactly the pool `Cluster` used to own directly.
+pub struct ChannelTransport {
+    n: usize,
+    senders: Vec<Sender<WorkerMsg>>,
+    results: Receiver<WorkerReply>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ChannelTransport {
+    /// Spawn `n` worker threads all running `engine`.
+    pub fn spawn(n: usize, engine: Arc<dyn TaskEngine>) -> ChannelTransport {
+        let (reply_tx, results) = channel::<WorkerReply>();
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for worker_id in 0..n {
+            let (tx, rx) = channel::<WorkerMsg>();
+            let engine = Arc::clone(&engine);
+            let reply_tx = reply_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("fcdcc-worker-{worker_id}"))
+                    .spawn(move || worker_loop(worker_id, engine, rx, reply_tx))
+                    .expect("spawn worker"),
+            );
+            senders.push(tx);
+        }
+        ChannelTransport {
+            n,
+            senders,
+            results,
+            handles,
+        }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn send(&mut self, worker: usize, msg: WorkerMsg) -> Result<()> {
+        if let Err(e) = self.senders[worker].send(msg) {
+            // The channel hands the unsent message back: recycle a
+            // task's payload before surfacing the failure, so a dead
+            // worker never costs the arena a slab.
+            if let WorkerMsg::Task { payload, .. } = e.0 {
+                payload.recycle();
+            }
+            bail!("worker {worker} channel closed");
+        }
+        Ok(())
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<TransportEvent>> {
+        match self.results.recv_timeout(timeout) {
+            Ok(r) => Ok(Some(TransportEvent::Reply(r))),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => bail!("all workers gone"),
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<TransportEvent>> {
+        match self.results.try_recv() {
+            Ok(r) => Ok(Some(TransportEvent::Reply(r))),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => bail!("all workers gone"),
+        }
+    }
+
+    fn shutdown(self: Box<Self>) {
+        for tx in &self.senders {
+            let _ = tx.send(WorkerMsg::Shutdown);
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+        // The workers drained their queues before exiting, so every
+        // reply they ever sent is now buffered here.
+        while let Ok(r) = self.results.try_recv() {
+            r.body.recycle();
+        }
+    }
+}

@@ -19,7 +19,7 @@ use anyhow::{anyhow, Result};
 use std::sync::Arc;
 use std::time::Duration;
 
-pub use serve::{serve_lenet, ServeConfig, ServeStats};
+pub use serve::{serve_lenet, ServeConfig, ServeStats, TransportKind};
 
 /// Resolve a `--engine` name to a TaskEngine (PJRT is resolved by the
 /// caller since it needs the artifacts directory).

@@ -32,11 +32,14 @@
 //! accounting instead of failing. Under any single-worker fault the loop
 //! completes 100% of requests.
 
-use crate::cluster::{BatchOutcome, Cluster, FaultPlan, HealthPolicy, JobHandle, StragglerModel};
+use crate::cluster::{
+    BatchOutcome, Cluster, FaultPlan, HealthPolicy, JobHandle, StragglerModel, TcpConfig,
+    TcpTransport,
+};
 use crate::coding::{registry, CodeFamily};
 use crate::engine::{Im2colEngine, TaskEngine};
 use crate::fcdcc::{NetworkPlan, PlanOptions, StageVariant};
-use crate::metrics::{CacheStats, EncodeStats, Stats};
+use crate::metrics::{CacheStats, EncodeStats, MembershipCounters, Stats};
 use crate::model::network::softmax;
 use crate::model::{Activation, Network};
 use crate::tensor::Tensor3;
@@ -45,6 +48,19 @@ use anyhow::{ensure, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Which wire the cluster runs on.
+#[derive(Clone, Debug, Default)]
+pub enum TransportKind {
+    /// In-process worker threads over mpsc channels — the default:
+    /// deterministic, offline, what every tier-1 test runs on.
+    #[default]
+    InProcess,
+    /// Remote worker processes over framed TCP with membership,
+    /// heartbeats, and eviction (`--role coordinator --workers …`).
+    /// `TcpConfig::workers` must name exactly `n_workers` addresses.
+    Tcp(TcpConfig),
+}
 
 /// Serving-loop configuration.
 pub struct ServeConfig {
@@ -88,6 +104,9 @@ pub struct ServeConfig {
     pub replan: bool,
     /// Per-job collection deadline (`--collect-timeout-ms`).
     pub collect_timeout: Duration,
+    /// The wire the cluster runs on ([`TransportKind::InProcess`] by
+    /// default; [`TransportKind::Tcp`] drives real remote workers).
+    pub transport: TransportKind,
 }
 
 impl ServeConfig {
@@ -112,6 +131,7 @@ impl ServeConfig {
             health: HealthPolicy::default(),
             replan: true,
             collect_timeout: Duration::from_secs(60),
+            transport: TransportKind::InProcess,
         }
     }
 }
@@ -190,6 +210,10 @@ pub struct ServeStats {
     pub quarantine_events: u64,
     /// Quarantined workers probed and readmitted to the dispatch set.
     pub readmissions: u64,
+    /// Transport/membership counters (heartbeats, evictions, reconnect
+    /// readmissions, corrupt frames, epoch). All-zero on the in-process
+    /// transport, which has no membership protocol.
+    pub membership: MembershipCounters,
     /// Slab-arena buffers still checked out after cluster shutdown —
     /// the buffer-hygiene invariant; **zero** on every path (decoded,
     /// retried, timed out, degraded).
@@ -312,7 +336,21 @@ pub fn serve_lenet(cfg: ServeConfig) -> Result<ServeStats> {
         ..PlanOptions::default()
     };
     let plan = NetworkPlan::with_options(net, &cfg.partitions, cfg.n_workers, opts)?;
-    let mut cluster = Cluster::new(cfg.n_workers, Arc::clone(&cfg.engine));
+    let mut cluster = match &cfg.transport {
+        TransportKind::InProcess => Cluster::new(cfg.n_workers, Arc::clone(&cfg.engine)),
+        TransportKind::Tcp(tcp) => {
+            ensure!(
+                tcp.workers.len() == cfg.n_workers,
+                "TCP transport names {} workers but n_workers = {}",
+                tcp.workers.len(),
+                cfg.n_workers
+            );
+            // Reply blocks decode straight into the plan arena, exactly
+            // like the in-process path.
+            let transport = TcpTransport::connect(tcp.clone(), Arc::clone(plan.arena()))?;
+            Cluster::with_transport(Box::new(transport))
+        }
+    };
     cluster.collect_timeout = cfg.collect_timeout;
     cluster.set_fault_plan(cfg.fault_plan.clone());
     cluster.set_health_policy(cfg.health);
@@ -535,6 +573,7 @@ fn run_pipeline(
         degraded_requests: ctx.degraded.iter().filter(|&&d| d).count(),
         quarantine_events: health.quarantines,
         readmissions: health.readmissions,
+        membership: cluster.membership_counters(),
         // Filled in by `serve_lenet` after cluster shutdown.
         arena_outstanding: 0,
         logits,

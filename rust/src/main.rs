@@ -12,8 +12,10 @@
 
 use anyhow::{anyhow, bail, Result};
 use fcdcc::cli::Args;
-use fcdcc::cluster::{FaultKind, FaultPlan, StragglerModel};
-use fcdcc::coordinator::{self, stability, RunConfig, ServeConfig};
+use fcdcc::cluster::{
+    spawn_worker_node, FaultKind, FaultPlan, StragglerModel, TcpConfig, WorkerNodeConfig,
+};
+use fcdcc::coordinator::{self, stability, RunConfig, ServeConfig, TransportKind};
 use fcdcc::engine::TaskEngine;
 use fcdcc::metrics::{fmt_sci, Table};
 use fcdcc::model::zoo;
@@ -35,7 +37,29 @@ USAGE:
                   [--fault-worker W --fault-kind KIND] [--fault-jobs J]
                   [--fault-delay-ms MS] [--chaos-seed S]
                   [--retry-budget R] [--collect-timeout-ms MS] [--no-replan]
+                  [--role local|coordinator|worker] [--listen ADDR]
+                  [--workers A1,A2,...] [--heartbeat-ms MS]
+                  [--miss-threshold B] [--connect-timeout-ms MS]
   fcdcc artifacts [--dir DIR]   (needs the `pjrt` feature)
+
+distributed serving (--role; see DESIGN.md §Transport & membership):
+  --role local        default: the whole cluster runs in-process over
+                      channels (deterministic, offline)
+  --role worker       run one worker node: bind --listen (default
+                      127.0.0.1:0), print the bound address, and serve
+                      framed-TCP tasks until the coordinator shuts the
+                      session down
+  --role coordinator  drive remote worker nodes over TCP: --workers is
+                      the comma-separated node address list (its length
+                      becomes the pool size, overriding --n); workers
+                      that die are heartbeat-evicted, the stage is
+                      re-planned for the live set, and reconnecting
+                      nodes are readmitted
+  --listen ADDR            worker bind address (default 127.0.0.1:0)
+  --workers A1,A2,...      coordinator's node addresses (required)
+  --heartbeat-ms MS        ping cadence (default 200)
+  --miss-threshold B       silent heartbeats before eviction (default 3)
+  --connect-timeout-ms MS  rendezvous deadline at startup (default 5000)
 
 serve options:
   --no-prepack  disable plan-resident filter prepacking: workers re-pack
@@ -208,9 +232,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.get_str("engine", "im2col"),
         args.get_str("artifacts", "artifacts"),
     )?;
+    let role = args.get_str("role", "local");
+    if role == "worker" {
+        let handle = spawn_worker_node(WorkerNodeConfig {
+            listen: args.get_str("listen", "127.0.0.1:0").to_string(),
+            engine,
+            threads: args.get_usize("threads", 0)?,
+        })?;
+        println!("worker node listening on {}", handle.addr());
+        handle.wait();
+        return Ok(());
+    }
     let mut cfg = ServeConfig::default_with_engine(engine);
     cfg.requests = args.get_usize("requests", 16)?;
     cfg.n_workers = args.get_usize("n", 4)?;
+    match role {
+        "local" => {}
+        "coordinator" => {
+            let addrs: Vec<String> = args
+                .get("workers")
+                .ok_or_else(|| anyhow!("--role coordinator needs --workers A1,A2,..."))?
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            if addrs.is_empty() {
+                bail!("--workers names no addresses");
+            }
+            cfg.n_workers = addrs.len();
+            let mut tcp = TcpConfig::new(addrs);
+            tcp.heartbeat = Duration::from_millis(args.get_usize("heartbeat-ms", 200)? as u64);
+            tcp.miss_threshold = args.get_usize("miss-threshold", 3)? as u32;
+            tcp.connect_timeout =
+                Duration::from_millis(args.get_usize("connect-timeout-ms", 5000)? as u64);
+            cfg.transport = TransportKind::Tcp(tcp);
+        }
+        other => bail!("unknown --role {other:?} (local, coordinator, worker)"),
+    }
     // `--depth` is the historical spelling of `--max-in-flight`.
     let depth = args.get_usize("depth", 1)?;
     cfg.max_in_flight = args.get_usize("max-in-flight", depth)?;
@@ -296,6 +354,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.quarantine_events,
         stats.readmissions,
         stats.arena_outstanding
+    );
+    let m = &stats.membership;
+    println!(
+        "membership: epoch {} | {} heartbeats ({} missed) | {} evictions / \
+         {} readmissions | {} reconnects | {} corrupt frames",
+        m.epoch,
+        m.heartbeats_sent,
+        m.heartbeats_missed,
+        m.evictions,
+        m.readmissions,
+        m.reconnects,
+        m.frames_corrupt
     );
     Ok(())
 }

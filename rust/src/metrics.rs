@@ -127,6 +127,48 @@ pub struct HealthCounters {
     pub timeouts: u64,
 }
 
+/// Counters of the transport/membership layer (`cluster::membership` +
+/// `cluster::tcp`): heartbeat traffic, evictions/readmissions of remote
+/// workers, reconnect attempts that succeeded, frames rejected by the
+/// codec, and the current membership epoch. All-zero (epoch 0) on the
+/// in-process channel transport, which has no membership protocol.
+/// Surfaced through `ServeStats`, the serve summary line, and every
+/// bench JSON record.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MembershipCounters {
+    /// Heartbeat pings sent to live workers.
+    pub heartbeats_sent: u64,
+    /// Heartbeat intervals that elapsed without a pong.
+    pub heartbeats_missed: u64,
+    /// Live → Down transitions (missed-beat threshold or socket error).
+    pub evictions: u64,
+    /// Down → Live transitions (a previously-evicted worker re-dialed
+    /// and was accepted back).
+    pub readmissions: u64,
+    /// Successful re-dials of a previously-connected peer.
+    pub reconnects: u64,
+    /// Frames rejected by the codec (bad checksum/magic/length/layout).
+    pub frames_corrupt: u64,
+    /// Membership epoch: bumped on every admit/evict/readmit; replies
+    /// stamped with a stale session are recycled, never decoded.
+    pub epoch: u64,
+}
+
+impl MembershipCounters {
+    /// Append this counter set to a bench JSON record. The readmission
+    /// field is named `membership_readmissions` because fault-sweep
+    /// records already carry a health-level `readmissions` field.
+    pub fn append_json(&self, obj: crate::util::json::JsonObj) -> crate::util::json::JsonObj {
+        obj.field_u64("heartbeats_sent", self.heartbeats_sent)
+            .field_u64("heartbeats_missed", self.heartbeats_missed)
+            .field_u64("evictions", self.evictions)
+            .field_u64("membership_readmissions", self.readmissions)
+            .field_u64("reconnects", self.reconnects)
+            .field_u64("frames_corrupt", self.frames_corrupt)
+            .field_u64("membership_epoch", self.epoch)
+    }
+}
+
 /// A simple aligned-markdown table builder.
 #[derive(Clone, Debug, Default)]
 pub struct Table {

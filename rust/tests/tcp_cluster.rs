@@ -1,0 +1,196 @@
+//! Loopback integration tests for the framed-TCP transport: real worker
+//! nodes on 127.0.0.1 ephemeral ports behind the full serving loop
+//! (DESIGN.md §Transport & membership).
+//!
+//! Survivor subsets are pinned with `FaultKind::Slow` staircases where a
+//! test needs bit-identical logits: first-δ decode picks whichever δ
+//! replies land first, so both transports must see the same arrival
+//! order for their decodes to match bit-for-bit.
+//!
+//! None of these tests assert `frames_corrupt == 0`: a hard connection
+//! teardown (kill, crash fate) can surface to a blocked reader as an
+//! ECONNRESET mid-frame, which the codec counts as a corrupt read.
+
+use fcdcc::cluster::{
+    spawn_worker_node, FaultKind, FaultPlan, TcpConfig, WorkerNodeConfig, WorkerNodeHandle,
+};
+use fcdcc::coordinator::{serve_lenet, ServeConfig, ServeStats, TransportKind};
+use fcdcc::engine::Im2colEngine;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Spawn `n` loopback worker nodes; returns the handles and their
+/// resolved addresses (slot i ↔ addrs[i]).
+fn spawn_nodes(n: usize) -> (Vec<WorkerNodeHandle>, Vec<String>) {
+    let nodes: Vec<WorkerNodeHandle> = (0..n)
+        .map(|_| {
+            spawn_worker_node(WorkerNodeConfig {
+                listen: "127.0.0.1:0".to_string(),
+                engine: Arc::new(Im2colEngine),
+                threads: 1,
+            })
+            .expect("spawn loopback worker node")
+        })
+        .collect();
+    let addrs = nodes.iter().map(|h| h.addr().to_string()).collect();
+    (nodes, addrs)
+}
+
+/// Serve over TCP against `addrs` with `tweak` applied to the config.
+fn serve_tcp(addrs: Vec<String>, tweak: impl FnOnce(&mut ServeConfig)) -> ServeStats {
+    let mut cfg = ServeConfig::default_with_engine(Arc::new(Im2colEngine));
+    cfg.n_workers = addrs.len();
+    let mut tcp = TcpConfig::new(addrs);
+    tcp.heartbeat = Duration::from_millis(50);
+    tcp.miss_threshold = 2;
+    cfg.transport = TransportKind::Tcp(tcp);
+    tweak(&mut cfg);
+    serve_lenet(cfg).expect("tcp serve")
+}
+
+/// A `Slow` staircase on workers 1..n pins every job's first-δ subset
+/// to {0, …, δ−1}: worker i replies ~i·60ms after worker 0, far past
+/// the per-task compute time, so arrival order equals slot order on
+/// both transports.
+fn survivor_staircase(n: usize) -> FaultPlan {
+    (1..n).fold(FaultPlan::none(), |fp, w| {
+        fp.with_fault(
+            w,
+            FaultKind::Slow {
+                delay: Duration::from_millis(60 * w as u64),
+            },
+        )
+    })
+}
+
+#[test]
+fn tcp_logits_are_bit_identical_to_the_channel_transport() {
+    let (nodes, addrs) = spawn_nodes(4);
+    let pin = |cfg: &mut ServeConfig| {
+        cfg.requests = 3;
+        cfg.max_in_flight = 2;
+        cfg.fault_plan = survivor_staircase(4);
+        // Remote nodes always pack filters job-side (panels never travel
+        // the wire); run the channel reference on the same path.
+        cfg.prepack = false;
+    };
+    let tcp = serve_tcp(addrs, pin);
+
+    let mut cfg = ServeConfig::default_with_engine(Arc::new(Im2colEngine));
+    pin(&mut cfg);
+    let local = serve_lenet(cfg).expect("channel serve");
+
+    assert_eq!(tcp.requests, 3);
+    assert_eq!(tcp.failed_requests, 0);
+    assert_eq!(tcp.class_mismatches, 0);
+    assert!(tcp.mean_logit_mse < 1e-16, "mse={:e}", tcp.mean_logit_mse);
+    // The acceptance bar: with the survivor subsets pinned, the framed
+    // wire is bit-transparent — every logit matches the in-process
+    // transport exactly, not just to tolerance.
+    assert_eq!(tcp.logits, local.logits, "wire must be bit-transparent");
+    assert_eq!(tcp.arena_outstanding, 0, "coordinator arena balanced");
+    assert_eq!(local.arena_outstanding, 0);
+    // Clean run: the membership never churned.
+    assert_eq!(tcp.membership.evictions, 0);
+    assert_eq!(tcp.membership.epoch, 4, "epoch = n after rendezvous");
+    assert!(tcp.membership.heartbeats_sent > 0, "pings flowed");
+    for n in nodes {
+        n.kill();
+    }
+}
+
+#[test]
+fn killing_a_node_mid_stream_evicts_replans_and_serves_exact_logits() {
+    let (mut nodes, addrs) = spawn_nodes(4);
+    // Kill node 2 for real once it has decoded a couple of tasks off the
+    // wire: the coordinator sees a dead socket mid-batch, not a goodbye.
+    let victim = nodes.remove(2);
+    let killer = std::thread::spawn(move || {
+        while victim.tasks_seen() < 2 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        victim.kill();
+    });
+    let stats = serve_tcp(addrs, |cfg| {
+        cfg.requests = 8;
+        cfg.max_in_flight = 2;
+        cfg.collect_timeout = Duration::from_millis(2_000);
+    });
+    killer.join().expect("killer thread");
+
+    assert_eq!(stats.failed_requests, 0, "eviction + re-plan must absorb the kill");
+    assert_eq!(stats.class_mismatches, 0);
+    assert!(
+        stats.mean_logit_mse < 1e-16,
+        "replanned decode stays exact: mse={:e}",
+        stats.mean_logit_mse
+    );
+    assert!(stats.membership.evictions >= 1, "the dead peer was evicted");
+    assert!(
+        stats.membership.epoch >= 5,
+        "eviction bumps the epoch past the rendezvous value: {}",
+        stats.membership.epoch
+    );
+    assert!(
+        stats.quarantine_events >= 1,
+        "PeerDown must quarantine the worker for the re-planner"
+    );
+    assert_eq!(stats.arena_outstanding, 0, "no leaks across the eviction");
+    for n in nodes {
+        n.kill();
+    }
+}
+
+#[test]
+fn crash_restart_fate_drives_evict_redial_readmit_churn() {
+    let (nodes, addrs) = spawn_nodes(4);
+    // The crash fate travels inside task frames and the node acts it out
+    // by dropping the connection — so a seeded crash-restart plan drives
+    // the full evict → re-dial → readmit arc over a live listener.
+    let stats = serve_tcp(addrs, |cfg| {
+        cfg.requests = 10;
+        cfg.max_in_flight = 2;
+        cfg.collect_timeout = Duration::from_millis(2_000);
+        cfg.fault_plan = FaultPlan::none().with_fault(
+            1,
+            FaultKind::Crash {
+                after: 0,
+                restart_after: Some(3),
+            },
+        );
+    });
+    assert_eq!(stats.failed_requests, 0);
+    assert_eq!(stats.class_mismatches, 0);
+    assert!(stats.mean_logit_mse < 1e-16, "mse={:e}", stats.mean_logit_mse);
+    assert!(stats.membership.evictions >= 1, "dropped connection evicts");
+    assert!(
+        stats.membership.reconnects >= 1,
+        "the supervisor re-dialed the surviving listener"
+    );
+    assert_eq!(stats.arena_outstanding, 0);
+    for n in nodes {
+        n.kill();
+    }
+}
+
+#[test]
+fn seeded_chaos_over_tcp_completes_every_request() {
+    // The CI chaos leg exports FCDCC_CHAOS_SEED; locally any seed must
+    // hold — every chaos fault is absorbable at γ ≥ 1, and over TCP the
+    // crash kinds additionally exercise real membership churn.
+    let seed = FaultPlan::chaos_seed_from_env().unwrap_or(2024);
+    let (nodes, addrs) = spawn_nodes(4);
+    let stats = serve_tcp(addrs, |cfg| {
+        cfg.requests = 8;
+        cfg.max_in_flight = 2;
+        cfg.collect_timeout = Duration::from_millis(2_000);
+        cfg.fault_plan = FaultPlan::chaos(4, seed);
+    });
+    assert_eq!(stats.failed_requests, 0, "chaos seed {seed} hard-failed");
+    assert_eq!(stats.class_mismatches, 0, "chaos seed {seed} corrupted logits");
+    assert!(stats.mean_logit_mse < 1e-16, "seed {seed}: mse={:e}", stats.mean_logit_mse);
+    assert_eq!(stats.arena_outstanding, 0, "chaos seed {seed} leaked buffers");
+    for n in nodes {
+        n.kill();
+    }
+}
