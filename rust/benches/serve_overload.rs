@@ -1,0 +1,169 @@
+//! Open-loop overload bench: the serving front-end's admission control,
+//! deadline enforcement, and load shedding under synthetic arrivals
+//! (DESIGN.md §Serving front-end & overload control).
+//!
+//! The closed-loop serving bench (`serve_throughput`) can never
+//! overload: it only admits a request when pipeline depth frees. This
+//! bench drives the same scheduler **open-loop** from seeded
+//! Poisson/bursty arrival processes on the virtual clock — at a
+//! sustainable rate as the control, and at 8× the sustainable rate where
+//! the bounded admission queue must shed. The invariants checked here
+//! are the overload acceptance bar: every arrival resolves to exactly
+//! one of completed/shed/expired, the queue never exceeds its cap, and
+//! the slab arena comes home empty under any shedding pattern.
+//!
+//! Every config emits one JSON line (`{"bench":"serve_overload",...}`)
+//! so the trajectory tracks shed/expired/completed and histogram tail
+//! latency over time.
+
+use fcdcc::bench_harness::{emit_json, env_usize, fast_mode};
+use fcdcc::coordinator::{serve_lenet, ArrivalSpec, RequestOutcome, ServeConfig, ServeStats};
+use fcdcc::engine::Im2colEngine;
+use fcdcc::metrics::Table;
+use fcdcc::util::json::JsonObj;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn json_line(name: &str, rate: f64, stats: &ServeStats) {
+    let obj = JsonObj::new()
+        .field_str("bench", "serve_overload")
+        .field_str("workload", name)
+        .field_f64("rate_rps", rate)
+        .field_u64("threads", fcdcc::util::pool::global().threads() as u64)
+        .field_str("kernel", stats.kernel)
+        .field_str("code", stats.code)
+        .field_u64("depth", stats.max_in_flight as u64)
+        .field_u64("batch_window", stats.batch_window as u64)
+        .field_u64("queue_cap", stats.queue_cap as u64)
+        .field_u64("queue_peak", stats.peak_queue_depth as u64)
+        .field_u64("arrivals", stats.arrivals as u64)
+        .field_u64("completed", stats.completed_requests as u64)
+        .field_u64("shed", stats.shed_requests as u64)
+        .field_u64("expired", stats.expired_requests as u64)
+        .field_f64("latency_p50_ms", stats.latency_hist.p50() * 1e3)
+        .field_f64("latency_p99_ms", stats.latency_hist.p99() * 1e3)
+        .field_u64("coded_jobs", stats.coded_jobs as u64)
+        .field_u64("arena_outstanding", stats.arena_outstanding);
+    emit_json(&obj.finish());
+}
+
+/// The overload invariants every config must satisfy, load or no load.
+fn check_invariants(name: &str, stats: &ServeStats) {
+    assert_eq!(stats.arrivals, stats.outcomes.len(), "{name}: arrival accounting");
+    assert!(
+        stats.outcomes.iter().all(Option::is_some),
+        "{name}: every arrival must resolve to exactly one outcome"
+    );
+    assert_eq!(
+        stats.completed_requests + stats.shed_requests + stats.expired_requests,
+        stats.arrivals,
+        "{name}: completed + shed + expired must cover every arrival"
+    );
+    assert_eq!(
+        stats.completed_requests as u64,
+        stats.latency_hist.count(),
+        "{name}: the latency histogram covers completed requests only"
+    );
+    assert!(
+        stats.peak_queue_depth <= stats.queue_cap,
+        "{name}: queue peak {} exceeded cap {}",
+        stats.peak_queue_depth,
+        stats.queue_cap
+    );
+    assert_eq!(
+        stats.arena_outstanding, 0,
+        "{name}: slab arena must come home empty under shedding"
+    );
+    for (id, o) in stats.outcomes.iter().enumerate() {
+        let has_logits = !stats.logits[id].is_empty();
+        assert_eq!(
+            *o == Some(RequestOutcome::Completed),
+            has_logits,
+            "{name}: request {id} logits must exist iff it completed"
+        );
+    }
+}
+
+fn main() {
+    let requests = env_usize("FCDCC_BENCH_REQUESTS", if fast_mode() { 24 } else { 64 });
+    // Two conv stages per request at the default virtual stage cost:
+    // the sustainable rate is batch_window / (2 · stage_secs).
+    let window = 2usize;
+    let sustainable = {
+        let spec = ArrivalSpec::poisson(1.0, 0);
+        window as f64 / (2.0 * spec.stage_secs)
+    };
+    // (name, arrival spec, per-request deadline).
+    let configs = [
+        (
+            "poisson-0.5x",
+            ArrivalSpec::poisson(0.5 * sustainable, 11),
+            None,
+        ),
+        (
+            "poisson-8x",
+            ArrivalSpec::poisson(8.0 * sustainable, 11),
+            None,
+        ),
+        (
+            "burst-8x-deadline",
+            ArrivalSpec::burst(8.0 * sustainable, 8, 11),
+            Some(Duration::from_millis(60)),
+        ),
+    ];
+
+    let mut t = Table::new(
+        &format!(
+            "Open-loop overload: admission control + deadlines \
+             (LeNet-5, n=4, {requests} arrivals, window {window}, queue cap 4, \
+             sustainable {sustainable:.0} req/s)"
+        ),
+        &[
+            "workload",
+            "rate (req/s)",
+            "completed",
+            "shed",
+            "expired",
+            "queue peak",
+            "p50 (ms)",
+            "p99 (ms)",
+        ],
+    );
+    for (name, spec, deadline) in configs {
+        let rate = spec.rate;
+        let mut cfg = ServeConfig::default_with_engine(Arc::new(Im2colEngine));
+        cfg.requests = requests;
+        cfg.max_in_flight = 4;
+        cfg.batch_window = window;
+        cfg.verify_every = 0; // throughput run: no reference pass
+        cfg.queue_cap = 4;
+        cfg.request_deadline = deadline;
+        cfg.arrival = Some(spec);
+        let stats = serve_lenet(cfg).expect("serve");
+        check_invariants(name, &stats);
+        if rate > sustainable {
+            assert!(
+                stats.shed_requests > 0,
+                "{name}: 8x overload with a 4-deep queue must shed"
+            );
+        }
+        t.row(&[
+            name.to_string(),
+            format!("{rate:.0}"),
+            stats.completed_requests.to_string(),
+            stats.shed_requests.to_string(),
+            stats.expired_requests.to_string(),
+            format!("{}/{}", stats.peak_queue_depth, stats.queue_cap),
+            format!("{:.2}", stats.latency_hist.p50() * 1e3),
+            format!("{:.2}", stats.latency_hist.p99() * 1e3),
+        ]);
+        json_line(name, rate, &stats);
+    }
+    t.print();
+    println!(
+        "\nExpected: the 0.5x control completes nearly everything; at 8x the \
+         bounded queue sheds with explicit Busy outcomes (and the deadline \
+         config expires stale queue entries) while completed + shed + expired \
+         covers every arrival and the slab arena comes home empty."
+    );
+}

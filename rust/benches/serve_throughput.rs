@@ -39,6 +39,11 @@ fn json_line(model: &str, mode: &str, stats: &ServeStats) {
         .field_f64("rps", stats.throughput_rps)
         .field_f64("latency_p50_ms", stats.latency.p50 * 1e3)
         .field_f64("latency_p95_ms", stats.latency.p95 * 1e3)
+        .field_f64("latency_p99_ms", stats.latency.p99 * 1e3)
+        .field_u64("completed", stats.completed_requests as u64)
+        .field_u64("shed", stats.shed_requests as u64)
+        .field_u64("expired", stats.expired_requests as u64)
+        .field_u64("queue_peak", stats.peak_queue_depth as u64)
         .field_u64("coded_jobs", stats.coded_jobs as u64)
         .field_f64("mean_batch", stats.mean_batch)
         .field_u64("inversions", stats.inverse_cache.misses)

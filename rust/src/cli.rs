@@ -4,6 +4,7 @@
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
+use std::time::Duration;
 
 /// Parsed command line: subcommand + options.
 #[derive(Clone, Debug, Default)]
@@ -71,6 +72,17 @@ impl Args {
     pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
+
+    /// Millisecond-valued option parsed into a [`Duration`].
+    pub fn get_duration_ms(&self, name: &str, default_ms: u64) -> Result<Duration> {
+        match self.get(name) {
+            None => Ok(Duration::from_millis(default_ms)),
+            Some(v) => v
+                .parse()
+                .map(Duration::from_millis)
+                .map_err(|_| anyhow!("--{name} expects milliseconds, got {v:?}")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -97,6 +109,21 @@ mod tests {
         assert_eq!(a.get_usize("q", 32).unwrap(), 32);
         assert_eq!(a.get_str("arch", "lenet"), "lenet");
         assert_eq!(a.get_f64("delay", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn duration_ms_values() {
+        let a = parse("serve --collect-timeout-ms 250");
+        assert_eq!(
+            a.get_duration_ms("collect-timeout-ms", 60_000).unwrap(),
+            Duration::from_millis(250)
+        );
+        assert_eq!(
+            a.get_duration_ms("request-deadline-ms", 40).unwrap(),
+            Duration::from_millis(40)
+        );
+        let bad = parse("serve --collect-timeout-ms soon");
+        assert!(bad.get_duration_ms("collect-timeout-ms", 0).is_err());
     }
 
     #[test]

@@ -68,6 +68,14 @@ pub enum FrameTag {
     Shutdown = 9,
     /// Worker → coordinator: one `WorkerReply`.
     Reply = 10,
+    /// Client → frontend: one inference request (id, deadline, input).
+    Request = 11,
+    /// Frontend → client: the request's logits.
+    Response = 12,
+    /// Frontend → client: shed at admission — the bounded queue is full.
+    Busy = 13,
+    /// Frontend → client: the request's deadline expired before service.
+    DeadlineExceeded = 14,
 }
 
 impl FrameTag {
@@ -83,6 +91,10 @@ impl FrameTag {
             8 => FrameTag::CancelUpTo,
             9 => FrameTag::Shutdown,
             10 => FrameTag::Reply,
+            11 => FrameTag::Request,
+            12 => FrameTag::Response,
+            13 => FrameTag::Busy,
+            14 => FrameTag::DeadlineExceeded,
             _ => return None,
         })
     }
@@ -283,6 +295,18 @@ impl<'a> ByteReader<'a> {
             *slot = f64::from_bits(u64::from_le_bytes(chunk.try_into().expect("8")));
         }
         Ok(out)
+    }
+
+    /// Plain-`Vec` variant of [`ByteReader::f64s`] for the small
+    /// client-facing payloads (request images, reply logits) that never
+    /// touch the slab arena.
+    pub fn f64s_vec(&mut self) -> Result<Vec<f64>> {
+        let count = self.u32()? as usize;
+        let bytes = self.take(count * 8)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|ch| f64::from_bits(u64::from_le_bytes(ch.try_into().expect("8"))))
+            .collect())
     }
 
     /// Every payload byte must be consumed — trailing garbage means the
@@ -644,6 +668,60 @@ fn decode_reply_inner(
     ))
 }
 
+// ---------------------------------------------------------------------
+// Client-facing serving frames (the `--role frontend` request path).
+//
+// These payloads are tiny (one input image / ten logits) and cross the
+// trust boundary to arbitrary clients, so they deliberately use plain
+// `Vec` buffers instead of the coordinator's slab arena: a malformed
+// client frame can never check a slab out of the hot-path pool.
+
+/// Serialize one client request as a [`FrameTag::Request`] payload:
+/// client-chosen id, deadline in milliseconds (0 = use the server's
+/// default), and the input tensor.
+pub fn encode_request(client_id: u64, deadline_ms: u64, x: &Tensor3) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(36 + 8 * x.data.len());
+    put_u64(&mut buf, client_id);
+    put_u64(&mut buf, deadline_ms);
+    put_tensor3(&mut buf, x);
+    buf
+}
+
+/// Decode a [`FrameTag::Request`] payload into (client id, deadline ms,
+/// input). The tensor lands in a plain `Vec` — never the arena.
+pub fn decode_request(payload: &[u8]) -> Result<(u64, u64, Tensor3)> {
+    let mut r = ByteReader::new(payload);
+    let client_id = r.u64()?;
+    let deadline_ms = r.u64()?;
+    let (c, h, w) = (r.u32()? as usize, r.u32()? as usize, r.u32()? as usize);
+    let data = r.f64s_vec()?;
+    ensure!(
+        data.len() == c * h * w,
+        "request tensor carries {c}x{h}x{w} shape with {} elements",
+        data.len()
+    );
+    r.done()?;
+    Ok((client_id, deadline_ms, Tensor3::from_vec(c, h, w, data)))
+}
+
+/// Serialize one [`FrameTag::Response`] payload: the request's client
+/// id and its logits.
+pub fn encode_response(client_id: u64, logits: &[f64]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(12 + 8 * logits.len());
+    put_u64(&mut buf, client_id);
+    put_f64s(&mut buf, logits);
+    buf
+}
+
+/// Decode a [`FrameTag::Response`] payload into (client id, logits).
+pub fn decode_response(payload: &[u8]) -> Result<(u64, Vec<f64>)> {
+    let mut r = ByteReader::new(payload);
+    let client_id = r.u64()?;
+    let logits = r.f64s_vec()?;
+    r.done()?;
+    Ok((client_id, logits))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -861,6 +939,31 @@ mod tests {
         assert_eq!(epoch, 12);
         assert!(matches!(&got.body, ReplyBody::Err(m) if m.contains("boom")));
         assert_eq!(arena.outstanding(), 0);
+    }
+
+    #[test]
+    fn client_request_and_response_roundtrip() {
+        let mut rng = Rng::new(21);
+        let x = Tensor3::random(1, 32, 32, &mut rng);
+        let (id, ms, got) = decode_request(&encode_request(77, 250, &x)).unwrap();
+        assert_eq!((id, ms), (77, 250));
+        assert_eq!((got.c, got.h, got.w), (1, 32, 32));
+        assert_eq!(got.data, x.data, "input must round-trip bit-exactly");
+
+        let logits = vec![0.5, -1.25, f64::MIN_POSITIVE, 3e300];
+        let (id, got) = decode_response(&encode_response(9, &logits)).unwrap();
+        assert_eq!(id, 9);
+        assert_eq!(got, logits, "logits must round-trip bit-exactly");
+
+        // A shape lie inside an otherwise-intact request is rejected.
+        let mut bad = encode_request(1, 0, &x);
+        bad[16..20].copy_from_slice(&2u32.to_le_bytes()); // claim c=2
+        assert!(decode_request(&bad).is_err());
+        // Truncations fail cleanly at every prefix.
+        let wire = encode_request(1, 0, &x);
+        for cut in 0..wire.len() {
+            assert!(decode_request(&wire[..cut]).is_err(), "cut {cut}");
+        }
     }
 
     #[test]

@@ -1,0 +1,322 @@
+//! Client-facing serving front-end: the network edge of `--role
+//! frontend` (DESIGN.md §Serving front-end & overload control).
+//!
+//! [`spawn_frontend`] binds a TCP listener and funnels every client's
+//! [`FrameTag::Request`] frames into one mpsc channel of
+//! [`FrontendRequest`]s for the serving scheduler, each carrying a
+//! [`Responder`] bound to its connection. The scheduler replies through
+//! the responder with exactly one terminal frame per request —
+//! [`FrameTag::Response`] (logits), [`FrameTag::Busy`] (shed at
+//! admission), or [`FrameTag::DeadlineExceeded`] (expired before
+//! service) — which is also the backpressure signal: a client that keeps
+//! pipelining past its `Busy` replies just keeps getting shed.
+//!
+//! Client payloads deliberately stay in plain `Vec`s (see
+//! `frame::decode_request`): nothing a client sends can check a slab out
+//! of the coordinator's hot-path arena, so malformed or hostile traffic
+//! costs its own connection and nothing else.
+
+use crate::cluster::frame::{self, FrameTag, ReadOutcome};
+use crate::tensor::Tensor3;
+use anyhow::{Context, Result};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// One client request as the serving scheduler sees it.
+pub struct FrontendRequest {
+    /// Per-request deadline carried on the wire (`None` = the frame's
+    /// deadline field was 0: use the server's `--request-deadline-ms`).
+    pub deadline: Option<Duration>,
+    /// The input image, in a plain (non-arena) buffer.
+    pub input: Tensor3,
+    /// Reply handle for this request's terminal outcome.
+    pub responder: Responder,
+}
+
+/// Write half of one client connection, bound to one request's id.
+/// Sends are best-effort: a client that disconnected mid-flight loses
+/// its reply, never the scheduler.
+#[derive(Clone)]
+pub struct Responder {
+    writer: Arc<Mutex<TcpStream>>,
+    client_id: u64,
+}
+
+impl Responder {
+    fn write(&self, tag: FrameTag, payload: &[u8]) {
+        if let Ok(mut w) = self.writer.lock() {
+            if frame::write_frame(&mut *w, tag, payload).is_err() {
+                let _ = w.shutdown(Shutdown::Both);
+            }
+        }
+    }
+
+    /// Terminal outcome: the request completed; deliver its logits.
+    pub fn logits(&self, logits: &[f64]) {
+        self.write(
+            FrameTag::Response,
+            &frame::encode_response(self.client_id, logits),
+        );
+    }
+
+    /// Terminal outcome: shed at admission (queue full).
+    pub fn busy(&self) {
+        self.write(FrameTag::Busy, &frame::encode_u64(self.client_id));
+    }
+
+    /// Terminal outcome: the deadline expired before service finished.
+    pub fn deadline_exceeded(&self) {
+        self.write(FrameTag::DeadlineExceeded, &frame::encode_u64(self.client_id));
+    }
+}
+
+struct FrontShared {
+    stop: AtomicBool,
+    /// Read-half clones of every accepted connection, for shutdown.
+    conns: Mutex<Vec<TcpStream>>,
+}
+
+/// Handle on a running front-end listener.
+pub struct FrontendListener {
+    addr: SocketAddr,
+    shared: Arc<FrontShared>,
+    accept_thread: JoinHandle<()>,
+}
+
+impl FrontendListener {
+    /// The bound address (resolves `127.0.0.1:0` to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, tear down every client connection, and join the
+    /// accept loop (which in turn joins its per-connection readers).
+    pub fn stop(self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Ok(conns) = self.shared.conns.lock() {
+            for c in conns.iter() {
+                let _ = c.shutdown(Shutdown::Both);
+            }
+        }
+        // Unblock the accept call with a throwaway dial.
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.accept_thread.join();
+    }
+}
+
+/// Bind `listen` and start the accept loop. Returns the listener handle
+/// and the scheduler's end of the request channel. Each connection gets
+/// a reader thread that decodes [`FrameTag::Request`] frames until EOF
+/// or a protocol violation (which costs that connection only).
+pub fn spawn_frontend(listen: &str) -> Result<(FrontendListener, Receiver<FrontendRequest>)> {
+    let listener =
+        TcpListener::bind(listen).with_context(|| format!("frontend bind {listen}"))?;
+    let addr = listener.local_addr().context("frontend local_addr")?;
+    let (tx, rx) = channel();
+    let shared = Arc::new(FrontShared {
+        stop: AtomicBool::new(false),
+        conns: Mutex::new(Vec::new()),
+    });
+    let accept_shared = Arc::clone(&shared);
+    let accept_thread = std::thread::Builder::new()
+        .name("fcdcc-frontend-accept".to_string())
+        .spawn(move || accept_loop(listener, accept_shared, tx))
+        .context("spawn frontend accept thread")?;
+    Ok((
+        FrontendListener {
+            addr,
+            shared,
+            accept_thread,
+        },
+        rx,
+    ))
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<FrontShared>, tx: Sender<FrontendRequest>) {
+    let mut readers: Vec<JoinHandle<()>> = Vec::new();
+    while !shared.stop.load(Ordering::SeqCst) {
+        let Ok((stream, _)) = listener.accept() else {
+            break;
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if let Ok(clone) = stream.try_clone() {
+            if let Ok(mut conns) = shared.conns.lock() {
+                conns.push(clone);
+            }
+        }
+        let tx = tx.clone();
+        if let Ok(h) = std::thread::Builder::new()
+            .name("fcdcc-frontend-conn".to_string())
+            .spawn(move || client_reader(stream, tx))
+        {
+            readers.push(h);
+        }
+    }
+    drop(tx);
+    for r in readers {
+        let _ = r.join();
+    }
+}
+
+/// Decode one connection's request stream into the scheduler channel.
+fn client_reader(stream: TcpStream, tx: Sender<FrontendRequest>) {
+    let _ = stream.set_nodelay(true);
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    let writer = Arc::new(Mutex::new(write_half));
+    let mut read_half = &stream;
+    loop {
+        match frame::read_frame(&mut read_half) {
+            Ok(ReadOutcome::Frame(f)) if f.tag == FrameTag::Request => {
+                let Ok((client_id, deadline_ms, input)) = frame::decode_request(&f.payload)
+                else {
+                    break;
+                };
+                let req = FrontendRequest {
+                    deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+                    input,
+                    responder: Responder {
+                        writer: Arc::clone(&writer),
+                        client_id,
+                    },
+                };
+                if tx.send(req).is_err() {
+                    break;
+                }
+            }
+            // EOF, transport error, or a non-Request tag: this
+            // connection is done.
+            _ => break,
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// A request's terminal outcome as seen by a client.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientReply {
+    Logits { client_id: u64, logits: Vec<f64> },
+    Busy { client_id: u64 },
+    DeadlineExceeded { client_id: u64 },
+}
+
+/// Minimal blocking client for the front-end protocol (tests, examples,
+/// and the loopback CI leg).
+pub struct FrontendClient {
+    stream: TcpStream,
+}
+
+impl FrontendClient {
+    pub fn connect(addr: &str) -> Result<FrontendClient> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("frontend connect {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(FrontendClient { stream })
+    }
+
+    /// Send one request. `deadline: None` defers to the server default.
+    pub fn send(&mut self, client_id: u64, deadline: Option<Duration>, x: &Tensor3) -> Result<()> {
+        let ms = deadline.map_or(0, |d| d.as_millis() as u64);
+        frame::write_frame(
+            &mut self.stream,
+            FrameTag::Request,
+            &frame::encode_request(client_id, ms, x),
+        )
+        .context("send request frame")
+    }
+
+    /// Block for the next terminal reply. Replies may arrive in any
+    /// order relative to pipelined sends; match on `client_id`.
+    pub fn recv(&mut self) -> Result<ClientReply> {
+        let mut r = &self.stream;
+        match frame::read_frame(&mut r)? {
+            ReadOutcome::Frame(f) => match f.tag {
+                FrameTag::Response => {
+                    let (client_id, logits) = frame::decode_response(&f.payload)?;
+                    Ok(ClientReply::Logits { client_id, logits })
+                }
+                FrameTag::Busy => Ok(ClientReply::Busy {
+                    client_id: frame::decode_u64(&f.payload)?,
+                }),
+                FrameTag::DeadlineExceeded => Ok(ClientReply::DeadlineExceeded {
+                    client_id: frame::decode_u64(&f.payload)?,
+                }),
+                other => anyhow::bail!("unexpected frame tag {other:?} from the frontend"),
+            },
+            ReadOutcome::Eof => anyhow::bail!("frontend closed the connection"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn request_flows_in_and_every_reply_kind_flows_out() {
+        let (listener, rx) = spawn_frontend("127.0.0.1:0").unwrap();
+        let mut client = FrontendClient::connect(&listener.addr().to_string()).unwrap();
+        let mut rng = Rng::new(5);
+        let x = Tensor3::random(1, 4, 4, &mut rng);
+        client.send(1, Some(Duration::from_millis(80)), &x).unwrap();
+        client.send(2, None, &x).unwrap();
+        client.send(3, None, &x).unwrap();
+
+        let r1 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r1.deadline, Some(Duration::from_millis(80)));
+        assert_eq!(r1.input.data, x.data, "input crosses the wire bit-exactly");
+        let r2 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r2.deadline, None, "deadline 0 defers to the server");
+        let r3 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+
+        r1.responder.logits(&[1.0, 2.0]);
+        r2.responder.busy();
+        r3.responder.deadline_exceeded();
+        let mut got = vec![client.recv().unwrap(), client.recv().unwrap(), client.recv().unwrap()];
+        got.sort_by_key(|r| match r {
+            ClientReply::Logits { client_id, .. }
+            | ClientReply::Busy { client_id }
+            | ClientReply::DeadlineExceeded { client_id } => *client_id,
+        });
+        assert_eq!(
+            got[0],
+            ClientReply::Logits {
+                client_id: 1,
+                logits: vec![1.0, 2.0]
+            }
+        );
+        assert_eq!(got[1], ClientReply::Busy { client_id: 2 });
+        assert_eq!(got[2], ClientReply::DeadlineExceeded { client_id: 3 });
+        listener.stop();
+    }
+
+    #[test]
+    fn malformed_client_frame_drops_only_that_connection() {
+        let (listener, rx) = spawn_frontend("127.0.0.1:0").unwrap();
+        let addr = listener.addr().to_string();
+        // A connection that speaks a non-Request tag is dropped…
+        let mut bad = TcpStream::connect(&addr).unwrap();
+        frame::write_frame(&mut bad, FrameTag::Ping, &frame::encode_u64(1)).unwrap();
+        let mut r = &bad;
+        assert!(matches!(
+            frame::read_frame(&mut r),
+            Ok(ReadOutcome::Eof) | Err(_)
+        ));
+        // …while a well-formed client on another connection still works.
+        let mut ok = FrontendClient::connect(&addr).unwrap();
+        let mut rng = Rng::new(6);
+        ok.send(7, None, &Tensor3::random(1, 2, 2, &mut rng)).unwrap();
+        let req = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        req.responder.busy();
+        assert_eq!(ok.recv().unwrap(), ClientReply::Busy { client_id: 7 });
+        listener.stop();
+    }
+}

@@ -20,6 +20,7 @@
 //! the paper's Figs. 5–6 plot.
 
 pub mod frame;
+pub mod frontend;
 pub mod health;
 pub mod master;
 pub mod membership;
@@ -29,6 +30,9 @@ pub mod tcp;
 pub mod transport;
 pub mod worker;
 
+pub use frontend::{
+    spawn_frontend, ClientReply, FrontendClient, FrontendListener, FrontendRequest, Responder,
+};
 pub use health::{HealthPolicy, HealthTracker, WorkerState};
 pub use master::{BatchOutcome, Cluster, JobHandle, JobReport};
 pub use membership::{Admission, Membership, MembershipConfig};

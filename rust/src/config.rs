@@ -140,6 +140,16 @@ impl Config {
         self.get(key).and_then(Value::as_str).unwrap_or(default)
     }
 
+    /// Millisecond-valued key as a [`Duration`] (deployment files carry
+    /// deadlines and timeouts in integral ms, like the CLI flags).
+    pub fn duration_ms_or(&self, key: &str, default_ms: u64) -> std::time::Duration {
+        std::time::Duration::from_millis(
+            self.get(key)
+                .and_then(Value::as_usize)
+                .map_or(default_ms, |v| v as u64),
+        )
+    }
+
     /// All keys under a section prefix (e.g. every `layer.*`).
     pub fn section_keys(&self, prefix: &str) -> Vec<&str> {
         let full = format!("{prefix}.");
@@ -185,6 +195,15 @@ k = [8, 8]   # (k_A, k_B)
         let c = Config::parse("").unwrap();
         assert_eq!(c.usize_or("missing", 7), 7);
         assert_eq!(c.str_or("missing", "d"), "d");
+        assert_eq!(
+            c.duration_ms_or("missing", 250),
+            std::time::Duration::from_millis(250)
+        );
+        let c = Config::parse("[serve]\nrequest_deadline_ms = 40\n").unwrap();
+        assert_eq!(
+            c.duration_ms_or("serve.request_deadline_ms", 0),
+            std::time::Duration::from_millis(40)
+        );
     }
 
     #[test]

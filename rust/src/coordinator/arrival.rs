@@ -1,0 +1,193 @@
+//! Deterministic synthetic-time arrival generation for open-loop
+//! serving (DESIGN.md §Serving front-end & overload control).
+//!
+//! An open-loop workload fixes *when* requests arrive instead of waiting
+//! for the previous reply — the regime where overload is even possible.
+//! To keep overload behavior reproducible offline, arrivals are drawn in
+//! **virtual time** from a seeded [`Rng`]: the serving scheduler advances
+//! its virtual clock by [`ArrivalSpec::stage_secs`] per coded-job absorb
+//! and jumps to the next arrival when idle, so a fixed seed yields a
+//! bit-identical shed/expire/complete pattern on every run and machine.
+//!
+//! Two processes cover the paper-relevant regimes:
+//! * **Poisson** — memoryless inter-arrival gaps `Exp(rate)`; the
+//!   classic open-loop model.
+//! * **Burst** — burst epochs arrive as a Poisson process of rate
+//!   `rate / mean_burst`, each carrying `1 + Geometric(1/mean_burst)`
+//!   back-to-back requests (mean burst size `mean_burst`, so the
+//!   long-run request rate is still `rate`). This is the adversarial
+//!   load for a bounded admission queue: a single burst can exceed the
+//!   queue capacity even when the average rate is sustainable.
+
+use crate::util::rng::Rng;
+
+/// Default virtual cost of absorbing one coded stage job, in virtual
+/// seconds. With `batch_window` w and two conv stages the sustainable
+/// request rate is `w / (2 · stage_secs)` ≈ 100·w req/s.
+pub const DEFAULT_STAGE_SECS: f64 = 0.005;
+
+/// Which arrival process drives the open loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalKind {
+    Poisson,
+    Burst,
+}
+
+/// A seeded open-loop arrival process (`--arrival`, `--arrival-rate`,
+/// `--arrival-seed`, `--arrival-burst`).
+#[derive(Clone, Debug)]
+pub struct ArrivalSpec {
+    pub kind: ArrivalKind,
+    /// Long-run mean arrival rate, requests per virtual second.
+    pub rate: f64,
+    pub seed: u64,
+    /// Mean requests per burst ([`ArrivalKind::Burst`] only; ≥ 1).
+    pub mean_burst: usize,
+    /// Virtual seconds one coded-job absorb advances the serving clock.
+    pub stage_secs: f64,
+}
+
+impl ArrivalSpec {
+    pub fn poisson(rate: f64, seed: u64) -> ArrivalSpec {
+        ArrivalSpec {
+            kind: ArrivalKind::Poisson,
+            rate,
+            seed,
+            mean_burst: 4,
+            stage_secs: DEFAULT_STAGE_SECS,
+        }
+    }
+
+    pub fn burst(rate: f64, mean_burst: usize, seed: u64) -> ArrivalSpec {
+        ArrivalSpec {
+            kind: ArrivalKind::Burst,
+            rate,
+            seed,
+            mean_burst,
+            stage_secs: DEFAULT_STAGE_SECS,
+        }
+    }
+}
+
+/// Iterator-like generator over an [`ArrivalSpec`]: `peek` the next
+/// arrival's virtual timestamp without consuming it, `next_arrival` to
+/// consume. Timestamps are nondecreasing; burst members share their
+/// epoch's timestamp (intra-burst gap 0).
+pub struct ArrivalGen {
+    rng: Rng,
+    kind: ArrivalKind,
+    rate: f64,
+    mean_burst: usize,
+    stage_secs: f64,
+    /// Current burst epoch time.
+    t: f64,
+    /// Arrivals still pending at `t` (burst mode).
+    pending: usize,
+    /// Cached next arrival time, if already drawn.
+    next: Option<f64>,
+}
+
+impl ArrivalGen {
+    pub fn new(spec: &ArrivalSpec) -> ArrivalGen {
+        assert!(spec.rate > 0.0, "arrival rate must be positive");
+        assert!(spec.mean_burst >= 1, "mean_burst must be >= 1");
+        assert!(spec.stage_secs > 0.0, "stage_secs must be positive");
+        ArrivalGen {
+            rng: Rng::new(spec.seed),
+            kind: spec.kind,
+            rate: spec.rate,
+            mean_burst: spec.mean_burst,
+            stage_secs: spec.stage_secs,
+            t: 0.0,
+            pending: 0,
+            next: None,
+        }
+    }
+
+    /// Virtual seconds one coded-job absorb advances the serving clock.
+    pub fn stage_secs(&self) -> f64 {
+        self.stage_secs
+    }
+
+    /// Timestamp of the next arrival (virtual seconds), without
+    /// consuming it.
+    pub fn peek(&mut self) -> f64 {
+        if let Some(t) = self.next {
+            return t;
+        }
+        let t = match self.kind {
+            ArrivalKind::Poisson => {
+                self.t += self.rng.exponential(self.rate);
+                self.t
+            }
+            ArrivalKind::Burst => {
+                if self.pending == 0 {
+                    // Next burst epoch, then its size: 1 + Geometric so
+                    // every burst carries at least one request and the
+                    // mean size is exactly `mean_burst`.
+                    let epoch_rate = self.rate / self.mean_burst as f64;
+                    self.t += self.rng.exponential(epoch_rate);
+                    self.pending = 1 + self.rng.geometric(1.0 / self.mean_burst as f64);
+                }
+                self.pending -= 1;
+                self.t
+            }
+        };
+        self.next = Some(t);
+        t
+    }
+
+    /// Consume and return the next arrival's timestamp.
+    pub fn next_arrival(&mut self) -> f64 {
+        let t = self.peek();
+        self.next = None;
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_monotone() {
+        for spec in [ArrivalSpec::poisson(50.0, 7), ArrivalSpec::burst(50.0, 8, 7)] {
+            let mut a = ArrivalGen::new(&spec);
+            let mut b = ArrivalGen::new(&spec);
+            let mut last = 0.0;
+            for _ in 0..500 {
+                assert_eq!(a.peek(), b.peek(), "peek is stable");
+                let t = a.next_arrival();
+                assert_eq!(t, b.next_arrival(), "same seed, same stream");
+                assert!(t >= last, "timestamps must be nondecreasing");
+                last = t;
+            }
+        }
+    }
+
+    #[test]
+    fn long_run_rates_match() {
+        let n = 20_000;
+        for spec in [ArrivalSpec::poisson(40.0, 3), ArrivalSpec::burst(40.0, 8, 3)] {
+            let mut g = ArrivalGen::new(&spec);
+            let mut t = 0.0;
+            for _ in 0..n {
+                t = g.next_arrival();
+            }
+            let rate = n as f64 / t;
+            assert!(
+                (rate - 40.0).abs() < 2.0,
+                "{:?}: empirical rate {rate:.2}",
+                spec.kind
+            );
+        }
+    }
+
+    #[test]
+    fn bursts_share_a_timestamp() {
+        let mut g = ArrivalGen::new(&ArrivalSpec::burst(100.0, 16, 11));
+        let ts: Vec<f64> = (0..200).map(|_| g.next_arrival()).collect();
+        let repeats = ts.windows(2).filter(|w| w[0] == w[1]).count();
+        assert!(repeats > 50, "mean-16 bursts must share epochs: {repeats}");
+    }
+}

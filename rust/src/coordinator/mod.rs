@@ -4,6 +4,7 @@
 //! distributed LeNet-5 serving loop (see [`serve`] for the
 //! request scheduler over the concurrent job runtime).
 
+pub mod arrival;
 pub mod serve;
 pub mod stability;
 
@@ -19,7 +20,10 @@ use anyhow::{anyhow, Result};
 use std::sync::Arc;
 use std::time::Duration;
 
-pub use serve::{serve_lenet, ServeConfig, ServeStats, TransportKind};
+pub use arrival::{ArrivalGen, ArrivalKind, ArrivalSpec};
+pub use serve::{
+    serve_frontend_on, serve_lenet, RequestOutcome, ServeConfig, ServeStats, TransportKind,
+};
 
 /// Resolve a `--engine` name to a TaskEngine (PJRT is resolved by the
 /// caller since it needs the artifacts directory).

@@ -31,21 +31,41 @@
 //! to the reference conv — so requests complete with `degraded`
 //! accounting instead of failing. Under any single-worker fault the loop
 //! completes 100% of requests.
+//!
+//! Serving can also run **open-loop** (DESIGN.md §Serving front-end &
+//! overload control): arrivals come from a seeded synthetic-time
+//! generator ([`ArrivalSpec`] via [`ServeConfig::arrival`]) or from the
+//! TCP front-end ([`serve_frontend_on`]) instead of being demand-paced
+//! by completions. Open-loop arrivals pass through a **bounded admission
+//! queue** ([`ServeConfig::queue_cap`]): when it is full the newcomer is
+//! shed with an explicit `Busy` — never a silent drop. A per-request
+//! **deadline** ([`ServeConfig::request_deadline`]) is checked at every
+//! stage boundary and on the retry path of a failed job, evicting the
+//! request with `DeadlineExceeded` before more coded work is spent on
+//! it. Every arrival resolves to exactly one [`RequestOutcome`], and the
+//! buffer-hygiene invariant (`arena_outstanding == 0`) holds under any
+//! shedding pattern. Synthetic arrivals drive a **virtual clock** (one
+//! blocking job absorb = one stage interval; jobs absorb strictly FIFO)
+//! so a fixed seed reproduces the same shed/expire/complete pattern on
+//! every run and machine.
 
+use crate::cluster::frontend::FrontendRequest;
 use crate::cluster::{
-    BatchOutcome, Cluster, FaultPlan, HealthPolicy, JobHandle, StragglerModel, TcpConfig,
-    TcpTransport,
+    BatchOutcome, Cluster, FaultPlan, HealthPolicy, JobHandle, Responder, StragglerModel,
+    TcpConfig, TcpTransport,
 };
+use crate::coordinator::arrival::{ArrivalGen, ArrivalSpec};
 use crate::coding::{registry, CodeFamily};
 use crate::engine::{Im2colEngine, TaskEngine};
 use crate::fcdcc::{NetworkPlan, PlanOptions, StageVariant};
-use crate::metrics::{CacheStats, EncodeStats, MembershipCounters, Stats};
+use crate::metrics::{CacheStats, EncodeStats, LatencyHistogram, MembershipCounters, Stats};
 use crate::model::network::softmax;
 use crate::model::{Activation, Network};
 use crate::tensor::Tensor3;
 use crate::util::{mse, rng::Rng};
 use anyhow::{ensure, Result};
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -104,6 +124,23 @@ pub struct ServeConfig {
     pub replan: bool,
     /// Per-job collection deadline (`--collect-timeout-ms`).
     pub collect_timeout: Duration,
+    /// Bounded admission-queue capacity for open-loop sources
+    /// (`--queue-cap`). An arrival that finds the queue full is shed
+    /// with an explicit `Busy` — load shedding is never a silent drop.
+    /// Closed-loop serving is demand-paced and never queues.
+    pub queue_cap: usize,
+    /// Default per-request deadline (`--request-deadline-ms`): a request
+    /// whose deadline passes before its logits are ready is evicted at
+    /// the next stage boundary with `DeadlineExceeded` instead of
+    /// consuming more coded work. Network clients may override it
+    /// per-request; `None` = no deadline. Under a synthetic arrival
+    /// process the deadline is measured in virtual seconds.
+    pub request_deadline: Option<Duration>,
+    /// Open-loop synthetic arrival process (`--arrival`,
+    /// `--arrival-rate`, `--arrival-seed`, `--arrival-burst`). `None` =
+    /// the classic closed loop: the next request is admitted as soon as
+    /// the pipeline depth frees, and overload cannot occur.
+    pub arrival: Option<ArrivalSpec>,
     /// The wire the cluster runs on ([`TransportKind::InProcess`] by
     /// default; [`TransportKind::Tcp`] drives real remote workers).
     pub transport: TransportKind,
@@ -131,6 +168,9 @@ impl ServeConfig {
             health: HealthPolicy::default(),
             replan: true,
             collect_timeout: Duration::from_secs(60),
+            queue_cap: 64,
+            request_deadline: None,
+            arrival: None,
             transport: TransportKind::InProcess,
         }
     }
@@ -145,11 +185,29 @@ impl Default for ServeConfig {
     }
 }
 
+/// Terminal outcome of one arrival. Every request that ever arrived
+/// resolves to exactly one of these — admission control sheds loudly,
+/// never silently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Served to completion; its `logits` slot is filled.
+    Completed,
+    /// Shed at admission with an explicit `Busy`: the bounded queue was
+    /// full.
+    Shed,
+    /// Evicted with `DeadlineExceeded` after its deadline passed — at a
+    /// stage boundary, in the admission queue, or on a failed job's
+    /// retry path.
+    Expired,
+}
+
 /// Serving-loop results.
 #[derive(Clone, Debug)]
 pub struct ServeStats {
-    /// Per-request latency, admission → logits (includes queueing under
-    /// pipelined serving).
+    /// Per-request latency over **completed** requests only, arrival →
+    /// logits (includes queueing). Shed and expired requests have no
+    /// service latency and are excluded rather than silently counted at
+    /// whatever instant the run ended.
     pub latency: Stats,
     pub throughput_rps: f64,
     pub decode: Stats,
@@ -218,8 +276,30 @@ pub struct ServeStats {
     /// the buffer-hygiene invariant; **zero** on every path (decoded,
     /// retried, timed out, degraded).
     pub arena_outstanding: u64,
-    /// Final logits of every request, in request order.
+    /// Final logits of every request, in request order (empty for shed
+    /// or expired requests).
     pub logits: Vec<Vec<f64>>,
+    /// Total arrivals observed (completed + shed + expired). Equals
+    /// `requests` — the field exists so overload accounting reads
+    /// explicitly at call sites.
+    pub arrivals: usize,
+    /// Requests that reached [`RequestOutcome::Completed`].
+    pub completed_requests: usize,
+    /// Arrivals shed at admission with an explicit `Busy`.
+    pub shed_requests: usize,
+    /// Requests evicted with `DeadlineExceeded`.
+    pub expired_requests: usize,
+    /// The admission-queue capacity the run enforced.
+    pub queue_cap: usize,
+    /// High-water mark of the admission queue — never exceeds
+    /// `queue_cap` by construction.
+    pub peak_queue_depth: usize,
+    /// Fixed-bucket log-scale latency histogram over completed requests
+    /// (p50/p90/p99/p999 at ≈±10% bucket resolution).
+    pub latency_hist: LatencyHistogram,
+    /// Terminal outcome per arrival id. `None` never survives a
+    /// completed run: every arrival resolves exactly once.
+    pub outcomes: Vec<Option<RequestOutcome>>,
 }
 
 /// Where one request currently is in its lifecycle.
@@ -243,8 +323,197 @@ struct Request {
     state: ReqState,
     /// Kept only for requests selected for reference verification.
     input: Option<Tensor3>,
-    admitted_at: Instant,
-    finished_at: Option<Instant>,
+    /// Arrival timestamp on the serving clock (seconds).
+    t_arr: f64,
+    /// Absolute deadline on the serving clock, if any.
+    deadline: Option<f64>,
+    /// Completion timestamp, set when the request runs out of layers.
+    finished_t: Option<f64>,
+    /// Reply handle for network-served requests.
+    reply: Option<Responder>,
+}
+
+/// The serving clock deadlines and latencies are measured on. Closed-loop
+/// and network serving run on wall time; synthetic arrivals run on
+/// virtual time, where one blocking job absorb advances the clock by one
+/// stage interval and idle periods jump to the next arrival — fully
+/// deterministic for a fixed seed.
+enum Clock {
+    Wall(Instant),
+    Virtual { now: f64, stage_secs: f64 },
+}
+
+impl Clock {
+    fn now(&self) -> f64 {
+        match self {
+            Clock::Wall(t0) => t0.elapsed().as_secs_f64(),
+            Clock::Virtual { now, .. } => *now,
+        }
+    }
+
+    fn advance_stage(&mut self) {
+        if let Clock::Virtual { now, stage_secs } = self {
+            *now += *stage_secs;
+        }
+    }
+
+    fn jump_to(&mut self, t: f64) {
+        if let Clock::Virtual { now, .. } = self {
+            if t > *now {
+                *now = t;
+            }
+        }
+    }
+}
+
+/// Where requests come from.
+enum Source {
+    /// Demand-paced: the next request is generated when depth frees.
+    Closed,
+    /// Seeded synthetic-time arrival process (virtual clock).
+    Open(ArrivalGen),
+    /// The TCP front-end's request channel (wall clock).
+    Net(Receiver<FrontendRequest>),
+}
+
+/// One arrival waiting in the bounded admission queue.
+struct Pending {
+    id: usize,
+    input: Tensor3,
+    t_arr: f64,
+    deadline: Option<f64>,
+    reply: Option<Responder>,
+}
+
+/// Outcome bookkeeping: one terminal resolution per arrival, latency
+/// accounting over completed requests only, and queue-depth tracking.
+struct Ledger {
+    outcomes: Vec<Option<RequestOutcome>>,
+    logits: Vec<Vec<f64>>,
+    latencies: Vec<f64>,
+    hist: LatencyHistogram,
+    shed_n: usize,
+    expired_n: usize,
+    completed_n: usize,
+    peak_queue: usize,
+}
+
+impl Ledger {
+    fn new() -> Ledger {
+        Ledger {
+            outcomes: Vec::new(),
+            logits: Vec::new(),
+            latencies: Vec::new(),
+            hist: LatencyHistogram::new(),
+            shed_n: 0,
+            expired_n: 0,
+            completed_n: 0,
+            peak_queue: 0,
+        }
+    }
+
+    fn arrivals(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    /// Register a new arrival and return its request id.
+    fn new_id(&mut self) -> usize {
+        self.outcomes.push(None);
+        self.logits.push(Vec::new());
+        self.outcomes.len() - 1
+    }
+
+    fn note_queue_depth(&mut self, depth: usize) {
+        self.peak_queue = self.peak_queue.max(depth);
+    }
+
+    fn shed(&mut self, id: usize, reply: Option<Responder>) {
+        debug_assert!(self.outcomes[id].is_none(), "double terminal for {id}");
+        self.outcomes[id] = Some(RequestOutcome::Shed);
+        self.shed_n += 1;
+        if let Some(r) = reply {
+            r.busy();
+        }
+    }
+
+    fn expire(&mut self, id: usize, reply: Option<Responder>) {
+        debug_assert!(self.outcomes[id].is_none(), "double terminal for {id}");
+        self.outcomes[id] = Some(RequestOutcome::Expired);
+        self.expired_n += 1;
+        if let Some(r) = reply {
+            r.deadline_exceeded();
+        }
+    }
+
+    fn complete(&mut self, id: usize, logits: Vec<f64>, latency: f64, reply: Option<Responder>) {
+        debug_assert!(self.outcomes[id].is_none(), "double terminal for {id}");
+        self.outcomes[id] = Some(RequestOutcome::Completed);
+        self.completed_n += 1;
+        self.latencies.push(latency);
+        self.hist.record(latency);
+        if let Some(r) = reply {
+            r.logits(&logits);
+        }
+        self.logits[id] = logits;
+    }
+}
+
+/// Push an arrival into the bounded admission queue, or shed it with an
+/// explicit `Busy` when the queue is full.
+fn enqueue_arrival(
+    cfg: &ServeConfig,
+    ledger: &mut Ledger,
+    pending: &mut VecDeque<Pending>,
+    p: Pending,
+) {
+    if pending.len() >= cfg.queue_cap {
+        ledger.shed(p.id, p.reply);
+    } else {
+        pending.push_back(p);
+        ledger.note_queue_depth(pending.len());
+    }
+}
+
+/// Register one front-end request as an arrival. The wire deadline wins
+/// over the server default (`0` on the wire = no override).
+fn accept_net(
+    cfg: &ServeConfig,
+    clock: &Clock,
+    ledger: &mut Ledger,
+    pending: &mut VecDeque<Pending>,
+    msg: FrontendRequest,
+) {
+    let t = clock.now();
+    let id = ledger.new_id();
+    let deadline = msg
+        .deadline
+        .or(cfg.request_deadline)
+        .map(|d| t + d.as_secs_f64());
+    let p = Pending {
+        id,
+        input: msg.input,
+        t_arr: t,
+        deadline,
+        reply: Some(msg.responder),
+    };
+    enqueue_arrival(cfg, ledger, pending, p);
+}
+
+/// Move one arrival into the pipeline.
+fn admit(cfg: &ServeConfig, active: &mut Vec<Request>, p: Pending) {
+    let verify = cfg.verify_every > 0 && p.id % cfg.verify_every == 0;
+    let a = Activation::new(&p.input);
+    active.push(Request {
+        id: p.id,
+        a,
+        layer_idx: 0,
+        state: ReqState::Runnable,
+        input: verify.then_some(p.input),
+        t_arr: p.t_arr,
+        deadline: p.deadline,
+        finished_t: None,
+        reply: p.reply,
+    });
 }
 
 /// One in-flight coded job and the requests fused into it.
@@ -315,9 +584,35 @@ impl FaultCtx<'_> {
 }
 
 /// Run the distributed LeNet-5 serving loop; returns latency/throughput
-/// plus fidelity vs the single-node reference.
+/// plus fidelity vs the single-node reference. With
+/// [`ServeConfig::arrival`] set, the loop runs open-loop on a virtual
+/// clock: overload is possible, and arrivals resolve to
+/// completed / shed / expired instead of all completing.
 pub fn serve_lenet(cfg: ServeConfig) -> Result<ServeStats> {
+    let source = match &cfg.arrival {
+        Some(spec) => Source::Open(ArrivalGen::new(spec)),
+        None => Source::Closed,
+    };
+    serve_with_source(cfg, source)
+}
+
+/// Serve requests arriving over the TCP front-end: the same pipeline,
+/// but arrivals come from `rx` (one [`FrontendRequest`] per client
+/// `Request` frame) and every terminal outcome is written back to its
+/// client — logits, `Busy`, or `DeadlineExceeded`. Returns after
+/// `cfg.requests` arrivals have resolved, or earlier if the listener
+/// shuts the channel down.
+pub fn serve_frontend_on(cfg: ServeConfig, rx: Receiver<FrontendRequest>) -> Result<ServeStats> {
+    ensure!(
+        cfg.arrival.is_none(),
+        "network serving takes arrivals from clients, not a synthetic process"
+    );
+    serve_with_source(cfg, Source::Net(rx))
+}
+
+fn serve_with_source(cfg: ServeConfig, source: Source) -> Result<ServeStats> {
     ensure!(cfg.requests > 0, "need at least one request");
+    ensure!(cfg.queue_cap >= 1, "queue_cap must be >= 1");
     ensure!(cfg.max_in_flight >= 1, "max_in_flight must be >= 1");
     ensure!(cfg.batch_window >= 1, "batch_window must be >= 1");
     // A window wider than the pipeline depth can never fill: every flush
@@ -354,7 +649,7 @@ pub fn serve_lenet(cfg: ServeConfig) -> Result<ServeStats> {
     cluster.collect_timeout = cfg.collect_timeout;
     cluster.set_fault_plan(cfg.fault_plan.clone());
     cluster.set_health_policy(cfg.health);
-    let stats = run_pipeline(&plan, &mut cluster, &cfg);
+    let stats = run_pipeline(&plan, &mut cluster, &cfg, source);
     cluster.shutdown();
     // Only after shutdown is the hygiene invariant decidable: the
     // workers have drained their queues and every reply was recycled.
@@ -368,6 +663,7 @@ fn run_pipeline(
     plan: &NetworkPlan,
     cluster: &mut Cluster,
     cfg: &ServeConfig,
+    mut source: Source,
 ) -> Result<ServeStats> {
     // Separate input / fate streams so request inputs are identical at
     // any pipeline depth or window (fate draws interleave differently
@@ -375,8 +671,17 @@ fn run_pipeline(
     let mut input_rng = Rng::new(cfg.seed);
     let mut fate_rng = Rng::new(cfg.seed ^ 0x9E37_79B9_7F4A_7C15);
     let n_stages = plan.stages().len();
-    let mut next_req = 0usize;
-    let mut completed = 0usize;
+    let mut clock = match &source {
+        Source::Open(gen) => Clock::Virtual {
+            now: 0.0,
+            stage_secs: gen.stage_secs(),
+        },
+        _ => Clock::Wall(Instant::now()),
+    };
+    let mut ledger = Ledger::new();
+    // Bounded admission queue (open-loop sources only).
+    let mut pending: VecDeque<Pending> = VecDeque::new();
+    let mut net_closed = false;
     // Active requests, ascending by id (admission order; retirement
     // preserves order).
     let mut active: Vec<Request> = Vec::new();
@@ -385,9 +690,7 @@ fn run_pipeline(
     // In-flight coded jobs, submission (FIFO) order.
     let mut jobs: VecDeque<BatchJob> = VecDeque::new();
     let mut batch_sizes: Vec<usize> = Vec::new();
-    let mut latencies = Vec::with_capacity(cfg.requests);
     let mut decodes = Vec::new();
-    let mut logits: Vec<Vec<f64>> = vec![Vec::new(); cfg.requests];
     let mut mses = Vec::new();
     let mut mismatches = 0usize;
     let mut ctx = FaultCtx {
@@ -398,21 +701,93 @@ fn run_pipeline(
     };
     let t_all = Instant::now();
 
-    while completed < cfg.requests {
-        // Admit new requests up to the pipeline depth.
-        while active.len() < cfg.max_in_flight && next_req < cfg.requests {
-            let x = Tensor3::random(1, 32, 32, &mut input_rng);
-            let verify = cfg.verify_every > 0 && next_req % cfg.verify_every == 0;
-            active.push(Request {
-                id: next_req,
-                a: Activation::new(&x),
-                layer_idx: 0,
-                state: ReqState::Runnable,
-                input: verify.then_some(x),
-                admitted_at: Instant::now(),
-                finished_at: None,
-            });
-            next_req += 1;
+    loop {
+        // Pull every arrival whose timestamp has come into the bounded
+        // admission queue (open-loop sources; the closed loop generates
+        // demand-paced arrivals in the admission step below and never
+        // queues). Arrivals are capped at `cfg.requests` so every run
+        // terminates with full outcome accounting.
+        match &mut source {
+            Source::Closed => {}
+            Source::Open(gen) => {
+                while ledger.arrivals() < cfg.requests && gen.peek() <= clock.now() {
+                    let t = gen.next_arrival();
+                    // Draw the input even when the arrival is about to
+                    // be shed: inputs stay id-aligned with the closed
+                    // loop, so completed logits are comparable
+                    // bit-for-bit across load patterns.
+                    let input = Tensor3::random(1, 32, 32, &mut input_rng);
+                    let id = ledger.new_id();
+                    let deadline = cfg.request_deadline.map(|d| t + d.as_secs_f64());
+                    let p = Pending {
+                        id,
+                        input,
+                        t_arr: t,
+                        deadline,
+                        reply: None,
+                    };
+                    enqueue_arrival(cfg, &mut ledger, &mut pending, p);
+                }
+            }
+            Source::Net(rx) => {
+                while !net_closed && ledger.arrivals() < cfg.requests {
+                    match rx.try_recv() {
+                        Ok(msg) => accept_net(cfg, &clock, &mut ledger, &mut pending, msg),
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => net_closed = true,
+                    }
+                }
+            }
+        }
+
+        // Admission: move arrivals into the pipeline while depth allows,
+        // evicting any whose deadline already passed in the queue.
+        if matches!(source, Source::Closed) {
+            while active.len() < cfg.max_in_flight && ledger.arrivals() < cfg.requests {
+                let input = Tensor3::random(1, 32, 32, &mut input_rng);
+                let id = ledger.new_id();
+                let t = clock.now();
+                let deadline = cfg.request_deadline.map(|d| t + d.as_secs_f64());
+                let p = Pending {
+                    id,
+                    input,
+                    t_arr: t,
+                    deadline,
+                    reply: None,
+                };
+                admit(cfg, &mut active, p);
+            }
+        } else {
+            while active.len() < cfg.max_in_flight {
+                let Some(p) = pending.pop_front() else { break };
+                if p.deadline.is_some_and(|d| clock.now() > d) {
+                    ledger.expire(p.id, p.reply);
+                    continue;
+                }
+                admit(cfg, &mut active, p);
+            }
+        }
+
+        // Deadline eviction at the stage boundary: a request that is
+        // runnable or parked in a coalescing queue past its deadline is
+        // removed *before* any further work is spent on it. Members of
+        // an in-flight job are never evicted mid-job (their buffers are
+        // on the wire); a failed job's expired members are evicted on
+        // its retry path in `absorb_job`.
+        let now = clock.now();
+        let mut i = 0;
+        while i < active.len() {
+            let evict = matches!(active[i].state, ReqState::Runnable | ReqState::Queued)
+                && active[i].deadline.is_some_and(|d| now > d);
+            if !evict {
+                i += 1;
+                continue;
+            }
+            let req = active.remove(i);
+            for q in queues.iter_mut() {
+                q.retain(|&id| id != req.id);
+            }
+            ledger.expire(req.id, req.reply);
         }
 
         // Advance every runnable request through master-side layers to
@@ -447,14 +822,17 @@ fn run_pipeline(
                     }
                     None => {
                         req.state = ReqState::Done;
-                        req.finished_at = Some(Instant::now());
+                        req.finished_t = Some(clock.now());
                     }
                 }
             }
         }
 
         // Retire finished requests (stats are keyed by request id, so
-        // out-of-order completion under coalescing is fine).
+        // out-of-order completion under coalescing is fine). A request
+        // only reaches `Done` through the layer walk, so its finish
+        // time is always present — unfinished requests never leak into
+        // the latency accounting.
         let mut i = 0;
         while i < active.len() {
             if !matches!(active[i].state, ReqState::Done) {
@@ -462,12 +840,7 @@ fn run_pipeline(
                 continue;
             }
             let req = active.remove(i);
-            let finished = req.finished_at.unwrap_or_else(Instant::now);
-            latencies.push(
-                finished
-                    .saturating_duration_since(req.admitted_at)
-                    .as_secs_f64(),
-            );
+            let finished = req.finished_t.expect("Done requests carry a finish time");
             let out = req.a.into_logits();
             if let Some(x) = req.input {
                 let want = plan.forward_reference(&x);
@@ -476,8 +849,7 @@ fn run_pipeline(
                     mismatches += 1;
                 }
             }
-            logits[req.id] = out;
-            completed += 1;
+            ledger.complete(req.id, out, (finished - req.t_arr).max(0.0), req.reply);
         }
 
         // Fuse every full window into one coded job, lowest stage first
@@ -493,24 +865,35 @@ fn run_pipeline(
             }
         }
 
-        if completed >= cfg.requests {
+        // Done once the source is exhausted and every arrival resolved.
+        let exhausted = match &source {
+            Source::Closed | Source::Open(_) => ledger.arrivals() >= cfg.requests,
+            Source::Net(_) => net_closed || ledger.arrivals() >= cfg.requests,
+        };
+        if exhausted && pending.is_empty() && active.is_empty() {
             break;
         }
 
         // Absorb every already-decodable job without blocking — this is
-        // where a batch is split back into its member requests.
+        // where a batch is split back into its member requests. Wall
+        // clock only: on the virtual clock jobs absorb strictly FIFO
+        // through the blocking path below, so the schedule (and with it
+        // the shed/expire pattern) is a pure function of the seed, not
+        // of thread timing.
         let mut absorbed = false;
-        let mut j = 0;
-        while j < jobs.len() {
-            if cluster.job_ready(&jobs[j].handle)? {
-                let job = jobs.remove(j).expect("index in bounds");
-                absorb_job(
-                    plan, cluster, &mut ctx, &mut active, &mut decodes, &mut fate_rng,
-                    &mut jobs, job,
-                )?;
-                absorbed = true;
-            } else {
-                j += 1;
+        if matches!(clock, Clock::Wall(_)) {
+            let mut j = 0;
+            while j < jobs.len() {
+                if cluster.job_ready(&jobs[j].handle)? {
+                    let job = jobs.remove(j).expect("index in bounds");
+                    absorb_job(
+                        plan, cluster, &mut ctx, &mut active, &mut decodes, &mut fate_rng,
+                        &mut jobs, job, &clock, &mut ledger,
+                    )?;
+                    absorbed = true;
+                } else {
+                    j += 1;
+                }
             }
         }
         if progressed || absorbed {
@@ -519,22 +902,44 @@ fn run_pipeline(
 
         // Nothing runnable, nothing decodable: block on the oldest job,
         // or — with no job in flight — flush the most senior partial
-        // window so the pipeline never stalls on a short queue.
+        // window so the pipeline never stalls on a short queue. With
+        // nothing queued either, the only thing left is a future
+        // arrival: jump the virtual clock to it, or block on the
+        // front-end channel.
         if let Some(job) = jobs.pop_front() {
             absorb_job(
                 plan, cluster, &mut ctx, &mut active, &mut decodes, &mut fate_rng, &mut jobs,
-                job,
+                job, &clock, &mut ledger,
             )?;
-        } else {
-            let stage = (0..n_stages)
-                .filter(|&s| !queues[s].is_empty())
-                .min_by_key(|&s| *queues[s].front().expect("non-empty"))
-                .expect("an active request is runnable, queued, or in a job");
+            // One blocking absorb = one coded stage of virtual service
+            // time (no-op on the wall clock).
+            clock.advance_stage();
+        } else if let Some(stage) = (0..n_stages)
+            .filter(|&s| !queues[s].is_empty())
+            .min_by_key(|&s| *queues[s].front().expect("non-empty"))
+        {
             let count = queues[stage].len();
             flush_batch(
                 plan, cluster, &mut ctx, &mut active, &mut queues[stage], stage, count,
                 &mut fate_rng, &mut jobs, &mut batch_sizes,
             )?;
+        } else {
+            match &mut source {
+                // Closed-loop: admission always finds work above; the
+                // loop only reaches here in the degenerate zero-length
+                // deadline case, where re-looping makes progress by
+                // expiring fresh admissions.
+                Source::Closed => {}
+                Source::Open(gen) => {
+                    if ledger.arrivals() < cfg.requests {
+                        clock.jump_to(gen.peek());
+                    }
+                }
+                Source::Net(rx) => match rx.recv() {
+                    Ok(msg) => accept_net(cfg, &clock, &mut ledger, &mut pending, msg),
+                    Err(_) => net_closed = true,
+                },
+            }
         }
     }
     let total = t_all.elapsed().as_secs_f64();
@@ -542,9 +947,19 @@ fn run_pipeline(
     let verified = mses.len();
     let coded_jobs = batch_sizes.len();
     let health = cluster.health().counters();
+    let Ledger {
+        outcomes,
+        logits,
+        latencies,
+        hist,
+        shed_n,
+        expired_n,
+        completed_n,
+        peak_queue,
+    } = ledger;
     Ok(ServeStats {
         latency: Stats::from_or_zero(&latencies),
-        throughput_rps: cfg.requests as f64 / total,
+        throughput_rps: completed_n as f64 / total,
         decode: Stats::from_or_zero(&decodes),
         mean_logit_mse: if mses.is_empty() {
             0.0
@@ -552,7 +967,7 @@ fn run_pipeline(
             mses.iter().sum::<f64>() / verified as f64
         },
         class_mismatches: mismatches,
-        requests: cfg.requests,
+        requests: outcomes.len(),
         verified,
         max_in_flight: cfg.max_in_flight,
         batch_window: cfg.batch_window,
@@ -568,15 +983,23 @@ fn run_pipeline(
         kernel: crate::linalg::kernel::active().name(),
         code: cfg.code.tag(),
         encode: plan.encode_stats(),
-        failed_requests: logits.iter().filter(|l| l.is_empty()).count(),
+        failed_requests: outcomes.iter().filter(|o| o.is_none()).count(),
         retries: ctx.retries,
         degraded_requests: ctx.degraded.iter().filter(|&&d| d).count(),
         quarantine_events: health.quarantines,
         readmissions: health.readmissions,
         membership: cluster.membership_counters(),
-        // Filled in by `serve_lenet` after cluster shutdown.
+        // Filled in by `serve_with_source` after cluster shutdown.
         arena_outstanding: 0,
         logits,
+        arrivals: outcomes.len(),
+        completed_requests: completed_n,
+        shed_requests: shed_n,
+        expired_requests: expired_n,
+        queue_cap: cfg.queue_cap,
+        peak_queue_depth: peak_queue,
+        latency_hist: hist,
+        outcomes,
     })
 }
 
@@ -607,7 +1030,8 @@ fn flush_batch(
         StageMode::Variant(v) => Some(v),
         _ => None,
     };
-    let handle = submit_members(plan, cluster, ctx.cfg, active, stage, &members, &variant, fate_rng)?;
+    let handle =
+        submit_members(plan, cluster, ctx.cfg, active, stage, &members, &variant, fate_rng)?;
     for req in active.iter_mut() {
         if members.contains(&req.id) {
             req.state = ReqState::InJob;
@@ -691,18 +1115,22 @@ fn degrade_members(
 /// current live set while the retry budget lasts — with exponential
 /// backoff, against a freshly chosen stage mode, its stale replies
 /// recycled by the runtime's stale-reply filter — and past the budget
-/// its members degrade to master-local execution. Either way every
-/// member request completes.
+/// its members degrade to master-local execution. Members whose
+/// deadline expired while the job was failing are evicted with
+/// `DeadlineExceeded` before any retry is dispatched. Either way every
+/// member request resolves.
 #[allow(clippy::too_many_arguments)]
 fn absorb_job(
     plan: &NetworkPlan,
     cluster: &mut Cluster,
     ctx: &mut FaultCtx<'_>,
-    active: &mut [Request],
+    active: &mut Vec<Request>,
     decodes: &mut Vec<f64>,
     fate_rng: &mut Rng,
     jobs: &mut VecDeque<BatchJob>,
     job: BatchJob,
+    clock: &Clock,
+    ledger: &mut Ledger,
 ) -> Result<()> {
     let stage_plan = match &job.variant {
         Some(v) => &v.plan,
@@ -712,6 +1140,32 @@ fn absorb_job(
     let (ys, report) = match outcome {
         BatchOutcome::Decoded { outputs, report } => (outputs, report),
         BatchOutcome::Failed { .. } => {
+            // Deadline × fault interaction: a member whose deadline
+            // passed while the job was failing must not ride the retry
+            // loop — evict it now, before backoff or re-dispatch spends
+            // more coded work on a request nobody is waiting for.
+            let now = clock.now();
+            let mut members = job.members;
+            let mut expired: Vec<usize> = Vec::new();
+            members.retain(|&id| {
+                let dead = active
+                    .iter()
+                    .find(|r| r.id == id)
+                    .and_then(|r| r.deadline)
+                    .is_some_and(|d| now > d);
+                if dead {
+                    expired.push(id);
+                }
+                !dead
+            });
+            for id in expired {
+                let idx = active.iter().position(|r| r.id == id).expect("member is active");
+                let req = active.remove(idx);
+                ledger.expire(req.id, req.reply);
+            }
+            if members.is_empty() {
+                return Ok(());
+            }
             if job.attempts <= ctx.cfg.retry_budget {
                 // Exponential backoff: transient congestion gets a
                 // breather; crashed workers get observed (and possibly
@@ -726,13 +1180,12 @@ fn absorb_job(
                         _ => None,
                     };
                     let handle = submit_members(
-                        plan, cluster, ctx.cfg, active, job.stage, &job.members, &variant,
-                        fate_rng,
+                        plan, cluster, ctx.cfg, active, job.stage, &members, &variant, fate_rng,
                     )?;
                     ctx.retries += 1;
                     jobs.push_back(BatchJob {
                         stage: job.stage,
-                        members: job.members,
+                        members,
                         handle,
                         attempts: job.attempts + 1,
                         variant,
@@ -742,7 +1195,7 @@ fn absorb_job(
             }
             // Budget exhausted (or the live set fell below δ): complete
             // the members on the master instead of failing them.
-            degrade_members(plan, ctx, active, job.stage, &job.members);
+            degrade_members(plan, ctx, active, job.stage, &members);
             return Ok(());
         }
     };

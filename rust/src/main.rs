@@ -13,9 +13,10 @@
 use anyhow::{anyhow, bail, Result};
 use fcdcc::cli::Args;
 use fcdcc::cluster::{
-    spawn_worker_node, FaultKind, FaultPlan, StragglerModel, TcpConfig, WorkerNodeConfig,
+    spawn_frontend, spawn_worker_node, FaultKind, FaultPlan, StragglerModel, TcpConfig,
+    WorkerNodeConfig,
 };
-use fcdcc::coordinator::{self, stability, RunConfig, ServeConfig, TransportKind};
+use fcdcc::coordinator::{self, stability, ArrivalSpec, RunConfig, ServeConfig, TransportKind};
 use fcdcc::engine::TaskEngine;
 use fcdcc::metrics::{fmt_sci, Table};
 use fcdcc::model::zoo;
@@ -37,9 +38,12 @@ USAGE:
                   [--fault-worker W --fault-kind KIND] [--fault-jobs J]
                   [--fault-delay-ms MS] [--chaos-seed S]
                   [--retry-budget R] [--collect-timeout-ms MS] [--no-replan]
-                  [--role local|coordinator|worker] [--listen ADDR]
+                  [--role local|coordinator|worker|frontend] [--listen ADDR]
                   [--workers A1,A2,...] [--heartbeat-ms MS]
                   [--miss-threshold B] [--connect-timeout-ms MS]
+                  [--queue-cap Q] [--request-deadline-ms MS]
+                  [--arrival poisson|burst] [--arrival-rate R]
+                  [--arrival-seed S] [--arrival-burst B]
   fcdcc artifacts [--dir DIR]   (needs the `pjrt` feature)
 
 distributed serving (--role; see DESIGN.md §Transport & membership):
@@ -55,11 +59,44 @@ distributed serving (--role; see DESIGN.md §Transport & membership):
                       that die are heartbeat-evicted, the stage is
                       re-planned for the live set, and reconnecting
                       nodes are readmitted
-  --listen ADDR            worker bind address (default 127.0.0.1:0)
+  --role frontend     network serving front-end (DESIGN.md §Serving
+                      front-end & overload control): bind --listen,
+                      print the bound address, and serve client Request
+                      frames until --requests arrivals have resolved.
+                      Every request gets exactly one terminal reply —
+                      logits, Busy (shed at admission), or
+                      DeadlineExceeded. Add --workers to back the
+                      front-end with remote TCP worker nodes.
+  --listen ADDR            worker / frontend bind address (default
+                           127.0.0.1:0)
   --workers A1,A2,...      coordinator's node addresses (required)
   --heartbeat-ms MS        ping cadence (default 200)
   --miss-threshold B       silent heartbeats before eviction (default 3)
   --connect-timeout-ms MS  rendezvous deadline at startup (default 5000)
+
+overload control (open-loop serving; see DESIGN.md §Serving front-end &
+overload control):
+  --queue-cap Q            bounded admission-queue capacity (default
+                           64). An arrival that finds the queue full is
+                           shed with an explicit Busy reply — load
+                           shedding is never a silent drop.
+  --request-deadline-ms MS default per-request deadline; a request whose
+                           deadline passes is evicted with
+                           DeadlineExceeded at the next stage boundary
+                           (0 = no deadline; network clients may carry
+                           their own per-request deadline on the wire)
+  --arrival KIND           open-loop synthetic arrival process: poisson
+                           (memoryless) or burst (Poisson burst epochs,
+                           geometric burst sizes). Runs on a seeded
+                           virtual clock, so a fixed seed reproduces the
+                           same shed/expire/complete pattern on every
+                           machine. Omit for the classic closed loop.
+  --arrival-rate R         mean arrivals per virtual second (default
+                           100; sustainable rate is about
+                           100 x batch-window req/s)
+  --arrival-seed S         arrival-process seed (default 1)
+  --arrival-burst B        mean requests per burst (burst only,
+                           default 4)
 
 serve options:
   --no-prepack  disable plan-resident filter prepacking: workers re-pack
@@ -248,7 +285,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.n_workers = args.get_usize("n", 4)?;
     match role {
         "local" => {}
-        "coordinator" => {
+        // A front-end without --workers runs the cluster in-process.
+        "frontend" if args.get("workers").is_none() => {}
+        "coordinator" | "frontend" => {
             let addrs: Vec<String> = args
                 .get("workers")
                 .ok_or_else(|| anyhow!("--role coordinator needs --workers A1,A2,..."))?
@@ -267,7 +306,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 Duration::from_millis(args.get_usize("connect-timeout-ms", 5000)? as u64);
             cfg.transport = TransportKind::Tcp(tcp);
         }
-        other => bail!("unknown --role {other:?} (local, coordinator, worker)"),
+        other => bail!("unknown --role {other:?} (local, coordinator, worker, frontend)"),
     }
     // `--depth` is the historical spelling of `--max-in-flight`.
     let depth = args.get_usize("depth", 1)?;
@@ -294,10 +333,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.collect_timeout =
         Duration::from_millis(args.get_usize("collect-timeout-ms", 60_000)? as u64);
     cfg.replan = !args.flag("no-replan");
-    let stats = coordinator::serve_lenet(cfg)?;
+    cfg.queue_cap = args.get_usize("queue-cap", 64)?;
+    let deadline = args.get_duration_ms("request-deadline-ms", 0)?;
+    if !deadline.is_zero() {
+        cfg.request_deadline = Some(deadline);
+    }
+    cfg.arrival = arrival_from_args(args)?;
+    let stats = if role == "frontend" {
+        if cfg.arrival.is_some() {
+            bail!("--role frontend takes arrivals from clients; drop --arrival");
+        }
+        let (listener, rx) = spawn_frontend(args.get_str("listen", "127.0.0.1:0"))?;
+        println!("frontend listening on {}", listener.addr());
+        let stats = coordinator::serve_frontend_on(cfg, rx)?;
+        listener.stop();
+        stats
+    } else {
+        coordinator::serve_lenet(cfg)?
+    };
     println!(
         "served {} requests (depth {}, window {}, kernel {}, code {}): \
-         mean latency {:.2}ms (p95 {:.2}ms), {:.1} req/s",
+         mean latency {:.2}ms (p95 {:.2}ms, p99 {:.2}ms), {:.1} req/s",
         stats.requests,
         stats.max_in_flight,
         stats.batch_window,
@@ -305,7 +361,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.code,
         stats.latency.mean * 1e3,
         stats.latency.p95 * 1e3,
+        stats.latency.p99 * 1e3,
         stats.throughput_rps
+    );
+    println!(
+        "overload: {} arrivals -> {} completed / {} shed / {} expired | \
+         queue peak {}/{} | completed latency p50 {:.2}ms p99 {:.2}ms",
+        stats.arrivals,
+        stats.completed_requests,
+        stats.shed_requests,
+        stats.expired_requests,
+        stats.peak_queue_depth,
+        stats.queue_cap,
+        stats.latency_hist.p50() * 1e3,
+        stats.latency_hist.p99() * 1e3
     );
     println!(
         "decode mean {:.3}ms | logit MSE {} | class mismatches {}/{} verified",
@@ -368,6 +437,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.frames_corrupt
     );
     Ok(())
+}
+
+/// Assemble the open-loop arrival process from the `--arrival*` flags
+/// (`None` = the classic demand-paced closed loop).
+fn arrival_from_args(args: &Args) -> Result<Option<ArrivalSpec>> {
+    let Some(kind) = args.get("arrival") else {
+        return Ok(None);
+    };
+    let rate = args.get_f64("arrival-rate", 100.0)?;
+    let seed = args.get_usize("arrival-seed", 1)? as u64;
+    let spec = match kind {
+        "poisson" => ArrivalSpec::poisson(rate, seed),
+        "burst" => ArrivalSpec::burst(rate, args.get_usize("arrival-burst", 4)?, seed),
+        other => bail!("unknown --arrival {other:?} (poisson, burst)"),
+    };
+    Ok(Some(spec))
 }
 
 /// Assemble the serve command's fault-injection plan: `--chaos-seed` /

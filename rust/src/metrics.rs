@@ -11,6 +11,9 @@ pub struct Stats {
     pub max: f64,
     pub p50: f64,
     pub p95: f64,
+    /// 99th percentile. Appended after the original fields so existing
+    /// bench JSON consumers (which read by name) stay bit-compatible.
+    pub p99: f64,
     pub std: f64,
 }
 
@@ -27,6 +30,7 @@ impl Stats {
                 max: 0.0,
                 p50: 0.0,
                 p95: 0.0,
+                p99: 0.0,
                 std: 0.0,
             };
         }
@@ -48,8 +52,127 @@ impl Stats {
             max: s[n - 1],
             p50: pct(0.50),
             p95: pct(0.95),
+            p99: pct(0.99),
             std: var.sqrt(),
         }
+    }
+}
+
+/// Number of buckets in a [`LatencyHistogram`]: 4 sub-buckets per
+/// octave × 32 octaves above the 1 µs floor (≈ 1 µs .. 4295 s).
+pub const LATENCY_BUCKETS: usize = 128;
+
+/// Smallest latency the histogram resolves; everything below lands in
+/// bucket 0.
+const LATENCY_FLOOR_SECS: f64 = 1e-6;
+
+/// Sub-buckets per octave: bucket edges grow by 2^(1/4) ≈ 1.19, so any
+/// reported quantile is within ±9.5% (half a bucket) of the true value.
+const BUCKETS_PER_OCTAVE: f64 = 4.0;
+
+/// Fixed-bucket log-scale latency histogram (DESIGN.md §Serving
+/// front-end & overload control). Recording is O(1) with no allocation
+/// after construction — safe to keep in the serving hot loop — and the
+/// quantile read side reports the geometric midpoint of the covering
+/// bucket, clamped to the exactly-tracked observed min/max.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: vec![0; LATENCY_BUCKETS],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(secs: f64) -> usize {
+        if secs <= LATENCY_FLOOR_SECS {
+            return 0;
+        }
+        let idx = ((secs / LATENCY_FLOOR_SECS).log2() * BUCKETS_PER_OCTAVE).floor() as usize;
+        idx.min(LATENCY_BUCKETS - 1)
+    }
+
+    /// Upper edge of bucket `i` in seconds (floor · 2^((i+1)/4)).
+    pub fn bucket_upper(i: usize) -> f64 {
+        LATENCY_FLOOR_SECS * 2f64.powf((i + 1) as f64 / BUCKETS_PER_OCTAVE)
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        let secs = if secs.is_finite() { secs.max(0.0) } else { 0.0 };
+        self.counts[Self::bucket_of(secs)] += 1;
+        self.total += 1;
+        self.sum += secs;
+        self.min = self.min.min(secs);
+        self.max = self.max.max(secs);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// The q-quantile (0 < q ≤ 1) as the geometric midpoint of the
+    /// bucket holding the ⌈q·total⌉-th sample, clamped to the observed
+    /// [min, max]. 0.0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // The overflow bucket is unbounded above: report the
+                // exactly-tracked max instead of a fictitious midpoint.
+                if i == LATENCY_BUCKETS - 1 {
+                    return self.max;
+                }
+                let mid = LATENCY_FLOOR_SECS * 2f64.powf((i as f64 + 0.5) / BUCKETS_PER_OCTAVE);
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> f64 {
+        self.quantile(0.999)
     }
 }
 
@@ -260,7 +383,47 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+        assert_eq!(s.p99, 5.0);
         assert!((s.std - 2f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles_within_bucket_error() {
+        let mut h = LatencyHistogram::new();
+        // 100 samples spread over three decades: quantiles must land
+        // within one bucket's relative width (2^(1/4) ≈ 19%) of truth.
+        for i in 1..=100u32 {
+            h.record(i as f64 * 1e-3); // 1ms .. 100ms
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 0.0505).abs() < 1e-9);
+        for (q, want) in [(0.50, 0.050), (0.90, 0.090), (0.99, 0.099)] {
+            let got = h.quantile(q);
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.20, "q={q}: got {got}, want {want} (rel {rel:.3})");
+        }
+        // p999 of 100 samples is the max sample; the clamp makes it exact.
+        assert_eq!(h.p999(), 0.100);
+    }
+
+    #[test]
+    fn histogram_edges_and_empty() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+
+        let mut h = LatencyHistogram::new();
+        h.record(0.0); // below the floor → bucket 0
+        h.record(-1.0); // clamped to 0
+        h.record(1e9); // far above the top bucket → clamped to the last
+        assert_eq!(h.count(), 3);
+        // Sub-floor samples land in bucket 0: reported within its width.
+        assert!(h.quantile(1.0 / 3.0) <= LatencyHistogram::bucket_upper(0));
+        assert_eq!(h.quantile(1.0), 1e9, "overflow bucket reports the max");
+        // Bucket edges are monotone and the last covers > 1 hour.
+        assert!(LatencyHistogram::bucket_upper(0) < LatencyHistogram::bucket_upper(1));
+        assert!(LatencyHistogram::bucket_upper(LATENCY_BUCKETS - 1) > 3600.0);
     }
 
     #[test]

@@ -111,6 +111,25 @@ impl Rng {
         }
     }
 
+    /// Geometric draw via inversion: the number of Bernoulli(p) failures
+    /// before the first success (support 0, 1, 2, …; mean (1−p)/p). Used
+    /// for burst sizes in the open-loop arrival generator.
+    pub fn geometric(&mut self, p: f64) -> usize {
+        assert!(p > 0.0 && p <= 1.0, "geometric needs 0 < p <= 1");
+        if p >= 1.0 {
+            return 0;
+        }
+        let lnq = (1.0 - p).ln();
+        loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                // Both logs are negative, so the quotient is ≥ 0 and
+                // `as usize` truncates toward zero (= floor).
+                return (u.ln() / lnq) as usize;
+            }
+        }
+    }
+
     /// Bernoulli draw.
     pub fn chance(&mut self, p: f64) -> bool {
         self.next_f64() < p
@@ -194,6 +213,17 @@ mod tests {
         s.dedup();
         assert_eq!(s.len(), 6);
         assert!(s.iter().all(|&i| i < 10));
+    }
+
+    #[test]
+    fn geometric_mean_and_edge() {
+        let mut r = Rng::new(6);
+        let n = 100_000;
+        let p = 0.25;
+        let m = (0..n).map(|_| r.geometric(p)).sum::<usize>() as f64 / n as f64;
+        // Mean (1-p)/p = 3.0.
+        assert!((m - 3.0).abs() < 0.05, "mean={m}");
+        assert_eq!(r.geometric(1.0), 0, "p=1 always succeeds immediately");
     }
 
     #[test]
